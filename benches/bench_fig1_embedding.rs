@@ -1,0 +1,147 @@
+//! Fig 1 reproduction — "can the embedding model represent the context of
+//! user prompts?": embed 100 same-topic and 100 mixed-topic prompts with
+//! the predictor's encoder (via PJRT) and compare cluster geometry, plus a
+//! 2-D PCA spread like the paper's scatter plot.
+
+#[path = "common.rs"]
+mod common;
+
+use common::BenchCtx;
+use elis::predictor::hlo::HloPredictor;
+use elis::runtime::default_artifacts_dir;
+use elis::util::bench::Table;
+use elis::util::json::Json;
+
+fn dist(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+fn mean_pairwise(v: &[Vec<f32>]) -> f64 {
+    let mut s = 0.0;
+    let mut n: f64 = 0.0;
+    for i in 0..v.len() {
+        for k in i + 1..v.len() {
+            s += dist(&v[i], &v[k]);
+            n += 1.0;
+        }
+    }
+    s / n.max(1.0)
+}
+
+/// Power-iteration PCA to 2 components (enough for the scatter spread).
+fn pca2(data: &[Vec<f32>]) -> Vec<(f64, f64)> {
+    let n = data.len();
+    let d = data[0].len();
+    let mut mean = vec![0f64; d];
+    for row in data {
+        for (m, &x) in mean.iter_mut().zip(row) {
+            *m += x as f64 / n as f64;
+        }
+    }
+    let centered: Vec<Vec<f64>> = data
+        .iter()
+        .map(|row| row.iter().zip(&mean).map(|(&x, m)| x as f64 - m).collect())
+        .collect();
+    let mut comps: Vec<Vec<f64>> = Vec::new();
+    for c in 0..2 {
+        let mut v = vec![1.0 / (d as f64).sqrt(); d];
+        for _ in 0..50 {
+            // w = Cov · v  computed as Xᵀ(Xv)
+            let xv: Vec<f64> = centered
+                .iter()
+                .map(|row| row.iter().zip(&v).map(|(a, b)| a * b).sum())
+                .collect();
+            let mut w = vec![0f64; d];
+            for (row, &s) in centered.iter().zip(&xv) {
+                for (wi, &ri) in w.iter_mut().zip(row) {
+                    *wi += ri * s;
+                }
+            }
+            // deflate against previous components
+            for prev in comps.iter().take(c) {
+                let dot: f64 = w.iter().zip(prev).map(|(a, b)| a * b).sum();
+                for (wi, &pi) in w.iter_mut().zip(prev) {
+                    *wi -= dot * pi;
+                }
+            }
+            let norm: f64 = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if norm < 1e-12 {
+                break;
+            }
+            v = w.into_iter().map(|x| x / norm).collect();
+        }
+        comps.push(v);
+    }
+    centered
+        .iter()
+        .map(|row| {
+            let x: f64 = row.iter().zip(&comps[0]).map(|(a, b)| a * b).sum();
+            let y: f64 = row.iter().zip(&comps[1]).map(|(a, b)| a * b).sum();
+            (x, y)
+        })
+        .collect()
+}
+
+fn main() {
+    let ctx = BenchCtx::load();
+    let dir = default_artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("embed_groups.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let take = |k: &str| -> Vec<Vec<i32>> {
+        j.get(k).and_then(Json::as_arr).unwrap().iter()
+            .map(|r| r.as_i32_vec().unwrap().into_iter()
+                 .filter(|&t| t != 0).collect())
+            .collect()
+    };
+    let similar = take("similar");
+    let dissimilar = take("dissimilar");
+    println!("Fig 1: encoder embeddings of {} similar vs {} dissimilar prompts",
+             similar.len(), dissimilar.len());
+
+    let mut p = HloPredictor::load(ctx.rt.clone(), &ctx.manifest, &ctx.store,
+                                   None).unwrap();
+    let e_sim = p.embed(&similar).unwrap();
+    let e_dis = p.embed(&dissimilar).unwrap();
+
+    let d_sim = mean_pairwise(&e_sim);
+    let d_dis = mean_pairwise(&e_dis);
+    // cross-group distance
+    let mut cross = 0.0;
+    let mut n = 0.0;
+    for a in &e_sim {
+        for b in e_dis.iter().step_by(4) {
+            cross += dist(a, b);
+            n += 1.0;
+        }
+    }
+    cross /= n;
+
+    let mut t = Table::new(
+        "Fig 1 — CLS/pooled embedding distances",
+        &["pair set", "mean L2 distance", "ratio vs similar"],
+    );
+    t.row(vec!["within similar (weather topic)".into(),
+               format!("{d_sim:.3}"), "1.00".into()]);
+    t.row(vec!["within dissimilar (mixed topics)".into(),
+               format!("{d_dis:.3}"), format!("{:.2}", d_dis / d_sim)]);
+    t.row(vec!["cross-group".into(),
+               format!("{cross:.3}"), format!("{:.2}", cross / d_sim)]);
+    t.print();
+
+    // PCA spread, mirroring the paper's 2-D scatter
+    let mut all = e_sim.clone();
+    all.extend(e_dis.iter().cloned());
+    let proj = pca2(&all);
+    let spread = |pts: &[(f64, f64)]| -> f64 {
+        let mx = pts.iter().map(|p| p.0).sum::<f64>() / pts.len() as f64;
+        let my = pts.iter().map(|p| p.1).sum::<f64>() / pts.len() as f64;
+        (pts.iter().map(|p| (p.0 - mx).powi(2) + (p.1 - my).powi(2))
+            .sum::<f64>() / pts.len() as f64).sqrt()
+    };
+    let s_sim = spread(&proj[..e_sim.len()]);
+    let s_dis = spread(&proj[e_sim.len()..]);
+    println!("\nPCA(2) spread: similar {:.3} vs dissimilar {:.3} \
+              ({:.1}x) — the paper's tight-blue vs scattered-light-blue plot",
+             s_sim, s_dis, s_dis / s_sim);
+    assert!(d_sim < d_dis, "similar prompts must cluster tighter");
+}

@@ -1,0 +1,72 @@
+//! Fig 4 reproduction — request-interval distribution: generate a
+//! FabriX-style trace (Gamma α=0.73, β=10.41), re-fit Gamma and
+//! Poisson/exponential by MLE, and compare likelihoods; print the
+//! histogram-vs-PDF series the figure plots.
+
+#[path = "common.rs"]
+mod common;
+
+use common::env_usize;
+use elis::stats::dist::gamma_logpdf;
+use elis::stats::fit::aic;
+use elis::util::bench::Table;
+use elis::workload::tracefit::analyse;
+use elis::workload::{ArrivalProcess, RequestGenerator};
+
+fn main() {
+    let n = env_usize("ELIS_BENCH_TRACE_N", 200_000);
+    println!("Fig 4: inter-arrival analysis on {n} samples \
+              (paper: 200k FabriX requests over 2 months)");
+
+    // FabriX-style: Gamma(0.73) scaled to 1 rps
+    let mut gen = RequestGenerator::fabrix(1.0, 7);
+    let a = analyse(&gen.intervals(n), 24);
+
+    let g = a.gamma.expect("gamma fit");
+    let e = a.expo.expect("exp fit");
+    let mut t = Table::new(
+        "Fig 4 — distribution fits on FabriX-style intervals",
+        &["family", "params", "loglik", "AIC", "winner"],
+    );
+    let winner = a.winner();
+    t.row(vec![
+        "Gamma".into(),
+        // β is unit-dependent (the generator rescales the paper's fit to the
+        // target RPS); the shape α is the scale-free quantity to recover.
+        format!("α={:.3} (paper α=0.73), β={:.0} ms", g.shape, g.scale),
+        format!("{:.0}", g.loglik),
+        format!("{:.0}", aic(g.loglik, 2)),
+        if winner == "gamma" { "<-- selected".into() } else { String::new() },
+    ]);
+    t.row(vec![
+        "Poisson (exp intervals)".into(),
+        format!("mean={:.1} ms", e.mean),
+        format!("{:.0}", e.loglik),
+        format!("{:.0}", aic(e.loglik, 1)),
+        if winner == "poisson" { "<-- selected".into() } else { String::new() },
+    ]);
+    t.print();
+    println!("burstiness: CV={:.3} (Poisson would be 1.0)", a.cv);
+
+    // the plotted series: empirical density vs both fitted densities
+    let mut series = Table::new(
+        "Fig 4 — histogram vs fitted PDFs (first 12 bins)",
+        &["interval (ms)", "observed", "gamma pdf", "poisson pdf"],
+    );
+    for i in 0..12.min(a.hist.counts.len()) {
+        let x = a.hist.bin_center(i);
+        series.row(vec![
+            format!("{x:.0}"),
+            format!("{:.5}", a.hist.density(i)),
+            format!("{:.5}", gamma_logpdf(x, g.shape, g.scale).exp()),
+            format!("{:.5}", elis::stats::dist::exp_logpdf(x, e.mean).exp()),
+        ]);
+    }
+    series.print();
+
+    // sanity contrast: a true Poisson trace must NOT prefer gamma shape<1
+    let mut p = RequestGenerator::new(ArrivalProcess::Poisson, 0.73, 1.0, 9);
+    let ap = analyse(&p.intervals(n / 4), 24);
+    println!("\ncontrol (Poisson trace): fitted gamma shape = {:.3} (≈1.0), CV={:.3}",
+             ap.gamma.map(|g| g.shape).unwrap_or(f64::NAN), ap.cv);
+}

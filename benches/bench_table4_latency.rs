@@ -1,0 +1,89 @@
+//! Table 4 reproduction — average request latency of the five served
+//! models.  The sim profiles are *anchored* to the paper's numbers, so
+//! this bench verifies the calibration round-trips through the full
+//! serving stack (500 prompts, batch 1, unloaded), and adds the real
+//! TinyGPT engine as a measured sixth row.
+
+#[path = "common.rs"]
+mod common;
+
+use common::{env_usize, BenchCtx, MODELS};
+use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::engine::pjrt_engine::PjrtEngine;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::predictor::oracle::OraclePredictor;
+use elis::util::bench::Table;
+use elis::workload::{ArrivalProcess, RequestGenerator};
+
+fn main() {
+    let ctx = BenchCtx::load();
+    let n = env_usize("ELIS_BENCH_T4_N", 500);
+    println!("Table 4: avg latency of each model ({n} prompts, unloaded)");
+
+    let mut t = Table::new(
+        "Table 4 — average request latency",
+        &["model", "params", "measured avg (ms)", "paper (ms)", "ratio"],
+    );
+    for model in MODELS {
+        let profile = ctx.profile(model);
+        // unloaded: one request at a time (tiny rps), batch 1
+        let mut gen = RequestGenerator::new(ArrivalProcess::Uniform, 0.73,
+                                            1000.0 / (profile.avg_latency_ms * 1.05),
+                                            42);
+        let trace = gen.trace(&ctx.corpus, n);
+        let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(
+            SimEngine::with_profile_budget(profile.clone(),
+                                           ctx.manifest.window_size, 1))];
+        let cfg = ServeConfig {
+            max_batch: 1,
+            max_iterations: 20_000_000,
+            ..Default::default()
+        };
+        let r = run_serving(&cfg, &trace, &mut engines, &mut sched).unwrap();
+        // latency = service time (unloaded JCT minus queueing noise)
+        let avg_ms: f64 = r.records.iter().map(|x| x.service_ms).sum::<f64>()
+            / r.n() as f64;
+        t.row(vec![
+            model.to_string(),
+            format!("{:.1}B", profile.params_b),
+            format!("{avg_ms:.1}"),
+            format!("{:.1}", profile.avg_latency_ms),
+            format!("{:.3}", avg_ms / profile.avg_latency_ms),
+        ]);
+    }
+    t.print();
+
+    // real TinyGPT row: measured through PJRT
+    let mut engine = PjrtEngine::load(ctx.rt.clone(), &ctx.manifest,
+                                      &ctx.store, 1 << 20)
+        .expect("pjrt engine");
+    let sample: Vec<_> = ctx.corpus.entries.iter()
+        .filter(|e| e.total_len <= 150)
+        .take(4)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    for (i, e) in sample.iter().enumerate() {
+        engine.admit(elis::engine::SeqSpec {
+            id: i as u64,
+            prompt: e.tokens.clone(),
+            target_total: e.total_len, topic: 0
+        }).unwrap();
+        let mut done = false;
+        while !done {
+            let w = engine.run_window(&[i as u64]).unwrap();
+            done = w.outputs[0].done;
+        }
+        total_tokens += e.total_len;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\nreal TinyGPT (PJRT CPU, 1 core): {} requests, {} tokens in \
+              {:.1}s -> avg latency {:.0} ms, {:.1} tok/s",
+             sample.len(), total_tokens, dt,
+             dt * 1000.0 / sample.len() as f64,
+             total_tokens as f64 / dt);
+    println!("ratio column ≈ 1.0 shows the sim calibration round-trips \
+              through the full serving stack.");
+}

@@ -1,0 +1,74 @@
+//! Table 6 reproduction — Appendix A preemption profiling: for each model,
+//! the minimum batch size (sweeping by 10 up to 250) at which a saturated
+//! job pool triggers a KV-cache preemption, under the paper's per-model
+//! vLLM memory limits.
+
+#[path = "common.rs"]
+mod common;
+
+use common::BenchCtx;
+use elis::engine::profiles::ModelProfile;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::{Engine, SeqSpec};
+use elis::util::bench::Table;
+
+/// Paper Appendix A procedure: saturate the pool with long prompts, grow
+/// the batch by 10 until a preemption fires.
+fn find_preempt_batch(profile: &ModelProfile, window: usize) -> Option<usize> {
+    let budget = profile.kv_budget_bytes(profile.mem_limit_frac);
+    for batch in (10..=250).step_by(10) {
+        let mut engine = SimEngine::new(profile.clone(), window, batch, budget);
+        for id in 0..batch as u64 {
+            engine.admit(SeqSpec {
+                id,
+                prompt: vec![7; 64],
+                target_total: 400, topic: 0
+            }).ok()?;
+        }
+        let ids: Vec<u64> = (0..batch as u64).collect();
+        engine.set_priority_order(&ids);
+        for _ in 0..8 {
+            if engine.run_window(&ids).is_err() {
+                return Some(batch);
+            }
+            if engine.total_preemptions > 0 {
+                return Some(batch);
+            }
+        }
+    }
+    None
+}
+
+fn main() {
+    let ctx = BenchCtx::load();
+    println!("Table 6: minimum batch size causing preemption \
+              (saturated pool, batch swept by 10 up to 250)");
+
+    let mut t = Table::new(
+        "Table 6 — preemption profiling",
+        &["model", "vLLM mem limit", "measured batch", "paper batch", "match"],
+    );
+    for p in &ctx.profiles {
+        let measured = find_preempt_batch(p, ctx.manifest.window_size);
+        let m_str = measured.map(|b| b.to_string()).unwrap_or("-".into());
+        let ok = match measured {
+            Some(b) => {
+                let r = b as f64 / p.preempt_batch_ref as f64;
+                if (0.5..=2.0).contains(&r) { "~" } else { "x" }
+            }
+            None => "x",
+        };
+        t.row(vec![
+            p.abbrev.clone(),
+            format!("{:.0}%", p.mem_limit_frac * 100.0),
+            m_str,
+            p.preempt_batch_ref.to_string(),
+            ok.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\npaper conclusion (§3.4): production request rates (<3 rps) sit \
+              far below the {:.1} rps needed to saturate lam13's preemption \
+              batch — preemption is rare in practice.",
+             120.0 / 8.61);
+}

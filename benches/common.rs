@@ -1,0 +1,136 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench regenerates one table or figure of the paper on the
+//! calibrated simulation (or the real artifacts, for predictor benches).
+//! Knobs via env vars so `cargo bench` stays bounded on one CPU core:
+//!   ELIS_BENCH_N        prompts per run            (default 120)
+//!   ELIS_BENCH_SHUFFLES repeats with reshuffled    (default 2; paper: 3)
+//!   ELIS_PREDICTOR      isrtf predictor: hlo|surrogate (default surrogate
+//!                       for sweep benches — the hlo artifact is exercised
+//!                       by bench_table2/fig2/hotpath and EXPERIMENTS runs)
+
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::engine::profiles::{avg_request_rate, ModelProfile};
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::metrics::ServeReport;
+use elis::predictor::heuristic::HeuristicPredictor;
+use elis::predictor::hlo::HloPredictor;
+use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::surrogate::SurrogatePredictor;
+use elis::predictor::LengthPredictor;
+use elis::runtime::{default_artifacts_dir, Manifest, Runtime, WeightStore};
+use elis::workload::{Corpus, RequestGenerator};
+
+pub struct BenchCtx {
+    pub manifest: Manifest,
+    pub corpus: Corpus,
+    pub profiles: Vec<ModelProfile>,
+    pub store: WeightStore,
+    pub rt: Arc<Runtime>,
+    pub n: usize,
+    pub shuffles: usize,
+    pub isrtf_predictor: String,
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl BenchCtx {
+    pub fn load() -> BenchCtx {
+        let dir = default_artifacts_dir();
+        let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+        let corpus = Corpus::load(&dir).expect("corpus.json");
+        let profiles = ModelProfile::all(&manifest.served_models);
+        let store = WeightStore::load(&manifest).expect("weights");
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        BenchCtx {
+            manifest,
+            corpus,
+            profiles,
+            store,
+            rt,
+            n: env_usize("ELIS_BENCH_N", 120),
+            shuffles: env_usize("ELIS_BENCH_SHUFFLES", 2),
+            isrtf_predictor: std::env::var("ELIS_PREDICTOR")
+                .unwrap_or_else(|_| "surrogate".into()),
+        }
+    }
+
+    pub fn profile(&self, abbrev: &str) -> ModelProfile {
+        ModelProfile::find(&self.profiles, abbrev)
+            .unwrap_or_else(|| panic!("no profile {abbrev}"))
+            .clone()
+    }
+
+    pub fn predictor_for(&self, policy: Policy, seed: u64)
+                         -> Box<dyn LengthPredictor> {
+        match policy {
+            Policy::Sjf => Box::new(FrozenOracle),
+            Policy::Srpt => Box::new(OraclePredictor),
+            Policy::Isrtf => match self.isrtf_predictor.as_str() {
+                "hlo" => Box::new(
+                    HloPredictor::load(self.rt.clone(), &self.manifest,
+                                       &self.store, None)
+                        .expect("hlo predictor"),
+                ),
+                "heuristic" => Box::new(HeuristicPredictor::new()),
+                _ => Box::new(SurrogatePredictor::calibrated(seed)),
+            },
+            _ => Box::new(OraclePredictor),
+        }
+    }
+
+    /// One serving run: `model` profile, `mult`× the paper's average
+    /// request rate for (model, batch), on `workers` workers.
+    pub fn run(&self, model: &str, policy: Policy, batch: usize,
+               workers: usize, mult: f64, seed: u64) -> ServeReport {
+        let profile = self.profile(model);
+        let rps = avg_request_rate(&profile, batch) * mult * workers as f64;
+        let mut gen = RequestGenerator::fabrix(rps, seed);
+        let trace = gen.trace(&self.corpus, self.n);
+        let mut engines: Vec<Box<dyn Engine>> = (0..workers)
+            .map(|_| Box::new(SimEngine::with_profile_budget(
+                profile.clone(), self.manifest.window_size, batch))
+                as Box<dyn Engine>)
+            .collect();
+        let mut sched = Scheduler::new(policy, self.predictor_for(policy, seed));
+        let cfg = ServeConfig {
+            workers,
+            max_batch: batch,
+            seed,
+            max_iterations: 20_000_000,
+            ..Default::default()
+        };
+        run_serving(&cfg, &trace, &mut engines, &mut sched).expect("serving run")
+    }
+
+    /// Average JCT (s) over shuffled repeats (paper: same prompt set,
+    /// reshuffled 3×).  The trace seed mixes in the model name so each
+    /// model sees a different shuffle (as the paper's per-model runs do).
+    pub fn avg_jct(&self, model: &str, policy: Policy, batch: usize,
+                   mult: f64) -> (f64, f64, f64) {
+        let model_tag: u64 = model.bytes()
+            .fold(0u64, |h, b| h.wrapping_mul(131).wrapping_add(b as u64));
+        let mut avg = 0.0;
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for s in 0..self.shuffles {
+            let r = self.run(model, policy, batch, 1, mult,
+                             42 + model_tag + s as u64);
+            let j = r.avg_jct_s();
+            avg += j;
+            lo = lo.min(r.min_jct_s());
+            hi = hi.max(r.max_jct_s());
+        }
+        (avg / self.shuffles as f64, lo, hi)
+    }
+}
+
+pub const MODELS: [&str; 5] = ["opt13", "opt6.7", "vic", "lam13", "lam7"];
+pub const RPS_MULTS: [f64; 3] = [1.0, 3.0, 5.0];

@@ -1,0 +1,84 @@
+//! Preemption + anti-starvation demo (paper §3.4): a deliberately tiny KV
+//! pool forces the engine to preempt; the frequency-control policy protects
+//! jobs that have been preempted too often.
+//!
+//!   cargo run --release --example preemption_demo
+
+use anyhow::Result;
+
+use elis::coordinator::{run_serving, Policy, PreemptionPolicy, Scheduler,
+                        ServeConfig};
+use elis::engine::profiles::ModelProfile;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::predictor::oracle::OraclePredictor;
+use elis::runtime::manifest::ServedModelMeta;
+use elis::util::bench::Table;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn profile() -> ModelProfile {
+    ModelProfile::from_meta(&ServedModelMeta {
+        name: "LlaMA2-13B".into(),
+        abbrev: "lam13".into(),
+        params_b: 13.0,
+        avg_latency_ms: 8610.2,
+        kv_bytes_per_token: 2 * 2 * 40 * 40 * 128,
+        preempt_batch: 120,
+        mem_limit_frac: 0.9,
+    })
+}
+
+fn run(kv_blocks: usize, budget: usize) -> Result<(u64, usize, f64)> {
+    let mut corpus = Corpus::synthetic(300, 5);
+    // cap response lengths so a single job always fits the tiny pool
+    // (vLLM likewise cannot serve a request larger than its KV space)
+    corpus.entries.retain(|e| e.total_len <= 220);
+    let mut gen = RequestGenerator::fabrix(4.0, 5);
+    let trace = gen.trace(&corpus, 60);
+    let p = profile();
+    let bpt = p.kv_bytes_per_token;
+    // batch 2 with a pool several batches wide -> multiple resident
+    // non-batch sequences compete as preemption victims, so the budget
+    // (starvation guard) is observable
+    let engine = SimEngine::new(p, 50, 2, kv_blocks * 16 * bpt);
+    let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(engine) as _];
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        max_batch: 2,
+        preemption: PreemptionPolicy {
+            enabled: true,
+            max_preemptions_per_job: budget,
+            max_per_iteration: usize::MAX,
+        },
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+    let r = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+    let max_per_job = r.records.iter().map(|x| x.preemptions).max().unwrap_or(0);
+    Ok((r.total_preemptions, max_per_job, r.avg_jct_s()))
+}
+
+fn main() -> Result<()> {
+    println!("SRPT over a deliberately tiny paged-KV pool (60 jobs @ 4 rps)\n");
+    let mut table = Table::new(
+        "Preemption frequency control (paper §3.4)",
+        &["KV blocks", "preemption budget/job", "total preemptions",
+          "max preemptions on one job", "avg JCT (s)"],
+    );
+    for (blocks, budget) in [(4000usize, 3usize), (20, 3), (16, 100), (16, 1)] {
+        let (total, max_one, jct) = run(blocks, budget)?;
+        table.row(vec![
+            blocks.to_string(),
+            budget.to_string(),
+            total.to_string(),
+            max_one.to_string(),
+            format!("{jct:.2}"),
+        ]);
+    }
+    table.print();
+    println!("\nlarge pool -> zero preemption (the paper's production finding: real \
+              request rates never saturate the pool); shrinking the pool raises \
+              preemption pressure, while the per-job budget keeps any single \
+              job from starving (max preemptions on one job stays low).");
+    Ok(())
+}

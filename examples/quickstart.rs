@@ -1,0 +1,68 @@
+//! Quickstart: load the AOT artifacts, serve three text prompts through the
+//! real PJRT engine, and print responses with timing.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use elis::engine::pjrt_engine::PjrtEngine;
+use elis::engine::tokenizer::Tokenizer;
+use elis::engine::{Engine, SeqSpec};
+use elis::runtime::{default_artifacts_dir, Manifest, Runtime, WeightStore};
+
+fn main() -> Result<()> {
+    // 1. load artifacts (HLO text + weights exported by python/compile/aot.py)
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let store = WeightStore::load(&manifest)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform : {}", rt.platform());
+    println!("served model  : TinyGPT {} params, window={} tokens",
+             manifest.model.n_params, manifest.window_size);
+
+    // 2. build one backend engine (one vLLM-equivalent worker)
+    let mut engine = PjrtEngine::load(rt, &manifest, &store, 1 << 20)?;
+    println!("engine        : {}\n", engine.describe());
+
+    // 3. submit three prompts with different requested lengths
+    let tok = Tokenizer::new(manifest.model.vocab);
+    let prompts = [
+        ("What's the weather like today?", 20usize),
+        ("Write a long story about distributed schedulers.", 120),
+        ("Summarize continuous batching in one line.", 45),
+    ];
+    for (i, (text, len)) in prompts.iter().enumerate() {
+        engine.admit(SeqSpec {
+            id: i as u64,
+            prompt: tok.encode(text),
+            target_total: *len, topic: 0
+        })?;
+    }
+
+    // 4. run scheduling windows (50 tokens each) until everyone finishes —
+    //    this is exactly what the frontend does per iteration
+    let mut live: Vec<u64> = (0..prompts.len() as u64).collect();
+    let t0 = std::time::Instant::now();
+    let mut windows = 0;
+    while !live.is_empty() {
+        let outcome = engine.run_window(&live)?;
+        windows += 1;
+        for out in &outcome.outputs {
+            if out.done {
+                live.retain(|&id| id != out.id);
+                let resp = engine.response(out.id).unwrap_or(&[]).to_vec();
+                let (text, want) = prompts[out.id as usize];
+                println!("prompt {}: {:?}", out.id, text);
+                println!("  -> {} tokens (requested {want}), first 8 decoded: {}",
+                         resp.len(),
+                         tok.decode(&resp[..resp.len().min(8)]));
+            }
+        }
+    }
+    let dt = t0.elapsed();
+    let total_tokens: usize = prompts.iter().map(|(_, l)| l).sum();
+    println!("\n{windows} windows, {total_tokens} tokens in {dt:?} \
+              ({:.1} tok/s on one CPU core)",
+             total_tokens as f64 / dt.as_secs_f64());
+    Ok(())
+}

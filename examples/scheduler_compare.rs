@@ -1,0 +1,80 @@
+//! Compare all five scheduling policies on the calibrated simulation
+//! (LLaMA2-13B profile, paper Table 5 setting) — including the FastServe
+//! MLFQ baseline the paper discusses in related work.
+//!
+//!   cargo run --release --example scheduler_compare [-- --rps-mult 3]
+
+use anyhow::Result;
+
+use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::engine::profiles::{avg_request_rate, ModelProfile};
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::surrogate::SurrogatePredictor;
+use elis::predictor::LengthPredictor;
+use elis::runtime::{default_artifacts_dir, Manifest};
+use elis::util::bench::Table;
+use elis::util::cli::Args;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let rps_mult = args.f64("rps-mult", 3.0);
+    let n = args.usize("n", 200);
+    let batch = args.usize("batch", 4);
+
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let corpus = Corpus::load(&dir)?;
+    let profiles = ModelProfile::all(&manifest.served_models);
+    let profile = ModelProfile::find(&profiles, "lam13").unwrap().clone();
+    let rps = avg_request_rate(&profile, batch) * rps_mult;
+
+    println!("LLaMA2-13B profile, batch {batch}, {rps_mult}x avg rate \
+              ({rps:.2} rps), {n} prompts");
+
+    let mut table = Table::new(
+        "Scheduler comparison (sim engine, calibrated to paper Table 4)",
+        &["policy", "predictor", "avg JCT (s)", "p99 JCT (s)",
+          "queue delay (s)", "preemptions"],
+    );
+
+    for (policy, pname) in [
+        (Policy::Fcfs, "—"),
+        (Policy::Mlfq, "—"),
+        (Policy::Sjf, "oracle total"),
+        (Policy::Isrtf, "noisy (Fig2b-calibrated)"),
+        (Policy::Srpt, "oracle remaining"),
+    ] {
+        let mut gen = RequestGenerator::fabrix(rps, 42);
+        let trace = gen.trace(&corpus, n);
+        let predictor: Box<dyn LengthPredictor> = match policy {
+            Policy::Sjf => Box::new(FrozenOracle),
+            Policy::Isrtf => Box::new(SurrogatePredictor::calibrated(42)),
+            _ => Box::new(OraclePredictor),
+        };
+        let mut sched = Scheduler::new(policy, predictor);
+        let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(
+            SimEngine::with_profile_budget(profile.clone(),
+                                           manifest.window_size, batch))];
+        let cfg = ServeConfig {
+            max_batch: batch,
+            max_iterations: 10_000_000,
+            ..Default::default()
+        };
+        let r = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+        table.row(vec![
+            r.scheduler.clone(),
+            pname.to_string(),
+            format!("{:.2}", r.avg_jct_s()),
+            format!("{:.2}", r.p99_jct_s()),
+            format!("{:.2}", r.avg_queue_delay_s()),
+            format!("{}", r.total_preemptions),
+        ]);
+    }
+    table.print();
+    println!("\nExpected ordering (paper): FCFS worst, ISRTF between FCFS and \
+              the SJF/SRPT oracles.");
+    Ok(())
+}

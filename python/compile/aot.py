@@ -1,0 +1,327 @@
+"""AOT build path: lower L2 (model + predictor, calling L1 Pallas kernels)
+to HLO *text* and export weights/datasets for the rust runtime.
+
+HLO text — not `.serialize()` — is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+published `xla` 0.1.6 crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  manifest.json                 — executable/weight/dataset index (rust reads this)
+  model.prefill.b{1,2,4}.hlo.txt
+  model.decode.b{1,2,4}.hlo.txt
+  predictor.b8.hlo.txt
+  weights/model/*.bin           — raw little-endian tensors
+  weights/predictor_trained/*.bin
+  weights/predictor_init/*.bin  — "pre-trained BGE" row of Table 2
+  corpus.json                   — serving corpus (test-split prompts)
+  predictor_test.json           — held-out step dataset for Table 2 / Fig 2b
+  embed_groups.json             — Fig 1 sentence groups
+  predictor_metrics.json        — build-time eval + training history
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import predictor as P
+from .configs import (BATCH_SIZES, CORPUS, GAMMA_ALPHA, GAMMA_BETA, MODEL,
+                      PREDICTOR, PREDICTOR_BATCH, SERVED_MODELS,
+                      TRAINING_MODELS, WINDOW_SIZE)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(arr: np.ndarray) -> str:
+    return {np.dtype(np.float32): "f32", np.dtype(np.int32): "i32"}[arr.dtype]
+
+
+def export_weights(out_dir: str, rel: str, named_arrays) -> list:
+    """Write raw little-endian blobs; return manifest entries (ordered)."""
+    d = os.path.join(out_dir, rel)
+    os.makedirs(d, exist_ok=True)
+    entries = []
+    for i, (name, arr) in enumerate(named_arrays):
+        arr = np.asarray(arr)
+        fname = f"{i:03d}_{name.replace('.', '_')}.bin"
+        arr.astype(arr.dtype.newbyteorder("<")).tofile(os.path.join(d, fname))
+        entries.append({
+            "name": name,
+            "file": f"{rel}/{fname}",
+            "shape": list(arr.shape),
+            "dtype": _dtype_tag(arr),
+        })
+    return entries
+
+
+def _spec(shape, dtype) -> dict:
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_model(out_dir: str, params, manifest: dict, quiet=False):
+    cfg = MODEL
+    weight_specs = [jax.ShapeDtypeStruct(M.param_shapes(cfg)[n], jnp.float32)
+                    for n in M.param_order(cfg)]
+    for b in BATCH_SIZES:
+        t0 = time.time()
+        # ---- prefill ----
+        pre = jax.jit(M.make_prefill_fn(cfg))
+        args = weight_specs + [
+            jax.ShapeDtypeStruct((b, cfg.prompt_max), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        text = to_hlo_text(pre.lower(*args))
+        name = f"model.prefill.b{b}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "hlo": f"{name}.hlo.txt",
+            "weights": "model",
+            "inputs": [
+                {"name": "tokens", **_spec((b, cfg.prompt_max), "i32")},
+                {"name": "lengths", **_spec((b,), "i32")},
+            ],
+            "outputs": [
+                {"name": "kv", **_spec(M.kv_shape(b, cfg), "f32")},
+                {"name": "first_token", **_spec((b,), "i32")},
+            ],
+        }
+        # ---- decode window ----
+        dec = jax.jit(M.make_decode_fn(cfg, WINDOW_SIZE))
+        args = weight_specs + [
+            jax.ShapeDtypeStruct(M.kv_shape(b, cfg), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        text = to_hlo_text(dec.lower(*args))
+        name = f"model.decode.b{b}"
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        manifest["executables"][name] = {
+            "hlo": f"{name}.hlo.txt",
+            "weights": "model",
+            "inputs": [
+                {"name": "kv", **_spec(M.kv_shape(b, cfg), "f32")},
+                {"name": "lengths", **_spec((b,), "i32")},
+                {"name": "last_token", **_spec((b,), "i32")},
+                {"name": "active", **_spec((b,), "i32")},
+            ],
+            "outputs": [
+                {"name": "kv", **_spec(M.kv_shape(b, cfg), "f32")},
+                {"name": "tokens", **_spec((b, WINDOW_SIZE), "i32")},
+                {"name": "lengths", **_spec((b,), "i32")},
+            ],
+        }
+        if not quiet:
+            print(f"[aot] lowered model b{b} in {time.time()-t0:.1f}s", flush=True)
+
+
+def lower_predictor(out_dir: str, manifest: dict, quiet=False):
+    cfg = PREDICTOR
+    b = PREDICTOR_BATCH
+    weight_specs = [jax.ShapeDtypeStruct(P.param_shapes(cfg)[n], jnp.float32)
+                    for n in P.param_order(cfg)]
+    fn = jax.jit(P.make_predict_fn(cfg))
+    args = weight_specs + [
+        jax.ShapeDtypeStruct((b, cfg.prompt_max), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.float32),
+    ]
+    text = to_hlo_text(fn.lower(*args))
+    name = f"predictor.b{b}"
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(text)
+    manifest["executables"][name] = {
+        "hlo": f"{name}.hlo.txt",
+        "weights": "predictor_trained",
+        "alt_weights": ["predictor_init"],
+        "inputs": [
+            {"name": "tokens", **_spec((b, cfg.prompt_max), "i32")},
+            {"name": "prompt_len", **_spec((b,), "i32")},
+            {"name": "gen_count", **_spec((b,), "f32")},
+        ],
+        "outputs": [
+            {"name": "pred_remaining", **_spec((b,), "f32")},
+            {"name": "pooled", **_spec((b, cfg.d_model), "f32")},
+        ],
+    }
+    if not quiet:
+        print(f"[aot] lowered predictor b{b}", flush=True)
+
+
+def export_corpus(out_dir: str, corpus_entries) -> None:
+    obj = {
+        "window_size": WINDOW_SIZE,
+        "gamma_alpha": GAMMA_ALPHA,
+        "gamma_beta": GAMMA_BETA,
+        "prompt_max": MODEL.prompt_max,
+        "entries": [
+            {"tokens": e.tokens.tolist(), "topic": int(e.topic),
+             "total_len": int(e.total_len)}
+            for e in corpus_entries
+        ],
+    }
+    with open(os.path.join(out_dir, "corpus.json"), "w") as f:
+        json.dump(obj, f)
+
+
+def export_predictor_test(out_dir: str, ds: D.StepDataset, n_max=2000) -> None:
+    n = min(n_max, len(ds))
+    idx = np.arange(n)
+    obj = {
+        # combined inputs (prompt + SEP + suffix) — lets rust cross-check
+        # its own input construction against python's
+        "tokens": ds.tokens[idx].tolist(),
+        "prompt_len": ds.prompt_len[idx].tolist(),
+        # raw parts, the form the serving path sees
+        "raw_prompt": [ds.raw_prompt[i].tolist() for i in idx],
+        "suffix": [ds.suffix[i].tolist() for i in idx],
+        "gen_count": ds.gen_count[idx].tolist(),
+        "step": ds.step[idx].tolist(),
+        "target": ds.target[idx].tolist(),
+    }
+    with open(os.path.join(out_dir, "predictor_test.json"), "w") as f:
+        json.dump(obj, f)
+
+
+def export_embed_groups(out_dir: str) -> None:
+    groups = D.embedding_groups()
+    obj = {k: v.tolist() for k, v in groups.items()}
+    with open(os.path.join(out_dir, "embed_groups.json"), "w") as f:
+        json.dump(obj, f)
+
+
+def build(out_dir: str, *, train_budget_s: float = 240.0,
+          fast: bool = False, quiet: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    t_start = time.time()
+
+    # ---------------- corpus + datasets ----------------
+    corpus = D.generate_corpus(CORPUS)
+    train_e, val_e, test_e = corpus.split()
+    if fast:
+        train_e, val_e, test_e = train_e[:300], val_e[:100], test_e[:100]
+    train_ds = D.step_dataset(train_e)
+    val_ds = D.step_dataset(val_e)
+    test_ds = D.step_dataset(test_e)
+    if not quiet:
+        print(f"[aot] corpus: {len(corpus.entries)} prompts; step examples "
+              f"train={len(train_ds)} val={len(val_ds)} test={len(test_ds)}",
+              flush=True)
+
+    # ---------------- predictor training ----------------
+    init_p = P.init_params()
+    metrics_init = P.evaluate(init_p, test_ds)
+    budget = 20.0 if fast else train_budget_s
+    trained_p, history = P.train(init_p, train_ds, val_ds,
+                                 time_budget_s=budget, verbose=not quiet)
+    metrics_trained = P.evaluate(trained_p, test_ds)
+    if not quiet:
+        print(f"[aot] predictor init:    {metrics_init}", flush=True)
+        print(f"[aot] predictor trained: {metrics_trained}", flush=True)
+
+    # ---------------- manifest skeleton ----------------
+    manifest: dict = {
+        "window_size": WINDOW_SIZE,
+        "batch_sizes": list(BATCH_SIZES),
+        "predictor_batch": PREDICTOR_BATCH,
+        "model_config": {
+            "vocab": MODEL.vocab, "d_model": MODEL.d_model,
+            "n_layers": MODEL.n_layers, "n_heads": MODEL.n_heads,
+            "d_ff": MODEL.d_ff, "max_seq": MODEL.max_seq,
+            "prompt_max": MODEL.prompt_max, "n_params": MODEL.n_params,
+        },
+        "predictor_config": {
+            "d_model": PREDICTOR.d_model, "prompt_max": PREDICTOR.prompt_max,
+            "gen_scale": P.GEN_SCALE, "plen_scale": P.PLEN_SCALE,
+            "target_scale": P.TARGET_SCALE,
+        },
+        "gamma_alpha": GAMMA_ALPHA,
+        "gamma_beta": GAMMA_BETA,
+        "served_models": [
+            {"name": m.name, "abbrev": m.abbrev, "params_b": m.params_b,
+             "avg_latency_ms": m.avg_latency_ms,
+             "kv_bytes_per_token": m.kv_bytes_per_token,
+             "preempt_batch": m.preempt_batch,
+             "mem_limit_frac": m.mem_limit_frac}
+            for m in SERVED_MODELS
+        ],
+        "training_models": [
+            {"name": n, "size_b": s, "producer": p}
+            for (n, s, p) in TRAINING_MODELS
+        ],
+        "executables": {},
+        "weights": {},
+    }
+
+    # ---------------- weights ----------------
+    model_p = M.init_params()
+    manifest["weights"]["model"] = export_weights(
+        out_dir, "weights/model",
+        [(n, model_p[n]) for n in M.param_order()])
+    manifest["weights"]["predictor_trained"] = export_weights(
+        out_dir, "weights/predictor_trained",
+        [(n, trained_p[n]) for n in P.param_order()])
+    manifest["weights"]["predictor_init"] = export_weights(
+        out_dir, "weights/predictor_init",
+        [(n, init_p[n]) for n in P.param_order()])
+
+    # ---------------- HLO lowering ----------------
+    lower_model(out_dir, model_p, manifest, quiet=quiet)
+    lower_predictor(out_dir, manifest, quiet=quiet)
+
+    # ---------------- datasets ----------------
+    export_corpus(out_dir, test_e)
+    export_predictor_test(out_dir, test_ds)
+    export_embed_groups(out_dir)
+    from .golden import build_golden
+    build_golden(out_dir)
+
+    metrics = {
+        "predictor_init": metrics_init,
+        "predictor_trained": metrics_trained,
+        "history": history,
+        "build_seconds": time.time() - t_start,
+    }
+    with open(os.path.join(out_dir, "predictor_metrics.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+    manifest["predictor_metrics"] = metrics
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not quiet:
+        print(f"[aot] done in {time.time()-t_start:.0f}s -> {out_dir}",
+              flush=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-budget", type=float, default=240.0,
+                    help="wall-clock budget for predictor training (s)")
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny datasets + short training (CI smoke)")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    build(args.out, train_budget_s=args.train_budget, fast=args.fast,
+          quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

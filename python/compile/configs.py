@@ -1,0 +1,154 @@
+"""Shared hyper-parameters for the ELIS build path.
+
+Everything the three layers must agree on lives here: the served TinyGPT
+model (the vLLM substitute), the response-length predictor (the BGE
+substitute), the synthetic LMSYS-like corpus, and the 50-token scheduling
+window the paper's ISRTF scheduler operates on.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+# The paper's scheduling iteration: one window = 50 decode tokens (§4.1).
+WINDOW_SIZE = 50
+
+# Batch sizes the paper evaluates (Fig 6 uses {1, 2, 4}; Table 5 uses 4).
+# One AOT executable is compiled per batch size.
+BATCH_SIZES = (1, 2, 4)
+
+# Predictor executes on fixed batches of 8 (padded); the frontend batches
+# priority refreshes across jobs.
+PREDICTOR_BATCH = 8
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """TinyGPT — the served decoder LLM (substitute for OPT/LLaMA on vLLM)."""
+
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    # prompt slots + generated-token slots; must hold prompt_max + out_max.
+    max_seq: int = 576
+    prompt_max: int = 64
+    seed: int = 1234
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_params(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        return (
+            self.vocab * self.d_model
+            + self.max_seq * self.d_model
+            + self.n_layers * per_layer
+        )
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    """BGE-substitute encoder + 8 FC layers (paper §4.2).
+
+    The paper freezes a 110M BGE and trains eight 1024-wide FC layers.  We
+    shrink the encoder (2 layers, d=96) and the head (256-wide) so build-time
+    training fits a single CPU core, keeping the same structure: token
+    embedding -> bidirectional encoder -> mean pooling -> 8 FC layers ->
+    scalar remaining-length regression.
+    """
+
+    vocab: int = 2048
+    d_model: int = 96
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 192
+    prompt_max: int = 64
+    n_fc: int = 8
+    fc_hidden: int = 256
+    seed: int = 4321
+    # extra scalar features appended to the pooled embedding:
+    # [generated_so_far / 100, prompt_len / 64]
+    n_extra_feats: int = 2
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class CorpusConfig:
+    """Synthetic LMSYS-Chat-1M substitute.
+
+    Prompts are drawn from topic bands of the token space; each topic has a
+    latent verbosity that drives the true response length, with log-normal
+    noise, giving the heavy-tailed length mix that causes head-of-line
+    blocking (and a learnable signal for the predictor).
+    """
+
+    n_prompts: int = 10000
+    n_topics: int = 16
+    prompt_min: int = 8
+    prompt_max: int = 64
+    out_min: int = 5
+    out_max: int = 480
+    # log-normal multiplicative noise on the topic base length
+    noise_sigma: float = 0.35
+    seed: int = 777
+    # train/val/test split, paper's 6:2:2
+    split: Tuple[float, float, float] = (0.6, 0.2, 0.2)
+    # topic base lengths span [base_min, base_max] geometrically
+    base_min: float = 20.0
+    base_max: float = 300.0
+
+
+# Five serving-model profiles mirroring paper Table 4 (avg latency on A100).
+# `latency_scale` is each model's measured avg latency relative to real time;
+# the rust sim engine turns these into per-window service times.
+@dataclass(frozen=True)
+class ServedModelProfile:
+    name: str
+    abbrev: str
+    params_b: float           # parameter count, billions
+    avg_latency_ms: float     # paper Table 4
+    kv_bytes_per_token: int   # per-token KV footprint (fp16, all layers)
+    preempt_batch: int        # paper Table 6: min batch size that preempts
+    mem_limit_frac: float     # paper Table 6: vLLM memory limit used
+
+
+SERVED_MODELS: List[ServedModelProfile] = [
+    ServedModelProfile("OPT-6.7B", "opt6.7", 6.7, 1315.5, 2 * 2 * 32 * 32 * 128, 30, 0.40),
+    ServedModelProfile("OPT-13B", "opt13", 13.0, 2643.2, 2 * 2 * 40 * 40 * 128, 60, 0.40),
+    ServedModelProfile("LlaMA2-7B", "lam7", 7.0, 6522.2, 2 * 2 * 32 * 32 * 128, 40, 0.30),
+    ServedModelProfile("LlaMA2-13B", "lam13", 13.0, 8610.2, 2 * 2 * 40 * 40 * 128, 120, 0.90),
+    ServedModelProfile("Vicuna-13B", "vic", 13.0, 2964.9, 2 * 2 * 40 * 40 * 128, 90, 0.40),
+]
+
+
+# Paper Table 7: the 13 models whose vLLM outputs trained the predictor.
+TRAINING_MODELS: List[Tuple[str, float, str]] = [
+    ("LlaMA-7B", 7, "Meta"),
+    ("LlaMA-13B", 13, "Meta"),
+    ("LlaMA2-7B", 7, "Huggyllama"),
+    ("LlaMA2-13B", 13, "Huggyllama"),
+    ("Vicuna-7B", 7, "LMSYS"),
+    ("Vicuna-13B", 13, "LMSYS"),
+    ("OPT-1B", 1.3, "Facebook"),
+    ("OPT-3B", 2.7, "Facebook"),
+    ("OPT-7B", 6.7, "Facebook"),
+    ("OPT-13B", 13, "Facebook"),
+    ("GPT-NeoX", 20, "EleutherAI"),
+    ("Gemma", 7, "Google"),
+    ("SOLAR", 11, "Upstage"),
+]
+
+# FabriX trace fit (paper Fig 4): request intervals ~ Gamma(alpha, beta).
+GAMMA_ALPHA = 0.73
+GAMMA_BETA = 10.41
+
+MODEL = ModelConfig()
+PREDICTOR = PredictorConfig()
+CORPUS = CorpusConfig()

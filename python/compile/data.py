@@ -1,0 +1,244 @@
+"""Synthetic LMSYS-Chat-1M substitute + predictor datasets.
+
+The real paper samples prompts from LMSYS-Chat-1M and collects response
+lengths from 13 LLMs served by vLLM (Table 7).  Offline we cannot ship that
+corpus, so we build a generator that preserves the two properties ELIS's
+evaluation depends on:
+
+1. response lengths are heavy-tailed and span ~5..480 tokens, so FCFS
+   suffers head-of-line blocking that SRTF-style scheduling can fix;
+2. the length is *predictable from the prompt* (topic/verbosity signal plus
+   noise), so a learned predictor attains a meaningful R^2 — and the
+   *remaining* length becomes easier to predict as generation progresses
+   (the paper's Fig 2b).
+
+Each topic owns a band of the token space and a latent verbosity drawn
+geometrically from [base_min, base_max].  A prompt is a sequence of tokens
+from its topic band (plus a few common "function" tokens); its true output
+length is `clip(round(base * mod(prompt_len) * lognormal(sigma)), out_min,
+out_max)`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .configs import CORPUS, PREDICTOR, WINDOW_SIZE, CorpusConfig
+
+
+# Token ids 0..RESERVED-1 are reserved: 0 = PAD, 1 = BOS/common, 3 = SEP.
+RESERVED = 16
+SEP_ID = 3
+
+# ---------------------------------------------------------------------------
+# Response-content signal (paper §3.3's mechanism).  Real LLM responses
+# "look" verbose or terse — the paper's iterative predictor reads the
+# partial output and refines its estimate.  Synthetic response streams
+# reproduce that: tokens are drawn from a band keyed to the response's
+# length bucket, switching to a "closing" band in the final ~25 tokens.
+# The rust SimEngine implements the IDENTICAL formula
+# (engine::sim_response_token) so inference-time streams match training.
+# ---------------------------------------------------------------------------
+N_BUCKETS = 16
+BAND_WIDTH = 16
+# bands occupy the top (N_BUCKETS + 1) * BAND_WIDTH ids of the vocab
+RESPONSE_BAND_IDS = (N_BUCKETS + 1) * BAND_WIDTH
+CLOSING_TOKENS = 25
+
+# predictor input layout: prompt head + SEP + generated-suffix tail
+PROMPT_KEEP = 47
+SUFFIX_MAX = 16
+
+
+def length_bucket(total: int) -> int:
+    return int(np.clip(np.log2(max(total, 5) / 5.0), 0, N_BUCKETS - 1))
+
+
+def response_token(i: int, total: int, topic: int, vocab: int) -> int:
+    """Deterministic synthetic response token (mirrored in rust)."""
+    if total - i <= CLOSING_TOKENS:
+        band_start = vocab - BAND_WIDTH  # closing band
+    else:
+        band_start = vocab - BAND_WIDTH * (2 + length_bucket(total))
+    return band_start + (i * 7 + topic * 3) % BAND_WIDTH
+
+
+def response_stream(total: int, topic: int, vocab: int) -> np.ndarray:
+    return np.array([response_token(i, total, topic, vocab)
+                     for i in range(total)], dtype=np.int32)
+
+
+def predictor_input(prompt: np.ndarray, suffix: np.ndarray,
+                    prompt_max: int) -> Tuple[np.ndarray, int]:
+    """Combined predictor input: prompt[:47] + SEP + last-16 generated
+    tokens, zero-padded to prompt_max.  Mirrored exactly by
+    rust predictor::build_input."""
+    head = prompt[:PROMPT_KEEP]
+    tail = suffix[-SUFFIX_MAX:] if len(suffix) else suffix
+    seq = np.concatenate([head, np.array([SEP_ID], np.int32), tail])
+    seq = seq[:prompt_max].astype(np.int32)
+    out = np.zeros(prompt_max, dtype=np.int32)
+    out[: len(seq)] = seq
+    return out, int(len(seq))
+
+
+@dataclass
+class CorpusEntry:
+    tokens: np.ndarray      # (prompt_len,) int32, unpadded
+    topic: int
+    total_len: int          # true response length in tokens
+
+
+@dataclass
+class Corpus:
+    entries: List[CorpusEntry]
+    cfg: CorpusConfig
+
+    def split(self) -> Tuple[List[CorpusEntry], List[CorpusEntry], List[CorpusEntry]]:
+        """Deterministic 6:2:2 split (paper §4.2)."""
+        n = len(self.entries)
+        a = int(n * self.cfg.split[0])
+        b = a + int(n * self.cfg.split[1])
+        return self.entries[:a], self.entries[a:b], self.entries[b:]
+
+
+def topic_bases(cfg: CorpusConfig = CORPUS) -> np.ndarray:
+    """Latent verbosity per topic, geometric ladder over [base_min, base_max]."""
+    t = np.arange(cfg.n_topics) / max(cfg.n_topics - 1, 1)
+    return cfg.base_min * (cfg.base_max / cfg.base_min) ** t
+
+
+def _topic_band(topic: int, vocab: int, n_topics: int) -> Tuple[int, int]:
+    # prompt-topic bands live below the response bands
+    usable = vocab - RESERVED - RESPONSE_BAND_IDS
+    width = usable // n_topics
+    lo = RESERVED + topic * width
+    return lo, lo + width
+
+
+def length_modulation(prompt_len: int) -> float:
+    """Deterministic prompt-length effect on response length."""
+    return 1.0 + 0.3 * np.sin(prompt_len / 20.0)
+
+
+def true_length(topic: int, prompt_len: int, noise: float,
+                cfg: CorpusConfig = CORPUS) -> int:
+    base = topic_bases(cfg)[topic]
+    raw = base * length_modulation(prompt_len) * np.exp(noise)
+    return int(np.clip(np.round(raw), cfg.out_min, cfg.out_max))
+
+
+def generate_corpus(cfg: CorpusConfig = CORPUS) -> Corpus:
+    rng = np.random.default_rng(cfg.seed)
+    entries: List[CorpusEntry] = []
+    bases = topic_bases(cfg)
+    for _ in range(cfg.n_prompts):
+        topic = int(rng.integers(0, cfg.n_topics))
+        plen = int(rng.integers(cfg.prompt_min, cfg.prompt_max + 1))
+        lo, hi = _topic_band(topic, PREDICTOR.vocab, cfg.n_topics)
+        toks = rng.integers(lo, hi, size=plen).astype(np.int32)
+        # sprinkle common tokens so topics share some vocabulary (makes the
+        # predictor's job non-trivial but solvable)
+        n_common = max(1, plen // 8)
+        pos = rng.choice(plen, size=n_common, replace=False)
+        toks[pos] = rng.integers(1, RESERVED, size=n_common)
+        noise = float(rng.normal(0.0, cfg.noise_sigma))
+        raw = bases[topic] * length_modulation(plen) * np.exp(noise)
+        total = int(np.clip(np.round(raw), cfg.out_min, cfg.out_max))
+        entries.append(CorpusEntry(tokens=toks, topic=topic, total_len=total))
+    return Corpus(entries=entries, cfg=cfg)
+
+
+def pad_tokens(tokens: np.ndarray, plen_max: int) -> np.ndarray:
+    out = np.zeros(plen_max, dtype=np.int32)
+    out[: min(len(tokens), plen_max)] = tokens[:plen_max]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Predictor step-dataset: (prompt, generated_so_far) -> remaining tokens.
+# One example per 50-token scheduling iteration of each prompt (§3.3).
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepDataset:
+    tokens: np.ndarray      # (N, prompt_max) int32 — predictor_input()
+    prompt_len: np.ndarray  # (N,) int32 — combined valid length
+    gen_count: np.ndarray   # (N,) int32 — tokens already generated (k * 50)
+    step: np.ndarray        # (N,) int32 — iteration index k
+    target: np.ndarray      # (N,) float32 — remaining tokens
+    total: np.ndarray       # (N,) float32 — full response length
+    raw_prompt: List[np.ndarray]  # unpadded prompts (for export)
+    suffix: List[np.ndarray]      # generated suffix fed to the predictor
+
+    def __len__(self) -> int:
+        return len(self.target)
+
+    def subset(self, idx: np.ndarray) -> "StepDataset":
+        return StepDataset(
+            self.tokens[idx], self.prompt_len[idx], self.gen_count[idx],
+            self.step[idx], self.target[idx], self.total[idx],
+            [self.raw_prompt[i] for i in idx],
+            [self.suffix[i] for i in idx])
+
+
+def step_dataset(entries: List[CorpusEntry],
+                 prompt_max: int = PREDICTOR.prompt_max,
+                 window: int = WINDOW_SIZE,
+                 max_steps_per_prompt: int = 10) -> StepDataset:
+    toks, plens, gens, steps, targets, totals = [], [], [], [], [], []
+    raw_prompts, suffixes = [], []
+    for e in entries:
+        stream = response_stream(e.total_len, e.topic, PREDICTOR.vocab)
+        n_steps = min(int(np.ceil(e.total_len / window)), max_steps_per_prompt)
+        for k in range(n_steps):
+            gen = k * window
+            suffix = stream[:gen][-SUFFIX_MAX:]
+            combined, clen = predictor_input(e.tokens, suffix, prompt_max)
+            toks.append(combined)
+            plens.append(clen)
+            gens.append(gen)
+            steps.append(k)
+            targets.append(float(e.total_len - gen))
+            totals.append(float(e.total_len))
+            raw_prompts.append(e.tokens)
+            suffixes.append(suffix)
+    return StepDataset(
+        tokens=np.stack(toks).astype(np.int32),
+        prompt_len=np.array(plens, dtype=np.int32),
+        gen_count=np.array(gens, dtype=np.int32),
+        step=np.array(steps, dtype=np.int32),
+        target=np.array(targets, dtype=np.float32),
+        total=np.array(totals, dtype=np.float32),
+        raw_prompt=raw_prompts,
+        suffix=suffixes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fig 1 substitute: two sentence groups, one tight topic vs scattered topics.
+# ---------------------------------------------------------------------------
+
+def embedding_groups(n_per_group: int = 100,
+                     seed: int = 31337) -> Dict[str, np.ndarray]:
+    """Group A: 100 prompts from a single topic ("weather"); group B: 100
+    prompts spread over all other topics.  The encoder should embed A in a
+    tight cluster and B scattered (paper Fig 1)."""
+    rng = np.random.default_rng(seed)
+    cfg = CORPUS
+    pm = PREDICTOR.prompt_max
+
+    def mk(topic: int) -> np.ndarray:
+        plen = int(rng.integers(cfg.prompt_min, cfg.prompt_max + 1))
+        lo, hi = _topic_band(topic, PREDICTOR.vocab, cfg.n_topics)
+        t = rng.integers(lo, hi, size=plen).astype(np.int32)
+        return pad_tokens(t, pm)
+
+    group_a = np.stack([mk(0) for _ in range(n_per_group)])
+    group_b = np.stack([mk(int(rng.integers(1, cfg.n_topics)))
+                        for _ in range(n_per_group)])
+    return {"similar": group_a.astype(np.int32),
+            "dissimilar": group_b.astype(np.int32)}

@@ -1,0 +1,59 @@
+"""Golden cross-layer check data.
+
+Runs the L2 jax model (with the L1 Pallas kernels) on a fixed prompt and
+records the greedy token stream.  The rust runtime must reproduce these
+exact tokens through the AOT HLO + exported weights — proving the whole
+python->HLO->PJRT->rust path is semantics-preserving.
+
+Standalone: `python -m compile.golden --out ../artifacts` (also invoked by
+aot.build).
+"""
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import MODEL, WINDOW_SIZE
+
+
+GOLDEN_PROMPT = [1, 100, 200, 300, 777, 901, 1500, 33]
+
+
+def build_golden(out_dir: str) -> dict:
+    params = M.init_params()
+    b = 1
+    toks = np.zeros((b, MODEL.prompt_max), np.int32)
+    toks[0, : len(GOLDEN_PROMPT)] = GOLDEN_PROMPT
+    lens = np.array([len(GOLDEN_PROMPT)], np.int32)
+    kv, first, _ = M.prefill(params, jnp.asarray(toks), jnp.asarray(lens))
+    active = jnp.ones(b, jnp.int32)
+    kv2, w1, nl = M.decode_window(params, kv, jnp.asarray(lens), first, active)
+    _, w2, _ = M.decode_window(params, kv2, nl, w1[:, -1], active)
+    stream = [int(first[0])] + [int(t) for t in np.asarray(w1[0])] + \
+             [int(t) for t in np.asarray(w2[0])]
+    obj = {
+        "prompt": GOLDEN_PROMPT,
+        "prompt_len": len(GOLDEN_PROMPT),
+        "window_size": WINDOW_SIZE,
+        # first token + two full windows
+        "tokens": stream,
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(obj, f)
+    return obj
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    g = build_golden(args.out)
+    print(f"golden: {len(g['tokens'])} tokens, first 5 = {g['tokens'][:5]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Pallas attention kernels — the L1 hot-spot of the served model.
+
+vLLM's contribution at this level is PagedAttention: a CUDA kernel where each
+threadblock gathers one sequence's KV pages from HBM into shared memory and
+runs the dot-products on tensor cores.  The TPU re-think (see DESIGN.md
+§Hardware-Adaptation): instead of a gather over pages, each grid step stages
+one (batch, head) KV tile HBM->VMEM via `BlockSpec`, and the q.K^T / p.V
+contractions are dense `dot`s the MXU can consume.  Length masking replaces
+the page table: slots >= `length` are masked to -inf before the softmax.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel body to plain HLO,
+which is exactly what the rust runtime loads.  Real-TPU efficiency is
+estimated analytically in DESIGN.md §Perf.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+# interpret=True is mandatory on CPU (see module docstring); kept as a flag
+# so a TPU build can flip it off without touching call sites.
+INTERPRET = True
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    """One (batch, head) tile: q (1, Dh) against KV (S, Dh).
+
+    VMEM footprint per grid step: (2*S*Dh + 2*Dh + S) * 4 bytes — for the
+    production shape (S=576, Dh=64) that is ~300 KB, comfortably inside a
+    TPU core's ~16 MB VMEM, leaving room for double-buffering the next
+    (batch, head) tile while this one computes.
+    """
+    q = q_ref[...]                      # (Dh,)   — leading dims squeezed
+    k = k_ref[...]                      # (S, Dh)
+    v = v_ref[...]                      # (S, Dh)
+    length = len_ref[0]
+    # MXU-friendly contraction: (S, Dh) x (Dh,) -> (S,)
+    scores = jnp.dot(k, q) * scale      # (S,)
+    s = scores.shape[0]
+    mask = jax.lax.iota(jnp.int32, s) < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p)
+    # (S,) x (S, Dh) -> (Dh,)
+    o_ref[...] = jnp.dot(p / denom, v)
+
+
+def _decode_kernel_allheads(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    """One batch row, ALL heads per grid step: q (H, Dh) vs KV (H, S, Dh).
+
+    Perf variant (§Perf L1): on the CPU interpret path the per-grid-step
+    bookkeeping dominates, so collapsing the head axis into the block cuts
+    grid steps by H× (decode window = 50 sequential steps, each with its
+    own grid).  On TPU this trades per-(batch,head) VMEM tiles (~300 KB)
+    for per-batch tiles (H× larger, ~1.2 MB at production shape) — still
+    comfortably inside VMEM, with the same MXU contractions batched over H.
+    """
+    q = q_ref[...]                      # (H, Dh)
+    k = k_ref[...]                      # (H, S, Dh)
+    v = v_ref[...]                      # (H, S, Dh)
+    length = len_ref[0]
+    # batched contraction over heads: (H, S, Dh) x (H, Dh) -> (H, S)
+    scores = jax.lax.dot_general(
+        k, q, (((2,), (1,)), ((0,), (0,)))) * scale
+    s = scores.shape[1]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (1, s), 1) < length)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    p = p / denom
+    # (H, S) x (H, S, Dh) -> (H, Dh)
+    o_ref[...] = jax.lax.dot_general(p, v, (((1,), (1,)), ((0,), (0,))))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, interpret=None,
+                     grid_mode=None):
+    """Pallas decode attention.
+
+    Args / returns exactly as `ref.decode_attention_ref`:
+      q (B, H, Dh), k_cache/v_cache (B, H, S, Dh), lengths (B,) int32
+      -> (B, H, Dh)
+
+    grid_mode: "bh" (one (batch, head) tile per grid step) or "batch"
+    (all heads per step — the §Perf default; see _decode_kernel_allheads).
+    Env override: ELIS_DECODE_GRID.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    if grid_mode is None:
+        grid_mode = os.environ.get("ELIS_DECODE_GRID", "batch")
+    b, h, dh = q.shape
+    s = k_cache.shape[2]
+    scale = 1.0 / (dh ** 0.5)
+    if grid_mode == "batch":
+        kernel = functools.partial(_decode_kernel_allheads, scale=scale)
+        return pl.pallas_call(
+            kernel,
+            grid=(b,),
+            in_specs=[
+                pl.BlockSpec((None, h, dh), lambda i: (i, 0, 0)),
+                pl.BlockSpec((None, h, s, dh), lambda i: (i, 0, 0, 0)),
+                pl.BlockSpec((None, h, s, dh), lambda i: (i, 0, 0, 0)),
+                pl.BlockSpec((1,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((None, h, dh), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+            interpret=interpret,
+        )(q, k_cache, v_cache, lengths)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            # q: one (1, Dh) row per (batch, head)
+            pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),
+            # KV: one (S, Dh) tile per (batch, head) — the HBM->VMEM stage
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, s, dh), lambda i, j: (i, j, 0, 0)),
+            # per-sequence valid length (scalar per batch row)
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)
+    return out
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    """One (batch, head) tile: causal attention over the whole prompt.
+
+    The (T, T) score tile for T=64 is 16 KB — a single MXU-sized block, so
+    no inner flash loop is needed at prompt scale; longer prompts would tile
+    the key dimension with a running (m, l) rescale exactly like flash
+    attention.
+    """
+    q = q_ref[...]                      # (T, Dh)
+    k = k_ref[...]                      # (T, Dh)
+    v = v_ref[...]                      # (T, Dh)
+    length = len_ref[0]
+    t = q.shape[0]
+    scores = jnp.dot(q, k.T) * scale    # (T, T)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    mask = (cols <= rows) & (cols < length)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.dot(p / denom, v)
+
+
+def prefill_attention(q, k, v, lengths, *, interpret=None):
+    """Pallas causal prefill attention.
+
+    q, k, v: (B, H, T, Dh); lengths: (B,) int32 -> (B, H, T, Dh)
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    b, h, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_prefill_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lengths)
+    return out
+
+
+def _encoder_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    """Bidirectional (padding-masked) attention tile for the predictor."""
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    length = len_ref[0]
+    t = q.shape[0]
+    scores = jnp.dot(q, k.T) * scale
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    mask = cols < length
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.dot(p / denom, v)
+
+
+def encoder_attention(q, k, v, lengths, *, interpret=None):
+    """Pallas bidirectional attention for the predictor encoder.
+
+    q, k, v: (B, H, T, Dh); lengths: (B,) int32 -> (B, H, T, Dh)
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    b, h, t, dh = q.shape
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_encoder_kernel, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, None, t, dh), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=interpret,
+    )(q, k, v, lengths)
+    return out

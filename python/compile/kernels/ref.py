@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the Pallas attention kernels.
+
+These are the correctness references: `test_kernels.py` sweeps shapes and
+dtypes with hypothesis and asserts the Pallas kernels (interpret=True) match
+these implementations to tight tolerances.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token multi-head attention against a KV cache.
+
+    Args:
+      q:        (B, H, Dh)  query for the token being decoded.
+      k_cache:  (B, H, S, Dh)
+      v_cache:  (B, H, S, Dh)
+      lengths:  (B,) int32 — number of valid cache slots per sequence
+                (the current token's k/v must already be written).
+
+    Returns:
+      (B, H, Dh) attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    # (B, H, S)
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) * scale
+    s = k_cache.shape[2]
+    mask = jnp.arange(s)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask.astype(probs.dtype)
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", probs, v_cache)
+
+
+def prefill_attention_ref(q, k, v, lengths):
+    """Causal + padding-masked self attention over the prompt.
+
+    Args:
+      q, k, v:  (B, H, T, Dh)
+      lengths:  (B,) int32 — valid prompt length per sequence.
+
+    Returns:
+      (B, H, T, Dh)
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    t = q.shape[2]
+    i = jnp.arange(t)[:, None]
+    j = jnp.arange(t)[None, :]
+    causal = j <= i                                    # (T, T)
+    valid = jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None]
+    mask = causal[None, None, :, :] & valid
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * mask.astype(probs.dtype)
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    probs = probs / denom
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def encoder_attention_ref(q, k, v, lengths):
+    """Bidirectional padding-masked attention (predictor encoder)."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    t = q.shape[2]
+    valid = jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs * valid.astype(probs.dtype)
+    denom = jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    probs = probs / denom
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)

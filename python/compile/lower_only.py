@@ -1,0 +1,37 @@
+"""Re-lower ONLY the served-model HLOs (perf-pass tool).
+
+Kernel/structure changes to TinyGPT (e.g. the §Perf decode-grid variant)
+don't touch weights or the predictor, so re-running the full `aot.build`
+(which retrains) would waste ~10 minutes per iteration.  This script
+re-lowers model.{prefill,decode}.b{1,2,4} + golden.json in-place against an
+existing artifacts directory.
+
+    cd python && python -m compile.lower_only --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+from . import aot
+from . import model as M
+from .golden import build_golden
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    manifest_path = os.path.join(args.out, "manifest.json")
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    params = M.init_params()
+    aot.lower_model(args.out, params, manifest)
+    build_golden(args.out)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("re-lowered model HLOs + golden")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""L2 — TinyGPT, the served decoder model (the paper's vLLM workload).
+
+Two jitted entry points are AOT-lowered per batch size and executed from the
+rust runtime:
+
+* `prefill(params, tokens, lengths)` — processes the prompt, fills the KV
+  cache (the paper's prefill phase / TTFT) and emits the first generated
+  token.
+* `decode_window(params, kv, lengths, last_token, active)` — runs exactly
+  WINDOW_SIZE (=50) decode steps (the paper's *scheduling iteration*,
+  §4.1), updating the KV cache in place and returning the window's tokens.
+
+Both call the L1 Pallas attention kernels so the kernels lower into the same
+HLO the rust coordinator loads.  Weights are *arguments* (not constants) so
+one HLO text serves any checkpoint; `aot.py` exports the weight blobs in the
+flattening order given by `param_order()`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import MODEL, WINDOW_SIZE, ModelConfig
+from .kernels.attention import decode_attention, prefill_attention
+
+Params = Dict[str, jnp.ndarray]
+
+
+def param_order(cfg: ModelConfig = MODEL) -> List[str]:
+    """Canonical flattening order shared with the rust weight loader."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1_g", f"l{i}.ln1_b",
+            f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2_g", f"l{i}.ln2_b",
+            f"l{i}.w1", f"l{i}.b1", f"l{i}.w2", f"l{i}.b2",
+        ]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig = MODEL) -> Dict[str, Tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (cfg.max_seq, d),
+        "lnf_g": (d,), "lnf_b": (d,),
+    }
+    for i in range(cfg.n_layers):
+        shapes.update({
+            f"l{i}.ln1_g": (d,), f"l{i}.ln1_b": (d,),
+            f"l{i}.wq": (d, d), f"l{i}.wk": (d, d),
+            f"l{i}.wv": (d, d), f"l{i}.wo": (d, d),
+            f"l{i}.ln2_g": (d,), f"l{i}.ln2_b": (d,),
+            f"l{i}.w1": (d, f), f"l{i}.b1": (f,),
+            f"l{i}.w2": (f, d), f"l{i}.b2": (d,),
+        })
+    return shapes
+
+
+def init_params(cfg: ModelConfig = MODEL) -> Params:
+    """Deterministic random init (the served model is a synthetic workload;
+    its text is not meaningful, its compute/memory profile is)."""
+    rng = np.random.default_rng(cfg.seed)
+    params: Params = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith(("_g",)):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_b", ".b1", ".b2")):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    b, t, d = x.shape
+    return x.reshape(b, t, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def kv_shape(batch: int, cfg: ModelConfig = MODEL) -> Tuple[int, ...]:
+    """KV cache layout: (L, 2, B, H, S, Dh)."""
+    return (cfg.n_layers, 2, batch, cfg.n_heads, cfg.max_seq, cfg.d_head)
+
+
+def prefill(params: Params, tokens: jnp.ndarray, lengths: jnp.ndarray,
+            cfg: ModelConfig = MODEL):
+    """Process the prompt; returns (kv, first_token, last_logits).
+
+    tokens:  (B, prompt_max) int32 padded with 0
+    lengths: (B,) int32 true prompt lengths (>= 1)
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None]
+    kv_layers = []
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        q = _split_heads(h @ params[f"l{i}.wq"], cfg.n_heads)
+        k = _split_heads(h @ params[f"l{i}.wk"], cfg.n_heads)
+        v = _split_heads(h @ params[f"l{i}.wv"], cfg.n_heads)
+        attn = prefill_attention(q, k, v, lengths)          # L1 Pallas kernel
+        x = x + _merge_heads(attn) @ params[f"l{i}.wo"]
+        h2 = _layer_norm(x, params[f"l{i}.ln2_g"], params[f"l{i}.ln2_b"])
+        x = x + jax.nn.relu(h2 @ params[f"l{i}.w1"] + params[f"l{i}.b1"]) \
+            @ params[f"l{i}.w2"] + params[f"l{i}.b2"]
+        # stash prompt K/V padded out to max_seq
+        pad = cfg.max_seq - t
+        k_pad = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kv_layers.append(jnp.stack([k_pad, v_pad], axis=0))
+    kv = jnp.stack(kv_layers, axis=0)                       # (L,2,B,H,S,Dh)
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = x @ params["tok_emb"].T                        # tied head
+    # logits at the last *valid* prompt position
+    idx = jnp.clip(lengths - 1, 0, t - 1)
+    last = jnp.take_along_axis(
+        logits, idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    first_token = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return kv, first_token, last
+
+
+def _decode_step(params: Params, kv, lengths, token, cfg: ModelConfig):
+    """One decode step for the whole batch; returns (kv, next_token)."""
+    b = token.shape[0]
+    x = params["tok_emb"][token] + params["pos_emb"][lengths]   # (B, D)
+    x = x[:, None, :]                                           # (B, 1, D)
+    new_kv = kv
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, params[f"l{i}.ln1_g"], params[f"l{i}.ln1_b"])
+        q = (h @ params[f"l{i}.wq"])[:, 0]                       # (B, D)
+        k = (h @ params[f"l{i}.wk"])[:, 0]
+        v = (h @ params[f"l{i}.wv"])[:, 0]
+        qh = q.reshape(b, cfg.n_heads, cfg.d_head)
+        kh = k.reshape(b, cfg.n_heads, cfg.d_head)
+        vh = v.reshape(b, cfg.n_heads, cfg.d_head)
+
+        # write k/v into the cache at position `lengths[b]` per sequence
+        def write(cache_b, vec_b, pos_b):
+            # cache_b: (H, S, Dh); vec_b: (H, Dh)
+            return jax.lax.dynamic_update_slice(
+                cache_b, vec_b[:, None, :], (0, pos_b, 0))
+
+        k_cache = jax.vmap(write)(new_kv[i, 0], kh, lengths)
+        v_cache = jax.vmap(write)(new_kv[i, 1], vh, lengths)
+        new_kv = new_kv.at[i, 0].set(k_cache).at[i, 1].set(v_cache)
+
+        attn = decode_attention(qh, k_cache, v_cache, lengths + 1)  # Pallas
+        attn_m = attn.reshape(b, 1, cfg.d_model)
+        x = x + attn_m @ params[f"l{i}.wo"]
+        h2 = _layer_norm(x, params[f"l{i}.ln2_g"], params[f"l{i}.ln2_b"])
+        x = x + jax.nn.relu(h2 @ params[f"l{i}.w1"] + params[f"l{i}.b1"]) \
+            @ params[f"l{i}.w2"] + params[f"l{i}.b2"]
+    x = _layer_norm(x, params["lnf_g"], params["lnf_b"])
+    logits = (x @ params["tok_emb"].T)[:, 0]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return new_kv, nxt
+
+
+def decode_window(params: Params, kv, lengths, last_token, active,
+                  cfg: ModelConfig = MODEL, window: int = WINDOW_SIZE):
+    """Run one 50-token scheduling iteration.
+
+    kv:         (L, 2, B, H, S, Dh) float32
+    lengths:    (B,) int32 — total tokens (prompt + generated) per sequence
+    last_token: (B,) int32 — the most recent token of each sequence
+    active:     (B,) int32 — 1 for live slots, 0 for padding slots
+
+    Returns (kv, tokens (B, window) int32, new_lengths (B,) int32).
+    Inactive slots still flow through the compute (batch shape is static)
+    but their cache position is pinned so they are side-effect free.
+    """
+    def body(carry, _):
+        kv, lens, tok = carry
+        # pin inactive slots at position 0 writes? — write to a scratch slot
+        # (max_seq - 1) so real data is never clobbered.
+        safe_lens = jnp.where(active > 0, lens,
+                              jnp.int32(cfg.max_seq - 1))
+        new_kv, nxt = _decode_step(params, kv, safe_lens, tok, cfg)
+        new_lens = jnp.where(active > 0, lens + 1, lens)
+        nxt = jnp.where(active > 0, nxt, tok)
+        return (new_kv, new_lens, nxt), nxt
+
+    (kv, new_lengths, _), toks = jax.lax.scan(
+        body, (kv, lengths, last_token), None, length=window)
+    return kv, toks.T.astype(jnp.int32), new_lengths
+
+
+# ---------------------------------------------------------------------------
+# Flattened-signature wrappers for AOT lowering (rust passes weights first,
+# then the dynamic inputs, in param_order()).
+# ---------------------------------------------------------------------------
+
+def flatten_params(params: Params, cfg: ModelConfig = MODEL) -> List[jnp.ndarray]:
+    return [params[n] for n in param_order(cfg)]
+
+
+def unflatten_params(flat: List[jnp.ndarray], cfg: ModelConfig = MODEL) -> Params:
+    return dict(zip(param_order(cfg), flat))
+
+
+def make_prefill_fn(cfg: ModelConfig = MODEL):
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        tokens, lengths = args[n], args[n + 1]
+        kv, first, _ = prefill(params, tokens, lengths, cfg)
+        return kv, first
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig = MODEL, window: int = WINDOW_SIZE):
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        kv, lengths, last_token, active = args[n:n + 4]
+        return decode_window(params, kv, lengths, last_token, active,
+                             cfg, window)
+
+    return fn

@@ -1,0 +1,273 @@
+"""L2 — the response-length predictor (the paper's BGE + 8 FC layers, §4.2).
+
+Structure mirrors the paper: a bidirectional transformer encoder embeds the
+prompt, token embeddings are mean-pooled, and eight fully-connected ReLU
+layers regress the *remaining* response length.  Iterative prediction
+(§3.3) is realised by feeding the generated-token count as an input
+feature: at scheduling iteration k the predictor sees (prompt, k*50) and
+predicts the tokens still to come.
+
+Unlike the served model, predictor weights are *trained* at build time on
+the synthetic step dataset (hand-rolled Adam; no optimizer deps available
+offline).  Both the freshly-initialised weights ("pre-trained BGE" row of
+Table 2) and the trained weights are exported, sharing a single HLO.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import PREDICTOR, PredictorConfig
+from .data import StepDataset
+from .kernels.attention import encoder_attention
+from .kernels.ref import encoder_attention_ref
+
+Params = Dict[str, jnp.ndarray]
+
+# Normalisation constants baked into the graph (shared with rust via the
+# artifact manifest metadata).
+GEN_SCALE = 100.0
+PLEN_SCALE = 64.0
+TARGET_SCALE = 100.0
+
+
+def param_order(cfg: PredictorConfig = PREDICTOR) -> List[str]:
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"e{i}.ln1_g", f"e{i}.ln1_b",
+            f"e{i}.wq", f"e{i}.wk", f"e{i}.wv", f"e{i}.wo",
+            f"e{i}.ln2_g", f"e{i}.ln2_b",
+            f"e{i}.w1", f"e{i}.b1", f"e{i}.w2", f"e{i}.b2",
+        ]
+    names += ["ln_g", "ln_b"]
+    for i in range(cfg.n_fc):
+        names += [f"fc{i}.w", f"fc{i}.b"]
+    return names
+
+
+def param_shapes(cfg: PredictorConfig = PREDICTOR) -> Dict[str, Tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "tok_emb": (cfg.vocab, d),
+        "pos_emb": (cfg.prompt_max, d),
+        "ln_g": (d,), "ln_b": (d,),
+    }
+    for i in range(cfg.n_layers):
+        shapes.update({
+            f"e{i}.ln1_g": (d,), f"e{i}.ln1_b": (d,),
+            f"e{i}.wq": (d, d), f"e{i}.wk": (d, d),
+            f"e{i}.wv": (d, d), f"e{i}.wo": (d, d),
+            f"e{i}.ln2_g": (d,), f"e{i}.ln2_b": (d,),
+            f"e{i}.w1": (d, f), f"e{i}.b1": (f,),
+            f"e{i}.w2": (f, d), f"e{i}.b2": (d,),
+        })
+    in_dim = d + cfg.n_extra_feats
+    for i in range(cfg.n_fc):
+        out_dim = 1 if i == cfg.n_fc - 1 else cfg.fc_hidden
+        shapes[f"fc{i}.w"] = (in_dim, out_dim)
+        shapes[f"fc{i}.b"] = (out_dim,)
+        in_dim = out_dim
+    return shapes
+
+
+def init_params(cfg: PredictorConfig = PREDICTOR, seed=None) -> Params:
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    params: Params = {}
+    for name, shape in param_shapes(cfg).items():
+        if name.endswith("_g"):
+            arr = np.ones(shape, np.float32)
+        elif name.endswith(("_b", ".b")):
+            arr = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            arr = rng.normal(0.0, fan_in ** -0.5, size=shape).astype(np.float32)
+        params[name] = jnp.asarray(arr)
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def forward(params: Params, tokens, prompt_len, gen_count,
+            cfg: PredictorConfig = PREDICTOR, *, use_pallas: bool = True):
+    """Predict remaining response length.
+
+    tokens:     (B, prompt_max) int32 padded prompt
+    prompt_len: (B,) int32
+    gen_count:  (B,) float32 — tokens generated so far (k * 50)
+
+    Returns (pred_remaining (B,), pooled (B, d_model)).
+    The pooled embedding is exported so Fig 1's cluster analysis can run on
+    the same artifact.
+    """
+    b, t = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["tok_emb"][tokens] + params["pos_emb"][:t][None]
+    for i in range(cfg.n_layers):
+        y = _layer_norm(x, params[f"e{i}.ln1_g"], params[f"e{i}.ln1_b"])
+        q = (y @ params[f"e{i}.wq"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        k = (y @ params[f"e{i}.wk"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        v = (y @ params[f"e{i}.wv"]).reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+        # Pallas (interpret mode) cannot be reverse-differentiated, so the
+        # training path uses the jnp oracle — identical numerics, proven by
+        # test_kernels.py — while export/eval use the L1 Pallas kernel.
+        if use_pallas:
+            attn = encoder_attention(q, k, v, prompt_len)   # L1 Pallas kernel
+        else:
+            attn = encoder_attention_ref(q, k, v, prompt_len)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + attn @ params[f"e{i}.wo"]
+        y2 = _layer_norm(x, params[f"e{i}.ln2_g"], params[f"e{i}.ln2_b"])
+        x = x + jax.nn.relu(y2 @ params[f"e{i}.w1"] + params[f"e{i}.b1"]) \
+            @ params[f"e{i}.w2"] + params[f"e{i}.b2"]
+    x = _layer_norm(x, params["ln_g"], params["ln_b"])
+    # mean pooling over valid tokens (paper: CLS/mean-pool of BGE)
+    mask = (jnp.arange(t)[None, :] < prompt_len[:, None]).astype(x.dtype)
+    pooled = (x * mask[:, :, None]).sum(1) / jnp.maximum(
+        mask.sum(1, keepdims=True), 1.0)
+    feats = jnp.concatenate(
+        [pooled,
+         (gen_count / GEN_SCALE)[:, None],
+         (prompt_len.astype(x.dtype) / PLEN_SCALE)[:, None]], axis=-1)
+    z = feats
+    for i in range(cfg.n_fc):
+        z = z @ params[f"fc{i}.w"] + params[f"fc{i}.b"]
+        if i < cfg.n_fc - 1:
+            z = jax.nn.relu(z)
+    pred = z[:, 0] * TARGET_SCALE
+    return pred, pooled
+
+
+# ---------------------------------------------------------------------------
+# Build-time training (hand-rolled Adam, time-budgeted).
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params, batch, cfg):
+    pred, _ = forward(params, batch["tokens"], batch["prompt_len"],
+                      batch["gen_count"], cfg, use_pallas=False)
+    err = (pred - batch["target"]) / TARGET_SCALE
+    # Huber: robust to the heavy length tail
+    delta = 1.0
+    a = jnp.abs(err)
+    return jnp.where(a <= delta, 0.5 * a * a, delta * (a - 0.5 * delta)).mean()
+
+
+def train(params: Params, train_ds: StepDataset, val_ds: StepDataset,
+          cfg: PredictorConfig = PREDICTOR, *,
+          batch_size: int = 64, lr: float = 1e-3, max_epochs: int = 12,
+          time_budget_s: float = 240.0, seed: int = 99,
+          verbose: bool = True) -> Tuple[Params, Dict]:
+    """Adam with a wall-clock budget; returns (params, history)."""
+    opt_m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    opt_v = {k: jnp.zeros_like(v) for k, v in params.items()}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step(params, opt_m, opt_v, t, batch):
+        loss, grads = jax.value_and_grad(_loss_fn)(params, batch, cfg)
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, opt_m, grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, opt_v, grads)
+        def upd(p, m, v):
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            return p - lr * mh / (jnp.sqrt(vh) + eps)
+        return jax.tree.map(upd, params, new_m, new_v), new_m, new_v, loss
+
+    @jax.jit
+    def val_loss(params, batch):
+        return _loss_fn(params, batch, cfg)
+
+    def to_batch(ds: StepDataset, idx):
+        return {
+            "tokens": jnp.asarray(ds.tokens[idx]),
+            "prompt_len": jnp.asarray(ds.prompt_len[idx]),
+            "gen_count": jnp.asarray(ds.gen_count[idx].astype(np.float32)),
+            "target": jnp.asarray(ds.target[idx]),
+        }
+
+    rng = np.random.default_rng(seed)
+    n = len(train_ds)
+    t0 = time.time()
+    history = {"train_loss": [], "val_loss": []}
+    t = 0
+    # fixed-size validation slice to keep jit shapes stable
+    val_idx = rng.choice(len(val_ds), size=min(512, len(val_ds)), replace=False)
+    val_batch = to_batch(val_ds, val_idx)
+    for epoch in range(max_epochs):
+        perm = rng.permutation(n)
+        losses = []
+        for s in range(0, n - batch_size + 1, batch_size):
+            t += 1
+            batch = to_batch(train_ds, perm[s:s + batch_size])
+            params, opt_m, opt_v, loss = step(params, opt_m, opt_v, t, batch)
+            losses.append(float(loss))
+            if time.time() - t0 > time_budget_s:
+                break
+        vl = float(val_loss(params, val_batch))
+        history["train_loss"].append(float(np.mean(losses)))
+        history["val_loss"].append(vl)
+        if verbose:
+            print(f"[predictor] epoch {epoch}: train={np.mean(losses):.4f} "
+                  f"val={vl:.4f} elapsed={time.time()-t0:.0f}s", flush=True)
+        if time.time() - t0 > time_budget_s:
+            break
+        # early stop on plateau
+        if len(history["val_loss"]) >= 3 and \
+           history["val_loss"][-1] > history["val_loss"][-3] * 0.995:
+            break
+    return params, history
+
+
+def evaluate(params: Params, ds: StepDataset,
+             cfg: PredictorConfig = PREDICTOR, batch_size: int = 256) -> Dict:
+    """MAE / RMSE / R^2 on a step dataset (paper Table 2 metrics)."""
+    preds = []
+    fwd = jax.jit(lambda tk, pl_, gc: forward(params, tk, pl_, gc, cfg)[0])
+    n = len(ds)
+    for s in range(0, n, batch_size):
+        idx = np.arange(s, min(s + batch_size, n))
+        # pad to full batch for stable jit shapes
+        pad = batch_size - len(idx)
+        sel = np.concatenate([idx, np.repeat(idx[-1:], pad)])
+        p = fwd(jnp.asarray(ds.tokens[sel]),
+                jnp.asarray(ds.prompt_len[sel]),
+                jnp.asarray(ds.gen_count[sel].astype(np.float32)))
+        preds.append(np.asarray(p)[: len(idx)])
+    pred = np.concatenate(preds)
+    y = ds.target
+    mae = float(np.abs(pred - y).mean())
+    rmse = float(np.sqrt(((pred - y) ** 2).mean()))
+    ss_res = float(((pred - y) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-12)
+    return {"mae": mae, "rmse": rmse, "r2": r2, "n": int(n)}
+
+
+def flatten_params(params: Params, cfg: PredictorConfig = PREDICTOR):
+    return [params[n] for n in param_order(cfg)]
+
+
+def unflatten_params(flat, cfg: PredictorConfig = PREDICTOR) -> Params:
+    return dict(zip(param_order(cfg), flat))
+
+
+def make_predict_fn(cfg: PredictorConfig = PREDICTOR):
+    """Flattened-signature wrapper for AOT lowering."""
+    n = len(param_order(cfg))
+
+    def fn(*args):
+        params = unflatten_params(list(args[:n]), cfg)
+        tokens, prompt_len, gen_count = args[n:n + 3]
+        pred, pooled = forward(params, tokens, prompt_len, gen_count, cfg)
+        return pred, pooled
+
+    return fn

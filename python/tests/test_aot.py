@@ -1,0 +1,112 @@
+"""AOT artifact tests.
+
+If artifacts/ already exists (built by `make artifacts`), validate it in
+place; otherwise build a tiny --fast bundle into tmp.  Checks cover the
+contract the rust runtime depends on: manifest completeness, HLO text
+non-emptiness, weight-blob sizes, and dataset schema.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.configs import BATCH_SIZES, MODEL, PREDICTOR_BATCH
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return os.path.abspath(ART)
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, fast=True, quiet=True)
+    return out
+
+
+@pytest.fixture(scope="module")
+def manifest(artifacts):
+    with open(os.path.join(artifacts, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_executables(manifest):
+    names = set(manifest["executables"].keys())
+    for b in BATCH_SIZES:
+        assert f"model.prefill.b{b}" in names
+        assert f"model.decode.b{b}" in names
+    assert f"predictor.b{PREDICTOR_BATCH}" in names
+
+
+def test_hlo_files_exist_and_parse_shape(artifacts, manifest):
+    for name, exe in manifest["executables"].items():
+        path = os.path.join(artifacts, exe["hlo"])
+        assert os.path.exists(path), name
+        text = open(path).read()
+        assert "HloModule" in text
+        assert len(text) > 1000
+
+
+def test_weight_blobs_match_manifest(artifacts, manifest):
+    for group, entries in manifest["weights"].items():
+        for e in entries:
+            path = os.path.join(artifacts, e["file"])
+            assert os.path.exists(path), e["file"]
+            n_elems = int(np.prod(e["shape"])) if e["shape"] else 1
+            assert os.path.getsize(path) == n_elems * 4  # f32/i32
+        names = [e["name"] for e in entries]
+        assert len(names) == len(set(names))
+
+
+def test_predictor_weight_groups_align(manifest):
+    a = manifest["weights"]["predictor_trained"]
+    b = manifest["weights"]["predictor_init"]
+    assert [e["name"] for e in a] == [e["name"] for e in b]
+    assert [e["shape"] for e in a] == [e["shape"] for e in b]
+
+
+def test_corpus_schema(artifacts):
+    with open(os.path.join(artifacts, "corpus.json")) as f:
+        c = json.load(f)
+    assert c["window_size"] == 50
+    assert len(c["entries"]) > 10
+    for e in c["entries"][:20]:
+        assert 1 <= len(e["tokens"]) <= c["prompt_max"]
+        assert e["total_len"] >= 1
+
+
+def test_predictor_test_schema(artifacts):
+    with open(os.path.join(artifacts, "predictor_test.json")) as f:
+        t = json.load(f)
+    n = len(t["target"])
+    assert n > 10
+    for k in ("tokens", "prompt_len", "gen_count", "step"):
+        assert len(t[k]) == n
+
+
+def test_embed_groups_schema(artifacts):
+    with open(os.path.join(artifacts, "embed_groups.json")) as f:
+        g = json.load(f)
+    assert set(g.keys()) == {"similar", "dissimilar"}
+    assert len(g["similar"]) == len(g["dissimilar"])
+
+
+def test_predictor_metrics_improved(artifacts):
+    with open(os.path.join(artifacts, "predictor_metrics.json")) as f:
+        m = json.load(f)
+    assert m["predictor_trained"]["mae"] < m["predictor_init"]["mae"]
+    assert m["predictor_trained"]["r2"] > m["predictor_init"]["r2"]
+
+
+def test_manifest_served_models_match_paper_table4(manifest):
+    names = {m["abbrev"]: m for m in manifest["served_models"]}
+    assert set(names) == {"opt6.7", "opt13", "lam7", "lam13", "vic"}
+    assert names["lam13"]["avg_latency_ms"] == pytest.approx(8610.2)
+    assert names["lam13"]["preempt_batch"] == 120
+
+
+def test_manifest_training_models_match_paper_table7(manifest):
+    assert len(manifest["training_models"]) == 13

@@ -1,0 +1,107 @@
+"""Synthetic-corpus tests: the properties ELIS's evaluation depends on."""
+
+import numpy as np
+from dataclasses import replace
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile.configs import CORPUS, PREDICTOR, WINDOW_SIZE
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def _corpus(n=500, seed=3):
+    return D.generate_corpus(replace(CORPUS, n_prompts=n, seed=seed))
+
+
+def test_corpus_reproducible():
+    a = _corpus(100, 5)
+    b = _corpus(100, 5)
+    for ea, eb in zip(a.entries, b.entries):
+        np.testing.assert_array_equal(ea.tokens, eb.tokens)
+        assert ea.total_len == eb.total_len
+
+
+def test_lengths_in_bounds():
+    c = _corpus()
+    for e in c.entries:
+        assert CORPUS.out_min <= e.total_len <= CORPUS.out_max
+        assert CORPUS.prompt_min <= len(e.tokens) <= CORPUS.prompt_max
+        assert (e.tokens >= 1).all() and (e.tokens < PREDICTOR.vocab).all()
+
+
+def test_lengths_heavy_tailed():
+    """Mix of short and long responses — the precondition for head-of-line
+    blocking (the phenomenon ISRTF fixes)."""
+    c = _corpus(2000)
+    lens = np.array([e.total_len for e in c.entries])
+    assert np.percentile(lens, 10) < 40
+    assert np.percentile(lens, 90) > 150
+    assert lens.std() / lens.mean() > 0.5
+
+
+def test_topic_predicts_length():
+    """Within-topic length variance must be well below total variance —
+    otherwise no predictor could work."""
+    c = _corpus(3000)
+    lens = np.array([e.total_len for e in c.entries], dtype=np.float64)
+    topics = np.array([e.topic for e in c.entries])
+    total_var = lens.var()
+    within = np.mean([lens[topics == t].var()
+                      for t in range(CORPUS.n_topics)
+                      if (topics == t).sum() > 10])
+    assert within < 0.5 * total_var
+
+
+def test_split_proportions():
+    c = _corpus(1000)
+    tr, va, te = c.split()
+    assert abs(len(tr) - 600) <= 1
+    assert abs(len(va) - 200) <= 1
+    assert len(tr) + len(va) + len(te) == 1000
+
+
+@given(st.integers(0, 10_000))
+def test_true_length_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    topic = int(rng.integers(0, CORPUS.n_topics))
+    plen = int(rng.integers(CORPUS.prompt_min, CORPUS.prompt_max))
+    noise = float(rng.normal(0, CORPUS.noise_sigma))
+    a = D.true_length(topic, plen, noise)
+    b = D.true_length(topic, plen, noise)
+    assert a == b
+    assert CORPUS.out_min <= a <= CORPUS.out_max
+
+
+def test_step_dataset_structure():
+    c = _corpus(50)
+    ds = D.step_dataset(c.entries)
+    assert len(ds) >= len(c.entries)          # at least one step per prompt
+    assert (ds.gen_count == ds.step * WINDOW_SIZE).all()
+    assert (ds.target == ds.total - ds.gen_count).all()
+    assert (ds.target > 0).all()              # never train on finished jobs
+    assert ds.tokens.shape[1] == PREDICTOR.prompt_max
+
+
+def test_pad_tokens():
+    t = np.array([5, 6, 7], np.int32)
+    out = D.pad_tokens(t, 8)
+    np.testing.assert_array_equal(out[:3], t)
+    assert (out[3:] == 0).all()
+    # truncation
+    long = np.arange(1, 20, dtype=np.int32)
+    out2 = D.pad_tokens(long, 8)
+    np.testing.assert_array_equal(out2, long[:8])
+
+
+def test_embedding_groups_disjoint_topics():
+    g = D.embedding_groups(n_per_group=20)
+    assert g["similar"].shape == (20, PREDICTOR.prompt_max)
+    assert g["dissimilar"].shape == (20, PREDICTOR.prompt_max)
+    # group A tokens live in topic-0's band, group B outside it
+    lo, hi = D._topic_band(0, PREDICTOR.vocab, CORPUS.n_topics)
+    a = g["similar"][g["similar"] > 0]
+    b = g["dissimilar"][g["dissimilar"] > 0]
+    assert ((a >= lo) & (a < hi)).all()
+    assert (~((b >= lo) & (b < hi))).all()

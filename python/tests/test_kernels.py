@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes as the core correctness signal for the
+kernels that end up inside every AOT artifact.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(0.0, 1.0, size=shape)
+    return jnp.asarray(x.astype(dtype))
+
+
+shape_strategy = st.tuples(
+    st.integers(1, 4),              # B
+    st.sampled_from([1, 2, 4]),     # H
+    st.sampled_from([4, 16, 33]),   # S
+    st.sampled_from([4, 8, 24]),    # Dh
+)
+
+
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1),
+       grid_mode=st.sampled_from(["bh", "batch"]))
+def test_decode_attention_matches_ref(shape, seed, grid_mode):
+    b, h, s, dh = shape
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, dh), np.float32)
+    k = _rand(rng, (b, h, s, dh), np.float32)
+    v = _rand(rng, (b, h, s, dh), np.float32)
+    lens = jnp.asarray(rng.integers(1, s + 1, size=b).astype(np.int32))
+    got = A.decode_attention(q, k, v, lens, grid_mode=grid_mode)
+    want = R.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_grid_modes_agree():
+    """The §Perf batch-grid variant must be numerically identical to the
+    (batch, head) grid."""
+    rng = np.random.default_rng(7)
+    b, h, s, dh = 3, 4, 33, 8
+    q = _rand(rng, (b, h, dh), np.float32)
+    k = _rand(rng, (b, h, s, dh), np.float32)
+    v = _rand(rng, (b, h, s, dh), np.float32)
+    lens = jnp.asarray(np.array([5, 20, 33], np.int32))
+    a = A.decode_attention(q, k, v, lens, grid_mode="bh")
+    b_ = A.decode_attention(q, k, v, lens, grid_mode="batch")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                               rtol=1e-6, atol=1e-6)
+
+
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_prefill_attention_matches_ref(shape, seed):
+    b, h, t, dh = shape
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, t, dh), np.float32)
+    k = _rand(rng, (b, h, t, dh), np.float32)
+    v = _rand(rng, (b, h, t, dh), np.float32)
+    lens = jnp.asarray(rng.integers(1, t + 1, size=b).astype(np.int32))
+    got = A.prefill_attention(q, k, v, lens)
+    want = R.prefill_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(shape=shape_strategy, seed=st.integers(0, 2**31 - 1))
+def test_encoder_attention_matches_ref(shape, seed):
+    b, h, t, dh = shape
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, t, dh), np.float32)
+    k = _rand(rng, (b, h, t, dh), np.float32)
+    v = _rand(rng, (b, h, t, dh), np.float32)
+    lens = jnp.asarray(rng.integers(1, t + 1, size=b).astype(np.int32))
+    got = A.encoder_attention(q, k, v, lens)
+    want = R.encoder_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_ignores_masked_slots():
+    """Garbage beyond `length` must not affect the output."""
+    rng = np.random.default_rng(0)
+    b, h, s, dh = 2, 2, 16, 8
+    q = _rand(rng, (b, h, dh), np.float32)
+    k = _rand(rng, (b, h, s, dh), np.float32)
+    v = _rand(rng, (b, h, s, dh), np.float32)
+    lens = jnp.asarray(np.array([5, 9], np.int32))
+    base = A.decode_attention(q, k, v, lens)
+    k2 = k.at[:, :, 10:].set(1e6)
+    v2 = v.at[:, :, 10:].set(-1e6)
+    poisoned = A.decode_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_prefill_attention_is_causal():
+    """Changing future tokens must not change earlier positions."""
+    rng = np.random.default_rng(1)
+    b, h, t, dh = 1, 2, 12, 8
+    q = _rand(rng, (b, h, t, dh), np.float32)
+    k = _rand(rng, (b, h, t, dh), np.float32)
+    v = _rand(rng, (b, h, t, dh), np.float32)
+    lens = jnp.asarray(np.array([t], np.int32))
+    base = A.prefill_attention(q, k, v, lens)
+    k2 = k.at[:, :, 8:].add(3.0)
+    v2 = v.at[:, :, 8:].add(-2.0)
+    out = A.prefill_attention(q, k2, v2, lens)
+    np.testing.assert_allclose(np.asarray(base[:, :, :8]),
+                               np.asarray(out[:, :, :8]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_attention_probabilities_sum_to_one_effect():
+    """With v = const the output must be exactly that const (softmax sums 1)."""
+    b, h, s, dh = 1, 1, 8, 4
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (b, h, dh), np.float32)
+    k = _rand(rng, (b, h, s, dh), np.float32)
+    v = jnp.full((b, h, s, dh), 3.25, jnp.float32)
+    lens = jnp.asarray(np.array([s], np.int32))
+    out = A.decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), 3.25, rtol=1e-5)
+
+
+@pytest.mark.parametrize("length", [1, 3, 16])
+def test_decode_attention_single_batch_lengths(length):
+    rng = np.random.default_rng(3)
+    b, h, s, dh = 1, 4, 16, 8
+    q = _rand(rng, (b, h, dh), np.float32)
+    k = _rand(rng, (b, h, s, dh), np.float32)
+    v = _rand(rng, (b, h, s, dh), np.float32)
+    lens = jnp.asarray(np.array([length], np.int32))
+    got = A.decode_attention(q, k, v, lens)
+    want = R.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

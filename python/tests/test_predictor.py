@@ -1,0 +1,120 @@
+"""Predictor (BGE-substitute) tests: architecture, training signal,
+iterative-prediction property (paper §3.3), and pallas/ref agreement."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import predictor as P
+from compile.configs import CORPUS, PREDICTOR, WINDOW_SIZE
+from dataclasses import replace
+
+
+@pytest.fixture(scope="module")
+def small_corpus():
+    cfg = replace(CORPUS, n_prompts=400, seed=11)
+    return D.generate_corpus(cfg)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return P.init_params()
+
+
+def test_forward_shapes(params):
+    b = 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, PREDICTOR.vocab,
+                                    size=(b, PREDICTOR.prompt_max)).astype(np.int32))
+    plen = jnp.asarray(np.full(b, 10, np.int32))
+    gen = jnp.asarray(np.zeros(b, np.float32))
+    pred, pooled = P.forward(params, toks, plen, gen)
+    assert pred.shape == (b,)
+    assert pooled.shape == (b, PREDICTOR.d_model)
+
+
+def test_pallas_and_ref_paths_agree(params):
+    """The training path (jnp ref) and export path (Pallas) must be the same
+    function."""
+    b = 4
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, PREDICTOR.vocab,
+                                    size=(b, PREDICTOR.prompt_max)).astype(np.int32))
+    plen = jnp.asarray(rng.integers(1, PREDICTOR.prompt_max, size=b).astype(np.int32))
+    gen = jnp.asarray(rng.uniform(0, 300, size=b).astype(np.float32))
+    p1, e1 = P.forward(params, toks, plen, gen, use_pallas=True)
+    p2, e2 = P.forward(params, toks, plen, gen, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-4)
+
+
+def test_padding_does_not_change_prediction(params):
+    b = 2
+    rng = np.random.default_rng(2)
+    toks = np.zeros((b, PREDICTOR.prompt_max), np.int32)
+    toks[:, :12] = rng.integers(16, PREDICTOR.vocab, size=(b, 12))
+    plen = jnp.asarray(np.full(b, 12, np.int32))
+    gen = jnp.asarray(np.zeros(b, np.float32))
+    p1, _ = P.forward(params, jnp.asarray(toks), plen, gen)
+    toks2 = toks.copy()
+    toks2[:, 12:] = 1777       # poison padding
+    p2, _ = P.forward(params, jnp.asarray(toks2), plen, gen)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-4, atol=1e-3)
+
+
+def test_training_improves_metrics(small_corpus, params):
+    train_e, val_e, test_e = small_corpus.split()
+    train_ds = D.step_dataset(train_e)
+    val_ds = D.step_dataset(val_e)
+    test_ds = D.step_dataset(test_e)
+    before = P.evaluate(params, test_ds)
+    trained, hist = P.train(params, train_ds, val_ds,
+                            time_budget_s=45.0, max_epochs=3, verbose=False)
+    after = P.evaluate(trained, test_ds)
+    assert after["mae"] < before["mae"]
+    assert after["r2"] > before["r2"]
+    assert hist["train_loss"][-1] < hist["train_loss"][0] * 1.05
+
+
+def test_step_dataset_targets_shrink_with_iteration(small_corpus):
+    """For any single prompt, the remaining-length target decreases by one
+    window per step — the structural reason iterative prediction gets
+    easier (Fig 2b).  (Cross-cohort means can rise: only long jobs survive
+    to high steps.)"""
+    ds = D.step_dataset(small_corpus.entries[:100])
+    # steps of one prompt are contiguous (insertion order), so walk runs of
+    # consecutive step indices sharing the same total
+    i = 0
+    n = len(ds)
+    while i < n:
+        j = i
+        while (j + 1 < n and ds.step[j + 1] == ds.step[j] + 1
+               and ds.total[j + 1] == ds.total[i]):
+            j += 1
+        seq = ds.target[i:j + 1]
+        assert all(seq[k + 1] == seq[k] - 50 for k in range(len(seq) - 1)), \
+            f"targets not stepping down by window: {seq}"
+        i = j + 1
+
+
+def test_evaluate_metrics_sane(params, small_corpus):
+    ds = D.step_dataset(small_corpus.entries[:50])
+    m = P.evaluate(params, ds)
+    assert m["mae"] >= 0 and m["rmse"] >= m["mae"] * 0.5
+    assert m["n"] == len(ds)
+
+
+def test_param_order_matches_shapes(params):
+    order = P.param_order()
+    shapes = P.param_shapes()
+    assert set(order) == set(shapes.keys())
+    for n in order:
+        assert tuple(params[n].shape) == tuple(shapes[n])
+
+
+def test_fc_stack_depth():
+    """Paper: eight FC layers after the encoder."""
+    assert PREDICTOR.n_fc == 8
+    order = P.param_order()
+    assert sum(1 for n in order if n.startswith("fc")) == 16  # w+b each

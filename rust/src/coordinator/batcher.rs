@@ -1,0 +1,115 @@
+//! Batcher (paper Algorithm 1 line 19: `BatchedPrompt <- Batcher.batch(...)`).
+//!
+//! Forms the next window's batch for an available backend from its priority
+//! queue, honouring the engine's max batch size.  Also models the paper's
+//! network optimization — "the input prompt of each job is sent to the
+//! backend only once" — by tracking which jobs' prompts each node has
+//! already received and counting transfer bytes saved.
+
+use std::collections::BTreeSet;
+
+use super::priority_buffer::{Entry, PriorityBuffer};
+
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub node: usize,
+    /// job ids in priority order (highest priority first)
+    pub jobs: Vec<u64>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TransferStats {
+    pub prompts_sent: u64,
+    pub prompt_tokens_sent: u64,
+    pub resend_avoided: u64,
+}
+
+pub struct Batcher {
+    pub max_batch: usize,
+    /// per-node set of job ids whose prompt was already transferred
+    sent: Vec<BTreeSet<u64>>,
+    pub stats: TransferStats,
+}
+
+impl Batcher {
+    pub fn new(nodes: usize, max_batch: usize) -> Batcher {
+        assert!(max_batch >= 1);
+        Batcher {
+            max_batch,
+            sent: (0..nodes).map(|_| BTreeSet::new()).collect(),
+            stats: TransferStats::default(),
+        }
+    }
+
+    /// Pop the top-priority jobs for `node` into a batch.  Returns None if
+    /// the node's queue is empty.
+    pub fn form_batch(&mut self, buffer: &mut PriorityBuffer, node: usize)
+                      -> Option<Batch> {
+        let entries: Vec<Entry> = buffer.pop_batch(node, self.max_batch);
+        if entries.is_empty() {
+            return None;
+        }
+        Some(Batch { node, jobs: entries.into_iter().map(|e| e.id).collect() })
+    }
+
+    /// Record the prompt transfer for a job; returns true if the prompt
+    /// actually needs to be sent (first time on this node).
+    pub fn mark_prompt_sent(&mut self, node: usize, job_id: u64,
+                            prompt_tokens: usize) -> bool {
+        if self.sent[node].insert(job_id) {
+            self.stats.prompts_sent += 1;
+            self.stats.prompt_tokens_sent += prompt_tokens as u64;
+            true
+        } else {
+            self.stats.resend_avoided += 1;
+            false
+        }
+    }
+
+    /// Forget a finished job's transfer record.
+    pub fn forget(&mut self, node: usize, job_id: u64) {
+        self.sent[node].remove(&job_id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::priority_buffer::Entry;
+
+    fn push(b: &mut PriorityBuffer, node: usize, id: u64, prio: f64) {
+        b.push(node, Entry { priority: prio, arrival_ms: 0.0, id });
+    }
+
+    #[test]
+    fn batch_takes_top_k_in_order() {
+        let mut buf = PriorityBuffer::new(1);
+        for (id, p) in [(1, 30.0), (2, 10.0), (3, 20.0), (4, 40.0), (5, 5.0)] {
+            push(&mut buf, 0, id, p);
+        }
+        let mut b = Batcher::new(1, 3);
+        let batch = b.form_batch(&mut buf, 0).unwrap();
+        assert_eq!(batch.jobs, vec![5, 2, 3]);
+        assert_eq!(buf.len(0), 2, "unchosen jobs stay queued");
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut buf = PriorityBuffer::new(1);
+        let mut b = Batcher::new(1, 4);
+        assert!(b.form_batch(&mut buf, 0).is_none());
+    }
+
+    #[test]
+    fn prompt_sent_once_per_node() {
+        let mut b = Batcher::new(2, 4);
+        assert!(b.mark_prompt_sent(0, 7, 32));
+        assert!(!b.mark_prompt_sent(0, 7, 32), "resend avoided");
+        assert!(b.mark_prompt_sent(1, 7, 32), "other node needs it");
+        assert_eq!(b.stats.prompts_sent, 2);
+        assert_eq!(b.stats.resend_avoided, 1);
+        assert_eq!(b.stats.prompt_tokens_sent, 64);
+        b.forget(0, 7);
+        assert!(b.mark_prompt_sent(0, 7, 32), "forgotten after finish");
+    }
+}

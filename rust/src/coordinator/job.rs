@@ -1,0 +1,121 @@
+//! Job: the frontend scheduler's internal record of a request
+//! (paper Algorithm 1, line 2: "store the text of prompt in a new job").
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// waiting in its node's JobPool
+    Queued,
+    /// inside the batch a worker is currently executing
+    Running,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// ground-truth response length (engine stop condition; only oracle
+    /// predictors may read it)
+    pub total_len: usize,
+    pub topic: usize,
+    pub arrival_ms: f64,
+    /// backend worker chosen by the load balancer
+    pub node: Option<usize>,
+    /// scheduling priority — lower runs first (predicted remaining tokens
+    /// for ISRTF; arrival time for FCFS; etc.).  None = never assigned
+    /// (Algorithm 1 line 11).
+    pub priority: Option<f64>,
+    pub state: JobState,
+    /// response tokens produced so far
+    pub generated: usize,
+    pub response: Vec<i32>,
+    /// scheduling iterations this job has executed in
+    pub windows: usize,
+    /// times this job's KV was preempted
+    pub preemptions: usize,
+    pub first_token_ms: Option<f64>,
+    pub finish_ms: Option<f64>,
+    /// cumulative time inside executing batches (ms)
+    pub service_ms: f64,
+}
+
+impl Job {
+    pub fn new(id: u64, prompt: Vec<i32>, total_len: usize, topic: usize,
+               arrival_ms: f64) -> Job {
+        Job {
+            id,
+            prompt,
+            total_len: total_len.max(1),
+            topic,
+            arrival_ms,
+            node: None,
+            priority: None,
+            state: JobState::Queued,
+            generated: 0,
+            response: Vec::new(),
+            windows: 0,
+            preemptions: 0,
+            first_token_ms: None,
+            finish_ms: None,
+            service_ms: 0.0,
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.total_len.saturating_sub(self.generated)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == JobState::Finished
+    }
+
+    /// Job completion time (ms), defined as in the paper §6.2: arrival at
+    /// the frontend until the response is completely formed.
+    pub fn jct_ms(&self) -> Option<f64> {
+        self.finish_ms.map(|f| f - self.arrival_ms)
+    }
+
+    /// Queueing delay: completion time minus time actually being served.
+    pub fn queue_delay_ms(&self) -> Option<f64> {
+        self.jct_ms().map(|j| (j - self.service_ms).max(0.0))
+    }
+
+    /// Time to first token.
+    pub fn ttft_ms(&self) -> Option<f64> {
+        self.first_token_ms.map(|t| t - self.arrival_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_metrics() {
+        let mut j = Job::new(1, vec![1, 2, 3], 120, 0, 1000.0);
+        assert_eq!(j.remaining(), 120);
+        assert!(j.jct_ms().is_none());
+        j.generated = 50;
+        assert_eq!(j.remaining(), 70);
+        j.first_token_ms = Some(1500.0);
+        j.finish_ms = Some(9000.0);
+        j.service_ms = 6000.0;
+        assert_eq!(j.jct_ms(), Some(8000.0));
+        assert_eq!(j.queue_delay_ms(), Some(2000.0));
+        assert_eq!(j.ttft_ms(), Some(500.0));
+    }
+
+    #[test]
+    fn total_len_floor() {
+        let j = Job::new(1, vec![1], 0, 0, 0.0);
+        assert_eq!(j.total_len, 1);
+    }
+
+    #[test]
+    fn queue_delay_never_negative() {
+        let mut j = Job::new(1, vec![1], 10, 0, 0.0);
+        j.finish_ms = Some(100.0);
+        j.service_ms = 500.0; // service longer than JCT (overlapping batches)
+        assert_eq!(j.queue_delay_ms(), Some(0.0));
+    }
+}

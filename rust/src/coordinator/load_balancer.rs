@@ -1,0 +1,168 @@
+//! Load balancer + global state (paper Algorithm 1, line 3:
+//! `job.node <- LoadBalancer.get_min_load(G)`).
+//!
+//! The paper's LB greedily picks the worker executing the fewest jobs,
+//! consulting the frontend's global state `G`.  Round-robin and random are
+//! provided as ablation baselines (the scalability result of Fig 7 depends
+//! on min-load doing better than naive placement under bursty arrivals).
+
+use crate::stats::rng::Pcg64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LbStrategy {
+    /// paper default: fewest active jobs
+    MinLoad,
+    RoundRobin,
+    Random,
+}
+
+impl LbStrategy {
+    pub fn parse(s: &str) -> Option<LbStrategy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "minload" | "min-load" => LbStrategy::MinLoad,
+            "rr" | "roundrobin" | "round-robin" => LbStrategy::RoundRobin,
+            "random" => LbStrategy::Random,
+            _ => return None,
+        })
+    }
+}
+
+/// Global state `G`: per-worker active job counts maintained by the
+/// frontend as jobs are assigned and finish.
+#[derive(Debug, Clone)]
+pub struct GlobalState {
+    pub active_jobs: Vec<usize>,
+    /// lifetime assignment counter (stats)
+    pub total_assigned: Vec<u64>,
+}
+
+impl GlobalState {
+    pub fn new(nodes: usize) -> GlobalState {
+        GlobalState {
+            active_jobs: vec![0; nodes],
+            total_assigned: vec![0; nodes],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.active_jobs.len()
+    }
+
+    pub fn on_assign(&mut self, node: usize) {
+        self.active_jobs[node] += 1;
+        self.total_assigned[node] += 1;
+    }
+
+    pub fn on_finish(&mut self, node: usize) {
+        debug_assert!(self.active_jobs[node] > 0, "finish without assign");
+        self.active_jobs[node] = self.active_jobs[node].saturating_sub(1);
+    }
+
+    /// Max/min active-job imbalance (Fig 7 diagnostics).
+    pub fn imbalance(&self) -> usize {
+        let max = self.active_jobs.iter().copied().max().unwrap_or(0);
+        let min = self.active_jobs.iter().copied().min().unwrap_or(0);
+        max - min
+    }
+}
+
+pub struct LoadBalancer {
+    pub strategy: LbStrategy,
+    rr_next: usize,
+    rng: Pcg64,
+}
+
+impl LoadBalancer {
+    pub fn new(strategy: LbStrategy, seed: u64) -> LoadBalancer {
+        LoadBalancer { strategy, rr_next: 0, rng: Pcg64::new(seed) }
+    }
+
+    /// Pick a node for a new job (Algorithm 1 `get_min_load`).
+    pub fn assign(&mut self, state: &mut GlobalState) -> usize {
+        let n = state.nodes();
+        assert!(n > 0);
+        let node = match self.strategy {
+            LbStrategy::MinLoad => state
+                .active_jobs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &c)| c)
+                .map(|(i, _)| i)
+                .unwrap(),
+            LbStrategy::RoundRobin => {
+                let i = self.rr_next % n;
+                self.rr_next = (self.rr_next + 1) % n;
+                i
+            }
+            LbStrategy::Random => self.rng.below(n as u64) as usize,
+        };
+        state.on_assign(node);
+        node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn min_load_picks_least_loaded() {
+        let mut st = GlobalState::new(3);
+        st.active_jobs = vec![4, 1, 2];
+        let mut lb = LoadBalancer::new(LbStrategy::MinLoad, 1);
+        assert_eq!(lb.assign(&mut st), 1);
+        assert_eq!(st.active_jobs, vec![4, 2, 2]);
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut st = GlobalState::new(3);
+        let mut lb = LoadBalancer::new(LbStrategy::RoundRobin, 1);
+        let picks: Vec<usize> = (0..6).map(|_| lb.assign(&mut st)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn finish_decrements() {
+        let mut st = GlobalState::new(2);
+        st.on_assign(0);
+        st.on_assign(0);
+        st.on_finish(0);
+        assert_eq!(st.active_jobs[0], 1);
+    }
+
+    #[test]
+    fn prop_min_load_keeps_balance_tight() {
+        // with equal service, min-load never lets imbalance exceed 1
+        prop::check("minload-balance", 50, |g| {
+            let nodes = g.usize_in(2, 8);
+            let mut st = GlobalState::new(nodes);
+            let mut lb = LoadBalancer::new(LbStrategy::MinLoad, 1);
+            for _ in 0..g.usize_in(1, 200) {
+                lb.assign(&mut st);
+                assert!(st.imbalance() <= 1, "imbalance {}", st.imbalance());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_random_in_range() {
+        prop::check("random-lb-range", 20, |g| {
+            let nodes = g.usize_in(1, 5);
+            let mut st = GlobalState::new(nodes);
+            let mut lb = LoadBalancer::new(LbStrategy::Random, g.rng.next_u64());
+            for _ in 0..50 {
+                let n = lb.assign(&mut st);
+                assert!(n < nodes);
+            }
+        });
+    }
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(LbStrategy::parse("minload"), Some(LbStrategy::MinLoad));
+        assert_eq!(LbStrategy::parse("rr"), Some(LbStrategy::RoundRobin));
+        assert_eq!(LbStrategy::parse("bogus"), None);
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator — the paper's system contribution.
+//!
+//! Components map 1:1 onto Figure 3 / Algorithm 1 of the paper:
+//! * [`job`] — the frontend's internal request record.
+//! * [`scheduler`] — FCFS / SJF / **ISRTF** / SRPT / MLFQ priority policies.
+//! * [`priority_buffer`] — per-node priority queues.
+//! * [`batcher`] — window batching (prompts sent once).
+//! * [`load_balancer`] — min-load greedy assignment over global state `G`.
+//! * [`preemption`] — frequency control + starvation guard (§3.4).
+//! * [`frontend`] — the serving loop tying it together, in virtual or wall
+//!   clock mode.
+
+pub mod batcher;
+pub mod frontend;
+pub mod job;
+pub mod load_balancer;
+pub mod preemption;
+pub mod priority_buffer;
+pub mod scheduler;
+
+pub use frontend::{run_serving, ClockMode, ServeConfig};
+pub use job::{Job, JobState};
+pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};
+pub use preemption::PreemptionPolicy;
+pub use scheduler::{Policy, Scheduler};

@@ -1,0 +1,190 @@
+//! PriorityBuffer: per-node priority queues (paper §4.1: "multiple priority
+//! queues, where each queue stores jobs assigned to a specific node").
+//!
+//! Rebuilt from the JobPool each scheduling iteration (Algorithm 1 pops
+//! every job, assigns its priority, and pushes it here), then the batcher
+//! pops the highest-priority jobs per available backend.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Min-heap item: lower priority value runs first; arrival then id break
+/// ties deterministically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Entry {
+    pub priority: f64,
+    pub arrival_ms: f64,
+    pub id: u64,
+}
+
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed for min-heap on BinaryHeap (a max-heap)
+        other
+            .priority
+            .partial_cmp(&self.priority)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| {
+                other
+                    .arrival_ms
+                    .partial_cmp(&self.arrival_ms)
+                    .unwrap_or(Ordering::Equal)
+            })
+            .then_with(|| other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct PriorityBuffer {
+    queues: Vec<BinaryHeap<Entry>>,
+}
+
+impl PriorityBuffer {
+    pub fn new(nodes: usize) -> PriorityBuffer {
+        PriorityBuffer {
+            queues: (0..nodes).map(|_| BinaryHeap::new()).collect(),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn clear(&mut self) {
+        for q in &mut self.queues {
+            q.clear();
+        }
+    }
+
+    pub fn push(&mut self, node: usize, e: Entry) {
+        self.queues[node].push(e);
+    }
+
+    pub fn pop(&mut self, node: usize) -> Option<Entry> {
+        self.queues[node].pop()
+    }
+
+    pub fn peek(&self, node: usize) -> Option<&Entry> {
+        self.queues[node].peek()
+    }
+
+    pub fn len(&self, node: usize) -> usize {
+        self.queues[node].len()
+    }
+
+    pub fn is_empty(&self, node: usize) -> bool {
+        self.queues[node].is_empty()
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Pop up to `k` highest-priority entries from a node's queue.
+    pub fn pop_batch(&mut self, node: usize, k: usize) -> Vec<Entry> {
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            match self.queues[node].pop() {
+                Some(e) => out.push(e),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Drain a node's queue in priority order (used to hand the engine its
+    /// preemption-victim ordering).
+    pub fn drain_sorted(&mut self, node: usize) -> Vec<Entry> {
+        let mut out = Vec::with_capacity(self.queues[node].len());
+        while let Some(e) = self.queues[node].pop() {
+            out.push(e);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    fn e(priority: f64, arrival: f64, id: u64) -> Entry {
+        Entry { priority, arrival_ms: arrival, id }
+    }
+
+    #[test]
+    fn pops_lowest_priority_first() {
+        let mut b = PriorityBuffer::new(1);
+        b.push(0, e(300.0, 0.0, 1));
+        b.push(0, e(50.0, 0.0, 2));
+        b.push(0, e(120.0, 0.0, 3));
+        assert_eq!(b.pop(0).unwrap().id, 2);
+        assert_eq!(b.pop(0).unwrap().id, 3);
+        assert_eq!(b.pop(0).unwrap().id, 1);
+        assert!(b.pop(0).is_none());
+    }
+
+    #[test]
+    fn ties_break_by_arrival_then_id() {
+        let mut b = PriorityBuffer::new(1);
+        b.push(0, e(10.0, 5.0, 9));
+        b.push(0, e(10.0, 1.0, 7));
+        b.push(0, e(10.0, 1.0, 3));
+        assert_eq!(b.pop(0).unwrap().id, 3);
+        assert_eq!(b.pop(0).unwrap().id, 7);
+        assert_eq!(b.pop(0).unwrap().id, 9);
+    }
+
+    #[test]
+    fn nodes_are_independent() {
+        let mut b = PriorityBuffer::new(2);
+        b.push(0, e(1.0, 0.0, 1));
+        b.push(1, e(2.0, 0.0, 2));
+        assert_eq!(b.len(0), 1);
+        assert_eq!(b.len(1), 1);
+        assert_eq!(b.pop(1).unwrap().id, 2);
+        assert!(b.is_empty(1));
+        assert!(!b.is_empty(0));
+        assert_eq!(b.total_len(), 1);
+    }
+
+    #[test]
+    fn pop_batch_respects_k() {
+        let mut b = PriorityBuffer::new(1);
+        for i in 0..10 {
+            b.push(0, e(i as f64, 0.0, i));
+        }
+        let batch = b.pop_batch(0, 4);
+        assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(b.len(0), 6);
+    }
+
+    #[test]
+    fn prop_drain_is_sorted() {
+        prop::check("priority-buffer-sorted", 100, |g| {
+            let mut b = PriorityBuffer::new(1);
+            let n = g.usize_in(1, 50);
+            for i in 0..n {
+                b.push(0, e(g.f64_in(-100.0, 100.0), g.f64_in(0.0, 10.0), i as u64));
+            }
+            let drained = b.drain_sorted(0);
+            assert_eq!(drained.len(), n);
+            for w in drained.windows(2) {
+                assert!(
+                    w[0].priority < w[1].priority
+                        || (w[0].priority == w[1].priority
+                            && (w[0].arrival_ms, w[0].id) <= (w[1].arrival_ms, w[1].id)),
+                    "out of order: {w:?}"
+                );
+            }
+        });
+    }
+}

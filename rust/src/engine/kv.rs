@@ -1,0 +1,235 @@
+//! Paged KV-cache block manager — the vLLM memory substrate.
+//!
+//! vLLM (the paper's execution engine) allocates the KV cache in fixed-size
+//! blocks; a request is *preempted* when a decode step needs a block and the
+//! pool is exhausted (paper §3.4 / Appendix A).  This module reproduces that
+//! accounting: block granularity, per-sequence growth, utilization, and the
+//! out-of-memory signal that triggers preemption, ordered by priority.
+
+use std::collections::BTreeMap;
+
+/// Tokens per KV block (vLLM default granularity).
+pub const BLOCK_TOKENS: usize = 16;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeqId(pub u64);
+
+#[derive(Debug, Clone)]
+struct SeqAlloc {
+    tokens: usize,
+    blocks: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    /// bytes of KV cache per token (model-dependent, fp16 × 2 × layers × d)
+    pub bytes_per_token: usize,
+    pub total_blocks: usize,
+    free_blocks: usize,
+    seqs: BTreeMap<u64, SeqAlloc>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocOutcome {
+    Ok,
+    /// the pool cannot serve the growth; caller must preempt someone
+    OutOfMemory { needed_blocks: usize },
+}
+
+impl BlockManager {
+    /// Build from a device memory budget (e.g. 80 GB × vLLM memory limit ×
+    /// the fraction left after weights).
+    pub fn from_memory(kv_budget_bytes: usize, bytes_per_token: usize) -> Self {
+        let block_bytes = bytes_per_token * BLOCK_TOKENS;
+        let total_blocks = (kv_budget_bytes / block_bytes.max(1)).max(1);
+        BlockManager {
+            bytes_per_token,
+            total_blocks,
+            free_blocks: total_blocks,
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    pub fn with_blocks(total_blocks: usize, bytes_per_token: usize) -> Self {
+        BlockManager {
+            bytes_per_token,
+            total_blocks,
+            free_blocks: total_blocks,
+            seqs: BTreeMap::new(),
+        }
+    }
+
+    fn blocks_for(tokens: usize) -> usize {
+        tokens.div_ceil(BLOCK_TOKENS)
+    }
+
+    /// Register a sequence with its prompt already in the cache.
+    pub fn admit(&mut self, seq: SeqId, prompt_tokens: usize) -> AllocOutcome {
+        debug_assert!(!self.seqs.contains_key(&seq.0), "seq already admitted");
+        let need = Self::blocks_for(prompt_tokens.max(1));
+        if need > self.free_blocks {
+            return AllocOutcome::OutOfMemory { needed_blocks: need - self.free_blocks };
+        }
+        self.free_blocks -= need;
+        self.seqs.insert(seq.0, SeqAlloc { tokens: prompt_tokens.max(1), blocks: need });
+        AllocOutcome::Ok
+    }
+
+    /// Grow a sequence by `n` decoded tokens; may need new blocks.
+    pub fn grow(&mut self, seq: SeqId, n: usize) -> AllocOutcome {
+        let alloc = match self.seqs.get_mut(&seq.0) {
+            Some(a) => a,
+            None => return AllocOutcome::Ok, // unknown seq: nothing to track
+        };
+        let new_tokens = alloc.tokens + n;
+        let need_total = Self::blocks_for(new_tokens);
+        let extra = need_total.saturating_sub(alloc.blocks);
+        if extra > self.free_blocks {
+            return AllocOutcome::OutOfMemory { needed_blocks: extra - self.free_blocks };
+        }
+        self.free_blocks -= extra;
+        alloc.tokens = new_tokens;
+        alloc.blocks = need_total;
+        AllocOutcome::Ok
+    }
+
+    /// Release a sequence (finished or preempted — vLLM recompute-style
+    /// preemption drops the whole allocation).
+    pub fn release(&mut self, seq: SeqId) -> bool {
+        if let Some(a) = self.seqs.remove(&seq.0) {
+            self.free_blocks += a.blocks;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn resident(&self, seq: SeqId) -> bool {
+        self.seqs.contains_key(&seq.0)
+    }
+
+    pub fn seq_tokens(&self, seq: SeqId) -> usize {
+        self.seqs.get(&seq.0).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+
+    pub fn used_bytes(&self) -> usize {
+        self.used_blocks() * self.bytes_per_token * BLOCK_TOKENS
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    pub fn resident_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Invariant check used by property tests.
+    pub fn check_invariants(&self) {
+        let held: usize = self.seqs.values().map(|a| a.blocks).sum();
+        assert_eq!(held + self.free_blocks, self.total_blocks,
+                   "block accounting leak");
+        for a in self.seqs.values() {
+            assert_eq!(a.blocks, Self::blocks_for(a.tokens));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    #[test]
+    fn admit_grow_release_roundtrip() {
+        let mut m = BlockManager::with_blocks(10, 100);
+        assert_eq!(m.admit(SeqId(1), 20), AllocOutcome::Ok); // 2 blocks
+        assert_eq!(m.free_blocks(), 8);
+        assert_eq!(m.grow(SeqId(1), 12), AllocOutcome::Ok); // 32 tokens -> 2 blocks
+        assert_eq!(m.free_blocks(), 8);
+        assert_eq!(m.grow(SeqId(1), 1), AllocOutcome::Ok); // 33 tokens -> 3 blocks
+        assert_eq!(m.free_blocks(), 7);
+        assert!(m.release(SeqId(1)));
+        assert_eq!(m.free_blocks(), 10);
+        assert!(!m.release(SeqId(1)));
+    }
+
+    #[test]
+    fn oom_on_admit_and_grow() {
+        let mut m = BlockManager::with_blocks(2, 100);
+        assert_eq!(m.admit(SeqId(1), 16), AllocOutcome::Ok); // 1 block
+        assert_eq!(
+            m.admit(SeqId(2), 32),
+            AllocOutcome::OutOfMemory { needed_blocks: 1 }
+        );
+        assert_eq!(m.admit(SeqId(2), 16), AllocOutcome::Ok);
+        assert_eq!(
+            m.grow(SeqId(1), 16),
+            AllocOutcome::OutOfMemory { needed_blocks: 1 }
+        );
+        // release 2 then grow succeeds
+        m.release(SeqId(2));
+        assert_eq!(m.grow(SeqId(1), 16), AllocOutcome::Ok);
+    }
+
+    #[test]
+    fn from_memory_sizing() {
+        // 1 MB budget, 1 KB per token -> 1024 tokens -> 64 blocks
+        let m = BlockManager::from_memory(1 << 20, 1 << 10);
+        assert_eq!(m.total_blocks, 64);
+    }
+
+    #[test]
+    fn utilization_and_bytes() {
+        let mut m = BlockManager::with_blocks(4, 10);
+        m.admit(SeqId(1), 16);
+        assert!((m.utilization() - 0.25).abs() < 1e-12);
+        assert_eq!(m.used_bytes(), 10 * BLOCK_TOKENS);
+    }
+
+    #[test]
+    fn prop_accounting_never_leaks() {
+        prop::check("kv-accounting", 200, |g| {
+            let total = g.usize_in(4, 64);
+            let mut m = BlockManager::with_blocks(total, 100);
+            let mut live: Vec<u64> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize_in(10, 60) {
+                match g.usize_in(0, 2) {
+                    0 => {
+                        next_id += 1;
+                        if m.admit(SeqId(next_id), g.usize_in(1, 100)) == AllocOutcome::Ok {
+                            live.push(next_id);
+                        }
+                    }
+                    1 => {
+                        if !live.is_empty() {
+                            let idx = g.usize_in(0, live.len() - 1);
+                            let _ = m.grow(SeqId(live[idx]), g.usize_in(1, 60));
+                        }
+                    }
+                    _ => {
+                        if !live.is_empty() {
+                            let idx = g.usize_in(0, live.len() - 1);
+                            let id = live.swap_remove(idx);
+                            assert!(m.release(SeqId(id)));
+                        }
+                    }
+                }
+                m.check_invariants();
+            }
+            for id in live {
+                m.release(SeqId(id));
+            }
+            assert_eq!(m.free_blocks(), total);
+        });
+    }
+}

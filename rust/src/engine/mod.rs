@@ -1,0 +1,148 @@
+//! Execution engines — the vLLM substitute behind each backend worker.
+//!
+//! Two interchangeable implementations of [`Engine`]:
+//! * [`pjrt_engine::PjrtEngine`] — the real path: prefill/decode-window HLO
+//!   executables (TinyGPT + Pallas attention) run via PJRT; used by the
+//!   end-to-end examples and hot-path benches.
+//! * [`sim_engine::SimEngine`] — discrete-event model of vLLM on an A100,
+//!   calibrated to paper Table 4 latencies and Appendix A KV footprints;
+//!   used by the scheduling experiments (Fig 5/6/7, Table 5/6) that need
+//!   7B–13B-model timing a single CPU core cannot produce.
+//!
+//! Both share the paged-KV accounting in [`kv`] and the same preemption
+//! semantics (drop KV, keep generated tokens, recompute on resume) so the
+//! coordinator code path is identical.
+
+pub mod kv;
+pub mod pjrt_engine;
+pub mod profiles;
+pub mod sim_engine;
+pub mod tokenizer;
+
+use anyhow::Result;
+
+/// A sequence (job) registered with an engine.
+#[derive(Debug, Clone)]
+pub struct SeqSpec {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// ground-truth response length (benchmark-style fixed output length;
+    /// the engine stops the sequence once it has generated this many)
+    pub target_total: usize,
+    /// corpus topic (drives the sim engine's content signal)
+    pub topic: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic response-content signal — MUST mirror python/compile/data.py
+// (`response_token`): tokens come from a band keyed to the response's
+// length bucket, switching to a closing band near the end.  The predictor
+// is trained on streams built with this exact formula, so the sim engine's
+// generated suffixes are in-distribution at serving time (paper §3.3:
+// partial output feeds back into the predictor).
+// ---------------------------------------------------------------------------
+pub const N_BUCKETS: usize = 16;
+pub const BAND_WIDTH: usize = 16;
+pub const CLOSING_TOKENS: usize = 25;
+
+pub fn length_bucket(total: usize) -> usize {
+    let x = (total.max(5) as f64 / 5.0).log2();
+    (x.max(0.0) as usize).min(N_BUCKETS - 1)
+}
+
+pub fn sim_response_token(i: usize, total: usize, topic: usize,
+                          vocab: usize) -> i32 {
+    let band_start = if total.saturating_sub(i) <= CLOSING_TOKENS {
+        vocab - BAND_WIDTH
+    } else {
+        vocab - BAND_WIDTH * (2 + length_bucket(total))
+    };
+    (band_start + (i * 7 + topic * 3) % BAND_WIDTH) as i32
+}
+
+/// Per-sequence result of one scheduling window.
+#[derive(Debug, Clone)]
+pub struct SeqWindowOut {
+    pub id: u64,
+    pub new_tokens: Vec<i32>,
+    pub done: bool,
+}
+
+/// Result of executing one 50-token scheduling iteration.
+#[derive(Debug, Clone)]
+pub struct WindowOutcome {
+    pub outputs: Vec<SeqWindowOut>,
+    /// service time in ms — virtual (sim) or measured wall time (pjrt)
+    pub service_ms: f64,
+    /// sequences evicted by the engine due to KV OOM during this window
+    pub preempted: Vec<u64>,
+}
+
+/// The backend execution engine interface (one instance per worker).
+///
+/// Deliberately *not* `Send`: PJRT handles are thread-affine, so each
+/// worker thread constructs its own engine (mirroring the paper's
+/// one-vLLM-per-pod deployment) instead of moving engines across threads.
+pub trait Engine {
+    /// Largest decode batch the engine will accept per window.
+    fn max_batch(&self) -> usize;
+
+    /// Register a new sequence (prefill runs lazily on its first window).
+    fn admit(&mut self, seq: SeqSpec) -> Result<()>;
+
+    /// Execute one window for `seq_ids` (priority order, highest first).
+    /// Sequences without resident KV are prefetched (prefill / recompute)
+    /// as part of the window.
+    fn run_window(&mut self, seq_ids: &[u64]) -> Result<WindowOutcome>;
+
+    /// Update the engine's global priority order (highest first) — used to
+    /// pick preemption victims, mirroring the paper's configurable-priority
+    /// patch to vLLM.
+    fn set_priority_order(&mut self, order: &[u64]);
+
+    /// Drop a sequence entirely (finished or cancelled).
+    fn remove(&mut self, seq_id: u64);
+
+    /// Coordinator-driven preemption: drop KV, keep progress.
+    fn evict(&mut self, seq_id: u64);
+
+    /// Tokens generated so far for a sequence (0 if unknown).
+    fn generated(&self, seq_id: u64) -> usize;
+
+    /// Whether the sequence currently holds KV blocks.
+    fn is_resident(&self, seq_id: u64) -> bool;
+
+    /// KV pool utilization in [0, 1].
+    fn kv_utilization(&self) -> f64;
+
+    /// Human-readable engine description for logs.
+    fn describe(&self) -> String;
+}
+
+/// Pick the AOT executable batch size for `n` sequences (smallest compiled
+/// batch ≥ n; falls back to the largest available).
+pub fn pick_exe_batch(compiled: &[usize], n: usize) -> usize {
+    let mut sizes: Vec<usize> = compiled.to_vec();
+    sizes.sort_unstable();
+    for &s in &sizes {
+        if s >= n {
+            return s;
+        }
+    }
+    *sizes.last().expect("no compiled batch sizes")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exe_batch_selection() {
+        let c = [1, 2, 4];
+        assert_eq!(pick_exe_batch(&c, 1), 1);
+        assert_eq!(pick_exe_batch(&c, 2), 2);
+        assert_eq!(pick_exe_batch(&c, 3), 4);
+        assert_eq!(pick_exe_batch(&c, 4), 4);
+        assert_eq!(pick_exe_batch(&c, 9), 4); // caller must chunk
+    }
+}

@@ -1,0 +1,398 @@
+//! Real execution engine: TinyGPT prefill/decode-window HLOs via PJRT.
+//!
+//! Holds per-sequence KV caches host-side between windows (batch
+//! composition changes every scheduling iteration under ISRTF, so the KV
+//! must be re-batched per window).  Preemption here uses vLLM's *swap*
+//! semantics — KV moves out of the (accounted) device pool but survives on
+//! the host — whereas the sim engine models *recompute*; the coordinator
+//! treats both identically.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{HostTensor, LoadedModel, Manifest, Runtime, WeightStore};
+
+use super::kv::{AllocOutcome, BlockManager, SeqId};
+use super::{pick_exe_batch, Engine, SeqSpec, SeqWindowOut, WindowOutcome};
+
+struct PjrtSeq {
+    prompt: Vec<i32>,     // unpadded, truncated to prompt_max
+    prompt_len: usize,
+    target_total: usize,
+    generated: Vec<i32>,  // generated tokens (includes the prefill token)
+    /// host KV of shape (L, 2, H, S, Dh), present after first prefill
+    kv: Option<Vec<f32>>,
+    /// KV slots filled = prompt_len + generated.len() - 1 (last token's KV
+    /// is written by the *next* decode step)
+    resident: bool,
+}
+
+/// KV geometry derived from the manifest.
+#[derive(Debug, Clone, Copy)]
+struct KvGeom {
+    l: usize,
+    h: usize,
+    s: usize,
+    dh: usize,
+}
+
+impl KvGeom {
+    fn plane(&self) -> usize {
+        self.h * self.s * self.dh
+    }
+
+    fn seq_elems(&self) -> usize {
+        self.l * 2 * self.plane()
+    }
+}
+
+pub struct PjrtEngine {
+    prefill: BTreeMap<usize, LoadedModel>,
+    decode: BTreeMap<usize, LoadedModel>,
+    geom: KvGeom,
+    prompt_max: usize,
+    window: usize,
+    max_batch: usize,
+    vocab: usize,
+    seqs: BTreeMap<u64, PjrtSeq>,
+    blocks: BlockManager,
+    priority_order: Vec<u64>,
+    pub total_preemptions: u64,
+    /// cumulative ms spent inside PJRT execute (vs host re-batching)
+    pub exec_ms: f64,
+    pub host_ms: f64,
+}
+
+impl PjrtEngine {
+    /// Load all compiled batch sizes from the artifacts.
+    pub fn load(rt: Arc<Runtime>, manifest: &Manifest, store: &WeightStore,
+                max_resident_tokens: usize) -> Result<PjrtEngine> {
+        let mc = &manifest.model;
+        if mc.n_heads == 0 || mc.d_model == 0 {
+            bail!("manifest model_config incomplete");
+        }
+        let geom = KvGeom {
+            l: mc.n_layers,
+            h: mc.n_heads,
+            s: mc.max_seq,
+            dh: mc.d_model / mc.n_heads,
+        };
+        let mut prefill = BTreeMap::new();
+        let mut decode = BTreeMap::new();
+        for &b in &manifest.batch_sizes {
+            prefill.insert(
+                b,
+                LoadedModel::load(rt.clone(), manifest, store,
+                                  &format!("model.prefill.b{b}"), None)?,
+            );
+            decode.insert(
+                b,
+                LoadedModel::load(rt.clone(), manifest, store,
+                                  &format!("model.decode.b{b}"), None)?,
+            );
+        }
+        let max_batch = *manifest.batch_sizes.iter().max().unwrap_or(&4);
+        // KV accounting: bytes_per_token for the tiny model (f32)
+        let bytes_per_token = geom.l * 2 * geom.h * geom.dh * 4;
+        Ok(PjrtEngine {
+            prefill,
+            decode,
+            geom,
+            prompt_max: mc.prompt_max,
+            window: manifest.window_size,
+            max_batch,
+            vocab: mc.vocab,
+            seqs: BTreeMap::new(),
+            blocks: BlockManager::from_memory(
+                max_resident_tokens * bytes_per_token, bytes_per_token),
+            priority_order: Vec::new(),
+            total_preemptions: 0,
+            exec_ms: 0.0,
+            host_ms: 0.0,
+        })
+    }
+
+    fn compiled_sizes(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    fn ensure_blocks(&mut self, id: u64, tokens: usize,
+                     protect: &[u64], preempted: &mut Vec<u64>) -> bool {
+        loop {
+            let outcome = if self.blocks.resident(SeqId(id)) {
+                AllocOutcome::Ok
+            } else {
+                self.blocks.admit(SeqId(id), tokens)
+            };
+            match outcome {
+                AllocOutcome::Ok => return true,
+                AllocOutcome::OutOfMemory { .. } => {
+                    let victim = self
+                        .priority_order
+                        .iter()
+                        .rev()
+                        .copied()
+                        .find(|v| !protect.contains(v)
+                              && self.seqs.get(v).map(|s| s.resident).unwrap_or(false));
+                    match victim {
+                        Some(v) => {
+                            self.evict(v);
+                            self.total_preemptions += 1;
+                            preempted.push(v);
+                        }
+                        None => return false,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Prefill a group of fresh sequences (no KV yet).
+    fn prefill_group(&mut self, ids: &[u64]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let exe_b = pick_exe_batch(&self.compiled_sizes(), ids.len());
+        let exe = self
+            .prefill
+            .get(&exe_b)
+            .ok_or_else(|| anyhow!("no prefill exe b{exe_b}"))?;
+        let mut tokens = vec![0i32; exe_b * self.prompt_max];
+        let mut lengths = vec![1i32; exe_b]; // pad slots: length 1 (safe)
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = &self.seqs[&id];
+            for (j, &t) in s.prompt.iter().enumerate() {
+                tokens[slot * self.prompt_max + j] = t;
+            }
+            lengths[slot] = s.prompt_len as i32;
+        }
+        let out = exe.execute(&[
+            HostTensor::I32(tokens),
+            HostTensor::I32(lengths),
+        ])?;
+        let kv = out[0].as_f32()?;
+        let first = out[1].as_i32()?;
+        let g = self.geom;
+        for (slot, &id) in ids.iter().enumerate() {
+            let mut seq_kv = vec![0f32; g.seq_elems()];
+            // batch layout (L,2,B,H,S,Dh) -> seq layout (L,2,H,S,Dh)
+            for lt in 0..g.l * 2 {
+                let src = (lt * exe_b + slot) * g.plane();
+                let dst = lt * g.plane();
+                seq_kv[dst..dst + g.plane()]
+                    .copy_from_slice(&kv[src..src + g.plane()]);
+            }
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.kv = Some(seq_kv);
+            s.generated.push(first[slot].rem_euclid(self.vocab as i32));
+        }
+        Ok(())
+    }
+
+    /// Decode one window for a chunk (≤ max compiled batch) of resident seqs.
+    fn decode_chunk(&mut self, ids: &[u64]) -> Result<Vec<SeqWindowOut>> {
+        let exe_b = pick_exe_batch(&self.compiled_sizes(), ids.len());
+        let g = self.geom;
+        let mut kv = vec![0f32; g.l * 2 * exe_b * g.plane()];
+        let mut lengths = vec![0i32; exe_b];
+        let mut last_token = vec![0i32; exe_b];
+        let mut active = vec![0i32; exe_b];
+        let t_host = Instant::now();
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = &self.seqs[&id];
+            let seq_kv = s.kv.as_ref().expect("decode_chunk on fresh seq");
+            for lt in 0..g.l * 2 {
+                let dst = (lt * exe_b + slot) * g.plane();
+                let src = lt * g.plane();
+                kv[dst..dst + g.plane()]
+                    .copy_from_slice(&seq_kv[src..src + g.plane()]);
+            }
+            lengths[slot] = (s.prompt_len + s.generated.len() - 1) as i32;
+            last_token[slot] = *s.generated.last().unwrap();
+            active[slot] = 1;
+        }
+        self.host_ms += t_host.elapsed().as_secs_f64() * 1e3;
+
+        let exe = self
+            .decode
+            .get(&exe_b)
+            .ok_or_else(|| anyhow!("no decode exe b{exe_b}"))?;
+        let t_exec = Instant::now();
+        let out = exe.execute(&[
+            HostTensor::F32(kv),
+            HostTensor::I32(lengths),
+            HostTensor::I32(last_token),
+            HostTensor::I32(active),
+        ])?;
+        self.exec_ms += t_exec.elapsed().as_secs_f64() * 1e3;
+
+        let t_host = Instant::now();
+        let new_kv = out[0].as_f32()?;
+        let toks = out[1].as_i32()?;
+        let mut results = Vec::with_capacity(ids.len());
+        for (slot, &id) in ids.iter().enumerate() {
+            let s = self.seqs.get_mut(&id).unwrap();
+            let seq_kv = s.kv.as_mut().unwrap();
+            for lt in 0..g.l * 2 {
+                let src = (lt * exe_b + slot) * g.plane();
+                let dst = lt * g.plane();
+                seq_kv[dst..dst + g.plane()]
+                    .copy_from_slice(&new_kv[src..src + g.plane()]);
+            }
+            let window_toks = &toks[slot * self.window..(slot + 1) * self.window];
+            let remaining = s.target_total.saturating_sub(s.generated.len());
+            let take = remaining.min(self.window);
+            let new_tokens: Vec<i32> = window_toks[..take].to_vec();
+            s.generated.extend_from_slice(&new_tokens);
+            let done = s.generated.len() >= s.target_total;
+            results.push(SeqWindowOut { id, new_tokens, done });
+        }
+        self.host_ms += t_host.elapsed().as_secs_f64() * 1e3;
+        Ok(results)
+    }
+
+    /// Full decoded text (token ids) of a sequence.
+    pub fn response(&self, id: u64) -> Option<&[i32]> {
+        self.seqs.get(&id).map(|s| s.generated.as_slice())
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn admit(&mut self, seq: SeqSpec) -> Result<()> {
+        if self.seqs.contains_key(&seq.id) {
+            bail!("seq {} already admitted", seq.id);
+        }
+        let mut prompt = seq.prompt;
+        prompt.truncate(self.prompt_max);
+        if prompt.is_empty() {
+            prompt.push(1);
+        }
+        let prompt_len = prompt.len();
+        self.seqs.insert(
+            seq.id,
+            PjrtSeq {
+                prompt,
+                prompt_len,
+                target_total: seq.target_total.max(1),
+                generated: Vec::new(),
+                kv: None,
+                resident: false,
+            },
+        );
+        Ok(())
+    }
+
+    fn run_window(&mut self, seq_ids: &[u64]) -> Result<WindowOutcome> {
+        if seq_ids.len() > self.max_batch {
+            bail!("batch {} exceeds max {}", seq_ids.len(), self.max_batch);
+        }
+        let t0 = Instant::now();
+        let mut preempted = Vec::new();
+
+        // account KV blocks + mark resident
+        let mut staged: Vec<u64> = Vec::with_capacity(seq_ids.len());
+        for &id in seq_ids {
+            let (tokens, known) = match self.seqs.get(&id) {
+                Some(s) => (s.prompt_len + s.generated.len() + self.window, true),
+                None => (0, false),
+            };
+            if !known {
+                bail!("seq {id} not admitted");
+            }
+            if self.ensure_blocks(id, tokens, seq_ids, &mut preempted) {
+                self.seqs.get_mut(&id).unwrap().resident = true;
+                staged.push(id);
+            }
+        }
+
+        // prefill the fresh ones
+        let fresh: Vec<u64> = staged
+            .iter()
+            .copied()
+            .filter(|id| self.seqs[id].kv.is_none())
+            .collect();
+        for group in fresh.chunks(self.max_batch) {
+            self.prefill_group(group)?;
+        }
+
+        // decode everyone still needing tokens (a prefill token may already
+        // have completed a target_total == 1 sequence)
+        let mut outputs: Vec<SeqWindowOut> = Vec::with_capacity(staged.len());
+        let mut decode_ids: Vec<u64> = Vec::new();
+        for &id in &staged {
+            let s = &self.seqs[&id];
+            if s.generated.len() >= s.target_total {
+                outputs.push(SeqWindowOut {
+                    id,
+                    new_tokens: s.generated.clone(),
+                    done: true,
+                });
+            } else {
+                decode_ids.push(id);
+            }
+        }
+        for chunk in decode_ids.chunks(self.max_batch) {
+            outputs.extend(self.decode_chunk(chunk)?);
+        }
+
+        // fresh seqs' outputs must include their prefill token
+        for o in outputs.iter_mut() {
+            if fresh.contains(&o.id) && !o.done {
+                let first = self.seqs[&o.id].generated
+                    [self.seqs[&o.id].generated.len() - o.new_tokens.len() - 1];
+                o.new_tokens.insert(0, first);
+            }
+        }
+
+        preempted.dedup();
+        Ok(WindowOutcome {
+            outputs,
+            service_ms: t0.elapsed().as_secs_f64() * 1e3,
+            preempted,
+        })
+    }
+
+    fn set_priority_order(&mut self, order: &[u64]) {
+        self.priority_order = order.to_vec();
+    }
+
+    fn remove(&mut self, seq_id: u64) {
+        self.blocks.release(SeqId(seq_id));
+        self.seqs.remove(&seq_id);
+    }
+
+    fn evict(&mut self, seq_id: u64) {
+        // swap semantics: KV stays host-side, device blocks released
+        self.blocks.release(SeqId(seq_id));
+        if let Some(s) = self.seqs.get_mut(&seq_id) {
+            s.resident = false;
+        }
+    }
+
+    fn generated(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|s| s.generated.len()).unwrap_or(0)
+    }
+
+    fn is_resident(&self, seq_id: u64) -> bool {
+        self.seqs.get(&seq_id).map(|s| s.resident).unwrap_or(false)
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        self.blocks.utilization()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "PjrtEngine[TinyGPT L{} H{} S{} window={} batches={:?}]",
+            self.geom.l, self.geom.h, self.geom.s, self.window,
+            self.compiled_sizes()
+        )
+    }
+}

@@ -1,0 +1,161 @@
+//! Served-model performance profiles — the timing/memory substitute for
+//! running OPT/LLaMA on A100s.
+//!
+//! The paper's Table 4 gives each model's average request latency on an
+//! A100; Appendix A gives KV footprints via the batch size at which vLLM
+//! first preempts.  From those anchors we derive a per-window service-time
+//! model for the discrete-event engine:
+//!
+//!   window_time = prefill_cost (first window only)
+//!              + window_tokens × tpot × (1 + batch_penalty × (batch − 1))
+//!
+//! TPOT is anchored so that a request with the corpus' mean output length
+//! at batch 1 matches Table 4's average latency.  The batch penalty models
+//! the memory-bound decode regime (mild slowdown as batch grows).
+
+use crate::runtime::manifest::ServedModelMeta;
+
+/// Average output length (tokens) of the evaluation corpus — anchor for
+/// translating Table 4 request latency into per-token time.
+pub const MEAN_OUTPUT_TOKENS: f64 = 120.0;
+/// Prefill : decode per-token cost ratio (prompt tokens process in parallel).
+pub const PREFILL_FACTOR: f64 = 6.0;
+/// Per-extra-batch-slot slowdown of a decode step.
+pub const BATCH_PENALTY: f64 = 0.06;
+/// A100 80 GB HBM.
+pub const GPU_MEM_BYTES: usize = 80 * (1 << 30);
+
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    pub abbrev: String,
+    pub params_b: f64,
+    /// paper Table 4 average request latency (ms)
+    pub avg_latency_ms: f64,
+    /// derived: decode time per token at batch 1 (ms)
+    pub tpot_ms: f64,
+    /// derived: prefill cost for an average prompt (ms)
+    pub prefill_ms: f64,
+    pub kv_bytes_per_token: usize,
+    /// paper Table 6: memory limit fraction used in preemption profiling
+    pub mem_limit_frac: f64,
+    /// paper Table 6: observed min preempting batch size (reference value)
+    pub preempt_batch_ref: usize,
+}
+
+impl ModelProfile {
+    pub fn from_meta(m: &ServedModelMeta) -> ModelProfile {
+        // avg_latency ≈ prefill + tpot × mean_out  with prefill modelled as
+        // PREFILL_FACTOR token-times.
+        let tpot = m.avg_latency_ms / (MEAN_OUTPUT_TOKENS + PREFILL_FACTOR);
+        ModelProfile {
+            name: m.name.clone(),
+            abbrev: m.abbrev.clone(),
+            params_b: m.params_b,
+            avg_latency_ms: m.avg_latency_ms,
+            tpot_ms: tpot,
+            prefill_ms: tpot * PREFILL_FACTOR,
+            kv_bytes_per_token: m.kv_bytes_per_token,
+            mem_limit_frac: m.mem_limit_frac,
+            preempt_batch_ref: m.preempt_batch,
+        }
+    }
+
+    /// Service time of one scheduling window (ms).
+    /// `fresh` slots pay the prefill cost; decode costs scale with tokens
+    /// and the batch-size penalty.
+    pub fn window_ms(&self, batch: usize, window_tokens: usize, fresh: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let penalty = 1.0 + BATCH_PENALTY * (batch as f64 - 1.0);
+        let decode = window_tokens as f64 * self.tpot_ms * penalty;
+        let prefill = if fresh > 0 { self.prefill_ms * penalty } else { 0.0 };
+        prefill + decode
+    }
+
+    /// Full-request latency at batch 1 (sanity anchor for Table 4).
+    pub fn request_latency_ms(&self, out_tokens: usize) -> f64 {
+        self.prefill_ms + out_tokens as f64 * self.tpot_ms
+    }
+
+    /// KV budget on one GPU after weights, honouring vLLM's memory limit.
+    pub fn kv_budget_bytes(&self, mem_limit_frac: f64) -> usize {
+        let weights = (self.params_b * 2e9) as usize; // fp16 weights
+        let budget = (GPU_MEM_BYTES as f64 * mem_limit_frac) as usize;
+        budget.saturating_sub(weights)
+    }
+
+    /// Default 5-model set from the manifest metadata.
+    pub fn all(metas: &[ServedModelMeta]) -> Vec<ModelProfile> {
+        metas.iter().map(ModelProfile::from_meta).collect()
+    }
+
+    pub fn find<'a>(profiles: &'a [ModelProfile], abbrev: &str) -> Option<&'a ModelProfile> {
+        profiles.iter().find(|p| p.abbrev == abbrev)
+    }
+}
+
+/// The paper's average-request-rate anchor (§6.2):
+/// AVG.RequestRate = 1000 / AVG.Latency × batch_size   [requests/s]
+pub fn avg_request_rate(profile: &ModelProfile, batch: usize) -> f64 {
+    1000.0 / profile.avg_latency_ms * batch as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lam13() -> ModelProfile {
+        ModelProfile::from_meta(&ServedModelMeta {
+            name: "LlaMA2-13B".into(),
+            abbrev: "lam13".into(),
+            params_b: 13.0,
+            avg_latency_ms: 8610.2,
+            kv_bytes_per_token: 2 * 2 * 40 * 40 * 128,
+            preempt_batch: 120,
+            mem_limit_frac: 0.9,
+        })
+    }
+
+    #[test]
+    fn latency_anchor_roundtrip() {
+        let p = lam13();
+        let lat = p.request_latency_ms(MEAN_OUTPUT_TOKENS as usize);
+        assert!((lat - p.avg_latency_ms).abs() / p.avg_latency_ms < 0.01,
+                "anchor broken: {lat} vs {}", p.avg_latency_ms);
+    }
+
+    #[test]
+    fn window_time_scales_with_batch() {
+        let p = lam13();
+        let w1 = p.window_ms(1, 50, 0);
+        let w4 = p.window_ms(4, 50, 0);
+        assert!(w4 > w1);
+        assert!(w4 < w1 * 4.0, "decode is memory-bound, not linear in batch");
+        assert_eq!(p.window_ms(0, 50, 0), 0.0);
+    }
+
+    #[test]
+    fn prefill_only_on_fresh() {
+        let p = lam13();
+        assert!(p.window_ms(2, 50, 1) > p.window_ms(2, 50, 0));
+    }
+
+    #[test]
+    fn request_rate_matches_paper_equation() {
+        let p = lam13();
+        // paper: 120 / 8.61 s ≈ 13.9 rps at batch 120
+        let rate = avg_request_rate(&p, 120);
+        assert!((rate - 13.9).abs() < 0.1, "rate {rate}");
+    }
+
+    #[test]
+    fn kv_budget_positive_under_table6_limits() {
+        let p = lam13();
+        let b = p.kv_budget_bytes(0.9);
+        assert!(b > 10 << 30, "lam13@90% should leave >10GB for KV, got {b}");
+        // 13B fp16 weights = 26 GB > 30% of 80 GB: budget collapses
+        assert_eq!(p.kv_budget_bytes(0.3), 0);
+    }
+}

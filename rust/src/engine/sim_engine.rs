@@ -1,0 +1,419 @@
+//! Discrete-event vLLM model calibrated to the paper's testbed.
+//!
+//! Timing comes from [`profiles::ModelProfile`] (anchored to Table 4);
+//! memory comes from [`kv::BlockManager`] sized by the model's KV bytes per
+//! token and the vLLM memory limit (Appendix A).  Preemption follows the
+//! paper's patched-vLLM semantics: when a decode step cannot get a block,
+//! the lowest-priority resident sequence is evicted (recompute style: KV
+//! dropped, generated tokens kept; resuming pays a recompute prefill).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::kv::{AllocOutcome, BlockManager, SeqId};
+use super::profiles::ModelProfile;
+use super::{Engine, SeqSpec, SeqWindowOut, WindowOutcome};
+
+#[derive(Debug, Clone)]
+struct SimSeq {
+    prompt_len: usize,
+    target_total: usize,
+    topic: usize,
+    generated: usize,
+    resident: bool,
+    /// windows where this seq was recomputed after preemption (stats)
+    recomputes: usize,
+}
+
+pub struct SimEngine {
+    profile: ModelProfile,
+    window_size: usize,
+    max_batch: usize,
+    blocks: BlockManager,
+    seqs: BTreeMap<u64, SimSeq>,
+    /// coordinator-provided priority order, highest first
+    priority_order: Vec<u64>,
+    pub total_preemptions: u64,
+    pub total_recompute_tokens: u64,
+}
+
+impl SimEngine {
+    pub fn new(profile: ModelProfile, window_size: usize, max_batch: usize,
+               kv_budget_bytes: usize) -> SimEngine {
+        let blocks = BlockManager::from_memory(
+            kv_budget_bytes.max(1), profile.kv_bytes_per_token);
+        SimEngine {
+            profile,
+            window_size,
+            max_batch,
+            blocks,
+            seqs: BTreeMap::new(),
+            priority_order: Vec::new(),
+            total_preemptions: 0,
+            total_recompute_tokens: 0,
+        }
+    }
+
+    /// Convenience: budget from the profile's Table 6 memory-limit fraction.
+    pub fn with_profile_budget(profile: ModelProfile, window_size: usize,
+                               max_batch: usize) -> SimEngine {
+        let budget = profile.kv_budget_bytes(profile.mem_limit_frac);
+        Self::new(profile, window_size, max_batch, budget)
+    }
+
+    pub fn profile(&self) -> &ModelProfile {
+        &self.profile
+    }
+
+    /// Evict the lowest-priority resident sequence not in `protect`.
+    /// Returns the victim id if one was found.
+    fn preempt_victim(&mut self, protect: &[u64]) -> Option<u64> {
+        // priority_order is highest-first; walk from the back
+        let victim = self
+            .priority_order
+            .iter()
+            .rev()
+            .copied()
+            .find(|id| {
+                !protect.contains(id)
+                    && self.seqs.get(id).map(|s| s.resident).unwrap_or(false)
+            })
+            .or_else(|| {
+                // fall back to any resident seq not protected (e.g. ids the
+                // coordinator never ranked)
+                self.seqs
+                    .iter()
+                    .rev()
+                    .find(|(id, s)| s.resident && !protect.contains(id))
+                    .map(|(id, _)| *id)
+            })?;
+        self.do_evict(victim);
+        self.total_preemptions += 1;
+        Some(victim)
+    }
+
+    fn do_evict(&mut self, id: u64) {
+        if let Some(s) = self.seqs.get_mut(&id) {
+            if s.resident {
+                self.blocks.release(SeqId(id));
+                s.resident = false;
+            }
+        }
+    }
+
+    /// Make `id` resident, preempting others if necessary.  Returns tokens
+    /// recomputed (prefill cost proxy) and preempted ids, or None if the
+    /// sequence cannot fit even after evicting everyone else.
+    fn ensure_resident(&mut self, id: u64, protect: &[u64],
+                       preempted: &mut Vec<u64>) -> Option<usize> {
+        let (need_tokens, was_resident) = match self.seqs.get(&id) {
+            Some(s) => (s.prompt_len + s.generated, s.resident),
+            None => return None,
+        };
+        if was_resident {
+            return Some(0);
+        }
+        loop {
+            match self.blocks.admit(SeqId(id), need_tokens) {
+                AllocOutcome::Ok => break,
+                AllocOutcome::OutOfMemory { .. } => {
+                    match self.preempt_victim(protect) {
+                        Some(v) => preempted.push(v),
+                        None => return None,
+                    }
+                }
+            }
+        }
+        let s = self.seqs.get_mut(&id).unwrap();
+        s.resident = true;
+        let recompute = if s.generated > 0 {
+            s.recomputes += 1;
+            s.generated
+        } else {
+            0
+        };
+        self.total_recompute_tokens += recompute as u64;
+        Some(recompute)
+    }
+}
+
+impl Engine for SimEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn admit(&mut self, seq: SeqSpec) -> Result<()> {
+        if self.seqs.contains_key(&seq.id) {
+            bail!("seq {} already admitted", seq.id);
+        }
+        self.seqs.insert(
+            seq.id,
+            SimSeq {
+                prompt_len: seq.prompt.len().max(1),
+                target_total: seq.target_total,
+                topic: seq.topic,
+                generated: 0,
+                resident: false,
+                recomputes: 0,
+            },
+        );
+        Ok(())
+    }
+
+    fn run_window(&mut self, seq_ids: &[u64]) -> Result<WindowOutcome> {
+        if seq_ids.len() > self.max_batch {
+            bail!("batch {} exceeds max {}", seq_ids.len(), self.max_batch);
+        }
+        let mut preempted = Vec::new();
+        let mut fresh = 0usize;
+        let mut active: Vec<u64> = Vec::with_capacity(seq_ids.len());
+        let mut recompute_tokens = 0usize;
+
+        // stage KV for every scheduled sequence (prefill / recompute)
+        for &id in seq_ids {
+            if !self.seqs.contains_key(&id) {
+                bail!("seq {id} not admitted");
+            }
+            let was_resident = self.seqs[&id].resident;
+            match self.ensure_resident(id, seq_ids, &mut preempted) {
+                Some(rc) => {
+                    if !was_resident {
+                        fresh += 1;
+                        recompute_tokens += rc;
+                    }
+                    active.push(id);
+                }
+                None => {
+                    // cannot fit even alone: skip this window
+                }
+            }
+        }
+
+        // decode: each active seq produces up to `window` tokens
+        let mut outputs = Vec::with_capacity(active.len());
+        let mut decoded_max = 0usize;
+        let mut evicted_from_batch: Vec<u64> = Vec::new();
+        for idx in 0..active.len() {
+            let id = active[idx];
+            if evicted_from_batch.contains(&id) {
+                continue; // lost its blocks to a higher-priority batch member
+            }
+            // growth may itself preempt *other* seqs
+            let (gen_now, done) = {
+                let s = &self.seqs[&id];
+                let remaining = s.target_total.saturating_sub(s.generated);
+                let n = remaining.min(self.window_size);
+                (n, remaining <= self.window_size)
+            };
+            let mut grown = 0usize;
+            while grown < gen_now {
+                match self.blocks.grow(SeqId(id), 1) {
+                    AllocOutcome::Ok => grown += 1,
+                    AllocOutcome::OutOfMemory { .. } => {
+                        // prefer non-batch victims ...
+                        let mut protect = active.clone();
+                        protect.push(id);
+                        if let Some(v) = self.preempt_victim(&protect) {
+                            preempted.push(v);
+                            continue;
+                        }
+                        // ... then lower-priority batch members (vLLM
+                        // shrinks the running batch under KV pressure)
+                        let protect_head: Vec<u64> =
+                            active[..=idx].to_vec();
+                        match self.preempt_victim(&protect_head) {
+                            Some(v) => {
+                                preempted.push(v);
+                                evicted_from_batch.push(v);
+                            }
+                            None => break, // pool smaller than this one job
+                        }
+                    }
+                }
+            }
+            let s = self.seqs.get_mut(&id).unwrap();
+            s.generated += grown;
+            decoded_max = decoded_max.max(grown);
+            let done = done && grown == gen_now;
+            // synthetic token stream with the content signal the
+            // predictor was trained on (mirrors python response_token)
+            let start = s.generated - grown;
+            let (total, topic) = (s.target_total, s.topic);
+            let new_tokens: Vec<i32> = (0..grown)
+                .map(|k| super::sim_response_token(start + k, total, topic, 2048))
+                .collect();
+            outputs.push(SeqWindowOut { id, new_tokens, done });
+        }
+
+        // any scheduled-but-unstageable seq reports an empty output
+        for &id in seq_ids {
+            if !active.contains(&id) {
+                outputs.push(SeqWindowOut { id, new_tokens: Vec::new(), done: false });
+            }
+        }
+
+        // service time: calibrated profile; recompute counts as extra prefill
+        let mut service_ms = self
+            .profile
+            .window_ms(active.len(), decoded_max, fresh);
+        if recompute_tokens > 0 {
+            service_ms += self.profile.prefill_ms
+                * (recompute_tokens as f64 / self.profile.tpot_ms.max(1e-9) / 1000.0).min(1.0);
+        }
+
+        // drop preempted duplicates, keep order
+        preempted.dedup();
+        Ok(WindowOutcome { outputs, service_ms, preempted })
+    }
+
+    fn set_priority_order(&mut self, order: &[u64]) {
+        self.priority_order = order.to_vec();
+    }
+
+    fn remove(&mut self, seq_id: u64) {
+        self.do_evict(seq_id);
+        self.seqs.remove(&seq_id);
+    }
+
+    fn evict(&mut self, seq_id: u64) {
+        self.do_evict(seq_id);
+    }
+
+    fn generated(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|s| s.generated).unwrap_or(0)
+    }
+
+    fn is_resident(&self, seq_id: u64) -> bool {
+        self.seqs.get(&seq_id).map(|s| s.resident).unwrap_or(false)
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        self.blocks.utilization()
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "SimEngine[{} tpot={:.2}ms blocks={} batch<={}]",
+            self.profile.abbrev, self.profile.tpot_ms,
+            self.blocks.total_blocks, self.max_batch
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ServedModelMeta;
+
+    fn profile() -> ModelProfile {
+        ModelProfile::from_meta(&ServedModelMeta {
+            name: "LlaMA2-13B".into(),
+            abbrev: "lam13".into(),
+            params_b: 13.0,
+            avg_latency_ms: 8610.2,
+            kv_bytes_per_token: 2 * 2 * 40 * 40 * 128,
+            preempt_batch: 120,
+            mem_limit_frac: 0.9,
+        })
+    }
+
+    fn engine_with_blocks(blocks: usize) -> SimEngine {
+        let p = profile();
+        let bpt = p.kv_bytes_per_token;
+        let mut e = SimEngine::new(p, 50, 8, 1);
+        e.blocks = BlockManager::with_blocks(blocks, bpt);
+        e
+    }
+
+    fn spec(id: u64, prompt: usize, total: usize) -> SeqSpec {
+        SeqSpec { id, prompt: vec![7; prompt], target_total: total , topic: 0}
+    }
+
+    #[test]
+    fn generates_window_then_finishes() {
+        let mut e = engine_with_blocks(10_000);
+        e.admit(spec(1, 10, 80)).unwrap();
+        let w1 = e.run_window(&[1]).unwrap();
+        assert_eq!(w1.outputs[0].new_tokens.len(), 50);
+        assert!(!w1.outputs[0].done);
+        assert!(w1.service_ms > 0.0);
+        let w2 = e.run_window(&[1]).unwrap();
+        assert_eq!(w2.outputs[0].new_tokens.len(), 30);
+        assert!(w2.outputs[0].done);
+        assert_eq!(e.generated(1), 80);
+    }
+
+    #[test]
+    fn service_time_uses_profile() {
+        let mut e = engine_with_blocks(10_000);
+        e.admit(spec(1, 10, 500)).unwrap();
+        let w = e.run_window(&[1]).unwrap();
+        let expect = e.profile().window_ms(1, 50, 1);
+        assert!((w.service_ms - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preempts_lowest_priority_on_oom() {
+        // tiny pool: only ~4 blocks (64 tokens)
+        let mut e = engine_with_blocks(4);
+        e.admit(spec(1, 30, 100)).unwrap(); // 2 blocks
+        e.admit(spec(2, 30, 100)).unwrap(); // 2 blocks
+        e.set_priority_order(&[1, 2]);      // 2 is lowest priority
+        let w = e.run_window(&[1]).unwrap();
+        // growing seq 1 by 50 tokens forces eviction of seq 2 (if resident)
+        // first stage seq1 resident (2 blocks free ok) ...
+        assert!(e.is_resident(1));
+        let _ = w;
+        // now admit 2 into the batch as well: staging preempts nobody else,
+        // but growth will OOM and must not evict batch members
+        let w2 = e.run_window(&[2]).unwrap();
+        // seq 1 (not in batch, lowest-rank resident after 2 protected) gets evicted
+        assert!(w2.preempted.contains(&1) || !e.is_resident(1));
+    }
+
+    #[test]
+    fn eviction_keeps_progress_and_recomputes() {
+        let mut e = engine_with_blocks(10_000);
+        e.admit(spec(1, 10, 200)).unwrap();
+        e.run_window(&[1]).unwrap();
+        assert_eq!(e.generated(1), 50);
+        e.evict(1);
+        assert!(!e.is_resident(1));
+        assert_eq!(e.generated(1), 50, "progress survives preemption");
+        let w = e.run_window(&[1]).unwrap();
+        assert_eq!(e.generated(1), 100);
+        assert!(w.service_ms > e.profile().window_ms(1, 50, 0),
+                "recompute pays a prefill-like cost");
+    }
+
+    #[test]
+    fn remove_releases_memory() {
+        let mut e = engine_with_blocks(8);
+        e.admit(spec(1, 30, 100)).unwrap();
+        e.run_window(&[1]).unwrap();
+        let used = e.blocks.used_blocks();
+        assert!(used > 0);
+        e.remove(1);
+        assert_eq!(e.blocks.used_blocks(), 0);
+        assert_eq!(e.generated(1), 0);
+    }
+
+    #[test]
+    fn rejects_oversized_batch_and_unknown_seq() {
+        let mut e = engine_with_blocks(100);
+        assert!(e.run_window(&[99]).is_err());
+        let mut big = engine_with_blocks(100);
+        big.max_batch = 1;
+        big.admit(spec(1, 5, 60)).unwrap();
+        big.admit(spec(2, 5, 60)).unwrap();
+        assert!(big.run_window(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn duplicate_admit_rejected() {
+        let mut e = engine_with_blocks(100);
+        e.admit(spec(1, 5, 60)).unwrap();
+        assert!(e.admit(spec(1, 5, 60)).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Hash tokenizer for the runnable examples.
+//!
+//! The served TinyGPT is a synthetic workload (its weights are random), so
+//! the tokenizer only needs to be deterministic and invertible-ish: words
+//! hash into the model's vocab via FNV-1a, and ids render back as readable
+//! placeholders.  Corpus prompts (the benchmark path) are already token
+//! arrays and bypass this module.
+
+/// ids 0..RESERVED-1 are reserved (0 = PAD, 1 = BOS), matching
+/// `python/compile/data.py`.
+pub const RESERVED: u32 = 16;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: u32,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Tokenizer {
+        assert!(vocab as u32 > RESERVED * 2);
+        Tokenizer { vocab: vocab as u32 }
+    }
+
+    fn hash_word(&self, w: &str) -> i32 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in w.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        (RESERVED + (h % (self.vocab - RESERVED) as u64) as u32) as i32
+    }
+
+    /// Encode text: lowercase whitespace/punctuation split, BOS-prefixed.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![1i32]; // BOS
+        for word in text
+            .split(|c: char| c.is_whitespace() || ",.;:!?\"'()".contains(c))
+            .filter(|w| !w.is_empty())
+        {
+            out.push(self.hash_word(&word.to_lowercase()));
+        }
+        out
+    }
+
+    /// Decode ids to placeholder text.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&id| match id {
+                0 => "<pad>".to_string(),
+                1 => "<bos>".to_string(),
+                i if (i as u32) < RESERVED => format!("<r{i}>"),
+                i => format!("w{i}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_in_range() {
+        let t = Tokenizer::new(2048);
+        let a = t.encode("Hello, world! hello");
+        let b = t.encode("hello world hello");
+        assert_eq!(a, b, "case/punctuation insensitive");
+        assert_eq!(a[0], 1);
+        assert!(a.iter().skip(1).all(|&id| (RESERVED as i32..2048).contains(&id)));
+        assert_eq!(a[1], a[3], "same word, same id");
+    }
+
+    #[test]
+    fn empty_text_is_bos_only() {
+        let t = Tokenizer::new(2048);
+        assert_eq!(t.encode("   "), vec![1]);
+    }
+
+    #[test]
+    fn decode_readable() {
+        let t = Tokenizer::new(2048);
+        let s = t.decode(&[1, 0, 100]);
+        assert!(s.contains("<bos>") && s.contains("<pad>") && s.contains("w100"));
+    }
+
+    #[test]
+    fn different_words_usually_differ() {
+        let t = Tokenizer::new(2048);
+        let ids: Vec<i32> = ["alpha", "beta", "gamma", "delta", "epsilon"]
+            .iter()
+            .map(|w| t.encode(w)[1])
+            .collect();
+        let mut uniq = ids.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert!(uniq.len() >= 4);
+    }
+}

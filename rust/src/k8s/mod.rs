@@ -1,0 +1,160 @@
+//! Kubernetes manifest generation (paper §5 "Deploying ELIS on Kubernetes").
+//!
+//! The paper runs the frontend scheduler as a Deployment and the backend
+//! workers as a StatefulSet (stable pod identity so the frontend can address
+//! the pod that owns a batch), with Services exposing both.  This offline
+//! reproduction runs workers in-process, but emits the equivalent YAML so
+//! the system can be deployed on a real cluster unchanged
+//! (`elis k8s-manifests`).
+
+#[derive(Debug, Clone)]
+pub struct K8sConfig {
+    pub namespace: String,
+    pub image: String,
+    pub workers: usize,
+    pub scheduler_policy: String,
+    pub gpu_per_worker: usize,
+    pub model: String,
+}
+
+impl Default for K8sConfig {
+    fn default() -> Self {
+        K8sConfig {
+            namespace: "elis".into(),
+            image: "elis/serving:latest".into(),
+            workers: 4,
+            scheduler_policy: "isrtf".into(),
+            gpu_per_worker: 1,
+            model: "lam13".into(),
+        }
+    }
+}
+
+/// Frontend Deployment + Service.
+pub fn frontend_manifest(cfg: &K8sConfig) -> String {
+    format!(
+        r#"apiVersion: apps/v1
+kind: Deployment
+metadata:
+  name: elis-frontend
+  namespace: {ns}
+  labels: {{ app: elis, tier: frontend }}
+spec:
+  replicas: 1
+  selector:
+    matchLabels: {{ app: elis, tier: frontend }}
+  template:
+    metadata:
+      labels: {{ app: elis, tier: frontend }}
+    spec:
+      containers:
+        - name: frontend
+          image: {image}
+          command: ["elis", "serve"]
+          args: ["--scheduler", "{policy}", "--workers", "{workers}",
+                 "--model", "{model}"]
+          env:
+            - name: ELIS_BACKEND_SERVICE
+              value: elis-backend-headless.{ns}.svc.cluster.local
+          ports:
+            - containerPort: 8080
+---
+apiVersion: v1
+kind: Service
+metadata:
+  name: elis-frontend
+  namespace: {ns}
+spec:
+  selector: {{ app: elis, tier: frontend }}
+  ports:
+    - port: 80
+      targetPort: 8080
+"#,
+        ns = cfg.namespace,
+        image = cfg.image,
+        policy = cfg.scheduler_policy,
+        workers = cfg.workers,
+        model = cfg.model,
+    )
+}
+
+/// Backend StatefulSet + headless Service (stable per-pod identity — the
+/// frontend addresses `elis-backend-{{i}}` directly, as in the paper).
+pub fn backend_manifest(cfg: &K8sConfig) -> String {
+    format!(
+        r#"apiVersion: apps/v1
+kind: StatefulSet
+metadata:
+  name: elis-backend
+  namespace: {ns}
+  labels: {{ app: elis, tier: backend }}
+spec:
+  serviceName: elis-backend-headless
+  replicas: {workers}
+  selector:
+    matchLabels: {{ app: elis, tier: backend }}
+  template:
+    metadata:
+      labels: {{ app: elis, tier: backend }}
+    spec:
+      containers:
+        - name: worker
+          image: {image}
+          command: ["elis", "worker"]
+          args: ["--model", "{model}", "--window", "50"]
+          resources:
+            limits:
+              nvidia.com/gpu: {gpus}
+          ports:
+            - containerPort: 9090
+---
+apiVersion: v1
+kind: Service
+metadata:
+  name: elis-backend-headless
+  namespace: {ns}
+spec:
+  clusterIP: None
+  selector: {{ app: elis, tier: backend }}
+  ports:
+    - port: 9090
+"#,
+        ns = cfg.namespace,
+        image = cfg.image,
+        workers = cfg.workers,
+        model = cfg.model,
+        gpus = cfg.gpu_per_worker,
+    )
+}
+
+pub fn all_manifests(cfg: &K8sConfig) -> String {
+    format!(
+        "# ELIS Kubernetes deployment (paper §5)\n# namespace: {}\n---\n{}---\n{}",
+        cfg.namespace,
+        frontend_manifest(cfg),
+        backend_manifest(cfg)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifests_contain_key_fields() {
+        let cfg = K8sConfig { workers: 10, ..Default::default() };
+        let y = all_manifests(&cfg);
+        assert!(y.contains("kind: StatefulSet"));
+        assert!(y.contains("replicas: 10"));
+        assert!(y.contains("kind: Deployment"));
+        assert!(y.contains("clusterIP: None"), "headless service required");
+        assert!(y.contains("elis-backend-headless"));
+        assert!(y.contains("--scheduler"));
+    }
+
+    #[test]
+    fn worker_count_flows_through() {
+        let cfg = K8sConfig { workers: 50, ..Default::default() };
+        assert!(backend_manifest(&cfg).contains("replicas: 50"));
+    }
+}

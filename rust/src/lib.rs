@@ -1,0 +1,26 @@
+//! # ELIS — Efficient LLM Iterative Scheduling (paper reproduction)
+//!
+//! A three-layer serving stack reproducing Choi et al., "ELIS: Efficient
+//! LLM Iterative Scheduling System with Response Length Predictor":
+//!
+//! * **L3 (this crate)** — the paper's contribution: the ISRTF frontend
+//!   scheduler ([`coordinator`]), response-length predictors
+//!   ([`predictor`]), load balancing, batching, preemption policy, and a
+//!   multi-worker serving loop in virtual or wall clock.
+//! * **L2 (python/compile, build-time)** — the served TinyGPT model and the
+//!   BGE-substitute predictor, AOT-lowered to HLO text by `aot.py`.
+//! * **L1 (Pallas)** — the attention kernels inside those HLOs
+//!   (interpret=True on CPU).
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts via PJRT and [`engine`]/[`predictor`] execute them from rust.
+pub mod coordinator;
+pub mod engine;
+pub mod k8s;
+pub mod metrics;
+pub mod predictor;
+pub mod runtime;
+pub mod stats;
+pub mod testing;
+pub mod util;
+pub mod workload;

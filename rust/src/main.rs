@@ -1,0 +1,344 @@
+//! `elis` — CLI for the ELIS serving system reproduction.
+//!
+//! Subcommands:
+//!   info             inspect artifacts and loaded models
+//!   serve            serve a generated trace on the REAL PJRT engine (wall clock)
+//!   simulate         run a scheduling experiment on the calibrated sim engine
+//!   trace-fit        reproduce the Fig 4 inter-arrival analysis
+//!   preempt-profile  reproduce the Table 6 preemption profiling
+//!   k8s-manifests    emit the paper's Kubernetes deployment YAML
+//!
+//! Examples:
+//!   elis simulate --model lam13 --scheduler isrtf --rps-mult 5 --n 200
+//!   elis serve --n 12 --rps 0.5 --scheduler isrtf --workers 2
+//!   elis trace-fit --n 200000
+
+use anyhow::{anyhow, bail, Result};
+
+use elis::coordinator::{
+    run_serving, ClockMode, LbStrategy, Policy, PreemptionPolicy, Scheduler,
+    ServeConfig,
+};
+use elis::engine::profiles::{avg_request_rate, ModelProfile};
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::pjrt_engine::PjrtEngine;
+use elis::engine::Engine;
+use elis::k8s;
+use elis::predictor::heuristic::HeuristicPredictor;
+use elis::predictor::hlo::HloPredictor;
+use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::surrogate::SurrogatePredictor;
+use elis::predictor::LengthPredictor;
+use elis::runtime::{default_artifacts_dir, Manifest, Runtime, WeightStore};
+use elis::util::cli::Args;
+use elis::workload::tracefit::analyse;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("trace-fit") => cmd_trace_fit(&args),
+        Some("preempt-profile") => cmd_preempt_profile(&args),
+        Some("gen-trace") => cmd_gen_trace(&args),
+        Some("k8s-manifests") => cmd_k8s(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+elis — ELIS serving system (ISRTF scheduler + response length predictor)
+
+USAGE: elis <subcommand> [--flags]
+
+  info              artifact + model summary
+  serve             real PJRT serving (wall clock): --n --rps --scheduler
+                    --workers --predictor(hlo|heuristic|oracle)
+  simulate          calibrated simulation: --model --scheduler --rps-mult
+                    --batch --workers --n --shuffles --predictor
+  trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
+  preempt-profile   Table 6 reproduction: --model(all|abbrev)
+  gen-trace         standalone request generator: --n --rps --out file
+                    (--process gamma|poisson|uniform); replay with
+                    serve/simulate --trace file
+  k8s-manifests     --workers --policy --image
+";
+
+/// Build a scheduler with the right predictor wiring for a policy.
+pub fn scheduler_for(policy: Policy, predictor_kind: &str,
+                     artifacts: Option<(&Manifest, &WeightStore)>)
+                     -> Result<Scheduler> {
+    let predictor: Box<dyn LengthPredictor> = match (policy, predictor_kind) {
+        (Policy::Fcfs | Policy::Mlfq, _) => Box::new(OraclePredictor),
+        (Policy::Sjf, _) => Box::new(FrozenOracle),
+        (Policy::Srpt, _) => Box::new(OraclePredictor),
+        (Policy::Isrtf, "hlo") => {
+            let (m, store) = artifacts
+                .ok_or_else(|| anyhow!("hlo predictor needs artifacts"))?;
+            let rt = Runtime::cpu()?;
+            Box::new(HloPredictor::load(rt, m, store, None)?)
+        }
+        (Policy::Isrtf, "heuristic") => Box::new(HeuristicPredictor::new()),
+        (Policy::Isrtf, "surrogate") => Box::new(SurrogatePredictor::calibrated(7)),
+        (Policy::Isrtf, "oracle") => Box::new(OraclePredictor),
+        (p, k) => bail!("unsupported predictor '{k}' for policy {:?}", p),
+    };
+    Ok(Scheduler::new(policy, predictor))
+}
+
+fn cmd_info(_args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    println!("artifacts: {}", dir.display());
+    let manifest = Manifest::load(&dir)?;
+    println!("window_size: {}", manifest.window_size);
+    println!("batch_sizes: {:?}", manifest.batch_sizes);
+    println!(
+        "served model: TinyGPT vocab={} d={} L={} H={} S={} ({} params)",
+        manifest.model.vocab, manifest.model.d_model, manifest.model.n_layers,
+        manifest.model.n_heads, manifest.model.max_seq, manifest.model.n_params
+    );
+    println!("executables:");
+    for (name, e) in &manifest.executables {
+        println!("  {name:<22} {} in -> {} out (weights: {})",
+                 e.inputs.len(), e.outputs.len(), e.weights_group);
+    }
+    let corpus = Corpus::load(&dir)?;
+    println!("corpus: {} prompts, mean output len {:.1} tokens",
+             corpus.len(), corpus.mean_total_len());
+    println!("profiles (paper Table 4):");
+    for m in &manifest.served_models {
+        let p = ModelProfile::from_meta(m);
+        println!("  {:<8} {:>5.1}B  avg latency {:>8.1} ms  tpot {:>6.2} ms",
+                 p.abbrev, p.params_b, p.avg_latency_ms, p.tpot_ms);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let store = WeightStore::load(&manifest)?;
+    let corpus = Corpus::load(&dir)?;
+
+    let n = args.usize("n", 12);
+    let rps = args.f64("rps", 0.5);
+    let workers = args.usize("workers", 1);
+    let policy = Policy::parse(&args.str("scheduler", "isrtf"))
+        .ok_or_else(|| anyhow!("bad --scheduler"))?;
+    let predictor_kind = args.str("predictor", "hlo");
+    let seed = args.u64("seed", 42);
+
+    let trace = match args.opt_str("trace") {
+        Some(path) => elis::workload::trace_io::load(std::path::Path::new(path))?,
+        None => RequestGenerator::fabrix(rps, seed).trace(&corpus, n),
+    };
+    let n = trace.len();
+    println!("serving {n} requests at {rps} rps over {workers} worker(s), \
+              policy {}", policy.name());
+
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut engines: Vec<Box<dyn Engine>> = Vec::new();
+    for _ in 0..workers {
+        engines.push(Box::new(PjrtEngine::load(
+            rt.clone(), &manifest, &store, 1 << 20)?));
+    }
+    println!("engine: {}", engines[0].describe());
+
+    let mut sched = scheduler_for(policy, &predictor_kind,
+                                  Some((&manifest, &store)))?;
+    let cfg = ServeConfig {
+        workers,
+        max_batch: args.usize("batch", 4),
+        lb: LbStrategy::MinLoad,
+        preemption: PreemptionPolicy::default(),
+        overhead_ms_per_iter: 0.0,
+        clock: ClockMode::Wall,
+        seed,
+        max_iterations: 1_000_000,
+    };
+    let report = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+    report.print_summary();
+    println!("avg TTFT {:.2}s  TPOT {:.1}ms  tokens/s {:.1}",
+             report.avg_ttft_s(), report.avg_tpot_s() * 1e3,
+             report.tokens_per_s());
+    if let Some(path) = args.opt_str("json-out") {
+        std::fs::write(path, report.to_json().to_string())?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let corpus = Corpus::load(&dir)?;
+    let profiles = ModelProfile::all(&manifest.served_models);
+    let model = args.str("model", "lam13");
+    let profile = ModelProfile::find(&profiles, &model)
+        .ok_or_else(|| anyhow!("unknown model {model}"))?
+        .clone();
+
+    let policy = Policy::parse(&args.str("scheduler", "isrtf"))
+        .ok_or_else(|| anyhow!("bad --scheduler"))?;
+    let predictor_kind = args.str("predictor", "hlo");
+    let batch = args.usize("batch", 4);
+    let workers = args.usize("workers", 1);
+    let n = args.usize("n", 200);
+    let shuffles = args.usize("shuffles", 1);
+    let rps_mult = args.f64("rps-mult", 1.0);
+    let seed = args.u64("seed", 42);
+    let rps = avg_request_rate(&profile, batch) * rps_mult * workers as f64;
+
+    println!(
+        "simulate: {} on {} worker(s), batch {}, {}x avg rate = {:.3} rps, \
+         {} prompts × {} shuffles, policy {} ({})",
+        profile.abbrev, workers, batch, rps_mult, rps, n, shuffles,
+        policy.name(), predictor_kind
+    );
+
+    let store = WeightStore::load(&manifest)?;
+    let mut jcts = Vec::new();
+    for s in 0..shuffles {
+        let mut gen = RequestGenerator::fabrix(rps, seed + s as u64);
+        let trace = gen.trace(&corpus, n);
+        let mut engines: Vec<Box<dyn Engine>> = (0..workers)
+            .map(|_| {
+                Box::new(SimEngine::with_profile_budget(
+                    profile.clone(), manifest.window_size, batch))
+                    as Box<dyn Engine>
+            })
+            .collect();
+        let mut sched = scheduler_for(policy, &predictor_kind,
+                                      Some((&manifest, &store)))?;
+        let cfg = ServeConfig {
+            workers,
+            max_batch: batch,
+            clock: ClockMode::Virtual,
+            seed: seed + s as u64,
+            max_iterations: 10_000_000,
+            ..Default::default()
+        };
+        let report = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+        report.print_summary();
+        jcts.push(report.avg_jct_s());
+    }
+    let avg = jcts.iter().sum::<f64>() / jcts.len() as f64;
+    println!("=> avg JCT over {shuffles} shuffles: {avg:.2}s");
+    Ok(())
+}
+
+fn cmd_trace_fit(args: &Args) -> Result<()> {
+    let n = args.usize("n", 200_000);
+    let process = args.str("process", "gamma");
+    let mut gen = match process.as_str() {
+        "gamma" => RequestGenerator::fabrix(1.0, args.u64("seed", 7)),
+        "poisson" => RequestGenerator::new(
+            elis::workload::ArrivalProcess::Poisson, 0.73, 1.0,
+            args.u64("seed", 7)),
+        other => bail!("unknown process {other}"),
+    };
+    let intervals = gen.intervals(n);
+    let a = analyse(&intervals, 40);
+    println!("n={} mean={:.1}ms cv={:.3}", a.n, a.mean, a.cv);
+    if let Some(g) = a.gamma {
+        println!("gamma fit: shape={:.3} scale={:.2} loglik={:.1}",
+                 g.shape, g.scale, g.loglik);
+    }
+    if let Some(e) = a.expo {
+        println!("poisson(exp) fit: mean={:.2} loglik={:.1}", e.mean, e.loglik);
+    }
+    println!("winner: {}", a.winner());
+    Ok(())
+}
+
+/// Sweep batch size by 10 up to 250 (paper Appendix A) until a saturated
+/// pool preempts.
+pub fn find_preempt_batch(profile: &ModelProfile, window: usize) -> Option<usize> {
+    let budget = profile.kv_budget_bytes(profile.mem_limit_frac);
+    for batch in (10..=250).step_by(10) {
+        let mut engine = SimEngine::new(profile.clone(), window, batch, budget);
+        // saturate: give every slot a long job (paper: 10K prompts sampled
+        // from LMSYS at an effectively infinite request rate)
+        for id in 0..batch as u64 {
+            engine
+                .admit(elis::engine::SeqSpec {
+                    id,
+                    prompt: vec![7; 64],
+                    target_total: 400, topic: 0
+                })
+                .ok()?;
+        }
+        let ids: Vec<u64> = (0..batch as u64).collect();
+        engine.set_priority_order(&ids);
+        // run windows until everyone is resident and growing
+        for _ in 0..8 {
+            if engine.run_window(&ids).is_err() {
+                return Some(batch);
+            }
+            if engine.total_preemptions > 0 {
+                return Some(batch);
+            }
+        }
+    }
+    None
+}
+
+fn cmd_preempt_profile(args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let profiles = ModelProfile::all(&manifest.served_models);
+    let which = args.str("model", "all");
+    println!("{:<12} {:>10} {:>12} {:>10}", "model", "batch", "mem-limit", "paper");
+    for p in &profiles {
+        if which != "all" && p.abbrev != which {
+            continue;
+        }
+        let b = find_preempt_batch(p, manifest.window_size);
+        println!("{:<12} {:>10} {:>11.0}% {:>10}",
+                 p.abbrev, b.map(|x| x.to_string()).unwrap_or("-".into()),
+                 p.mem_limit_frac * 100.0, p.preempt_batch_ref);
+    }
+    Ok(())
+}
+
+fn cmd_gen_trace(args: &Args) -> Result<()> {
+    let dir = default_artifacts_dir();
+    let corpus = Corpus::load(&dir)?;
+    let n = args.usize("n", 200);
+    let rps = args.f64("rps", 1.0);
+    let seed = args.u64("seed", 42);
+    let out = args.str("out", "trace.json");
+    let process = match args.str("process", "gamma").as_str() {
+        "gamma" => elis::workload::ArrivalProcess::Gamma,
+        "poisson" => elis::workload::ArrivalProcess::Poisson,
+        "uniform" => elis::workload::ArrivalProcess::Uniform,
+        other => bail!("unknown process {other}"),
+    };
+    let mut gen = RequestGenerator::new(process, 0.73, rps, seed);
+    let trace = gen.trace(&corpus, n);
+    elis::workload::trace_io::save(&trace, std::path::Path::new(&out))?;
+    println!("wrote {n} requests ({:?}, {rps} rps) to {out}", process);
+    Ok(())
+}
+
+fn cmd_k8s(args: &Args) -> Result<()> {
+    let cfg = k8s::K8sConfig {
+        workers: args.usize("workers", 4),
+        scheduler_policy: args.str("policy", "isrtf"),
+        image: args.str("image", "elis/serving:latest"),
+        model: args.str("model", "lam13"),
+        ..Default::default()
+    };
+    println!("{}", k8s::all_manifests(&cfg));
+    Ok(())
+}

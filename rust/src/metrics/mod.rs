@@ -1,0 +1,226 @@
+//! Serving metrics: per-job records and run-level aggregates
+//! (JCT, queueing delay, TTFT, throughput — the quantities of
+//! paper §6.2–6.4).
+
+use crate::coordinator::job::Job;
+use crate::stats::summary::{Percentiles, Summary};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct JobRecord {
+    pub id: u64,
+    pub node: usize,
+    pub arrival_ms: f64,
+    pub finish_ms: f64,
+    pub jct_ms: f64,
+    pub queue_delay_ms: f64,
+    pub ttft_ms: f64,
+    pub service_ms: f64,
+    pub tokens: usize,
+    pub windows: usize,
+    pub preemptions: usize,
+}
+
+impl JobRecord {
+    pub fn from_job(j: &Job) -> Option<JobRecord> {
+        Some(JobRecord {
+            id: j.id,
+            node: j.node?,
+            arrival_ms: j.arrival_ms,
+            finish_ms: j.finish_ms?,
+            jct_ms: j.jct_ms()?,
+            queue_delay_ms: j.queue_delay_ms()?,
+            ttft_ms: j.ttft_ms().unwrap_or(0.0),
+            service_ms: j.service_ms,
+            tokens: j.generated,
+            windows: j.windows,
+            preemptions: j.preemptions,
+        })
+    }
+}
+
+/// Aggregated result of one serving run (one bar of Fig 5, one cell of
+/// Table 5, one point of Fig 7).
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub scheduler: String,
+    pub records: Vec<JobRecord>,
+    pub makespan_ms: f64,
+    pub total_preemptions: u64,
+    /// measured scheduling overhead per iteration (priority refresh +
+    /// batching + predictor), wall time
+    pub sched_overhead_ms_avg: f64,
+    pub sched_iterations: u64,
+    pub predictor_name: String,
+}
+
+impl ServeReport {
+    pub fn n(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn avg_jct_s(&self) -> f64 {
+        self.mean(|r| r.jct_ms) / 1000.0
+    }
+
+    pub fn min_jct_s(&self) -> f64 {
+        self.records.iter().map(|r| r.jct_ms).fold(f64::INFINITY, f64::min) / 1000.0
+    }
+
+    pub fn max_jct_s(&self) -> f64 {
+        self.records.iter().map(|r| r.jct_ms).fold(0.0, f64::max) / 1000.0
+    }
+
+    pub fn avg_queue_delay_s(&self) -> f64 {
+        self.mean(|r| r.queue_delay_ms) / 1000.0
+    }
+
+    pub fn avg_ttft_s(&self) -> f64 {
+        self.mean(|r| r.ttft_ms) / 1000.0
+    }
+
+    /// Average time per output token across jobs (s/token).
+    pub fn avg_tpot_s(&self) -> f64 {
+        let s: f64 = self
+            .records
+            .iter()
+            .filter(|r| r.tokens > 1)
+            .map(|r| (r.jct_ms - r.ttft_ms) / 1000.0 / (r.tokens - 1) as f64)
+            .sum();
+        let n = self.records.iter().filter(|r| r.tokens > 1).count();
+        if n == 0 { 0.0 } else { s / n as f64 }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.n() as f64 / (self.makespan_ms / 1000.0)
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.tokens as f64).sum::<f64>()
+            / (self.makespan_ms / 1000.0)
+    }
+
+    pub fn p99_jct_s(&self) -> f64 {
+        let mut p = Percentiles::new();
+        for r in &self.records {
+            p.add(r.jct_ms);
+        }
+        p.p99() / 1000.0
+    }
+
+    pub fn jct_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for r in &self.records {
+            s.add(r.jct_ms / 1000.0);
+        }
+        s
+    }
+
+    /// Machine-readable dump for EXPERIMENTS.md / external plotting.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("predictor", Json::Str(self.predictor_name.clone())),
+            ("n", Json::Num(self.n() as f64)),
+            ("avg_jct_s", Json::Num(self.avg_jct_s())),
+            ("min_jct_s", Json::Num(self.min_jct_s())),
+            ("max_jct_s", Json::Num(self.max_jct_s())),
+            ("p99_jct_s", Json::Num(self.p99_jct_s())),
+            ("avg_queue_delay_s", Json::Num(self.avg_queue_delay_s())),
+            ("avg_ttft_s", Json::Num(self.avg_ttft_s())),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+            ("tokens_per_s", Json::Num(self.tokens_per_s())),
+            ("total_preemptions", Json::Num(self.total_preemptions as f64)),
+            ("sched_overhead_ms_avg", Json::Num(self.sched_overhead_ms_avg)),
+            ("sched_iterations", Json::Num(self.sched_iterations as f64)),
+            ("makespan_ms", Json::Num(self.makespan_ms)),
+        ])
+    }
+
+    fn mean<F: Fn(&JobRecord) -> f64>(&self, f: F) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        self.records.iter().map(|r| f(r)).sum::<f64>() / self.records.len() as f64
+    }
+
+    pub fn print_summary(&self) {
+        println!(
+            "[{}/{}] n={} avg_jct={:.2}s (min {:.2} max {:.2} p99 {:.2}) \
+             queue={:.2}s ttft={:.2}s thpt={:.2}rps preempt={} sched={:.2}ms/iter",
+            self.scheduler,
+            self.predictor_name,
+            self.n(),
+            self.avg_jct_s(),
+            self.min_jct_s(),
+            self.max_jct_s(),
+            self.p99_jct_s(),
+            self.avg_queue_delay_s(),
+            self.avg_ttft_s(),
+            self.throughput_rps(),
+            self.total_preemptions,
+            self.sched_overhead_ms_avg,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(id: u64, jct_ms: f64, qd_ms: f64, tokens: usize) -> JobRecord {
+        JobRecord {
+            id,
+            node: 0,
+            arrival_ms: 0.0,
+            finish_ms: jct_ms,
+            jct_ms,
+            queue_delay_ms: qd_ms,
+            ttft_ms: 100.0,
+            service_ms: jct_ms - qd_ms,
+            tokens,
+            windows: 1,
+            preemptions: 0,
+        }
+    }
+
+    fn report(records: Vec<JobRecord>) -> ServeReport {
+        ServeReport {
+            scheduler: "TEST".into(),
+            makespan_ms: 10_000.0,
+            total_preemptions: 0,
+            sched_overhead_ms_avg: 0.0,
+            sched_iterations: 1,
+            predictor_name: "none".into(),
+            records,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report(vec![record(1, 2000.0, 500.0, 100),
+                            record(2, 4000.0, 1500.0, 200)]);
+        assert!((r.avg_jct_s() - 3.0).abs() < 1e-9);
+        assert!((r.min_jct_s() - 2.0).abs() < 1e-9);
+        assert!((r.max_jct_s() - 4.0).abs() < 1e-9);
+        assert!((r.avg_queue_delay_s() - 1.0).abs() < 1e-9);
+        assert!((r.throughput_rps() - 0.2).abs() < 1e-9);
+        assert!((r.tokens_per_s() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_job_requires_finish() {
+        let j = Job::new(1, vec![1], 10, 0, 0.0);
+        assert!(JobRecord::from_job(&j).is_none());
+        let mut j2 = Job::new(2, vec![1], 10, 0, 0.0);
+        j2.node = Some(0);
+        j2.finish_ms = Some(50.0);
+        assert!(JobRecord::from_job(&j2).is_some());
+    }
+}

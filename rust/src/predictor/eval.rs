@@ -1,0 +1,172 @@
+//! Predictor evaluation on the exported held-out step dataset
+//! (`artifacts/predictor_test.json`) — drives Table 2 and Fig 2b benches.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::stats::fit::{regression_metrics, RegressionMetrics};
+use crate::util::json::Json;
+
+use super::{LengthPredictor, PredictQuery};
+
+#[derive(Debug, Clone)]
+pub struct StepDataset {
+    /// combined inputs as python built them (cross-check reference)
+    pub tokens: Vec<Vec<i32>>,
+    pub prompt_len: Vec<usize>,
+    /// raw parts, the form the serving path sees
+    pub raw_prompt: Vec<Vec<i32>>,
+    pub suffix: Vec<Vec<i32>>,
+    pub gen_count: Vec<usize>,
+    pub step: Vec<usize>,
+    pub target: Vec<f64>,
+}
+
+impl StepDataset {
+    pub fn load(artifacts: &Path) -> Result<StepDataset> {
+        let path = artifacts.join("predictor_test.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text).context("parsing predictor_test.json")?;
+        let tokens = j
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing tokens"))?
+            .iter()
+            .map(|row| row.as_i32_vec().ok_or_else(|| anyhow!("bad token row")))
+            .collect::<Result<Vec<_>>>()?;
+        let get_usize = |k: &str| -> Result<Vec<usize>> {
+            j.get(k)
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let rows = |k: &str| -> Result<Vec<Vec<i32>>> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing {k}"))?
+                .iter()
+                .map(|row| row.as_i32_vec().ok_or_else(|| anyhow!("bad {k} row")))
+                .collect()
+        };
+        let ds = StepDataset {
+            tokens,
+            prompt_len: get_usize("prompt_len")?,
+            raw_prompt: rows("raw_prompt")?,
+            suffix: rows("suffix")?,
+            gen_count: get_usize("gen_count")?,
+            step: get_usize("step")?,
+            target: j
+                .get("target")
+                .and_then(Json::as_f64_vec)
+                .ok_or_else(|| anyhow!("missing target"))?,
+        };
+        let n = ds.target.len();
+        if ds.tokens.len() != n || ds.step.len() != n || ds.gen_count.len() != n
+            || ds.raw_prompt.len() != n || ds.suffix.len() != n {
+            anyhow::bail!("ragged predictor_test.json");
+        }
+        Ok(ds)
+    }
+
+    pub fn len(&self) -> usize {
+        self.target.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.target.is_empty()
+    }
+
+    fn queries(&self, idx: &[usize]) -> Vec<PredictQuery<'_>> {
+        idx.iter()
+            .map(|&i| PredictQuery {
+                job_id: i as u64,
+                prompt: &self.raw_prompt[i],
+                gen_suffix: &self.suffix[i],
+                generated: self.gen_count[i],
+                // targets are remaining lengths; total = remaining + generated
+                true_total: self.gen_count[i] + self.target[i] as usize,
+            })
+            .collect()
+    }
+
+    /// Cross-check: rust `build_input` must reproduce python's combined
+    /// tokens for every exported row.
+    pub fn verify_input_construction(&self, prompt_max: usize) -> Result<()> {
+        for i in 0..self.len() {
+            let (seq, len) = super::build_input(
+                &self.raw_prompt[i], &self.suffix[i], prompt_max);
+            if seq != self.tokens[i] || len != self.prompt_len[i] {
+                anyhow::bail!(
+                    "input construction mismatch at row {i}: rust len {len} \
+                     vs python {}", self.prompt_len[i]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Overall MAE / RMSE / R² (Table 2 row).
+    pub fn evaluate(&self, p: &mut dyn LengthPredictor, limit: usize)
+                    -> RegressionMetrics {
+        let n = self.len().min(limit);
+        let idx: Vec<usize> = (0..n).collect();
+        let preds = p.predict(&self.queries(&idx));
+        let truth: Vec<f64> = idx.iter().map(|&i| self.target[i]).collect();
+        regression_metrics(&preds, &truth)
+    }
+
+    /// Per-iteration-step MAE (Fig 2b series).
+    pub fn evaluate_by_step(&self, p: &mut dyn LengthPredictor, limit: usize,
+                            max_step: usize) -> Vec<(usize, RegressionMetrics)> {
+        let mut out = Vec::new();
+        for step in 0..=max_step {
+            let idx: Vec<usize> = (0..self.len())
+                .filter(|&i| self.step[i] == step)
+                .take(limit)
+                .collect();
+            if idx.len() < 10 {
+                continue;
+            }
+            let preds = p.predict(&self.queries(&idx));
+            let truth: Vec<f64> = idx.iter().map(|&i| self.target[i]).collect();
+            out.push((step, regression_metrics(&preds, &truth)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::oracle::OraclePredictor;
+
+    fn tiny() -> StepDataset {
+        StepDataset {
+            tokens: vec![vec![5, 6, 7, 0]; 40],
+            prompt_len: vec![3; 40],
+            raw_prompt: vec![vec![5, 6, 7]; 40],
+            suffix: vec![vec![]; 40],
+            gen_count: (0..40).map(|i| (i % 4) * 50).collect(),
+            step: (0..40).map(|i| i % 4).collect(),
+            target: (0..40).map(|i| 200.0 - ((i % 4) * 50) as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn oracle_scores_perfectly() {
+        let ds = tiny();
+        let m = ds.evaluate(&mut OraclePredictor, usize::MAX);
+        assert!(m.mae < 1e-9);
+        assert!((m.r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_step_grouping() {
+        let ds = tiny();
+        let per = ds.evaluate_by_step(&mut OraclePredictor, usize::MAX, 3);
+        assert_eq!(per.len(), 4);
+        for (_, m) in per {
+            assert_eq!(m.n, 10);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Online heuristic fallback predictor (no artifact required).
+//!
+//! remaining ≈ max(EWMA_total + slope × (prompt_len − mean_plen) − generated, 1)
+//!
+//! The totals EWMA and the prompt-length regression update from completion
+//! feedback (`observe`), so the fallback self-calibrates to the live
+//! workload — the "retraining based on log data" loop of the paper, in its
+//! cheapest form.
+
+use super::{LengthPredictor, PredictQuery};
+
+pub struct HeuristicPredictor {
+    ewma_total: f64,
+    ewma_plen: f64,
+    /// online covariance accumulators for the prompt-length slope
+    n: f64,
+    cov: f64,
+    var: f64,
+    alpha: f64,
+}
+
+impl Default for HeuristicPredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HeuristicPredictor {
+    pub fn new() -> HeuristicPredictor {
+        HeuristicPredictor {
+            ewma_total: 120.0, // corpus-scale prior
+            ewma_plen: 32.0,
+            n: 0.0,
+            cov: 0.0,
+            var: 0.0,
+            alpha: 0.05,
+        }
+    }
+
+    fn slope(&self) -> f64 {
+        if self.n < 8.0 || self.var <= 1e-9 {
+            0.0
+        } else {
+            (self.cov / self.var).clamp(-10.0, 10.0)
+        }
+    }
+}
+
+impl LengthPredictor for HeuristicPredictor {
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64> {
+        let slope = self.slope();
+        queries
+            .iter()
+            .map(|q| {
+                let total = self.ewma_total
+                    + slope * (q.prompt.len() as f64 - self.ewma_plen);
+                (total - q.generated as f64).max(1.0)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "heuristic"
+    }
+
+    fn observe(&mut self, prompt_len: usize, total_len: usize) {
+        let p = prompt_len as f64;
+        let t = total_len as f64;
+        self.ewma_total = (1.0 - self.alpha) * self.ewma_total + self.alpha * t;
+        self.ewma_plen = (1.0 - self.alpha) * self.ewma_plen + self.alpha * p;
+        self.n += 1.0;
+        let dp = p - self.ewma_plen;
+        let dt = t - self.ewma_total;
+        self.cov = (1.0 - self.alpha) * self.cov + self.alpha * dp * dt;
+        self.var = (1.0 - self.alpha) * self.var + self.alpha * dp * dp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::q;
+
+    #[test]
+    fn remaining_decreases_with_generated() {
+        let mut p = HeuristicPredictor::new();
+        let prompt = vec![5i32; 20];
+        let a = p.predict(&[q(1, &prompt, 0, 0)])[0];
+        let b = p.predict(&[q(1, &prompt, 100, 0)])[0];
+        assert!(b < a);
+        assert!(b >= 1.0);
+    }
+
+    #[test]
+    fn observe_recalibrates_mean() {
+        let mut p = HeuristicPredictor::new();
+        for _ in 0..200 {
+            p.observe(30, 300);
+        }
+        let prompt = vec![5i32; 30];
+        let pred = p.predict(&[q(1, &prompt, 0, 0)])[0];
+        assert!(pred > 250.0, "pred {pred} should approach 300");
+    }
+
+    #[test]
+    fn never_negative() {
+        let mut p = HeuristicPredictor::new();
+        let prompt = vec![5i32; 4];
+        let pred = p.predict(&[q(1, &prompt, 100_000, 0)])[0];
+        assert!(pred >= 1.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! PJRT-backed predictor: the trained BGE-substitute artifact.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{HostTensor, LoadedModel, Manifest, Runtime, WeightStore};
+
+use super::{LengthPredictor, PredictQuery};
+
+pub struct HloPredictor {
+    model: LoadedModel,
+    batch: usize,
+    prompt_max: usize,
+    pub calls: u64,
+}
+
+impl HloPredictor {
+    /// `weights_group`: `predictor_trained` (default) or `predictor_init`
+    /// (the Table 2 "pre-trained" baseline).
+    pub fn load(rt: Arc<Runtime>, manifest: &Manifest, store: &WeightStore,
+                weights_group: Option<&str>) -> Result<HloPredictor> {
+        let name = format!("predictor.b{}", manifest.predictor_batch);
+        let model = LoadedModel::load(rt, manifest, store, &name, weights_group)?;
+        Ok(HloPredictor {
+            model,
+            batch: manifest.predictor_batch,
+            prompt_max: manifest.predictor_prompt_max,
+            calls: 0,
+        })
+    }
+
+    /// Raw batched forward: returns (pred_remaining, pooled embeddings).
+    pub fn forward(&mut self, queries: &[PredictQuery<'_>])
+                   -> Result<(Vec<f64>, Vec<Vec<f32>>)> {
+        let mut preds = Vec::with_capacity(queries.len());
+        let mut embeds = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.batch) {
+            let b = self.batch;
+            let mut tokens = vec![0i32; b * self.prompt_max];
+            let mut plen = vec![1i32; b];
+            let mut gen = vec![0f32; b];
+            for (i, qr) in chunk.iter().enumerate() {
+                // combined input: prompt + SEP + generated suffix (§3.3)
+                let (seq, n) = super::build_input(
+                    qr.prompt, qr.gen_suffix, self.prompt_max);
+                tokens[i * self.prompt_max..(i + 1) * self.prompt_max]
+                    .copy_from_slice(&seq);
+                plen[i] = n.max(1) as i32;
+                gen[i] = qr.generated as f32;
+            }
+            let out = self.model.execute(&[
+                HostTensor::I32(tokens),
+                HostTensor::I32(plen),
+                HostTensor::F32(gen),
+            ])?;
+            self.calls += 1;
+            let pred = out[0].as_f32()?;
+            let pooled = out[1].as_f32()?;
+            let d = pooled.len() / b;
+            for i in 0..chunk.len() {
+                preds.push(pred[i] as f64);
+                embeds.push(pooled[i * d..(i + 1) * d].to_vec());
+            }
+        }
+        Ok((preds, embeds))
+    }
+
+    /// Pooled embeddings only (Fig 1 cluster analysis).
+    pub fn embed(&mut self, prompts: &[Vec<i32>]) -> Result<Vec<Vec<f32>>> {
+        let queries: Vec<PredictQuery<'_>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| PredictQuery {
+                job_id: i as u64,
+                prompt: p.as_slice(),
+                gen_suffix: &[],
+                generated: 0,
+                true_total: 0,
+            })
+            .collect();
+        Ok(self.forward(&queries)?.1)
+    }
+
+    pub fn avg_call_ms(&self) -> f64 {
+        self.model.avg_exec_ms()
+    }
+}
+
+impl LengthPredictor for HloPredictor {
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64> {
+        match self.forward(queries) {
+            // clamp: a remaining-length prediction below half a window is
+            // still "almost done" — keep it positive so SRTF ordering works
+            Ok((preds, _)) => preds.into_iter().map(|p| p.max(1.0)).collect(),
+            Err(e) => {
+                // fallback (paper motivation: never let the predictor take
+                // the serving loop down)
+                eprintln!("[predictor] HLO failure, falling back to flat: {e:#}");
+                vec![100.0; queries.len()]
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "isrtf-hlo"
+    }
+}

@@ -1,0 +1,101 @@
+//! Response-length predictors — the priority source for ISRTF (paper §4.2).
+//!
+//! The scheduler is predictor-agnostic (paper: "modular architecture ...
+//! model-agnostic"); four implementations share the [`LengthPredictor`]
+//! trait:
+//!
+//! * [`hlo::HloPredictor`] — the real thing: the AOT-compiled BGE-substitute
+//!   encoder + 8 FC layers, executed via PJRT.
+//! * [`heuristic::HeuristicPredictor`] — fallback when no artifact is
+//!   available: online EWMA of observed lengths + prompt-length regression.
+//! * [`surrogate::SurrogatePredictor`] — statistical twin of the HLO
+//!   predictor (noise calibrated to its measured error, shrinking per
+//!   iteration like Fig 2b); used by large-scale simulations where running
+//!   the encoder per refresh would dominate the virtual-time experiment.
+//! * [`oracle::OraclePredictor`] — perfect knowledge; turns ISRTF into the
+//!   SRPT upper bound and SJF when frozen at step 0.
+
+pub mod eval;
+pub mod heuristic;
+pub mod hlo;
+pub mod oracle;
+pub mod surrogate;
+
+/// One prediction query (a job at a scheduling-iteration boundary).
+#[derive(Debug, Clone)]
+pub struct PredictQuery<'a> {
+    pub job_id: u64,
+    pub prompt: &'a [i32],
+    /// tail of the generated response (the paper feeds partial output back
+    /// into the predictor each iteration, §3.3)
+    pub gen_suffix: &'a [i32],
+    /// tokens generated so far (k × window)
+    pub generated: usize,
+    /// ground-truth total response length — ONLY oracle/surrogate read this
+    pub true_total: usize,
+}
+
+// Predictor input layout — MUST mirror python/compile/data.py exactly:
+// prompt[:PROMPT_KEEP] + SEP + suffix[-SUFFIX_MAX:], zero-padded.
+pub const SEP_ID: i32 = 3;
+pub const PROMPT_KEEP: usize = 47;
+pub const SUFFIX_MAX: usize = 16;
+
+/// Build the combined predictor input (returns padded tokens + valid len).
+pub fn build_input(prompt: &[i32], suffix: &[i32], prompt_max: usize)
+                   -> (Vec<i32>, usize) {
+    let mut seq: Vec<i32> = Vec::with_capacity(prompt_max);
+    seq.extend_from_slice(&prompt[..prompt.len().min(PROMPT_KEEP)]);
+    seq.push(SEP_ID);
+    let tail_start = suffix.len().saturating_sub(SUFFIX_MAX);
+    seq.extend_from_slice(&suffix[tail_start..]);
+    seq.truncate(prompt_max);
+    let len = seq.len();
+    seq.resize(prompt_max, 0);
+    (seq, len)
+}
+
+/// Predicts the number of response tokens still to come.
+pub trait LengthPredictor {
+    /// Batched prediction of *remaining* tokens for each query.
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64>;
+
+    fn name(&self) -> &'static str;
+
+    /// Observed completion feedback (jobs' true lengths as they finish) —
+    /// lets online predictors re-calibrate, mirroring the paper's
+    /// retrain-from-logs loop.
+    fn observe(&mut self, _prompt_len: usize, _total_len: usize) {}
+}
+
+#[cfg(test)]
+pub(crate) fn q(job_id: u64, prompt: &[i32], generated: usize,
+                true_total: usize) -> PredictQuery<'_> {
+    PredictQuery { job_id, prompt, gen_suffix: &[], generated, true_total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_input_layout() {
+        let prompt: Vec<i32> = (100..160).collect(); // 60 tokens
+        let suffix: Vec<i32> = (2000..2030).collect(); // 30 tokens
+        let (seq, len) = build_input(&prompt, &suffix, 64);
+        assert_eq!(seq.len(), 64);
+        assert_eq!(len, 64); // 47 + 1 + 16
+        assert_eq!(&seq[..47], &prompt[..47]);
+        assert_eq!(seq[47], SEP_ID);
+        assert_eq!(&seq[48..64], &suffix[14..30]); // last 16
+    }
+
+    #[test]
+    fn build_input_short_prompt_no_suffix() {
+        let prompt = [5, 6, 7];
+        let (seq, len) = build_input(&prompt, &[], 64);
+        assert_eq!(len, 4);
+        assert_eq!(&seq[..4], &[5, 6, 7, SEP_ID]);
+        assert!(seq[4..].iter().all(|&t| t == 0));
+    }
+}

@@ -1,0 +1,60 @@
+//! Oracle predictors — the paper's SJF upper bound.
+//!
+//! `OraclePredictor` returns the exact remaining length (SRPT when
+//! refreshed per iteration).  `FrozenOracle` returns the exact *total*
+//! regardless of progress, which is precisely the paper's SJF baseline:
+//! priority fixed at arrival from profiled latency.
+
+use super::{LengthPredictor, PredictQuery};
+
+#[derive(Default)]
+pub struct OraclePredictor;
+
+impl LengthPredictor for OraclePredictor {
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64> {
+        queries
+            .iter()
+            .map(|q| (q.true_total.saturating_sub(q.generated)).max(1) as f64)
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle-srpt"
+    }
+}
+
+#[derive(Default)]
+pub struct FrozenOracle;
+
+impl LengthPredictor for FrozenOracle {
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64> {
+        queries.iter().map(|q| q.true_total.max(1) as f64).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle-sjf"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::q;
+
+    #[test]
+    fn oracle_tracks_progress() {
+        let mut o = OraclePredictor;
+        let prompt = vec![1i32; 4];
+        assert_eq!(o.predict(&[q(1, &prompt, 0, 120)])[0], 120.0);
+        assert_eq!(o.predict(&[q(1, &prompt, 50, 120)])[0], 70.0);
+        assert_eq!(o.predict(&[q(1, &prompt, 200, 120)])[0], 1.0);
+    }
+
+    #[test]
+    fn frozen_oracle_ignores_progress() {
+        let mut o = FrozenOracle;
+        let prompt = vec![1i32; 4];
+        assert_eq!(o.predict(&[q(1, &prompt, 0, 120)])[0], 120.0);
+        assert_eq!(o.predict(&[q(1, &prompt, 100, 120)])[0], 120.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT runtime: load HLO-text artifacts, bind weights, execute.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT) behind a small API
+//! the engine layer uses on the request path.  One `Runtime` per process;
+//! one `LoadedModel` per (executable, weight-group) pair.  Weights are
+//! uploaded to the device **once** at load time (`PjRtBuffer`s) and reused
+//! by every `execute_b` call, so the request path only transfers the small
+//! dynamic inputs (tokens / KV handles).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{DType, ExecutableSpec, Manifest, TensorSpec};
+use super::weights::WeightStore;
+
+/// Host-side tensor passed into / received from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(_) => DType::F32,
+            HostTensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            DType::F32 => HostTensor::F32(vec![0.0; spec.n_elems()]),
+            DType::I32 => HostTensor::I32(vec![0; spec.n_elems()]),
+        }
+    }
+}
+
+/// Process-wide PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime { client }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    fn upload(&self, t: &HostTensor, shape: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(match t {
+            HostTensor::F32(v) => {
+                self.client.buffer_from_host_buffer::<f32>(v, shape, None)?
+            }
+            HostTensor::I32(v) => {
+                self.client.buffer_from_host_buffer::<i32>(v, shape, None)?
+            }
+        })
+    }
+}
+
+/// A compiled executable with its weights resident on the device.
+pub struct LoadedModel {
+    pub spec: ExecutableSpec,
+    rt: Arc<Runtime>,
+    exe: xla::PjRtLoadedExecutable,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    /// cumulative execute() wall time, for profiling
+    pub exec_calls: std::cell::Cell<u64>,
+    pub exec_nanos: std::cell::Cell<u128>,
+}
+
+impl LoadedModel {
+    /// Load `exe_name` from the manifest, compiling the HLO and uploading
+    /// the given weight group (defaults to the manifest's group).
+    pub fn load(
+        rt: Arc<Runtime>,
+        manifest: &Manifest,
+        store: &WeightStore,
+        exe_name: &str,
+        weights_group: Option<&str>,
+    ) -> Result<LoadedModel> {
+        let spec = manifest.executable(exe_name)?.clone();
+        let exe = rt.load_hlo(&manifest.hlo_path(&spec))?;
+        let group = weights_group.unwrap_or(&spec.weights_group);
+        let tensors = store.group(group)?;
+        let mut weight_buffers = Vec::with_capacity(tensors.len());
+        for (spec_w, tensor) in tensors {
+            weight_buffers.push(rt.upload(tensor, &spec_w.shape)?);
+        }
+        Ok(LoadedModel {
+            spec,
+            rt,
+            exe,
+            weight_buffers,
+            exec_calls: std::cell::Cell::new(0),
+            exec_nanos: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Execute with dynamic inputs (device-resident weights prepended).
+    /// Inputs must match `spec.inputs` order/shape/dtype.
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let t0 = Instant::now();
+        let mut input_buffers = Vec::with_capacity(inputs.len());
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if t.dtype() != spec.dtype || t.len() != spec.n_elems() {
+                bail!(
+                    "{}: input {} mismatch (got {} elems {:?}, want {} {:?})",
+                    self.spec.name,
+                    spec.name,
+                    t.len(),
+                    t.dtype(),
+                    spec.n_elems(),
+                    spec.dtype
+                );
+            }
+            input_buffers.push(self.rt.upload(t, &spec.shape)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(self.weight_buffers.len() + input_buffers.len());
+        args.extend(self.weight_buffers.iter());
+        args.extend(input_buffers.iter());
+
+        let result = self.exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        self.exec_nanos
+            .set(self.exec_nanos.get() + t0.elapsed().as_nanos());
+        // aot.py lowers with return_tuple=True: a single tuple of outputs.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| from_literal(l, s))
+            .collect()
+    }
+
+    pub fn avg_exec_ms(&self) -> f64 {
+        let calls = self.exec_calls.get();
+        if calls == 0 {
+            return 0.0;
+        }
+        self.exec_nanos.get() as f64 / calls as f64 / 1e6
+    }
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    let t = match spec.dtype {
+        DType::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+        DType::I32 => HostTensor::I32(lit.to_vec::<i32>()?),
+    };
+    if t.len() != spec.n_elems() {
+        bail!(
+            "output {}: expected {} elems, got {}",
+            spec.name,
+            spec.n_elems(),
+            t.len()
+        );
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn spec(shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: "t".into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn host_tensor_zeroes_and_accessors() {
+        let t = HostTensor::zeros(&spec(&[2, 3], DType::F32));
+        assert_eq!(t.len(), 6);
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        let t = HostTensor::zeros(&spec(&[4], DType::I32));
+        assert_eq!(t.as_i32().unwrap(), &[0; 4]);
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        assert_eq!(HostTensor::F32(vec![1.0]).dtype(), DType::F32);
+        assert_eq!(HostTensor::I32(vec![1]).dtype(), DType::I32);
+    }
+}

@@ -1,0 +1,323 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime.  Parses `artifacts/manifest.json` into typed structs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("tensor missing shape"))?,
+            dtype: DType::parse(
+                j.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+            )?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub spec: TensorSpec,
+    pub file: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExecutableSpec {
+    pub name: String,
+    pub hlo_file: String,
+    pub weights_group: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfigMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub prompt_max: usize,
+    pub n_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServedModelMeta {
+    pub name: String,
+    pub abbrev: String,
+    pub params_b: f64,
+    pub avg_latency_ms: f64,
+    pub kv_bytes_per_token: usize,
+    pub preempt_batch: usize,
+    pub mem_limit_frac: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub window_size: usize,
+    pub batch_sizes: Vec<usize>,
+    pub predictor_batch: usize,
+    pub model: ModelConfigMeta,
+    pub predictor_prompt_max: usize,
+    pub gamma_alpha: f64,
+    pub gamma_beta: f64,
+    pub executables: BTreeMap<String, ExecutableSpec>,
+    pub weights: BTreeMap<String, Vec<WeightEntry>>,
+    pub served_models: Vec<ServedModelMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let mc = j.get("model_config").ok_or_else(|| anyhow!("missing model_config"))?;
+        let model = ModelConfigMeta {
+            vocab: mc.get("vocab").and_then(Json::as_usize).unwrap_or(0),
+            d_model: mc.get("d_model").and_then(Json::as_usize).unwrap_or(0),
+            n_layers: mc.get("n_layers").and_then(Json::as_usize).unwrap_or(0),
+            n_heads: mc.get("n_heads").and_then(Json::as_usize).unwrap_or(0),
+            max_seq: mc.get("max_seq").and_then(Json::as_usize).unwrap_or(0),
+            prompt_max: mc.get("prompt_max").and_then(Json::as_usize).unwrap_or(0),
+            n_params: mc.get("n_params").and_then(Json::as_usize).unwrap_or(0),
+        };
+
+        let mut executables = BTreeMap::new();
+        for (name, e) in j
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing executables"))?
+        {
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            executables.insert(
+                name.clone(),
+                ExecutableSpec {
+                    name: name.clone(),
+                    hlo_file: e
+                        .get("hlo")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing hlo"))?
+                        .to_string(),
+                    weights_group: e
+                        .get("weights")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let mut weights = BTreeMap::new();
+        for (group, arr) in j
+            .get("weights")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing weights"))?
+        {
+            let entries = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("weights group {group} not an array"))?
+                .iter()
+                .map(|e| {
+                    Ok(WeightEntry {
+                        spec: TensorSpec::from_json(e)?,
+                        file: e
+                            .get("file")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("weight missing file"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            weights.insert(group.clone(), entries);
+        }
+
+        let served_models = j
+            .get("served_models")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .map(|m| ServedModelMeta {
+                name: m.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                abbrev: m.get("abbrev").and_then(Json::as_str).unwrap_or("").to_string(),
+                params_b: m.get("params_b").and_then(Json::as_f64).unwrap_or(0.0),
+                avg_latency_ms: m.get("avg_latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                kv_bytes_per_token: m
+                    .get("kv_bytes_per_token")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(0),
+                preempt_batch: m.get("preempt_batch").and_then(Json::as_usize).unwrap_or(0),
+                mem_limit_frac: m.get("mem_limit_frac").and_then(Json::as_f64).unwrap_or(0.9),
+            })
+            .collect();
+
+        Ok(Manifest {
+            root: dir.to_path_buf(),
+            window_size: j.get("window_size").and_then(Json::as_usize).unwrap_or(50),
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(Json::as_usize_vec)
+                .unwrap_or_else(|| vec![1, 2, 4]),
+            predictor_batch: j.get("predictor_batch").and_then(Json::as_usize).unwrap_or(8),
+            model,
+            predictor_prompt_max: j
+                .at(&["predictor_config", "prompt_max"])
+                .and_then(Json::as_usize)
+                .unwrap_or(64),
+            gamma_alpha: j.get("gamma_alpha").and_then(Json::as_f64).unwrap_or(0.73),
+            gamma_beta: j.get("gamma_beta").and_then(Json::as_f64).unwrap_or(10.41),
+            executables,
+            weights,
+            served_models,
+        })
+    }
+
+    pub fn executable(&self, name: &str) -> Result<&ExecutableSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, exe: &ExecutableSpec) -> PathBuf {
+        self.root.join(&exe.hlo_file)
+    }
+}
+
+/// Locate the artifacts directory: $ELIS_ARTIFACTS or ./artifacts upward.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("ELIS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> Json {
+        Json::parse(
+            r#"{
+            "window_size": 50,
+            "batch_sizes": [1,2,4],
+            "predictor_batch": 8,
+            "model_config": {"vocab":2048,"d_model":256,"n_layers":4,
+                             "n_heads":4,"max_seq":576,"prompt_max":64,
+                             "n_params":1000},
+            "predictor_config": {"prompt_max": 64},
+            "gamma_alpha": 0.73, "gamma_beta": 10.41,
+            "executables": {
+              "model.decode.b4": {
+                 "hlo": "model.decode.b4.hlo.txt",
+                 "weights": "model",
+                 "inputs": [{"name":"kv","shape":[4,2,4,4,576,64],"dtype":"f32"}],
+                 "outputs": [{"name":"tokens","shape":[4,50],"dtype":"i32"}]
+              }
+            },
+            "weights": {
+              "model": [{"name":"tok_emb","file":"weights/model/000.bin",
+                         "shape":[2048,256],"dtype":"f32"}]
+            },
+            "served_models": [
+               {"name":"LlaMA2-13B","abbrev":"lam13","params_b":13,
+                "avg_latency_ms":8610.2,"kv_bytes_per_token":1000,
+                "preempt_batch":120,"mem_limit_frac":0.9}
+            ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(Path::new("/tmp/x"), &sample_manifest()).unwrap();
+        assert_eq!(m.window_size, 50);
+        assert_eq!(m.model.vocab, 2048);
+        let e = m.executable("model.decode.b4").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![4, 2, 4, 4, 576, 64]);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.outputs[0].dtype, DType::I32);
+        assert_eq!(m.weights["model"][0].spec.n_elems(), 2048 * 256);
+        assert_eq!(m.served_models[0].preempt_batch, 120);
+    }
+
+    #[test]
+    fn missing_executable_errors() {
+        let m = Manifest::from_json(Path::new("/tmp/x"), &sample_manifest()).unwrap();
+        assert!(m.executable("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert!(DType::parse("f32").is_ok());
+        assert!(DType::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: manifest + weight loading + HLO execution.
+//!
+//! This is the only module that touches the `xla` crate.  Everything above
+//! it (engine, coordinator) works with [`client::HostTensor`]s.
+pub mod client;
+pub mod manifest;
+pub mod weights;
+
+pub use client::{HostTensor, LoadedModel, Runtime};
+pub use manifest::{default_artifacts_dir, DType, Manifest};
+pub use weights::WeightStore;

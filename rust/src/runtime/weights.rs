@@ -1,0 +1,113 @@
+//! Weight-blob loader: raw little-endian tensors exported by `aot.py`.
+//!
+//! Each weight group (`model`, `predictor_trained`, `predictor_init`) is a
+//! directory of `NNN_name.bin` files listed — in argument order — by the
+//! manifest.  Order matters: the HLO's parameters are positional.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::HostTensor;
+use super::manifest::{DType, Manifest, TensorSpec};
+
+pub struct WeightStore {
+    groups: BTreeMap<String, Vec<(TensorSpec, HostTensor)>>,
+}
+
+impl WeightStore {
+    /// Load every weight group referenced by the manifest.
+    pub fn load(manifest: &Manifest) -> Result<WeightStore> {
+        let mut groups = BTreeMap::new();
+        for (group, entries) in &manifest.weights {
+            let mut tensors = Vec::with_capacity(entries.len());
+            for e in entries {
+                let path = manifest.root.join(&e.file);
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading weight blob {path:?}"))?;
+                let want = e.spec.n_elems() * e.spec.dtype.size_bytes();
+                if bytes.len() != want {
+                    bail!(
+                        "{}: blob is {} bytes, expected {} ({:?} {:?})",
+                        e.file,
+                        bytes.len(),
+                        want,
+                        e.spec.shape,
+                        e.spec.dtype
+                    );
+                }
+                tensors.push((e.spec.clone(), decode(&bytes, e.spec.dtype)));
+            }
+            groups.insert(group.clone(), tensors);
+        }
+        Ok(WeightStore { groups })
+    }
+
+    /// Load only the named groups (saves memory when a binary needs one).
+    pub fn load_groups(manifest: &Manifest, names: &[&str]) -> Result<WeightStore> {
+        let mut sub = Manifest::clone(manifest);
+        sub.weights.retain(|k, _| names.contains(&k.as_str()));
+        Self::load(&sub)
+    }
+
+    pub fn group(&self, name: &str) -> Result<&[(TensorSpec, HostTensor)]> {
+        self.groups
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("weight group {name} not loaded"))
+    }
+
+    pub fn group_names(&self) -> Vec<&str> {
+        self.groups.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.groups
+            .values()
+            .flat_map(|v| v.iter())
+            .map(|(s, _)| s.n_elems() * s.dtype.size_bytes())
+            .sum()
+    }
+}
+
+fn decode(bytes: &[u8], dtype: DType) -> HostTensor {
+    match dtype {
+        DType::F32 => HostTensor::F32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+        DType::I32 => HostTensor::I32(
+            bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_f32_le() {
+        let mut bytes = Vec::new();
+        for v in [1.0f32, -2.5, 0.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let t = decode(&bytes, DType::F32);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, -2.5, 0.0]);
+    }
+
+    #[test]
+    fn decode_i32_le() {
+        let mut bytes = Vec::new();
+        for v in [7i32, -9, 1 << 20] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let t = decode(&bytes, DType::I32);
+        assert_eq!(t.as_i32().unwrap(), &[7, -9, 1 << 20]);
+    }
+}

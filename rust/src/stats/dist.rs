@@ -1,0 +1,255 @@
+//! Distribution samplers and densities.
+//!
+//! The paper's workload generator samples request inter-arrival times from
+//! Gamma(α=0.73, β=10.41) fitted to the FabriX trace (Fig 4); the Poisson /
+//! exponential alternatives are the baselines it compares against.  All
+//! samplers are built on `Pcg64` (no rand_distr offline).
+
+use super::rng::Pcg64;
+
+/// Standard normal via Marsaglia polar method.
+pub fn normal(rng: &mut Pcg64, mean: f64, std: f64) -> f64 {
+    loop {
+        let u = rng.range_f64(-1.0, 1.0);
+        let v = rng.range_f64(-1.0, 1.0);
+        let s = u * u + v * v;
+        if s > 0.0 && s < 1.0 {
+            let z = u * (-2.0 * s.ln() / s).sqrt();
+            return mean + std * z;
+        }
+    }
+}
+
+/// Exponential with the given mean.
+pub fn exponential(rng: &mut Pcg64, mean: f64) -> f64 {
+    -mean * (1.0 - rng.f64()).ln()
+}
+
+/// Gamma(shape α, scale β) via Marsaglia–Tsang, with the Johnk boost for
+/// α < 1 (the FabriX fit has α = 0.73, so this path matters).
+pub fn gamma(rng: &mut Pcg64, shape: f64, scale: f64) -> f64 {
+    assert!(shape > 0.0 && scale > 0.0);
+    if shape < 1.0 {
+        // boost: X ~ Gamma(α+1), U^(1/α) * X ~ Gamma(α)
+        let x = gamma(rng, shape + 1.0, 1.0);
+        let u: f64 = rng.f64().max(f64::MIN_POSITIVE);
+        return scale * x * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let z = normal(rng, 0.0, 1.0);
+        let v = 1.0 + c * z;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u: f64 = rng.f64().max(f64::MIN_POSITIVE);
+        if u.ln() < 0.5 * z * z + d - d * v3 + d * v3.ln() {
+            return scale * d * v3;
+        }
+    }
+}
+
+/// Log-normal with parameters of the underlying normal.
+pub fn lognormal(rng: &mut Pcg64, mu: f64, sigma: f64) -> f64 {
+    normal(rng, mu, sigma).exp()
+}
+
+/// Poisson(λ) — Knuth for small λ, PTRS-lite (normal approx + correction)
+/// for large λ.
+pub fn poisson(rng: &mut Pcg64, lambda: f64) -> u64 {
+    assert!(lambda >= 0.0);
+    if lambda < 30.0 {
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    } else {
+        // normal approximation with continuity correction — adequate for
+        // workload generation at high rates
+        let x = normal(rng, lambda, lambda.sqrt());
+        x.max(0.0).round() as u64
+    }
+}
+
+// ----------------------------- densities -------------------------------
+
+/// ln Γ(x) — Lanczos approximation (g=7, n=9).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Digamma ψ(x) via asymptotic series with recurrence shift.
+pub fn digamma(mut x: f64) -> f64 {
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 / 252.0))
+}
+
+/// Trigamma ψ'(x).
+pub fn trigamma(mut x: f64) -> f64 {
+    let mut result = 0.0;
+    while x < 6.0 {
+        result += 1.0 / (x * x);
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + inv * (1.0 + 0.5 * inv + inv2 * (1.0 / 6.0 - inv2 * (1.0 / 30.0 - inv2 / 42.0)))
+}
+
+/// Gamma(α, β) log-density.
+pub fn gamma_logpdf(x: f64, shape: f64, scale: f64) -> f64 {
+    if x <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    (shape - 1.0) * x.ln() - x / scale - ln_gamma(shape) - shape * scale.ln()
+}
+
+/// Exponential(mean) log-density (the interval view of a Poisson process).
+pub fn exp_logpdf(x: f64, mean: f64) -> f64 {
+    if x < 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    -mean.ln() - x / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(samples: &[f64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(1);
+        let s: Vec<f64> = (0..50_000).map(|_| normal(&mut r, 3.0, 2.0)).collect();
+        let (m, v) = moments(&s);
+        assert!((m - 3.0).abs() < 0.05, "mean {m}");
+        assert!((v - 4.0).abs() < 0.15, "var {v}");
+    }
+
+    #[test]
+    fn gamma_moments_alpha_below_one() {
+        // the FabriX regime: α < 1
+        let (a, b) = (0.73, 10.41);
+        let mut r = Pcg64::new(2);
+        let s: Vec<f64> = (0..100_000).map(|_| gamma(&mut r, a, b)).collect();
+        let (m, v) = moments(&s);
+        assert!((m - a * b).abs() / (a * b) < 0.03, "mean {m} vs {}", a * b);
+        assert!((v - a * b * b).abs() / (a * b * b) < 0.06, "var {v}");
+        assert!(s.iter().all(|x| *x >= 0.0));
+    }
+
+    #[test]
+    fn gamma_moments_alpha_above_one() {
+        let (a, b) = (4.0, 2.0);
+        let mut r = Pcg64::new(3);
+        let s: Vec<f64> = (0..50_000).map(|_| gamma(&mut r, a, b)).collect();
+        let (m, v) = moments(&s);
+        assert!((m - 8.0).abs() < 0.1);
+        assert!((v - 16.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Pcg64::new(4);
+        let s: Vec<f64> = (0..50_000).map(|_| exponential(&mut r, 5.0)).collect();
+        let (m, _) = moments(&s);
+        assert!((m - 5.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn poisson_small_lambda() {
+        let mut r = Pcg64::new(5);
+        let s: Vec<f64> = (0..50_000).map(|_| poisson(&mut r, 3.5) as f64).collect();
+        let (m, v) = moments(&s);
+        assert!((m - 3.5).abs() < 0.05);
+        assert!((v - 3.5).abs() < 0.15);
+    }
+
+    #[test]
+    fn poisson_large_lambda() {
+        let mut r = Pcg64::new(6);
+        let s: Vec<f64> = (0..20_000).map(|_| poisson(&mut r, 200.0) as f64).collect();
+        let (m, _) = moments(&s);
+        assert!((m - 200.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - 0.5 * std::f64::consts::PI.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn digamma_recurrence() {
+        // ψ(x+1) = ψ(x) + 1/x
+        for &x in &[0.3, 0.73, 1.0, 2.5, 10.0] {
+            let lhs = digamma(x + 1.0);
+            let rhs = digamma(x) + 1.0 / x;
+            assert!((lhs - rhs).abs() < 1e-8, "x={x}");
+        }
+    }
+
+    #[test]
+    fn trigamma_known() {
+        // ψ'(1) = π²/6
+        let expect = std::f64::consts::PI.powi(2) / 6.0;
+        assert!((trigamma(1.0) - expect).abs() < 1e-7);
+    }
+
+    #[test]
+    fn gamma_logpdf_integrates_to_one() {
+        // crude Riemann check
+        let (a, b) = (0.73, 10.41);
+        let dx = 0.01;
+        let total: f64 = (1..200_000)
+            .map(|i| (i as f64 * dx, gamma_logpdf(i as f64 * dx, a, b).exp()))
+            .map(|(_, p)| p * dx)
+            .sum();
+        assert!((total - 1.0).abs() < 0.01, "total {total}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Distribution fitting + regression metrics.
+//!
+//! `fit_gamma` reproduces the paper's Fig 4 analysis: MLE of Gamma shape and
+//! scale on inter-arrival samples via Newton iteration on the digamma
+//! equation.  `fit_exponential` is the Poisson-process alternative the paper
+//! rejects; log-likelihood comparison decides the winner.
+
+use super::dist::{digamma, exp_logpdf, gamma_logpdf, trigamma};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GammaFit {
+    pub shape: f64,
+    pub scale: f64,
+    pub loglik: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExpFit {
+    pub mean: f64,
+    pub loglik: f64,
+}
+
+/// MLE Gamma fit.  Solves ln(α) − ψ(α) = ln(mean) − mean(ln x) by Newton,
+/// starting from the Minka closed-form approximation.
+pub fn fit_gamma(samples: &[f64]) -> Option<GammaFit> {
+    let xs: Vec<f64> = samples.iter().copied().filter(|x| *x > 0.0).collect();
+    if xs.len() < 8 {
+        return None;
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let mean_ln = xs.iter().map(|x| x.ln()).sum::<f64>() / n;
+    let s = mean.ln() - mean_ln;
+    if s <= 0.0 {
+        return None; // degenerate (all samples equal)
+    }
+    // Minka initialisation
+    let mut alpha = (3.0 - s + ((s - 3.0).powi(2) + 24.0 * s).sqrt()) / (12.0 * s);
+    for _ in 0..60 {
+        let f = alpha.ln() - digamma(alpha) - s;
+        let fp = 1.0 / alpha - trigamma(alpha);
+        let step = f / fp;
+        let next = alpha - step;
+        let next = if next <= 0.0 { alpha / 2.0 } else { next };
+        if (next - alpha).abs() < 1e-12 * alpha.max(1.0) {
+            alpha = next;
+            break;
+        }
+        alpha = next;
+    }
+    let scale = mean / alpha;
+    let loglik = xs.iter().map(|x| gamma_logpdf(*x, alpha, scale)).sum();
+    Some(GammaFit { shape: alpha, scale, loglik })
+}
+
+/// MLE exponential fit (a Poisson arrival process seen through intervals).
+pub fn fit_exponential(samples: &[f64]) -> Option<ExpFit> {
+    let xs: Vec<f64> = samples.iter().copied().filter(|x| *x >= 0.0).collect();
+    if xs.is_empty() {
+        return None;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mean <= 0.0 {
+        return None;
+    }
+    let loglik = xs.iter().map(|x| exp_logpdf(*x, mean)).sum();
+    Some(ExpFit { mean, loglik })
+}
+
+/// Akaike information criterion (lower is better).
+pub fn aic(loglik: f64, k_params: usize) -> f64 {
+    2.0 * k_params as f64 - 2.0 * loglik
+}
+
+// ------------------------- regression metrics --------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegressionMetrics {
+    pub mae: f64,
+    pub rmse: f64,
+    pub r2: f64,
+    pub n: usize,
+}
+
+/// MAE / RMSE / R² (paper Table 2 metrics).
+pub fn regression_metrics(pred: &[f64], truth: &[f64]) -> RegressionMetrics {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty());
+    let n = pred.len() as f64;
+    let mae = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t).abs())
+        .sum::<f64>()
+        / n;
+    let mse = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t).powi(2))
+        .sum::<f64>()
+        / n;
+    let mean_t = truth.iter().sum::<f64>() / n;
+    let ss_tot: f64 = truth.iter().map(|t| (t - mean_t).powi(2)).sum();
+    let ss_res: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t).powi(2)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { f64::NAN };
+    RegressionMetrics { mae, rmse: mse.sqrt(), r2, n: pred.len() }
+}
+
+/// Ordinary least squares y = a + b·x; returns (a, b).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        sxy += (xi - mx) * (yi - my);
+        sxx += (xi - mx) * (xi - mx);
+    }
+    let b = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    (my - b * mx, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist::gamma;
+    use crate::stats::rng::Pcg64;
+
+    #[test]
+    fn gamma_fit_recovers_fabrix_params() {
+        // the paper's fitted parameters
+        let (a, b) = (0.73, 10.41);
+        let mut r = Pcg64::new(17);
+        let samples: Vec<f64> = (0..200_000).map(|_| gamma(&mut r, a, b)).collect();
+        let fit = fit_gamma(&samples).unwrap();
+        assert!((fit.shape - a).abs() < 0.02, "shape {}", fit.shape);
+        assert!((fit.scale - b).abs() < 0.35, "scale {}", fit.scale);
+    }
+
+    #[test]
+    fn gamma_beats_exponential_on_gamma_data() {
+        let mut r = Pcg64::new(18);
+        let samples: Vec<f64> = (0..50_000).map(|_| gamma(&mut r, 0.73, 10.41)).collect();
+        let g = fit_gamma(&samples).unwrap();
+        let e = fit_exponential(&samples).unwrap();
+        assert!(g.loglik > e.loglik, "gamma {} vs exp {}", g.loglik, e.loglik);
+        assert!(aic(g.loglik, 2) < aic(e.loglik, 1));
+    }
+
+    #[test]
+    fn exponential_ties_on_exponential_data() {
+        // Gamma(1, β) == Exp(β): fitted shape should be ~1
+        let mut r = Pcg64::new(19);
+        let samples: Vec<f64> = (0..100_000).map(|_| gamma(&mut r, 1.0, 4.0)).collect();
+        let g = fit_gamma(&samples).unwrap();
+        assert!((g.shape - 1.0).abs() < 0.03, "shape {}", g.shape);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert!(fit_gamma(&[2.0; 100]).is_none());
+        assert!(fit_gamma(&[1.0, 2.0]).is_none());
+        assert!(fit_exponential(&[]).is_none());
+    }
+
+    #[test]
+    fn regression_metrics_perfect() {
+        let y = [1.0, 2.0, 3.0];
+        let m = regression_metrics(&y, &y);
+        assert_eq!(m.mae, 0.0);
+        assert_eq!(m.rmse, 0.0);
+        assert!((m.r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regression_metrics_mean_predictor_r2_zero() {
+        let truth = [1.0, 2.0, 3.0, 4.0];
+        let pred = [2.5; 4];
+        let m = regression_metrics(&pred, &truth);
+        assert!(m.r2.abs() < 1e-12);
+        assert!(m.rmse >= m.mae);
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,5 @@
+//! RNG, distributions, fitting, and summary statistics substrate.
+pub mod dist;
+pub mod fit;
+pub mod rng;
+pub mod summary;

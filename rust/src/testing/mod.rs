@@ -1,0 +1,103 @@
+//! Property-testing harness (proptest substitute for the offline toolchain).
+//!
+//! `check(name, cases, |g| ...)` runs a closure over `cases` randomly
+//! generated inputs drawn through the [`Gen`] handle.  On failure it reruns
+//! with the same seed to report the failing case number and seed so the run
+//! is reproducible (`ELIS_PROP_SEED=<seed>` pins the seed).
+
+pub mod prop {
+    use crate::stats::rng::Pcg64;
+
+    /// Input generator handed to property closures.
+    pub struct Gen {
+        pub rng: Pcg64,
+        pub case: usize,
+    }
+
+    impl Gen {
+        pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+            self.rng.int_range(lo as i64, hi as i64) as usize
+        }
+
+        pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+            self.rng.int_range(lo, hi)
+        }
+
+        pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+            self.rng.range_f64(lo, hi)
+        }
+
+        pub fn bool(&mut self, p: f64) -> bool {
+            self.rng.bool(p)
+        }
+
+        pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+            (0..len).map(|_| self.f64_in(lo, hi)).collect()
+        }
+
+        pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+            (0..len).map(|_| self.usize_in(lo, hi)).collect()
+        }
+
+        pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+            &items[self.usize_in(0, items.len() - 1)]
+        }
+    }
+
+    fn base_seed() -> u64 {
+        std::env::var("ELIS_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xE115_0001)
+    }
+
+    /// Run `f` over `cases` random inputs; panic with seed/case on failure.
+    pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut f: F) {
+        let seed = base_seed();
+        for case in 0..cases {
+            let rng = Pcg64::new(seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+            let mut g = Gen { rng, case };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut g)
+            }));
+            if let Err(e) = result {
+                eprintln!(
+                    "property '{name}' failed at case {case} (seed {seed}); \
+                     rerun with ELIS_PROP_SEED={seed}"
+                );
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn check_passes_trivial_property() {
+            check("sum-commutes", 50, |g| {
+                let a = g.f64_in(-10.0, 10.0);
+                let b = g.f64_in(-10.0, 10.0);
+                assert_eq!(a + b, b + a);
+            });
+        }
+
+        #[test]
+        fn generator_bounds() {
+            check("bounds", 100, |g| {
+                let x = g.usize_in(3, 9);
+                assert!((3..=9).contains(&x));
+                let v = g.vec_f64(5, 0.0, 1.0);
+                assert_eq!(v.len(), 5);
+                assert!(v.iter().all(|x| (0.0..1.0).contains(x)));
+            });
+        }
+
+        #[test]
+        #[should_panic]
+        fn check_propagates_failure() {
+            check("always-fails", 3, |_| panic!("boom"));
+        }
+    }
+}

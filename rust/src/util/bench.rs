@@ -1,0 +1,176 @@
+//! Benchmark harness (criterion substitute for the offline toolchain).
+//!
+//! `cargo bench` targets are plain `main()`s (harness = false) built on this
+//! module: warmup, timed iterations, mean/p50/p99 reporting, and paper-style
+//! table printing so each bench regenerates the rows of its table/figure.
+
+use std::time::{Duration, Instant};
+
+use crate::stats::summary::Percentiles;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<40} iters={:<6} mean={:>12?} p50={:>12?} p99={:>12?} min={:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p99, self.min
+        );
+    }
+}
+
+/// Time `f` repeatedly: `warmup` untimed runs, then up to `max_iters` timed
+/// runs or until `budget` elapses (at least one timed run always happens).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, max_iters: usize,
+                         budget: Duration, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Percentiles::new();
+    let mut min = Duration::MAX;
+    let mut max = Duration::ZERO;
+    let mut total = Duration::ZERO;
+    let started = Instant::now();
+    let mut iters = 0;
+    while iters < max_iters && (iters == 0 || started.elapsed() < budget) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed();
+        samples.add(dt.as_secs_f64());
+        min = min.min(dt);
+        max = max.max(dt);
+        total += dt;
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(total.as_secs_f64() / iters as f64),
+        p50: Duration::from_secs_f64(samples.p50()),
+        p99: Duration::from_secs_f64(samples.p99()),
+        min,
+        max,
+    }
+}
+
+/// Quick single-shot wall-time measurement for long-running end-to-end
+/// experiments (one serving run is one sample).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+// --------------------------- table printing ----------------------------
+
+/// Fixed-width text table matching the paper's row/column layout.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line_len: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n== {} ==", self.title);
+        let sep: String = "-".repeat(line_len);
+        println!("{sep}");
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:<w$}", h, w = widths[i]))
+            .collect();
+        println!("| {} |", hdr.join(" | "));
+        println!("{sep}");
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", cells.join(" | "));
+        }
+        println!("{sep}");
+    }
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{:.*}", digits, x)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:+.2}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("noop", 2, 10, Duration::from_secs(5), || n += 1);
+        assert_eq!(r.iters, 10);
+        assert_eq!(n, 12); // warmup + timed
+        assert!(r.mean <= r.max && r.min <= r.mean);
+    }
+
+    #[test]
+    fn bench_respects_budget() {
+        let r = bench("sleepy", 0, 1000, Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(10))
+        });
+        assert!(r.iters < 1000);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn table_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_f(1.23456, 2), "1.23");
+        assert_eq!(fmt_pct(0.196), "+19.60%");
+    }
+}

@@ -1,0 +1,135 @@
+//! Tiny subcommand + flag parser (no clap offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and free
+//! positional arguments.  Typed getters with defaults keep call sites short.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]); the first non-flag token becomes
+    /// the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--flag value` unless the next token is another flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+
+    /// Comma-separated list flag, e.g. `--models opt13,lam13`.
+    pub fn list(&self, key: &str) -> Vec<String> {
+        self.flags
+            .get(key)
+            .map(|s| s.split(',').map(|p| p.trim().to_string()).filter(|p| !p.is_empty()).collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("serve --workers 4 --scheduler isrtf --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.usize("workers", 1), 4);
+        assert_eq!(a.str("scheduler", "fcfs"), "isrtf");
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("bench --rps=2.5 --n=100");
+        assert_eq!(a.f64("rps", 0.0), 2.5);
+        assert_eq!(a.usize("n", 0), 100);
+    }
+
+    #[test]
+    fn positional() {
+        let a = parse("run file1 file2 --k 1");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("x --models opt13,lam13, vic");
+        assert_eq!(a.list("models"), vec!["opt13", "lam13"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.f64("missing", 1.5), 1.5);
+        assert_eq!(a.str("missing", "d"), "d");
+        assert!(a.opt_str("missing").is_none());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        let a = parse("x --offset -3");
+        // "-3" does not start with --, so it is consumed as the value
+        assert_eq!(a.f64("offset", 0.0), -3.0);
+    }
+}

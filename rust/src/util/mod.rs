@@ -1,0 +1,4 @@
+//! Offline-toolchain substrates: JSON, CLI parsing, bench harness.
+pub mod bench;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,140 @@
+//! Serving corpus: the LMSYS-substitute prompt set exported by `aot.py`
+//! (test split only — the predictor never saw these prompts in training).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct CorpusEntry {
+    pub tokens: Vec<i32>,
+    pub topic: usize,
+    /// ground-truth response length (tokens) — drives the engine's stop
+    /// condition, like fixed output lengths in vLLM benchmarks
+    pub total_len: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub entries: Vec<CorpusEntry>,
+    pub window_size: usize,
+    pub gamma_alpha: f64,
+    pub gamma_beta: f64,
+    pub prompt_max: usize,
+}
+
+impl Corpus {
+    pub fn load(artifacts: &Path) -> Result<Corpus> {
+        let path = artifacts.join("corpus.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).context("parsing corpus.json")?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Corpus> {
+        let entries = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("corpus missing entries"))?
+            .iter()
+            .map(|e| {
+                Ok(CorpusEntry {
+                    tokens: e
+                        .get("tokens")
+                        .and_then(Json::as_i32_vec)
+                        .ok_or_else(|| anyhow!("entry missing tokens"))?,
+                    topic: e.get("topic").and_then(Json::as_usize).unwrap_or(0),
+                    total_len: e
+                        .get("total_len")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("entry missing total_len"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if entries.is_empty() {
+            anyhow::bail!("corpus is empty");
+        }
+        Ok(Corpus {
+            entries,
+            window_size: j.get("window_size").and_then(Json::as_usize).unwrap_or(50),
+            gamma_alpha: j.get("gamma_alpha").and_then(Json::as_f64).unwrap_or(0.73),
+            gamma_beta: j.get("gamma_beta").and_then(Json::as_f64).unwrap_or(10.41),
+            prompt_max: j.get("prompt_max").and_then(Json::as_usize).unwrap_or(64),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn mean_total_len(&self) -> f64 {
+        self.entries.iter().map(|e| e.total_len as f64).sum::<f64>()
+            / self.len() as f64
+    }
+
+    /// Synthetic in-memory corpus for tests that must not touch artifacts.
+    pub fn synthetic(n: usize, seed: u64) -> Corpus {
+        use crate::stats::rng::Pcg64;
+        let mut rng = Pcg64::new(seed);
+        let entries = (0..n)
+            .map(|_| {
+                let plen = rng.int_range(4, 40) as usize;
+                let tokens: Vec<i32> =
+                    (0..plen).map(|_| rng.int_range(16, 2047) as i32).collect();
+                // heavy-tailed lengths: log-uniform 5..480
+                let total = (5.0 * (480.0f64 / 5.0).powf(rng.f64())).round() as usize;
+                CorpusEntry { tokens, topic: 0, total_len: total }
+            })
+            .collect();
+        Corpus {
+            entries,
+            window_size: 50,
+            gamma_alpha: 0.73,
+            gamma_beta: 10.41,
+            prompt_max: 64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"window_size":50,"gamma_alpha":0.73,"gamma_beta":10.41,
+                "prompt_max":64,
+                "entries":[{"tokens":[1,2,3],"topic":2,"total_len":120}]}"#,
+        )
+        .unwrap();
+        let c = Corpus::from_json(&j).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.entries[0].tokens, vec![1, 2, 3]);
+        assert_eq!(c.entries[0].total_len, 120);
+        assert_eq!(c.window_size, 50);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        let j = Json::parse(r#"{"entries":[]}"#).unwrap();
+        assert!(Corpus::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn synthetic_has_heavy_tail() {
+        let c = Corpus::synthetic(2000, 1);
+        let mut lens: Vec<usize> = c.entries.iter().map(|e| e.total_len).collect();
+        lens.sort_unstable();
+        assert!(lens[200] < 40, "p10 {}", lens[200]);
+        assert!(lens[1800] > 130, "p90 {}", lens[1800]);
+        assert!(c.mean_total_len() > 50.0);
+    }
+}

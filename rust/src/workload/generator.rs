@@ -1,0 +1,168 @@
+//! Request-stream generation (paper §4.1 / §6.1).
+//!
+//! The paper found FabriX inter-arrival times follow Gamma(α=0.73, β=10.41)
+//! — burstier than Poisson — and samples evaluation streams from that fit,
+//! scaled to a multiple of each model's *average request rate*
+//! (AVG.RequestRate = 1000/AVG.Latency × batch_size).  This module builds
+//! those traces: prompts sampled from the corpus, intervals from a Gamma
+//! (or Poisson, for comparison) process rescaled to a target RPS.
+
+use crate::stats::dist;
+use crate::stats::rng::Pcg64;
+
+use super::corpus::{Corpus, CorpusEntry};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalProcess {
+    /// Gamma-distributed intervals with the FabriX shape (bursty)
+    Gamma,
+    /// Exponential intervals (Poisson process) — the baseline assumption
+    Poisson,
+    /// Deterministic equal spacing (ablation)
+    Uniform,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceRequest {
+    pub id: u64,
+    pub arrival_ms: f64,
+    pub prompt: Vec<i32>,
+    pub total_len: usize,
+    pub topic: usize,
+}
+
+pub struct RequestGenerator {
+    rng: Pcg64,
+    pub process: ArrivalProcess,
+    /// Gamma shape from the FabriX fit
+    pub alpha: f64,
+    /// target mean inter-arrival time (ms)
+    pub mean_interval_ms: f64,
+}
+
+impl RequestGenerator {
+    pub fn new(process: ArrivalProcess, alpha: f64, rps: f64, seed: u64) -> Self {
+        assert!(rps > 0.0);
+        RequestGenerator {
+            rng: Pcg64::new(seed),
+            process,
+            alpha,
+            mean_interval_ms: 1000.0 / rps,
+        }
+    }
+
+    /// Gamma process with the paper's fitted shape, at the given RPS.
+    pub fn fabrix(rps: f64, seed: u64) -> Self {
+        Self::new(ArrivalProcess::Gamma, 0.73, rps, seed)
+    }
+
+    fn next_interval_ms(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::Gamma => {
+                // mean of Gamma(α, β) is αβ -> scale β for the target mean
+                let beta = self.mean_interval_ms / self.alpha;
+                dist::gamma(&mut self.rng, self.alpha, beta)
+            }
+            ArrivalProcess::Poisson => {
+                dist::exponential(&mut self.rng, self.mean_interval_ms)
+            }
+            ArrivalProcess::Uniform => self.mean_interval_ms,
+        }
+    }
+
+    /// Sample `n` requests with prompts drawn (with replacement, shuffled)
+    /// from the corpus — the paper's "same set of sampled prompts, randomly
+    /// shuffled per experiment".
+    pub fn trace(&mut self, corpus: &Corpus, n: usize) -> Vec<TraceRequest> {
+        let picks: Vec<&CorpusEntry> = (0..n)
+            .map(|_| &corpus.entries[self.rng.below(corpus.len() as u64) as usize])
+            .collect();
+        self.trace_from_entries(&picks)
+    }
+
+    /// Build a trace from a fixed prompt set (shuffle upstream for repeats).
+    pub fn trace_from_entries(&mut self, entries: &[&CorpusEntry]) -> Vec<TraceRequest> {
+        let mut t = 0.0;
+        entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                if i > 0 {
+                    t += self.next_interval_ms();
+                }
+                TraceRequest {
+                    id: i as u64,
+                    arrival_ms: t,
+                    prompt: e.tokens.clone(),
+                    total_len: e.total_len,
+                    topic: e.topic,
+                }
+            })
+            .collect()
+    }
+
+    /// Raw interval samples (Fig 4 analysis).
+    pub fn intervals(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_interval_ms()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_sorted_and_sized() {
+        let c = Corpus::synthetic(100, 1);
+        let mut g = RequestGenerator::fabrix(2.0, 7);
+        let t = g.trace(&c, 50);
+        assert_eq!(t.len(), 50);
+        assert_eq!(t[0].arrival_ms, 0.0);
+        for w in t.windows(2) {
+            assert!(w[1].arrival_ms >= w[0].arrival_ms);
+        }
+        assert!(t.iter().all(|r| r.total_len >= 1 && !r.prompt.is_empty()));
+    }
+
+    #[test]
+    fn mean_rate_respected() {
+        // 4 rps -> mean interval 250 ms
+        let mut g = RequestGenerator::fabrix(4.0, 11);
+        let iv = g.intervals(50_000);
+        let mean = iv.iter().sum::<f64>() / iv.len() as f64;
+        assert!((mean - 250.0).abs() < 10.0, "mean {mean}");
+    }
+
+    #[test]
+    fn gamma_burstier_than_poisson() {
+        // same mean rate; Gamma(0.73) has higher CV than exponential
+        let mut g = RequestGenerator::fabrix(1.0, 3);
+        let mut p = RequestGenerator::new(ArrivalProcess::Poisson, 0.73, 1.0, 3);
+        let cv = |v: &[f64]| {
+            let m = v.iter().sum::<f64>() / v.len() as f64;
+            let var = v.iter().map(|x| (x - m).powi(2)).sum::<f64>() / v.len() as f64;
+            var.sqrt() / m
+        };
+        let cg = cv(&g.intervals(50_000));
+        let cp = cv(&p.intervals(50_000));
+        assert!(cg > cp * 1.1, "gamma CV {cg} vs poisson {cp}");
+    }
+
+    #[test]
+    fn uniform_process_deterministic() {
+        let mut g = RequestGenerator::new(ArrivalProcess::Uniform, 0.73, 10.0, 5);
+        let iv = g.intervals(10);
+        assert!(iv.iter().all(|&x| (x - 100.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn reproducible_by_seed() {
+        let c = Corpus::synthetic(50, 2);
+        let t1 = RequestGenerator::fabrix(1.0, 42).trace(&c, 20);
+        let t2 = RequestGenerator::fabrix(1.0, 42).trace(&c, 20);
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.arrival_ms, b.arrival_ms);
+            assert_eq!(a.prompt, b.prompt);
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Workload substrate: corpus loading, request-stream generation, and
+//! inter-arrival distribution analysis (paper §4.1 "Real-World Request
+//! Analysis" and §6.1 "Simulated Workload").
+
+pub mod corpus;
+pub mod generator;
+pub mod trace_io;
+pub mod tracefit;
+
+pub use corpus::{Corpus, CorpusEntry};
+pub use generator::{RequestGenerator, TraceRequest, ArrivalProcess};

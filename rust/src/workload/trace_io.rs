@@ -1,0 +1,110 @@
+//! Trace record / replay.
+//!
+//! The paper ships "a standalone generator in our public code for future
+//! research"; this module is its storage half: traces serialize to JSON so
+//! an experiment can be re-served bit-identically across schedulers,
+//! machines, or the real/sim engines (`elis gen-trace` / `--trace file`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+use super::generator::TraceRequest;
+
+pub fn to_json(trace: &[TraceRequest]) -> Json {
+    Json::Arr(
+        trace
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::Num(r.id as f64)),
+                    ("arrival_ms", Json::Num(r.arrival_ms)),
+                    ("prompt", Json::Arr(
+                        r.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
+                    ("total_len", Json::Num(r.total_len as f64)),
+                    ("topic", Json::Num(r.topic as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+pub fn from_json(j: &Json) -> Result<Vec<TraceRequest>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("trace must be a JSON array"))?
+        .iter()
+        .map(|e| {
+            Ok(TraceRequest {
+                id: e.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+                arrival_ms: e
+                    .get("arrival_ms")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("request missing arrival_ms"))?,
+                prompt: e
+                    .get("prompt")
+                    .and_then(Json::as_i32_vec)
+                    .ok_or_else(|| anyhow!("request missing prompt"))?,
+                total_len: e
+                    .get("total_len")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("request missing total_len"))?,
+                topic: e.get("topic").and_then(Json::as_usize).unwrap_or(0),
+            })
+        })
+        .collect()
+}
+
+pub fn save(trace: &[TraceRequest], path: &Path) -> Result<()> {
+    std::fs::write(path, to_json(trace).to_string())
+        .with_context(|| format!("writing trace {path:?}"))
+}
+
+pub fn load(path: &Path) -> Result<Vec<TraceRequest>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path:?}"))?;
+    from_json(&Json::parse(&text).context("parsing trace JSON")?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::corpus::Corpus;
+    use crate::workload::generator::RequestGenerator;
+
+    #[test]
+    fn roundtrip_preserves_trace() {
+        let corpus = Corpus::synthetic(40, 3);
+        let mut gen = RequestGenerator::fabrix(2.0, 9);
+        let trace = gen.trace(&corpus, 15);
+        let j = to_json(&trace);
+        let back = from_json(&j).unwrap();
+        assert_eq!(back.len(), trace.len());
+        for (a, b) in trace.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert!((a.arrival_ms - b.arrival_ms).abs() < 1e-9);
+            assert_eq!(a.prompt, b.prompt);
+            assert_eq!(a.total_len, b.total_len);
+            assert_eq!(a.topic, b.topic);
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let corpus = Corpus::synthetic(10, 4);
+        let mut gen = RequestGenerator::fabrix(1.0, 2);
+        let trace = gen.trace(&corpus, 5);
+        let path = std::env::temp_dir().join("elis_trace_test.json");
+        save(&trace, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 5);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(from_json(&Json::parse(r#"[{"arrival_ms":1}]"#).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Inter-arrival distribution analysis (paper Fig 4).
+//!
+//! The paper histograms 200k FabriX intervals and shows the Gamma PDF fits
+//! the observed data better than the Poisson PMF.  This module reproduces
+//! the analysis end to end: histogram the samples, fit both families by
+//! MLE, and compare log-likelihood / AIC.
+
+use crate::stats::fit::{aic, fit_exponential, fit_gamma, ExpFit, GammaFit};
+use crate::stats::summary::Histogram;
+
+#[derive(Debug, Clone)]
+pub struct TraceAnalysis {
+    pub n: usize,
+    pub mean: f64,
+    pub cv: f64,
+    pub gamma: Option<GammaFit>,
+    pub expo: Option<ExpFit>,
+    pub hist: Histogram,
+}
+
+impl TraceAnalysis {
+    pub fn winner(&self) -> &'static str {
+        match (&self.gamma, &self.expo) {
+            (Some(g), Some(e)) => {
+                if aic(g.loglik, 2) < aic(e.loglik, 1) {
+                    "gamma"
+                } else {
+                    "poisson"
+                }
+            }
+            (Some(_), None) => "gamma",
+            _ => "poisson",
+        }
+    }
+}
+
+/// Analyse a set of inter-arrival samples (ms or s — unit-agnostic).
+pub fn analyse(intervals: &[f64], hist_bins: usize) -> TraceAnalysis {
+    assert!(!intervals.is_empty());
+    let n = intervals.len();
+    let mean = intervals.iter().sum::<f64>() / n as f64;
+    let var = intervals.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+    let hi = intervals.iter().cloned().fold(0.0, f64::max).max(1e-9);
+    let mut hist = Histogram::new(0.0, hi * 1.0001, hist_bins.max(1));
+    for &x in intervals {
+        hist.add(x);
+    }
+    TraceAnalysis {
+        n,
+        mean,
+        cv: var.sqrt() / mean.max(1e-300),
+        gamma: fit_gamma(intervals),
+        expo: fit_exponential(intervals),
+        hist,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::generator::{ArrivalProcess, RequestGenerator};
+
+    #[test]
+    fn gamma_wins_on_fabrix_style_trace() {
+        let mut g = RequestGenerator::fabrix(1.0, 101);
+        let a = analyse(&g.intervals(100_000), 50);
+        assert_eq!(a.winner(), "gamma");
+        let fit = a.gamma.unwrap();
+        assert!((fit.shape - 0.73).abs() < 0.03, "shape {}", fit.shape);
+        assert!(a.cv > 1.05, "gamma(0.73) CV should exceed 1, got {}", a.cv);
+    }
+
+    #[test]
+    fn poisson_trace_yields_shape_near_one() {
+        let mut p = RequestGenerator::new(ArrivalProcess::Poisson, 0.73, 1.0, 5);
+        let a = analyse(&p.intervals(100_000), 50);
+        let fit = a.gamma.unwrap();
+        assert!((fit.shape - 1.0).abs() < 0.05, "shape {}", fit.shape);
+    }
+
+    #[test]
+    fn histogram_covers_samples() {
+        let a = analyse(&[1.0, 2.0, 3.0, 4.0, 100.0], 10);
+        assert_eq!(a.hist.total + a.hist.out_of_range, 5);
+        assert_eq!(a.n, 5);
+    }
+}

@@ -1,0 +1,250 @@
+//! Integration tests over the REAL artifact path: HLO text -> PJRT ->
+//! TinyGPT + predictor.  Skipped (cleanly) when `make artifacts` has not
+//! run yet.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use elis::coordinator::{run_serving, ClockMode, Policy, Scheduler, ServeConfig};
+use elis::engine::pjrt_engine::PjrtEngine;
+use elis::engine::{Engine, SeqSpec};
+use elis::predictor::eval::StepDataset;
+use elis::predictor::hlo::HloPredictor;
+use elis::predictor::LengthPredictor;
+use elis::runtime::{default_artifacts_dir, Manifest, Runtime, WeightStore};
+use elis::util::json::Json;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = default_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(d) => d,
+            None => return,
+        }
+    };
+}
+
+fn load_engine(dir: &PathBuf) -> (Manifest, PjrtEngine) {
+    let manifest = Manifest::load(dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let engine = PjrtEngine::load(rt, &manifest, &store, 1 << 20).unwrap();
+    (manifest, engine)
+}
+
+#[test]
+fn golden_tokens_match_python_exactly() {
+    let dir = require_artifacts!();
+    let golden_path = dir.join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("SKIP: no golden.json");
+        return;
+    }
+    let g = Json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+    let prompt = g.get("prompt").and_then(Json::as_i32_vec).unwrap();
+    let expect = g.get("tokens").and_then(Json::as_i32_vec).unwrap();
+
+    let (_, mut engine) = load_engine(&dir);
+    engine
+        .admit(SeqSpec { id: 1, prompt, target_total: expect.len() , topic: 0})
+        .unwrap();
+    let mut got: Vec<i32> = Vec::new();
+    while got.len() < expect.len() {
+        let w = engine.run_window(&[1]).unwrap();
+        let out = &w.outputs[0];
+        got.extend_from_slice(&out.new_tokens);
+        if out.done {
+            break;
+        }
+    }
+    assert_eq!(got.len(), expect.len());
+    assert_eq!(got, expect,
+               "rust HLO path must reproduce the jax token stream exactly");
+}
+
+#[test]
+fn decode_is_deterministic_across_batch_sizes() {
+    let dir = require_artifacts!();
+    let (_, mut e1) = load_engine(&dir);
+    let (_, mut e2) = load_engine(&dir);
+    let prompt = vec![1, 50, 900, 333, 1200];
+
+    e1.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0}).unwrap();
+    let mut a = Vec::new();
+    loop {
+        let w = e1.run_window(&[1]).unwrap();
+        a.extend_from_slice(&w.outputs[0].new_tokens);
+        if w.outputs[0].done {
+            break;
+        }
+    }
+
+    // same job batched with a second sequence: identical token stream
+    e2.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0}).unwrap();
+    e2.admit(SeqSpec { id: 2, prompt: vec![1, 7, 8, 9], target_total: 60 , topic: 0}).unwrap();
+    let mut b = Vec::new();
+    loop {
+        let w = e2.run_window(&[1, 2]).unwrap();
+        let out = w.outputs.iter().find(|o| o.id == 1).unwrap();
+        b.extend_from_slice(&out.new_tokens);
+        if out.done {
+            break;
+        }
+    }
+    assert_eq!(a, b, "batch composition must not change a sequence's tokens");
+}
+
+#[test]
+fn hlo_predictor_beats_mean_baseline_on_test_set() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut p = HloPredictor::load(rt, &manifest, &store, None).unwrap();
+    let ds = StepDataset::load(&dir).unwrap();
+    let m = ds.evaluate(&mut p, 400);
+    // mean-baseline has R^2 = 0 by definition; the trained artifact must be
+    // meaningfully better, and in the ballpark of the build-time metrics
+    assert!(m.r2 > 0.2, "R^2 {}", m.r2);
+    assert!(m.mae < 100.0, "MAE {}", m.mae);
+}
+
+#[test]
+fn predictor_init_weights_are_worse_than_trained() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut trained = HloPredictor::load(rt.clone(), &manifest, &store, None).unwrap();
+    let mut init =
+        HloPredictor::load(rt, &manifest, &store, Some("predictor_init")).unwrap();
+    let ds = StepDataset::load(&dir).unwrap();
+    let mt = ds.evaluate(&mut trained, 300);
+    let mi = ds.evaluate(&mut init, 300);
+    assert!(mt.mae < mi.mae, "trained {} vs init {}", mt.mae, mi.mae);
+    assert!(mt.r2 > mi.r2);
+}
+
+#[test]
+fn iterative_prediction_remaining_shrinks_for_real_predictor() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut p = HloPredictor::load(rt, &manifest, &store, None).unwrap();
+    let corpus = Corpus::load(&dir).unwrap();
+    // average predicted remaining must fall as generated grows
+    let sample: Vec<_> = corpus.entries.iter().take(32).collect();
+    let mut means = Vec::new();
+    for gen in [0usize, 100, 200] {
+        let queries: Vec<elis::predictor::PredictQuery<'_>> = sample
+            .iter()
+            .enumerate()
+            .map(|(i, e)| elis::predictor::PredictQuery {
+                job_id: i as u64,
+                prompt: &e.tokens,
+                gen_suffix: &[],
+                generated: gen,
+                true_total: e.total_len,
+            })
+            .collect();
+        let preds = p.predict(&queries);
+        means.push(preds.iter().sum::<f64>() / preds.len() as f64);
+    }
+    assert!(means[1] < means[0], "{means:?}");
+    assert!(means[2] < means[1], "{means:?}");
+}
+
+#[test]
+fn real_serving_small_trace_completes() {
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let corpus = Corpus::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+
+    // pick short jobs to bound test runtime
+    let mut short = corpus.clone();
+    short.entries.retain(|e| e.total_len <= 80);
+    short.entries.truncate(30);
+    let mut gen = RequestGenerator::fabrix(5.0, 3);
+    let trace = gen.trace(&short, 4);
+
+    let mut engines: Vec<Box<dyn Engine>> = vec![Box::new(
+        PjrtEngine::load(rt.clone(), &manifest, &store, 1 << 20).unwrap(),
+    )];
+    let mut sched = Scheduler::new(
+        Policy::Isrtf,
+        Box::new(HloPredictor::load(rt, &manifest, &store, None).unwrap()),
+    );
+    let cfg = ServeConfig {
+        clock: ClockMode::Wall,
+        max_iterations: 10_000,
+        ..Default::default()
+    };
+    let r = run_serving(&cfg, &trace, &mut engines, &mut sched).unwrap();
+    assert_eq!(r.n(), 4);
+    for rec in &r.records {
+        assert!(rec.tokens >= 1);
+        assert!(rec.jct_ms > 0.0);
+    }
+}
+
+#[test]
+fn embeddings_cluster_by_topic() {
+    // Fig 1 property as a test: same-topic prompts embed closer together
+    let dir = require_artifacts!();
+    let manifest = Manifest::load(&dir).unwrap();
+    let store = WeightStore::load(&manifest).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut p = HloPredictor::load(rt, &manifest, &store, None).unwrap();
+
+    let text = std::fs::read_to_string(dir.join("embed_groups.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let take = |k: &str| -> Vec<Vec<i32>> {
+        j.get(k)
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .take(24)
+            .map(|r| {
+                r.as_i32_vec().unwrap().into_iter().filter(|&t| t != 0).collect()
+            })
+            .collect()
+    };
+    let sim = p.embed(&take("similar")).unwrap();
+    let dis = p.embed(&take("dissimilar")).unwrap();
+
+    let dist = |a: &[f32], b: &[f32]| -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let mean_pairwise = |v: &[Vec<f32>]| -> f64 {
+        let mut s = 0.0;
+        let mut n = 0.0;
+        for i in 0..v.len() {
+            for k in i + 1..v.len() {
+                s += dist(&v[i], &v[k]);
+                n += 1.0;
+            }
+        }
+        s / n
+    };
+    let d_sim = mean_pairwise(&sim);
+    let d_dis = mean_pairwise(&dis);
+    assert!(d_sim < d_dis * 0.8,
+            "same-topic spread {d_sim} must be well below mixed {d_dis}");
+}

@@ -1,0 +1,275 @@
+//! Integration tests over the full coordinator + sim engine stack.
+//! No artifacts required — everything runs on synthetic corpora and the
+//! calibrated discrete-event engine.
+
+use elis::coordinator::{
+    run_serving, ClockMode, LbStrategy, Policy, PreemptionPolicy, Scheduler,
+    ServeConfig,
+};
+use elis::engine::profiles::ModelProfile;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::metrics::ServeReport;
+use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::surrogate::SurrogatePredictor;
+use elis::predictor::LengthPredictor;
+use elis::runtime::manifest::ServedModelMeta;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn profile(avg_latency_ms: f64) -> ModelProfile {
+    ModelProfile::from_meta(&ServedModelMeta {
+        name: "test".into(),
+        abbrev: "test".into(),
+        params_b: 7.0,
+        avg_latency_ms,
+        kv_bytes_per_token: 1 << 20,
+        preempt_batch: 0,
+        mem_limit_frac: 0.9,
+    })
+}
+
+fn engines(n: usize, kv_bytes: usize) -> Vec<Box<dyn Engine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(SimEngine::new(profile(2000.0), 50, 4, kv_bytes))
+                as Box<dyn Engine>
+        })
+        .collect()
+}
+
+fn run_with(policy: Policy, predictor: Box<dyn LengthPredictor>,
+            workers: usize, rps: f64, n: usize, seed: u64,
+            preemption: PreemptionPolicy, aging: f64) -> ServeReport {
+    let corpus = Corpus::synthetic(400, seed);
+    let mut gen = RequestGenerator::fabrix(rps, seed);
+    let trace = gen.trace(&corpus, n);
+    let mut sched = Scheduler::new(policy, predictor).with_aging(aging);
+    let cfg = ServeConfig {
+        workers,
+        preemption,
+        max_iterations: 5_000_000,
+        seed,
+        ..Default::default()
+    };
+    let mut e = engines(workers, 8 << 30);
+    run_serving(&cfg, &trace, &mut e, &mut sched).unwrap()
+}
+
+fn run(policy: Policy, workers: usize, rps: f64, n: usize, seed: u64) -> ServeReport {
+    run_with(policy, Box::new(OraclePredictor), workers, rps, n, seed,
+             PreemptionPolicy::default(), 0.0)
+}
+
+#[test]
+fn every_job_completes_with_consistent_metrics() {
+    let r = run(Policy::Fcfs, 2, 2.0, 60, 1);
+    assert_eq!(r.n(), 60);
+    for rec in &r.records {
+        assert!(rec.finish_ms >= rec.arrival_ms);
+        assert!(rec.jct_ms >= rec.service_ms - 1e-6 || rec.queue_delay_ms == 0.0);
+        assert!(rec.ttft_ms >= 0.0);
+        assert!(rec.windows >= 1);
+        assert!(rec.tokens >= 1);
+    }
+    assert!(r.makespan_ms > 0.0);
+    assert!(r.sched_iterations > 0);
+}
+
+#[test]
+fn srpt_and_sjf_beat_fcfs_under_load() {
+    // average over 3 seeds to be robust
+    let mut fcfs = 0.0;
+    let mut srpt = 0.0;
+    let mut sjf = 0.0;
+    for seed in 0..3 {
+        fcfs += run(Policy::Fcfs, 1, 3.0, 80, seed).avg_jct_s();
+        srpt += run(Policy::Srpt, 1, 3.0, 80, seed).avg_jct_s();
+        sjf += run_with(Policy::Sjf, Box::new(FrozenOracle), 1, 3.0, 80, seed,
+                        PreemptionPolicy::default(), 0.0)
+            .avg_jct_s();
+    }
+    assert!(srpt < fcfs, "SRPT {srpt} vs FCFS {fcfs}");
+    assert!(sjf < fcfs, "SJF {sjf} vs FCFS {fcfs}");
+}
+
+#[test]
+fn isrtf_with_noisy_predictor_beats_fcfs() {
+    let mut fcfs = 0.0;
+    let mut isrtf = 0.0;
+    for seed in 0..3 {
+        fcfs += run(Policy::Fcfs, 1, 3.0, 80, seed).avg_jct_s();
+        isrtf += run_with(Policy::Isrtf,
+                          Box::new(SurrogatePredictor::calibrated(seed)),
+                          1, 3.0, 80, seed,
+                          PreemptionPolicy::default(), 0.0)
+            .avg_jct_s();
+    }
+    assert!(isrtf < fcfs, "ISRTF(noisy) {isrtf} vs FCFS {fcfs}");
+}
+
+#[test]
+fn isrtf_sits_between_fcfs_and_oracle_srpt() {
+    let mut fcfs = 0.0;
+    let mut isrtf = 0.0;
+    let mut srpt = 0.0;
+    for seed in 10..14 {
+        fcfs += run(Policy::Fcfs, 1, 3.0, 80, seed).avg_jct_s();
+        isrtf += run_with(Policy::Isrtf,
+                          Box::new(SurrogatePredictor::calibrated(seed)),
+                          1, 3.0, 80, seed,
+                          PreemptionPolicy::default(), 0.0)
+            .avg_jct_s();
+        srpt += run(Policy::Srpt, 1, 3.0, 80, seed).avg_jct_s();
+    }
+    assert!(srpt <= isrtf + 1e-9, "oracle {srpt} must not lose to noisy {isrtf}");
+    assert!(isrtf < fcfs, "ISRTF {isrtf} vs FCFS {fcfs}");
+}
+
+#[test]
+fn queueing_delay_is_the_mechanism() {
+    // paper §6.2: the JCT win comes almost entirely from queueing delay
+    let fcfs = run(Policy::Fcfs, 1, 4.0, 80, 3);
+    let srpt = run(Policy::Srpt, 1, 4.0, 80, 3);
+    let jct_gain = fcfs.avg_jct_s() - srpt.avg_jct_s();
+    let qd_gain = fcfs.avg_queue_delay_s() - srpt.avg_queue_delay_s();
+    assert!(jct_gain > 0.0);
+    assert!((jct_gain - qd_gain).abs() / jct_gain < 0.25,
+            "JCT gain {jct_gain} should be ~= queue-delay gain {qd_gain}");
+}
+
+#[test]
+fn scaling_workers_increases_throughput() {
+    let r1 = run(Policy::Isrtf, 1, 6.0, 80, 5);
+    let r4 = run(Policy::Isrtf, 4, 6.0, 80, 5);
+    assert!(r4.avg_jct_s() < r1.avg_jct_s());
+    assert!(r4.avg_queue_delay_s() < r1.avg_queue_delay_s());
+}
+
+#[test]
+fn load_balancer_spreads_jobs() {
+    let r = run(Policy::Fcfs, 4, 8.0, 100, 7);
+    let mut per_node = [0usize; 4];
+    for rec in &r.records {
+        per_node[rec.node] += 1;
+    }
+    for &c in &per_node {
+        assert!(c >= 10, "node starved: {per_node:?}");
+    }
+}
+
+#[test]
+fn preemption_occurs_under_tiny_kv_pool_and_respects_budget() {
+    let corpus = Corpus::synthetic(200, 11);
+    let mut gen = RequestGenerator::fabrix(5.0, 11);
+    let trace = gen.trace(&corpus, 40);
+    let policy = PreemptionPolicy {
+        enabled: true,
+        max_preemptions_per_job: 2,
+        max_per_iteration: usize::MAX,
+    };
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        preemption: policy,
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+    // pool of ~40 blocks -> heavy preemption pressure
+    let mut e: Vec<Box<dyn Engine>> = vec![Box::new(SimEngine::new(
+        profile(2000.0), 50, 4, 40 * 16 * (1 << 20)))];
+    let r = run_serving(&cfg, &trace, &mut e, &mut sched).unwrap();
+    assert_eq!(r.n(), 40, "all jobs still finish despite preemption");
+    assert!(r.total_preemptions > 0, "tiny pool must preempt");
+}
+
+#[test]
+fn disabled_preemption_still_completes() {
+    let corpus = Corpus::synthetic(100, 13);
+    let mut gen = RequestGenerator::fabrix(3.0, 13);
+    let trace = gen.trace(&corpus, 30);
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        preemption: PreemptionPolicy::disabled(),
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+    let mut e = engines(1, 8 << 30);
+    let r = run_serving(&cfg, &trace, &mut e, &mut sched).unwrap();
+    assert_eq!(r.n(), 30);
+}
+
+#[test]
+fn aging_bounds_long_job_starvation() {
+    // without aging, a very long job under SRPT + constant short-job stream
+    // waits much longer than with aging
+    let no_aging = run_with(Policy::Srpt, Box::new(OraclePredictor), 1, 4.0,
+                            120, 17, PreemptionPolicy::default(), 0.0);
+    let aged = run_with(Policy::Srpt, Box::new(OraclePredictor), 1, 4.0,
+                        120, 17, PreemptionPolicy::default(), 10.0);
+    let max_no = no_aging.max_jct_s();
+    let max_aged = aged.max_jct_s();
+    assert!(max_aged <= max_no * 1.2,
+            "aging should not blow up worst-case JCT: {max_aged} vs {max_no}");
+    // aging trades average JCT for tail fairness; the trade must stay sane
+    assert!(aged.avg_jct_s() <= no_aging.avg_jct_s() * 2.5,
+            "aged {} vs {}", aged.avg_jct_s(), no_aging.avg_jct_s());
+}
+
+#[test]
+fn wall_clock_mode_works_with_sim_engine() {
+    // tiny run in wall mode (arrivals in the past -> no sleeping)
+    let corpus = Corpus::synthetic(50, 19);
+    let mut gen = RequestGenerator::fabrix(1000.0, 19); // all arrive ~instantly
+    let trace = gen.trace(&corpus, 10);
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        clock: ClockMode::Wall,
+        max_iterations: 100_000,
+        ..Default::default()
+    };
+    let mut e = engines(1, 8 << 30);
+    let r = run_serving(&cfg, &trace, &mut e, &mut sched).unwrap();
+    assert_eq!(r.n(), 10);
+}
+
+#[test]
+fn round_robin_lb_also_completes() {
+    let corpus = Corpus::synthetic(100, 23);
+    let mut gen = RequestGenerator::fabrix(4.0, 23);
+    let trace = gen.trace(&corpus, 40);
+    let mut sched = Scheduler::new(Policy::Isrtf,
+                                   Box::new(SurrogatePredictor::calibrated(23)));
+    let cfg = ServeConfig {
+        workers: 3,
+        lb: LbStrategy::RoundRobin,
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+    let mut e = engines(3, 8 << 30);
+    let r = run_serving(&cfg, &trace, &mut e, &mut sched).unwrap();
+    assert_eq!(r.n(), 40);
+}
+
+#[test]
+fn mlfq_baseline_runs_and_degrades_gracefully() {
+    let mlfq = run(Policy::Mlfq, 1, 3.0, 80, 29);
+    let fcfs = run(Policy::Fcfs, 1, 3.0, 80, 29);
+    assert_eq!(mlfq.n(), 80);
+    // MLFQ should at least not be catastrophically worse than FCFS
+    assert!(mlfq.avg_jct_s() < fcfs.avg_jct_s() * 2.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run(Policy::Isrtf, 2, 3.0, 50, 31);
+    let b = run(Policy::Isrtf, 2, 3.0, 50, 31);
+    assert_eq!(a.n(), b.n());
+    assert!((a.avg_jct_s() - b.avg_jct_s()).abs() < 1e-9);
+    assert_eq!(a.sched_iterations, b.sched_iterations);
+}
+
+#[test]
+fn higher_rps_multiple_worsens_jct() {
+    let low = run(Policy::Fcfs, 1, 1.0, 60, 37);
+    let high = run(Policy::Fcfs, 1, 5.0, 60, 37);
+    assert!(high.avg_jct_s() > low.avg_jct_s());
+}
