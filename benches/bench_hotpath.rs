@@ -12,11 +12,13 @@ use std::time::Duration;
 
 use common::BenchCtx;
 use elis::coordinator::priority_buffer::{Entry, PriorityBuffer};
-use elis::coordinator::{GlobalState, LbStrategy, LoadBalancer, Policy,
-                        Scheduler};
+use elis::coordinator::{CoordinatorBuilder, GlobalState, JobId, LbStrategy,
+                        LoadBalancer, Policy, Scheduler, ServeConfig};
 use elis::coordinator::job::Job;
 use elis::engine::pjrt_engine::PjrtEngine;
+use elis::engine::sim_engine::SimEngine;
 use elis::engine::{Engine, SeqSpec};
+use elis::workload::RequestGenerator;
 use elis::predictor::hlo::HloPredictor;
 use elis::predictor::surrogate::SurrogatePredictor;
 use elis::predictor::{LengthPredictor, PredictQuery};
@@ -49,10 +51,49 @@ fn main() {
             b.push(0, Entry {
                 priority: heap_rng.f64(),
                 arrival_ms: i as f64,
-                id: i,
+                id: JobId::from_raw(i),
             });
         }
         std::hint::black_box(b.drain_sorted(0));
+    })
+    .report();
+
+    // membership checks: the old frontend paid a linear `Vec::contains`
+    // per queued id per iteration; the JobTable refactor replaced that
+    // with slab flags (O(1) indexing) — hash sets shown for reference
+    let ids: Vec<u64> = (0..512).collect();
+    let probes: Vec<u64> = (0..512).step_by(8).collect();
+    bench("membership: Vec::contains (512 ids, 64 probes)", 3, 500, budget,
+          || {
+        let mut hits = 0usize;
+        for p in std::hint::black_box(&probes) {
+            if ids.contains(p) {
+                hits += 1;
+            }
+        }
+        std::hint::black_box(hits);
+    })
+    .report();
+    let set: std::collections::HashSet<u64> = ids.iter().copied().collect();
+    bench("membership: HashSet (512 ids, 64 probes)", 3, 500, budget, || {
+        let mut hits = 0usize;
+        for p in std::hint::black_box(&probes) {
+            if set.contains(p) {
+                hits += 1;
+            }
+        }
+        std::hint::black_box(hits);
+    })
+    .report();
+    let flags: Vec<bool> = vec![true; 512];
+    bench("membership: slab flag (512 ids, 64 probes)", 3, 500, budget, || {
+        let mut hits = 0usize;
+        for p in std::hint::black_box(&probes) {
+            if flags[*p as usize] {
+                hits += 1;
+            }
+        }
+        std::hint::black_box(hits);
     })
     .report();
 
@@ -70,7 +111,8 @@ fn main() {
                                    Box::new(SurrogatePredictor::calibrated(1)));
     let mut jobs: Vec<Job> = (0..64)
         .map(|i| {
-            let mut j = Job::new(i, vec![5; 32], 200, 0, i as f64);
+            let mut j = Job::new(JobId::from_raw(i), vec![5; 32], 200, 0,
+                                 i as f64);
             j.generated = (i as usize % 4) * 50;
             j
         })
@@ -83,6 +125,37 @@ fn main() {
         sched.refresh(&mut refs, 0.0);
     })
     .report();
+
+    // ---------- full coordinator iteration (stepped API, sim engine) ----
+    // the acceptance metric of the Coordinator/JobTable refactor: avg
+    // scheduling overhead per iteration (refresh + queue rebuild + batch
+    // formation) on a deep single-node queue, virtual clock
+    {
+        let profile = ctx.profile("lam13");
+        let mut gen = RequestGenerator::fabrix(50.0, 42);
+        let trace = gen.trace(&ctx.corpus, 256);
+        let mut engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SimEngine::with_profile_budget(
+                profile, ctx.manifest.window_size, 8))];
+        let mut coord_sched = Scheduler::new(
+            Policy::Isrtf, Box::new(SurrogatePredictor::calibrated(1)));
+        let cfg = ServeConfig {
+            max_batch: 8,
+            max_iterations: 20_000_000,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let r = CoordinatorBuilder::from_config(cfg)
+            .build(&trace, &mut engines, &mut coord_sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        println!(
+            "coordinator run_to_completion: 256 jobs burst-queued, {} \
+             iterations, {:.4} ms/iter scheduling overhead, wall {:?}",
+            r.sched_iterations, r.sched_overhead_ms_avg, t0.elapsed()
+        );
+    }
 
     // ---------- predictor artifact (the paper's BERT cost) ----------
     let mut hlo = HloPredictor::load(ctx.rt.clone(), &ctx.manifest, &ctx.store,
@@ -111,7 +184,8 @@ fn main() {
                                     None).unwrap()),
     );
     let mut jobs8: Vec<Job> = (0..8)
-        .map(|i| Job::new(i, prompts[i as usize % prompts.len()].clone(),
+        .map(|i| Job::new(JobId::from_raw(i),
+                          prompts[i as usize % prompts.len()].clone(),
                           200, 0, 0.0))
         .collect();
     let mut tick = 0u64;

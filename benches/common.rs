@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::coordinator::{CoordinatorBuilder, Policy, Scheduler, ServeConfig};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
@@ -107,7 +107,10 @@ impl BenchCtx {
             max_iterations: 20_000_000,
             ..Default::default()
         };
-        run_serving(&cfg, &trace, &mut engines, &mut sched).expect("serving run")
+        CoordinatorBuilder::from_config(cfg)
+            .build(&trace, &mut engines, &mut sched)
+            .and_then(|mut c| c.run_to_completion())
+            .expect("serving run")
     }
 
     /// Average JCT (s) over shuffled repeats (paper: same prompt set,

@@ -6,8 +6,8 @@
 
 use anyhow::Result;
 
-use elis::coordinator::{run_serving, Policy, PreemptionPolicy, Scheduler,
-                        ServeConfig};
+use elis::coordinator::{CoordinatorBuilder, Policy, PreemptionPolicy,
+                        Scheduler, ServeConfig, SharedCounter};
 use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
@@ -53,7 +53,15 @@ fn run(kv_blocks: usize, budget: usize) -> Result<(u64, usize, f64)> {
         max_iterations: 5_000_000,
         ..Default::default()
     };
-    let r = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+    // an EventSink observes every preemption as the loop runs — no need to
+    // wait for the final report
+    let counter = SharedCounter::new();
+    let r = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(counter.clone()))
+        .build(&trace, &mut engines, &mut sched)?
+        .run_to_completion()?;
+    assert_eq!(counter.snapshot().preempted, r.total_preemptions,
+               "observer and report must agree");
     let max_per_job = r.records.iter().map(|x| x.preemptions).max().unwrap_or(0);
     Ok((r.total_preemptions, max_per_job, r.avg_jct_s()))
 }

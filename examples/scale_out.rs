@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use elis::coordinator::frontend::peak_rps_search;
-use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::coordinator::{CoordinatorBuilder, Policy, Scheduler, ServeConfig};
 use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
@@ -48,7 +48,9 @@ fn main() -> Result<()> {
                 max_iterations: 10_000_000,
                 ..Default::default()
             };
-            run_serving(&cfg, &trace, &mut engines, &mut sched)
+            CoordinatorBuilder::from_config(cfg)
+                .build(&trace, &mut engines, &mut sched)
+                .and_then(|mut c| c.run_to_completion())
                 .map(|r| r.avg_queue_delay_s())
                 .unwrap_or(f64::INFINITY)
         };

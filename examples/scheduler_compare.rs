@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use elis::coordinator::{run_serving, Policy, Scheduler, ServeConfig};
+use elis::coordinator::{CoordinatorBuilder, Policy, Scheduler, ServeConfig};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
@@ -63,7 +63,9 @@ fn main() -> Result<()> {
             max_iterations: 10_000_000,
             ..Default::default()
         };
-        let r = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+        let r = CoordinatorBuilder::from_config(cfg)
+            .build(&trace, &mut engines, &mut sched)?
+            .run_to_completion()?;
         table.row(vec![
             r.scheduler.clone(),
             pname.to_string(),

@@ -9,7 +9,8 @@
 use anyhow::Result;
 
 use elis::coordinator::{
-    run_serving, ClockMode, Policy, PreemptionPolicy, Scheduler, ServeConfig,
+    ClockMode, CoordinatorBuilder, Policy, PreemptionPolicy, Scheduler,
+    ServeConfig,
 };
 use elis::engine::pjrt_engine::PjrtEngine;
 use elis::engine::Engine;
@@ -72,7 +73,9 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let t0 = std::time::Instant::now();
-        let report = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+        let report = CoordinatorBuilder::from_config(cfg)
+            .build(&trace, &mut engines, &mut sched)?
+            .run_to_completion()?;
         println!("  {} finished in {:?}", policy.name(), t0.elapsed());
         table.row(vec![
             report.scheduler.clone(),

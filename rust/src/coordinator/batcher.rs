@@ -6,15 +6,16 @@
 //! backend only once" — by tracking which jobs' prompts each node has
 //! already received and counting transfer bytes saved.
 
-use std::collections::BTreeSet;
+use std::collections::HashSet;
 
+use super::job::JobId;
 use super::priority_buffer::{Entry, PriorityBuffer};
 
 #[derive(Debug, Clone)]
 pub struct Batch {
     pub node: usize,
     /// job ids in priority order (highest priority first)
-    pub jobs: Vec<u64>,
+    pub jobs: Vec<JobId>,
 }
 
 #[derive(Debug, Default, Clone)]
@@ -27,7 +28,7 @@ pub struct TransferStats {
 pub struct Batcher {
     pub max_batch: usize,
     /// per-node set of job ids whose prompt was already transferred
-    sent: Vec<BTreeSet<u64>>,
+    sent: Vec<HashSet<JobId>>,
     pub stats: TransferStats,
 }
 
@@ -36,7 +37,7 @@ impl Batcher {
         assert!(max_batch >= 1);
         Batcher {
             max_batch,
-            sent: (0..nodes).map(|_| BTreeSet::new()).collect(),
+            sent: (0..nodes).map(|_| HashSet::new()).collect(),
             stats: TransferStats::default(),
         }
     }
@@ -54,7 +55,7 @@ impl Batcher {
 
     /// Record the prompt transfer for a job; returns true if the prompt
     /// actually needs to be sent (first time on this node).
-    pub fn mark_prompt_sent(&mut self, node: usize, job_id: u64,
+    pub fn mark_prompt_sent(&mut self, node: usize, job_id: JobId,
                             prompt_tokens: usize) -> bool {
         if self.sent[node].insert(job_id) {
             self.stats.prompts_sent += 1;
@@ -67,7 +68,7 @@ impl Batcher {
     }
 
     /// Forget a finished job's transfer record.
-    pub fn forget(&mut self, node: usize, job_id: u64) {
+    pub fn forget(&mut self, node: usize, job_id: JobId) {
         self.sent[node].remove(&job_id);
     }
 }
@@ -75,10 +76,13 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::priority_buffer::Entry;
 
     fn push(b: &mut PriorityBuffer, node: usize, id: u64, prio: f64) {
-        b.push(node, Entry { priority: prio, arrival_ms: 0.0, id });
+        b.push(node, Entry {
+            priority: prio,
+            arrival_ms: 0.0,
+            id: JobId::from_raw(id),
+        });
     }
 
     #[test]
@@ -89,7 +93,8 @@ mod tests {
         }
         let mut b = Batcher::new(1, 3);
         let batch = b.form_batch(&mut buf, 0).unwrap();
-        assert_eq!(batch.jobs, vec![5, 2, 3]);
+        let ids: Vec<u64> = batch.jobs.iter().map(|j| j.raw()).collect();
+        assert_eq!(ids, vec![5, 2, 3]);
         assert_eq!(buf.len(0), 2, "unchosen jobs stay queued");
     }
 
@@ -103,13 +108,14 @@ mod tests {
     #[test]
     fn prompt_sent_once_per_node() {
         let mut b = Batcher::new(2, 4);
-        assert!(b.mark_prompt_sent(0, 7, 32));
-        assert!(!b.mark_prompt_sent(0, 7, 32), "resend avoided");
-        assert!(b.mark_prompt_sent(1, 7, 32), "other node needs it");
+        let id = JobId::from_raw(7);
+        assert!(b.mark_prompt_sent(0, id, 32));
+        assert!(!b.mark_prompt_sent(0, id, 32), "resend avoided");
+        assert!(b.mark_prompt_sent(1, id, 32), "other node needs it");
         assert_eq!(b.stats.prompts_sent, 2);
         assert_eq!(b.stats.resend_avoided, 1);
         assert_eq!(b.stats.prompt_tokens_sent, 64);
-        b.forget(0, 7);
-        assert!(b.mark_prompt_sent(0, 7, 32), "forgotten after finish");
+        b.forget(0, id);
+        assert!(b.mark_prompt_sent(0, id, 32), "forgotten after finish");
     }
 }

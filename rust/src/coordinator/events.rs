@@ -1,0 +1,145 @@
+//! Observer hooks for the stepped [`Coordinator`](super::Coordinator) API.
+//!
+//! An [`EventSink`] receives a callback at every state transition of the
+//! serving loop: job admitted, batch formed, window done, job finished,
+//! job preempted.  Sinks are registered on the
+//! [`CoordinatorBuilder`](super::CoordinatorBuilder) and called
+//! synchronously from inside the loop, so they see events in exact causal
+//! order with the coordinator's own timestamps (virtual or wall ms).
+//!
+//! This is the extension point the ROADMAP's follow-on scenarios hang off:
+//! SLO-aware scheduling (watch per-job latency as windows complete),
+//! streaming admission control (watch queue growth at admit time),
+//! multi-tenant fairness accounting, structured logging, and live metrics
+//! export — none of which need to touch the serving loop itself.
+
+use super::job::JobId;
+
+/// Receiver for coordinator lifecycle events.  All methods default to
+/// no-ops; implement only what you need.  Times are coordinator time
+/// (virtual ms in [`ClockMode::Virtual`](super::ClockMode), wall ms since
+/// serving start otherwise).
+pub trait EventSink {
+    /// A job arrived and was assigned to `node` by the load balancer.
+    fn on_job_admitted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
+
+    /// A batch was formed for `node` (jobs in priority order) and is about
+    /// to execute one scheduling window.
+    fn on_batch_formed(&mut self, _node: usize, _jobs: &[JobId],
+                       _now_ms: f64) {}
+
+    /// A scheduling window completed on `node` after `service_ms`.
+    fn on_window_done(&mut self, _node: usize, _batch: &[JobId],
+                      _service_ms: f64, _now_ms: f64) {}
+
+    /// A job produced its full response; `jct_ms` is its completion time.
+    fn on_job_finished(&mut self, _job: JobId, _node: usize, _jct_ms: f64,
+                       _now_ms: f64) {}
+
+    /// The engine evicted a job's KV during the last window.
+    fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
+}
+
+/// Counts every event kind — handy for tests, sanity checks, and quick
+/// telemetry without a metrics stack.
+#[derive(Debug, Default, Clone)]
+pub struct EventCounter {
+    pub admitted: u64,
+    pub batches: u64,
+    pub windows: u64,
+    pub finished: u64,
+    pub preempted: u64,
+}
+
+impl EventSink for EventCounter {
+    fn on_job_admitted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {
+        self.admitted += 1;
+    }
+
+    fn on_batch_formed(&mut self, _node: usize, _jobs: &[JobId],
+                       _now_ms: f64) {
+        self.batches += 1;
+    }
+
+    fn on_window_done(&mut self, _node: usize, _batch: &[JobId],
+                      _service_ms: f64, _now_ms: f64) {
+        self.windows += 1;
+    }
+
+    fn on_job_finished(&mut self, _job: JobId, _node: usize, _jct_ms: f64,
+                       _now_ms: f64) {
+        self.finished += 1;
+    }
+
+    fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {
+        self.preempted += 1;
+    }
+}
+
+/// Shared-cell wrapper so a caller can keep reading a sink it handed to the
+/// builder (sinks are boxed into the coordinator).
+#[derive(Debug, Default, Clone)]
+pub struct SharedCounter(std::rc::Rc<std::cell::RefCell<EventCounter>>);
+
+impl SharedCounter {
+    pub fn new() -> SharedCounter {
+        SharedCounter::default()
+    }
+
+    pub fn snapshot(&self) -> EventCounter {
+        self.0.borrow().clone()
+    }
+}
+
+impl EventSink for SharedCounter {
+    fn on_job_admitted(&mut self, job: JobId, node: usize, now_ms: f64) {
+        self.0.borrow_mut().on_job_admitted(job, node, now_ms);
+    }
+
+    fn on_batch_formed(&mut self, node: usize, jobs: &[JobId], now_ms: f64) {
+        self.0.borrow_mut().on_batch_formed(node, jobs, now_ms);
+    }
+
+    fn on_window_done(&mut self, node: usize, batch: &[JobId],
+                      service_ms: f64, now_ms: f64) {
+        self.0.borrow_mut().on_window_done(node, batch, service_ms, now_ms);
+    }
+
+    fn on_job_finished(&mut self, job: JobId, node: usize, jct_ms: f64,
+                       now_ms: f64) {
+        self.0.borrow_mut().on_job_finished(job, node, jct_ms, now_ms);
+    }
+
+    fn on_job_preempted(&mut self, job: JobId, node: usize, now_ms: f64) {
+        self.0.borrow_mut().on_job_preempted(job, node, now_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_counts() {
+        let mut c = EventCounter::default();
+        c.on_job_admitted(JobId::new(0), 0, 0.0);
+        c.on_job_admitted(JobId::new(1), 0, 1.0);
+        c.on_batch_formed(0, &[JobId::new(0)], 2.0);
+        c.on_window_done(0, &[JobId::new(0)], 50.0, 52.0);
+        c.on_job_finished(JobId::new(0), 0, 52.0, 52.0);
+        c.on_job_preempted(JobId::new(1), 0, 52.0);
+        assert_eq!((c.admitted, c.batches, c.windows, c.finished, c.preempted),
+                   (2, 1, 1, 1, 1));
+    }
+
+    #[test]
+    fn shared_counter_reads_through_clone() {
+        let shared = SharedCounter::new();
+        let mut handle = shared.clone();
+        handle.on_job_admitted(JobId::new(3), 1, 0.0);
+        handle.on_job_finished(JobId::new(3), 1, 9.0, 9.0);
+        let snap = shared.snapshot();
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.finished, 1);
+    }
+}

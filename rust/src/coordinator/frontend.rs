@@ -1,369 +1,45 @@
-//! The frontend serving loop — paper §4.1 Algorithm 1, end to end.
+//! Compatibility frontend — the original one-call serving entry point.
 //!
-//! One function, [`run_serving`], drives both evaluation modes:
-//! * **Virtual clock** — discrete-event: engine `service_ms` advances a
-//!   simulated timeline.  Used with [`SimEngine`](crate::engine::sim_engine)
-//!   for the A100-scale experiments (Fig 5/6/7, Table 5/6).
-//! * **Wall clock** — real time: arrivals are waited for, windows block on
-//!   PJRT execution.  Used with [`PjrtEngine`](crate::engine::pjrt_engine)
-//!   for the end-to-end examples.
+//! The serving loop itself now lives in [`serving`](super::serving) as the
+//! stepped [`Coordinator`] API (`ingest` / `poll_completions` / `dispatch`
+//! / `step` / `run_to_completion`, built via [`CoordinatorBuilder`] with
+//! optional [`EventSink`](super::events::EventSink) observers).  This
+//! module keeps the historical surface:
 //!
-//! The scheduling-iteration structure is identical in both modes: ingest
-//! arrivals → refresh priorities (predictor init/iter) → form per-node
-//! batches from the PriorityBuffer → execute one 50-token window → return
-//! unfinished jobs to the pool.
+//! * [`run_serving`] — builds a [`Coordinator`] from a [`ServeConfig`] and
+//!   runs it to completion.  It produces a [`ServeReport`] identical to
+//!   driving the coordinator by hand (same records, makespan, preemption
+//!   counts for a fixed seed) in both [`ClockMode::Virtual`] and
+//!   [`ClockMode::Wall`].
+//! * [`peak_rps_search`] — the Fig 7 peak-request-rate bisection helper.
+//!
+//! Prefer the [`Coordinator`] API for anything that wants to observe or
+//! extend the loop; prefer `run_serving` for one-shot experiment drivers.
 
-use std::collections::BTreeMap;
-use std::time::Instant;
-
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::engine::Engine;
-use crate::metrics::{JobRecord, ServeReport};
+use crate::metrics::ServeReport;
 use crate::workload::TraceRequest;
 
-use super::batcher::Batcher;
-use super::job::{Job, JobState};
-use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
-use super::preemption::PreemptionPolicy;
-use super::priority_buffer::{Entry, PriorityBuffer};
 use super::scheduler::Scheduler;
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ClockMode {
-    /// discrete-event simulation (engine service_ms drives time)
-    Virtual,
-    /// real time (arrivals waited for, windows block)
-    Wall,
-}
-
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    pub workers: usize,
-    pub max_batch: usize,
-    pub lb: LbStrategy,
-    pub preemption: PreemptionPolicy,
-    /// fixed extra scheduling cost added to the virtual timeline per
-    /// iteration (models the paper's measured ~11 ms overhead; 0 = off)
-    pub overhead_ms_per_iter: f64,
-    pub clock: ClockMode,
-    pub seed: u64,
-    /// hard safety cap on scheduling iterations (0 = none)
-    pub max_iterations: u64,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        ServeConfig {
-            workers: 1,
-            max_batch: 4,
-            lb: LbStrategy::MinLoad,
-            preemption: PreemptionPolicy::default(),
-            overhead_ms_per_iter: 0.0,
-            clock: ClockMode::Virtual,
-            seed: 1,
-            max_iterations: 0,
-        }
-    }
-}
-
-struct WorkerSlot {
-    /// virtual completion time + the outcome to apply, if busy
-    pending: Option<(f64, crate::engine::WindowOutcome, Vec<u64>)>,
-}
+use super::serving::CoordinatorBuilder;
+pub use super::serving::{ClockMode, ServeConfig};
 
 /// Serve a trace through the full coordinator stack.
 ///
 /// `engines[i]` is worker i's backend; `scheduler` owns the policy and the
-/// length predictor.
+/// length predictor.  Thin wrapper over
+/// [`CoordinatorBuilder`] + [`run_to_completion`](super::Coordinator::run_to_completion).
 pub fn run_serving(
     cfg: &ServeConfig,
     trace: &[TraceRequest],
     engines: &mut [Box<dyn Engine>],
     scheduler: &mut Scheduler,
 ) -> Result<ServeReport> {
-    if engines.len() != cfg.workers {
-        bail!("expected {} engines, got {}", cfg.workers, engines.len());
-    }
-    if trace.is_empty() {
-        bail!("empty trace");
-    }
-
-    // ---- state ----
-    let mut jobs: BTreeMap<u64, Job> = BTreeMap::new();
-    let mut arrivals: Vec<(f64, u64)> = Vec::with_capacity(trace.len());
-    for (i, r) in trace.iter().enumerate() {
-        let id = i as u64;
-        jobs.insert(id, Job::new(id, r.prompt.clone(), r.total_len, r.topic,
-                                 r.arrival_ms));
-        arrivals.push((r.arrival_ms, id));
-    }
-    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut next_arrival = 0usize;
-
-    let mut queued: Vec<Vec<u64>> = vec![Vec::new(); cfg.workers];
-    let mut admitted: Vec<Vec<u64>> = vec![Vec::new(); cfg.workers];
-    let mut workers: Vec<WorkerSlot> =
-        (0..cfg.workers).map(|_| WorkerSlot { pending: None }).collect();
-
-    let mut state = GlobalState::new(cfg.workers);
-    let mut lb = LoadBalancer::new(cfg.lb, cfg.seed);
-    let mut buffer = PriorityBuffer::new(cfg.workers);
-    let mut batcher = Batcher::new(cfg.workers, cfg.max_batch);
-
-    let mut now: f64 = 0.0;
-    let wall_start = Instant::now();
-    let mut finished = 0usize;
-    let total_jobs = jobs.len();
-    let mut total_preemptions: u64 = 0;
-    let mut sched_overhead_ns: u128 = 0;
-    let mut iterations: u64 = 0;
-
-    // ---- helpers as closures are awkward with borrows; use a loop ----
-    loop {
-        if cfg.clock == ClockMode::Wall {
-            now = wall_start.elapsed().as_secs_f64() * 1e3;
-        }
-
-        // 1. ingest arrivals (Algorithm 1 lines 1–5)
-        while next_arrival < arrivals.len() && arrivals[next_arrival].0 <= now {
-            let (_, id) = arrivals[next_arrival];
-            next_arrival += 1;
-            let node = lb.assign(&mut state);
-            let job = jobs.get_mut(&id).unwrap();
-            job.node = Some(node);
-            queued[node].push(id);
-        }
-
-        // 2. apply completions due at `now` (virtual mode)
-        for (w, slot) in workers.iter_mut().enumerate() {
-            let due = matches!(&slot.pending, Some((t, _, _)) if *t <= now);
-            if due {
-                let (t_done, outcome, batch) = slot.pending.take().unwrap();
-                apply_outcome(
-                    t_done, outcome, &batch, w, &mut jobs, &mut queued,
-                    engines, &mut state, scheduler, &mut batcher,
-                    &mut finished, &mut total_preemptions,
-                );
-            }
-        }
-
-        // 3. dispatch idle workers with work (Algorithm 1 lines 6–20)
-        let mut dispatched = false;
-        for w in 0..cfg.workers {
-            if workers[w].pending.is_some() || queued[w].is_empty() {
-                continue;
-            }
-            iterations += 1;
-            if cfg.max_iterations > 0 && iterations > cfg.max_iterations {
-                bail!("iteration cap {} exceeded (livelock?)", cfg.max_iterations);
-            }
-            let t_sched = Instant::now();
-
-            // refresh priorities of every queued job on this node
-            let ids: Vec<u64> = queued[w].clone();
-            {
-                let mut refs: Vec<&mut Job> = Vec::with_capacity(ids.len());
-                // split_mut dance: collect mutable refs one by one
-                let mut remaining: &mut BTreeMap<u64, Job> = &mut jobs;
-                // BTreeMap doesn't give disjoint &mut easily; use values_mut
-                let _ = &mut remaining;
-                let mut map_refs: BTreeMap<u64, &mut Job> = BTreeMap::new();
-                for (k, v) in jobs.iter_mut() {
-                    if ids.contains(k) {
-                        map_refs.insert(*k, v);
-                    }
-                }
-                for id in &ids {
-                    if let Some(j) = map_refs.remove(id) {
-                        refs.push(j);
-                    }
-                }
-                scheduler.refresh(&mut refs, now);
-            }
-
-            // rebuild this node's priority queue
-            let mut full_order: Vec<Entry> = Vec::with_capacity(ids.len());
-            for id in &ids {
-                let j = &jobs[id];
-                buffer.push(w, Entry {
-                    priority: j.priority.unwrap_or(f64::MAX),
-                    arrival_ms: j.arrival_ms,
-                    id: *id,
-                });
-            }
-            let sorted = buffer.drain_sorted(w);
-            full_order.extend(sorted);
-
-            // preemption victim ordering for the engine
-            let ranked: Vec<(u64, usize)> = full_order
-                .iter()
-                .map(|e| (e.id, jobs[&e.id].preemptions))
-                .collect();
-            engines[w].set_priority_order(&cfg.preemption.victim_order(&ranked));
-
-            // form the batch
-            let batch_ids: Vec<u64> = full_order
-                .iter()
-                .take(cfg.max_batch.min(engines[w].max_batch()))
-                .map(|e| e.id)
-                .collect();
-
-            // admit + (modelled) prompt transfer
-            for &id in &batch_ids {
-                if !admitted[w].contains(&id) {
-                    engines[w].admit(crate::engine::SeqSpec {
-                        id,
-                        prompt: jobs[&id].prompt.clone(),
-                        target_total: jobs[&id].total_len,
-                        topic: jobs[&id].topic,
-                    })?;
-                    admitted[w].push(id);
-                }
-                batcher.mark_prompt_sent(w, id, jobs[&id].prompt.len());
-            }
-            sched_overhead_ns += t_sched.elapsed().as_nanos();
-
-            // execute one scheduling window
-            let outcome = engines[w].run_window(&batch_ids)?;
-
-            // pull batch jobs out of the waiting queue
-            queued[w].retain(|id| !batch_ids.contains(id));
-            for id in &batch_ids {
-                jobs.get_mut(id).unwrap().state = JobState::Running;
-            }
-
-            match cfg.clock {
-                ClockMode::Virtual => {
-                    let done_at = now + outcome.service_ms + cfg.overhead_ms_per_iter;
-                    workers[w].pending = Some((done_at, outcome, batch_ids));
-                }
-                ClockMode::Wall => {
-                    let t_done = wall_start.elapsed().as_secs_f64() * 1e3;
-                    apply_outcome(
-                        t_done, outcome, &batch_ids, w, &mut jobs, &mut queued,
-                        engines, &mut state, scheduler, &mut batcher,
-                        &mut finished, &mut total_preemptions,
-                    );
-                }
-            }
-            dispatched = true;
-        }
-
-        // 4. termination / time advance
-        if finished == total_jobs {
-            break;
-        }
-        if dispatched {
-            continue;
-        }
-        let next_completion = workers
-            .iter()
-            .filter_map(|s| s.pending.as_ref().map(|(t, _, _)| *t))
-            .fold(f64::INFINITY, f64::min);
-        let next_arrival_t = if next_arrival < arrivals.len() {
-            arrivals[next_arrival].0
-        } else {
-            f64::INFINITY
-        };
-        let next_t = next_completion.min(next_arrival_t);
-        match cfg.clock {
-            ClockMode::Virtual => {
-                if !next_t.is_finite() {
-                    bail!("deadlock: no pending work but {} jobs unfinished",
-                          total_jobs - finished);
-                }
-                now = next_t.max(now);
-            }
-            ClockMode::Wall => {
-                if next_t.is_finite() {
-                    let wait_ms = next_t - wall_start.elapsed().as_secs_f64() * 1e3;
-                    if wait_ms > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            wait_ms / 1e3,
-                        ));
-                    }
-                } else {
-                    bail!("deadlock: no pending work but {} jobs unfinished",
-                          total_jobs - finished);
-                }
-            }
-        }
-    }
-
-    let makespan_ms = jobs
-        .values()
-        .filter_map(|j| j.finish_ms)
-        .fold(0.0, f64::max);
-    let records: Vec<JobRecord> =
-        jobs.values().filter_map(JobRecord::from_job).collect();
-    Ok(ServeReport {
-        scheduler: scheduler.policy.name().to_string(),
-        predictor_name: scheduler.predictor_name().to_string(),
-        records,
-        makespan_ms,
-        total_preemptions,
-        sched_overhead_ms_avg: if iterations == 0 {
-            0.0
-        } else {
-            sched_overhead_ns as f64 / iterations as f64 / 1e6
-        },
-        sched_iterations: iterations,
-    })
-}
-
-#[allow(clippy::too_many_arguments)]
-fn apply_outcome(
-    t_done: f64,
-    outcome: crate::engine::WindowOutcome,
-    batch: &[u64],
-    node: usize,
-    jobs: &mut BTreeMap<u64, Job>,
-    queued: &mut [Vec<u64>],
-    engines: &mut [Box<dyn Engine>],
-    state: &mut GlobalState,
-    scheduler: &mut Scheduler,
-    batcher: &mut Batcher,
-    finished: &mut usize,
-    total_preemptions: &mut u64,
-) {
-    for &pid in &outcome.preempted {
-        if let Some(j) = jobs.get_mut(&pid) {
-            j.preemptions += 1;
-        }
-        *total_preemptions += 1;
-    }
-    for out in &outcome.outputs {
-        let j = jobs.get_mut(&out.id).unwrap();
-        j.windows += 1;
-        j.service_ms += outcome.service_ms;
-        if !out.new_tokens.is_empty() && j.first_token_ms.is_none() {
-            j.first_token_ms = Some(t_done);
-        }
-        j.generated += out.new_tokens.len();
-        j.response.extend_from_slice(&out.new_tokens);
-        if out.done {
-            j.state = JobState::Finished;
-            j.finish_ms = Some(t_done);
-            *finished += 1;
-            state.on_finish(node);
-            scheduler.observe_completion(j.prompt.len(), j.total_len);
-            scheduler.forget(out.id);
-            batcher.forget(node, out.id);
-            engines[node].remove(out.id);
-        } else {
-            j.state = JobState::Queued;
-            queued[node].push(out.id);
-        }
-    }
-    // batch jobs that produced no output (couldn't be staged) go back too
-    for &id in batch {
-        let j = jobs.get_mut(&id).unwrap();
-        if j.state == JobState::Running {
-            j.state = JobState::Queued;
-            queued[node].push(id);
-        }
-    }
+    CoordinatorBuilder::from_config(cfg.clone())
+        .build(trace, engines, scheduler)?
+        .run_to_completion()
 }
 
 /// Binary-search the peak request rate where `delay_fn(rps)` (avg queueing
@@ -392,11 +68,12 @@ pub fn peak_rps_search<F: FnMut(f64) -> f64>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::events::SharedCounter;
+    use crate::coordinator::scheduler::Policy;
     use crate::engine::profiles::ModelProfile;
     use crate::engine::sim_engine::SimEngine;
     use crate::predictor::oracle::OraclePredictor;
     use crate::runtime::manifest::ServedModelMeta;
-    use crate::coordinator::scheduler::Policy;
     use crate::workload::corpus::Corpus;
     use crate::workload::generator::RequestGenerator;
 
@@ -478,6 +155,68 @@ mod tests {
             // records are in id order == trace order
             assert_eq!(rec.tokens, req.total_len, "job {}", rec.id);
         }
+    }
+
+    #[test]
+    fn wrapper_matches_manual_stepping() {
+        // acceptance: run_serving == CoordinatorBuilder + step loop, same
+        // records / makespan / preemption counts for a fixed seed
+        let corpus = Corpus::synthetic(200, 7);
+        let mut gen = RequestGenerator::fabrix(3.0, 7);
+        let trace = gen.trace(&corpus, 50);
+        let cfg = ServeConfig {
+            workers: 2,
+            max_iterations: 2_000_000,
+            ..Default::default()
+        };
+
+        let mut sched_a = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        let mut e_a = engines(2);
+        let a = run_serving(&cfg, &trace, &mut e_a, &mut sched_a).unwrap();
+
+        let mut sched_b = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        let mut e_b = engines(2);
+        let mut coord = CoordinatorBuilder::from_config(cfg.clone())
+            .build(&trace, &mut e_b, &mut sched_b)
+            .unwrap();
+        while !coord.step().unwrap().done {}
+        let b = coord.report();
+
+        assert_eq!(a.records, b.records);
+        assert_eq!(a.makespan_ms, b.makespan_ms);
+        assert_eq!(a.total_preemptions, b.total_preemptions);
+        assert_eq!(a.sched_iterations, b.sched_iterations);
+    }
+
+    #[test]
+    fn wall_clock_smoke_via_step() {
+        // drive ClockMode::Wall through the stepped API (arrivals in the
+        // past -> no sleeping) and watch events fire
+        let corpus = Corpus::synthetic(60, 21);
+        let mut gen = RequestGenerator::fabrix(1000.0, 21);
+        let trace = gen.trace(&corpus, 8);
+        let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        let mut e = engines(1);
+        let counter = SharedCounter::new();
+        let mut coord = CoordinatorBuilder::new()
+            .clock(ClockMode::Wall)
+            .max_iterations(100_000)
+            .sink(Box::new(counter.clone()))
+            .build(&trace, &mut e, &mut sched)
+            .unwrap();
+        let mut steps = 0u64;
+        while !coord.is_done() {
+            coord.step().unwrap();
+            steps += 1;
+            assert!(steps < 100_000, "wall-clock run did not converge");
+        }
+        let r = coord.report();
+        assert_eq!(r.n(), 8);
+        let c = counter.snapshot();
+        assert_eq!(c.admitted, 8);
+        assert_eq!(c.finished, 8);
+        assert!(c.batches >= 1);
+        assert_eq!(c.batches, c.windows);
     }
 
     #[test]

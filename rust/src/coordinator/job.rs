@@ -1,5 +1,56 @@
-//! Job: the frontend scheduler's internal record of a request
-//! (paper Algorithm 1, line 2: "store the text of prompt in a new job").
+//! Job records and the frontend's job storage.
+//!
+//! * [`Job`] — the scheduler's internal record of a request (paper
+//!   Algorithm 1, line 2: "store the text of prompt in a new job").
+//! * [`JobId`] — typed handle into the [`JobTable`]; also the sequence id
+//!   handed to the engine layer (via [`JobId::raw`]).
+//! * [`JobTable`] — dense slab keyed by [`JobId`].  Jobs are created once
+//!   per trace request and live for the whole run, so index i of the slab
+//!   is trace request i; lookups are O(1) array indexing instead of the
+//!   `BTreeMap<u64, Job>` walks (and `Vec::contains` scans) the original
+//!   `run_serving` monolith paid per scheduling iteration.
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Typed handle to a job in a [`JobTable`].
+///
+/// The raw value doubles as the engine-layer sequence id (`SeqSpec::id`),
+/// so crossing the coordinator/engine boundary is a lossless cast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(u32);
+
+impl JobId {
+    pub fn new(index: usize) -> JobId {
+        debug_assert!(index <= u32::MAX as usize, "job index overflow");
+        JobId(index as u32)
+    }
+
+    /// Recover a JobId from an engine-layer sequence id.  Panics on ids
+    /// outside the u32 range rather than silently aliasing onto the wrong
+    /// slab slot (engines echo back the ids the coordinator issued, so a
+    /// violation means a broken engine, not a hot-path cost worth dodging).
+    pub fn from_raw(raw: u64) -> JobId {
+        assert!(raw <= u32::MAX as u64, "sequence id {raw} is not a JobId");
+        JobId(raw as u32)
+    }
+
+    /// Slab index.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+
+    /// Engine-layer sequence id.
+    pub fn raw(self) -> u64 {
+        self.0 as u64
+    }
+}
+
+impl fmt::Display for JobId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "j{}", self.0)
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
@@ -12,7 +63,7 @@ pub enum JobState {
 
 #[derive(Debug, Clone)]
 pub struct Job {
-    pub id: u64,
+    pub id: JobId,
     pub prompt: Vec<i32>,
     /// ground-truth response length (engine stop condition; only oracle
     /// predictors may read it)
@@ -26,6 +77,9 @@ pub struct Job {
     /// (Algorithm 1 line 11).
     pub priority: Option<f64>,
     pub state: JobState,
+    /// prompt already registered with this job's engine (slab flag
+    /// replacing the per-worker `admitted: Vec<u64>` linear scans)
+    pub engine_admitted: bool,
     /// response tokens produced so far
     pub generated: usize,
     pub response: Vec<i32>,
@@ -40,7 +94,7 @@ pub struct Job {
 }
 
 impl Job {
-    pub fn new(id: u64, prompt: Vec<i32>, total_len: usize, topic: usize,
+    pub fn new(id: JobId, prompt: Vec<i32>, total_len: usize, topic: usize,
                arrival_ms: f64) -> Job {
         Job {
             id,
@@ -51,6 +105,7 @@ impl Job {
             node: None,
             priority: None,
             state: JobState::Queued,
+            engine_admitted: false,
             generated: 0,
             response: Vec::new(),
             windows: 0,
@@ -86,13 +141,111 @@ impl Job {
     }
 }
 
+/// Dense job storage: slab index == trace request index == [`JobId`].
+#[derive(Debug, Default)]
+pub struct JobTable {
+    slab: Vec<Job>,
+}
+
+impl JobTable {
+    pub fn new() -> JobTable {
+        JobTable { slab: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> JobTable {
+        JobTable { slab: Vec::with_capacity(n) }
+    }
+
+    /// Insert the next job; the closure receives the id it will get.
+    pub fn insert_with(&mut self, make: impl FnOnce(JobId) -> Job) -> JobId {
+        let id = JobId::new(self.slab.len());
+        let job = make(id);
+        debug_assert_eq!(job.id, id, "job id must match its slot");
+        self.slab.push(job);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.slab.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slab.is_empty()
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&Job> {
+        self.slab.get(id.index())
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.slab.get_mut(id.index())
+    }
+
+    /// Jobs in id (= trace) order.
+    pub fn iter(&self) -> std::slice::Iter<'_, Job> {
+        self.slab.iter()
+    }
+
+    /// Run `f` over disjoint mutable references to the listed jobs, in the
+    /// order given.  Ids must be distinct (they are: a job sits in at most
+    /// one queue).  O(k log k) — sorts the ids and walks the slab once with
+    /// `split_at_mut`, replacing the monolith's per-iteration "split_mut
+    /// dance" that rebuilt a `BTreeMap<u64, &mut Job>` with an
+    /// `ids.contains` scan per entry (O(n·k)).
+    pub fn with_mut_refs<R>(&mut self, ids: &[JobId],
+                            f: impl FnOnce(&mut [&mut Job]) -> R) -> R {
+        let mut order: Vec<(usize, usize)> = ids
+            .iter()
+            .enumerate()
+            .map(|(pos, id)| (id.index(), pos))
+            .collect();
+        order.sort_unstable();
+        // hard assert: a duplicate would otherwise underflow the split
+        // arithmetic below and surface as a baffling out-of-bounds panic
+        assert!(order.windows(2).all(|w| w[0].0 != w[1].0),
+                "duplicate JobId in with_mut_refs");
+
+        let mut slots: Vec<Option<&mut Job>> =
+            std::iter::repeat_with(|| None).take(ids.len()).collect();
+        let mut rest: &mut [Job] = &mut self.slab;
+        let mut consumed = 0usize;
+        for &(idx, pos) in &order {
+            let tmp = std::mem::take(&mut rest);
+            let (left, right) = tmp.split_at_mut(idx - consumed + 1);
+            slots[pos] = Some(&mut left[idx - consumed]);
+            consumed = idx + 1;
+            rest = right;
+        }
+        let mut refs: Vec<&mut Job> =
+            slots.into_iter().map(|s| s.expect("JobId out of range")).collect();
+        f(&mut refs)
+    }
+}
+
+impl Index<JobId> for JobTable {
+    type Output = Job;
+    fn index(&self, id: JobId) -> &Job {
+        &self.slab[id.index()]
+    }
+}
+
+impl IndexMut<JobId> for JobTable {
+    fn index_mut(&mut self, id: JobId) -> &mut Job {
+        &mut self.slab[id.index()]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn job(table: &mut JobTable, total: usize, arrival: f64) -> JobId {
+        table.insert_with(|id| Job::new(id, vec![1, 2, 3], total, 0, arrival))
+    }
+
     #[test]
     fn lifecycle_metrics() {
-        let mut j = Job::new(1, vec![1, 2, 3], 120, 0, 1000.0);
+        let mut j = Job::new(JobId::new(1), vec![1, 2, 3], 120, 0, 1000.0);
         assert_eq!(j.remaining(), 120);
         assert!(j.jct_ms().is_none());
         j.generated = 50;
@@ -107,15 +260,62 @@ mod tests {
 
     #[test]
     fn total_len_floor() {
-        let j = Job::new(1, vec![1], 0, 0, 0.0);
+        let j = Job::new(JobId::new(1), vec![1], 0, 0, 0.0);
         assert_eq!(j.total_len, 1);
     }
 
     #[test]
     fn queue_delay_never_negative() {
-        let mut j = Job::new(1, vec![1], 10, 0, 0.0);
+        let mut j = Job::new(JobId::new(1), vec![1], 10, 0, 0.0);
         j.finish_ms = Some(100.0);
         j.service_ms = 500.0; // service longer than JCT (overlapping batches)
         assert_eq!(j.queue_delay_ms(), Some(0.0));
+    }
+
+    #[test]
+    fn table_assigns_dense_ids() {
+        let mut t = JobTable::new();
+        let a = job(&mut t, 10, 0.0);
+        let b = job(&mut t, 20, 1.0);
+        assert_eq!(a.index(), 0);
+        assert_eq!(b.index(), 1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[b].total_len, 20);
+        assert_eq!(JobId::from_raw(b.raw()), b);
+        t[a].generated = 5;
+        assert_eq!(t[a].remaining(), 5);
+        assert!(t.get(JobId::new(7)).is_none());
+    }
+
+    #[test]
+    fn with_mut_refs_visits_in_given_order() {
+        let mut t = JobTable::new();
+        for i in 0..6 {
+            job(&mut t, 100 + i, i as f64);
+        }
+        // arbitrary (unsorted) id order must be preserved
+        let ids = [JobId::new(4), JobId::new(0), JobId::new(5), JobId::new(2)];
+        let seen: Vec<usize> = t.with_mut_refs(&ids, |refs| {
+            for r in refs.iter_mut() {
+                r.generated += 1;
+            }
+            refs.iter().map(|r| r.id.index()).collect()
+        });
+        assert_eq!(seen, vec![4, 0, 5, 2]);
+        for i in 0..6 {
+            let expect = usize::from(ids.contains(&JobId::new(i)));
+            assert_eq!(t[JobId::new(i)].generated, expect, "job {i}");
+        }
+    }
+
+    #[test]
+    fn with_mut_refs_empty_and_full() {
+        let mut t = JobTable::new();
+        for i in 0..3 {
+            job(&mut t, 10, i as f64);
+        }
+        assert_eq!(t.with_mut_refs(&[], |refs| refs.len()), 0);
+        let all = [JobId::new(0), JobId::new(1), JobId::new(2)];
+        assert_eq!(t.with_mut_refs(&all, |refs| refs.len()), 3);
     }
 }

@@ -17,12 +17,18 @@ pub enum LbStrategy {
 }
 
 impl LbStrategy {
-    pub fn parse(s: &str) -> Option<LbStrategy> {
-        Some(match s.to_ascii_lowercase().as_str() {
+    /// Parse a strategy name; the error lists every accepted spelling.
+    pub fn parse(s: &str) -> Result<LbStrategy, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
             "minload" | "min-load" => LbStrategy::MinLoad,
             "rr" | "roundrobin" | "round-robin" => LbStrategy::RoundRobin,
             "random" => LbStrategy::Random,
-            _ => return None,
+            _ => {
+                return Err(format!(
+                    "unknown load-balancer strategy '{s}' \
+                     (valid: minload, rr, random)"
+                ))
+            }
         })
     }
 }
@@ -161,8 +167,10 @@ mod tests {
 
     #[test]
     fn strategy_parse() {
-        assert_eq!(LbStrategy::parse("minload"), Some(LbStrategy::MinLoad));
-        assert_eq!(LbStrategy::parse("rr"), Some(LbStrategy::RoundRobin));
-        assert_eq!(LbStrategy::parse("bogus"), None);
+        assert_eq!(LbStrategy::parse("minload"), Ok(LbStrategy::MinLoad));
+        assert_eq!(LbStrategy::parse("rr"), Ok(LbStrategy::RoundRobin));
+        let err = LbStrategy::parse("bogus").unwrap_err();
+        assert!(err.contains("bogus") && err.contains("minload"),
+                "error must name the input and the valid strategies: {err}");
     }
 }

@@ -1,25 +1,45 @@
-//! L3 coordinator — the paper's system contribution.
+//! L3 coordinator — the paper's system contribution, exposed as a stepped,
+//! event-driven API.
+//!
+//! The centre of the layer is [`serving::Coordinator`]: it owns the job
+//! table, per-node queues, load balancer, priority buffer, batcher, and
+//! preemption policy, and decomposes Algorithm 1 into composable steps
+//! (`ingest` → `poll_completions` → `dispatch` → `step` →
+//! `run_to_completion`).  Construction goes through
+//! [`CoordinatorBuilder`], which extends [`ServeConfig`] with
+//! [`EventSink`] observers so metrics, logging, and scheduling-policy
+//! experiments can watch the loop without modifying it.
 //!
 //! Components map 1:1 onto Figure 3 / Algorithm 1 of the paper:
-//! * [`job`] — the frontend's internal request record.
+//! * [`job`] — [`JobId`]-keyed dense [`JobTable`] of request records.
 //! * [`scheduler`] — FCFS / SJF / **ISRTF** / SRPT / MLFQ priority policies.
-//! * [`priority_buffer`] — per-node priority queues.
+//! * [`priority_buffer`] — per-node priority queues with a fully
+//!   deterministic (priority, arrival, id) order.
 //! * [`batcher`] — window batching (prompts sent once).
 //! * [`load_balancer`] — min-load greedy assignment over global state `G`.
 //! * [`preemption`] — frequency control + starvation guard (§3.4).
-//! * [`frontend`] — the serving loop tying it together, in virtual or wall
-//!   clock mode.
+//! * [`events`] — the observer hooks (admitted / batch / window /
+//!   finished / preempted).
+//! * [`serving`] — the stepped coordinator tying it together, in virtual
+//!   or wall clock mode.
+//! * [`frontend`] — compatibility wrapper: the original [`run_serving`]
+//!   one-call entry point and the Fig 7 peak-rate search.
 
 pub mod batcher;
+pub mod events;
 pub mod frontend;
 pub mod job;
 pub mod load_balancer;
 pub mod preemption;
 pub mod priority_buffer;
 pub mod scheduler;
+pub mod serving;
 
-pub use frontend::{run_serving, ClockMode, ServeConfig};
-pub use job::{Job, JobState};
+pub use events::{EventCounter, EventSink, SharedCounter};
+pub use frontend::{peak_rps_search, run_serving};
+pub use job::{Job, JobId, JobState, JobTable};
 pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 pub use preemption::PreemptionPolicy;
 pub use scheduler::{Policy, Scheduler};
+pub use serving::{ClockMode, Coordinator, CoordinatorBuilder, ServeConfig,
+                  StepOutcome};

@@ -6,6 +6,8 @@
 //! global rate limiter, and the victim-ordering filter applied before the
 //! engine receives its priority order.
 
+use super::job::JobId;
+
 #[derive(Debug, Clone)]
 pub struct PreemptionPolicy {
     pub enabled: bool,
@@ -35,16 +37,16 @@ impl PreemptionPolicy {
     /// eviction preference, and protected jobs (over their preemption
     /// budget) are moved to the front (= evicted last).
     ///
-    /// `ranked` is (job_id, preemption_count) in priority order, highest
+    /// `ranked` is (job id, preemption count) in priority order, highest
     /// priority first.  Returns the order to hand the engine.
-    pub fn victim_order(&self, ranked: &[(u64, usize)]) -> Vec<u64> {
+    pub fn victim_order(&self, ranked: &[(JobId, usize)]) -> Vec<JobId> {
         if !self.enabled {
             // engine treats an empty order as "no preemption candidates";
             // protect everything by listing all as highest priority
             return ranked.iter().map(|(id, _)| *id).collect();
         }
-        let mut protected: Vec<u64> = Vec::new();
-        let mut normal: Vec<u64> = Vec::new();
+        let mut protected: Vec<JobId> = Vec::new();
+        let mut normal: Vec<JobId> = Vec::new();
         for &(id, count) in ranked {
             if count >= self.max_preemptions_per_job {
                 protected.push(id);
@@ -61,6 +63,14 @@ impl PreemptionPolicy {
 mod tests {
     use super::*;
 
+    fn ranked(pairs: &[(u64, usize)]) -> Vec<(JobId, usize)> {
+        pairs.iter().map(|&(id, c)| (JobId::from_raw(id), c)).collect()
+    }
+
+    fn raw(order: Vec<JobId>) -> Vec<u64> {
+        order.iter().map(|id| id.raw()).collect()
+    }
+
     #[test]
     fn protected_jobs_move_to_front() {
         let p = PreemptionPolicy {
@@ -69,9 +79,9 @@ mod tests {
             max_per_iteration: usize::MAX,
         };
         // (id, preemptions), priority order 1 > 2 > 3
-        let order = p.victim_order(&[(1, 0), (2, 2), (3, 0)]);
+        let order = p.victim_order(&ranked(&[(1, 0), (2, 2), (3, 0)]));
         // job 2 hit its budget: protected, so listed first (evicted last)
-        assert_eq!(order, vec![2, 1, 3]);
+        assert_eq!(raw(order), vec![2, 1, 3]);
     }
 
     #[test]
@@ -84,7 +94,7 @@ mod tests {
     #[test]
     fn no_protection_under_budget() {
         let p = PreemptionPolicy::default();
-        let order = p.victim_order(&[(5, 1), (6, 0)]);
-        assert_eq!(order, vec![5, 6]);
+        let order = p.victim_order(&ranked(&[(5, 1), (6, 0)]));
+        assert_eq!(raw(order), vec![5, 6]);
     }
 }

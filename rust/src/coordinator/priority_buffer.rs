@@ -1,12 +1,18 @@
 //! PriorityBuffer: per-node priority queues (paper §4.1: "multiple priority
 //! queues, where each queue stores jobs assigned to a specific node").
 //!
-//! Rebuilt from the JobPool each scheduling iteration (Algorithm 1 pops
-//! every job, assigns its priority, and pushes it here), then the batcher
-//! pops the highest-priority jobs per available backend.
+//! Rebuilt from the node's job pool each scheduling iteration (Algorithm 1
+//! pops every job, assigns its priority, and pushes it here), then the
+//! coordinator takes the highest-priority prefix as the next batch.
+//!
+//! Ordering is **fully deterministic**: priority, then arrival time, then
+//! job id — all via `f64::total_cmp`, so even NaN priorities (a misbehaving
+//! predictor) produce a stable, insertion-order-independent drain order.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+use super::job::JobId;
 
 /// Min-heap item: lower priority value runs first; arrival then id break
 /// ties deterministically.
@@ -14,24 +20,19 @@ use std::collections::BinaryHeap;
 pub struct Entry {
     pub priority: f64,
     pub arrival_ms: f64,
-    pub id: u64,
+    pub id: JobId,
 }
 
 impl Eq for Entry {}
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed for min-heap on BinaryHeap (a max-heap)
+        // reversed for min-heap on BinaryHeap (a max-heap); total_cmp makes
+        // the order total even for NaN/-0.0 priorities
         other
             .priority
-            .partial_cmp(&self.priority)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| {
-                other
-                    .arrival_ms
-                    .partial_cmp(&self.arrival_ms)
-                    .unwrap_or(Ordering::Equal)
-            })
+            .total_cmp(&self.priority)
+            .then_with(|| other.arrival_ms.total_cmp(&self.arrival_ms))
             .then_with(|| other.id.cmp(&self.id))
     }
 }
@@ -117,7 +118,7 @@ mod tests {
     use crate::testing::prop;
 
     fn e(priority: f64, arrival: f64, id: u64) -> Entry {
-        Entry { priority, arrival_ms: arrival, id }
+        Entry { priority, arrival_ms: arrival, id: JobId::from_raw(id) }
     }
 
     #[test]
@@ -126,9 +127,9 @@ mod tests {
         b.push(0, e(300.0, 0.0, 1));
         b.push(0, e(50.0, 0.0, 2));
         b.push(0, e(120.0, 0.0, 3));
-        assert_eq!(b.pop(0).unwrap().id, 2);
-        assert_eq!(b.pop(0).unwrap().id, 3);
-        assert_eq!(b.pop(0).unwrap().id, 1);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 2);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 3);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 1);
         assert!(b.pop(0).is_none());
     }
 
@@ -138,9 +139,47 @@ mod tests {
         b.push(0, e(10.0, 5.0, 9));
         b.push(0, e(10.0, 1.0, 7));
         b.push(0, e(10.0, 1.0, 3));
-        assert_eq!(b.pop(0).unwrap().id, 3);
-        assert_eq!(b.pop(0).unwrap().id, 7);
-        assert_eq!(b.pop(0).unwrap().id, 9);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 3);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 7);
+        assert_eq!(b.pop(0).unwrap().id.raw(), 9);
+    }
+
+    #[test]
+    fn equal_priority_drain_is_insertion_order_independent() {
+        // regression: with equal priorities the drain order must be the
+        // same whatever order the entries were pushed in
+        let entries = [e(7.0, 3.0, 4), e(7.0, 1.0, 2), e(7.0, 1.0, 1),
+                       e(7.0, 2.0, 8), e(7.0, 3.0, 0)];
+        let expect: Vec<u64> = vec![1, 2, 8, 0, 4]; // (arrival, id) order
+
+        // forward insertion
+        let mut fwd = PriorityBuffer::new(1);
+        for en in entries {
+            fwd.push(0, en);
+        }
+        let got_fwd: Vec<u64> =
+            fwd.drain_sorted(0).iter().map(|x| x.id.raw()).collect();
+        assert_eq!(got_fwd, expect);
+
+        // reverse insertion must give the identical order
+        let mut rev = PriorityBuffer::new(1);
+        for en in entries.iter().rev() {
+            rev.push(0, *en);
+        }
+        let got_rev: Vec<u64> =
+            rev.drain_sorted(0).iter().map(|x| x.id.raw()).collect();
+        assert_eq!(got_rev, expect);
+    }
+
+    #[test]
+    fn nan_priority_still_drains_deterministically() {
+        let mut b = PriorityBuffer::new(1);
+        b.push(0, e(f64::NAN, 0.0, 1));
+        b.push(0, e(1.0, 0.0, 2));
+        b.push(0, e(f64::NAN, 0.0, 3));
+        let order: Vec<u64> = b.drain_sorted(0).iter().map(|x| x.id.raw()).collect();
+        // total_cmp sorts NaN after every finite value; ids break the tie
+        assert_eq!(order, vec![2, 1, 3]);
     }
 
     #[test]
@@ -150,7 +189,7 @@ mod tests {
         b.push(1, e(2.0, 0.0, 2));
         assert_eq!(b.len(0), 1);
         assert_eq!(b.len(1), 1);
-        assert_eq!(b.pop(1).unwrap().id, 2);
+        assert_eq!(b.pop(1).unwrap().id.raw(), 2);
         assert!(b.is_empty(1));
         assert!(!b.is_empty(0));
         assert_eq!(b.total_len(), 1);
@@ -162,8 +201,9 @@ mod tests {
         for i in 0..10 {
             b.push(0, e(i as f64, 0.0, i));
         }
-        let batch = b.pop_batch(0, 4);
-        assert_eq!(batch.iter().map(|x| x.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let batch: Vec<u64> =
+            b.pop_batch(0, 4).iter().map(|x| x.id.raw()).collect();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
         assert_eq!(b.len(0), 6);
     }
 
@@ -173,7 +213,8 @@ mod tests {
             let mut b = PriorityBuffer::new(1);
             let n = g.usize_in(1, 50);
             for i in 0..n {
-                b.push(0, e(g.f64_in(-100.0, 100.0), g.f64_in(0.0, 10.0), i as u64));
+                b.push(0, e(g.f64_in(-100.0, 100.0), g.f64_in(0.0, 10.0),
+                            i as u64));
             }
             let drained = b.drain_sorted(0);
             assert_eq!(drained.len(), n);
@@ -181,7 +222,8 @@ mod tests {
                 assert!(
                     w[0].priority < w[1].priority
                         || (w[0].priority == w[1].priority
-                            && (w[0].arrival_ms, w[0].id) <= (w[1].arrival_ms, w[1].id)),
+                            && (w[0].arrival_ms, w[0].id)
+                                <= (w[1].arrival_ms, w[1].id)),
                     "out of order: {w:?}"
                 );
             }

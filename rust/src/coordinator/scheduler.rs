@@ -19,7 +19,7 @@ use std::collections::BTreeMap;
 
 use crate::predictor::{LengthPredictor, PredictQuery};
 
-use super::job::Job;
+use super::job::{Job, JobId};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
@@ -31,14 +31,20 @@ pub enum Policy {
 }
 
 impl Policy {
-    pub fn parse(s: &str) -> Option<Policy> {
-        Some(match s.to_ascii_lowercase().as_str() {
+    /// Parse a policy name; the error lists the valid names.
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        Ok(match s.to_ascii_lowercase().as_str() {
             "fcfs" => Policy::Fcfs,
             "sjf" => Policy::Sjf,
             "isrtf" => Policy::Isrtf,
             "srpt" => Policy::Srpt,
             "mlfq" => Policy::Mlfq,
-            _ => return None,
+            _ => {
+                return Err(format!(
+                    "unknown scheduler policy '{s}' \
+                     (valid: fcfs, sjf, isrtf, srpt, mlfq)"
+                ))
+            }
         })
     }
 
@@ -76,7 +82,7 @@ pub struct Scheduler {
     /// its base priority — this is what keeps the per-iteration scheduling
     /// overhead at the paper's ~11 ms instead of re-running the encoder for
     /// the whole queue every window.
-    cache: BTreeMap<u64, (usize, f64)>,
+    cache: BTreeMap<JobId, (usize, f64)>,
     /// predictor invocations actually made (profiling)
     pub predictor_queries: u64,
 }
@@ -130,7 +136,7 @@ impl Scheduler {
                 .map(|&i| {
                     let j = &jobs[i];
                     PredictQuery {
-                        job_id: j.id,
+                        job_id: j.id.raw(),
                         prompt: &j.prompt,
                         // paper §3.3: partial output feeds back each iteration
                         gen_suffix: &j.response,
@@ -171,7 +177,7 @@ impl Scheduler {
     }
 
     /// Drop a finished job's cache entry.
-    pub fn forget(&mut self, job_id: u64) {
+    pub fn forget(&mut self, job_id: JobId) {
         self.cache.remove(&job_id);
     }
 
@@ -187,7 +193,8 @@ mod tests {
     use crate::predictor::oracle::{FrozenOracle, OraclePredictor};
 
     fn job(id: u64, arrival: f64, total: usize, generated: usize) -> Job {
-        let mut j = Job::new(id, vec![5; 10], total, 0, arrival);
+        let mut j = Job::new(JobId::from_raw(id), vec![5; 10], total, 0,
+                             arrival);
         j.generated = generated;
         j
     }
@@ -268,8 +275,10 @@ mod tests {
 
     #[test]
     fn policy_parse() {
-        assert_eq!(Policy::parse("ISRTF"), Some(Policy::Isrtf));
-        assert_eq!(Policy::parse("fcfs"), Some(Policy::Fcfs));
-        assert_eq!(Policy::parse("nope"), None);
+        assert_eq!(Policy::parse("ISRTF"), Ok(Policy::Isrtf));
+        assert_eq!(Policy::parse("fcfs"), Ok(Policy::Fcfs));
+        let err = Policy::parse("nope").unwrap_err();
+        assert!(err.contains("nope") && err.contains("isrtf"),
+                "error must name the input and the valid policies: {err}");
     }
 }

@@ -1,0 +1,647 @@
+//! The stepped, event-driven coordinator — paper §4.1 Algorithm 1 as a
+//! first-class API instead of a closed loop.
+//!
+//! [`Coordinator`] owns the serving state (job table, per-node queues,
+//! load balancer, priority buffer, batcher, preemption policy) and borrows
+//! the engines and scheduler for the duration of a run.  The serving loop
+//! is decomposed into composable steps:
+//!
+//! * [`Coordinator::ingest`] — admit arrivals due at `now` (Algorithm 1
+//!   lines 1–5: load-balance each new job onto a node).
+//! * [`Coordinator::poll_completions`] — apply window outcomes whose
+//!   (virtual) completion time has passed.
+//! * [`Coordinator::dispatch`] — for every idle worker with queued jobs:
+//!   refresh priorities, rebuild the node's priority queue, form a batch,
+//!   and execute one scheduling window (Algorithm 1 lines 6–20).
+//! * [`Coordinator::step`] — one full iteration of the above plus clock
+//!   advance when nothing could run; returns a [`StepOutcome`].
+//! * [`Coordinator::run_to_completion`] — step until every job finished,
+//!   then return the [`ServeReport`].
+//!
+//! Construction goes through [`CoordinatorBuilder`], which extends
+//! [`ServeConfig`] with [`EventSink`] observers (job admitted / batch
+//! formed / window done / job finished / preempted) for metrics, logging,
+//! and policy experiments.  The original `run_serving` free function
+//! survives in [`frontend`](super::frontend) as a thin wrapper over this
+//! type and produces identical reports.
+//!
+//! Both evaluation modes of the paper are supported via [`ClockMode`]:
+//! virtual (discrete-event; engine `service_ms` advances a simulated
+//! timeline) and wall (real time; arrivals are waited for, windows block).
+//! The scheduling-iteration structure is identical in both.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::engine::{Engine, SeqSpec, WindowOutcome};
+use crate::metrics::{JobRecord, ServeReport};
+use crate::workload::TraceRequest;
+
+use super::batcher::Batcher;
+use super::events::EventSink;
+use super::job::{Job, JobId, JobState, JobTable};
+use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
+use super::preemption::PreemptionPolicy;
+use super::priority_buffer::{Entry, PriorityBuffer};
+use super::scheduler::Scheduler;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    /// discrete-event simulation (engine service_ms drives time)
+    Virtual,
+    /// real time (arrivals waited for, windows block)
+    Wall,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub lb: LbStrategy,
+    pub preemption: PreemptionPolicy,
+    /// fixed extra scheduling cost added to the virtual timeline per
+    /// iteration (models the paper's measured ~11 ms overhead; 0 = off)
+    pub overhead_ms_per_iter: f64,
+    pub clock: ClockMode,
+    pub seed: u64,
+    /// hard safety cap on scheduling iterations (0 = none)
+    pub max_iterations: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 1,
+            max_batch: 4,
+            lb: LbStrategy::MinLoad,
+            preemption: PreemptionPolicy::default(),
+            overhead_ms_per_iter: 0.0,
+            clock: ClockMode::Virtual,
+            seed: 1,
+            max_iterations: 0,
+        }
+    }
+}
+
+/// What one [`Coordinator::step`] did.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepOutcome {
+    /// coordinator time after the step (virtual or wall ms)
+    pub now_ms: f64,
+    /// arrivals admitted this step
+    pub admitted: usize,
+    /// pending window outcomes applied this step
+    pub completed: usize,
+    /// scheduling windows dispatched this step
+    pub dispatched: usize,
+    /// no worker could run, so the clock advanced (virtual) or slept (wall)
+    pub idled: bool,
+    /// every job has finished; further steps are no-ops
+    pub done: bool,
+}
+
+/// A window in flight on a worker (virtual mode: outcome applies at
+/// `done_at` on the simulated timeline).
+struct PendingWindow {
+    done_at: f64,
+    outcome: WindowOutcome,
+    batch: Vec<JobId>,
+}
+
+struct WorkerSlot {
+    pending: Option<PendingWindow>,
+}
+
+/// Builder for [`Coordinator`]: a [`ServeConfig`] plus observers.
+#[derive(Default)]
+pub struct CoordinatorBuilder {
+    cfg: ServeConfig,
+    sinks: Vec<Box<dyn EventSink>>,
+}
+
+impl CoordinatorBuilder {
+    pub fn new() -> CoordinatorBuilder {
+        CoordinatorBuilder::default()
+    }
+
+    pub fn from_config(cfg: ServeConfig) -> CoordinatorBuilder {
+        CoordinatorBuilder { cfg, sinks: Vec::new() }
+    }
+
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn max_batch(mut self, max_batch: usize) -> Self {
+        self.cfg.max_batch = max_batch;
+        self
+    }
+
+    pub fn lb(mut self, lb: LbStrategy) -> Self {
+        self.cfg.lb = lb;
+        self
+    }
+
+    pub fn preemption(mut self, preemption: PreemptionPolicy) -> Self {
+        self.cfg.preemption = preemption;
+        self
+    }
+
+    pub fn overhead_ms_per_iter(mut self, ms: f64) -> Self {
+        self.cfg.overhead_ms_per_iter = ms;
+        self
+    }
+
+    pub fn clock(mut self, clock: ClockMode) -> Self {
+        self.cfg.clock = clock;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn max_iterations(mut self, cap: u64) -> Self {
+        self.cfg.max_iterations = cap;
+        self
+    }
+
+    /// Register an observer; sinks fire synchronously, in registration
+    /// order, from inside the serving loop.
+    pub fn sink(mut self, sink: Box<dyn EventSink>) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
+    /// Load `trace` into a job table and wire up the serving state.
+    /// `engines[i]` is worker i's backend; `scheduler` owns the policy and
+    /// the length predictor.
+    pub fn build<'a>(self, trace: &[TraceRequest],
+                     engines: &'a mut [Box<dyn Engine>],
+                     scheduler: &'a mut Scheduler)
+                     -> Result<Coordinator<'a>> {
+        let CoordinatorBuilder { cfg, sinks } = self;
+        if engines.len() != cfg.workers {
+            bail!("expected {} engines, got {}", cfg.workers, engines.len());
+        }
+        if trace.is_empty() {
+            bail!("empty trace");
+        }
+
+        let mut table = JobTable::with_capacity(trace.len());
+        let mut arrivals: Vec<(f64, JobId)> = Vec::with_capacity(trace.len());
+        for r in trace {
+            let id = table.insert_with(|id| {
+                Job::new(id, r.prompt.clone(), r.total_len, r.topic,
+                         r.arrival_ms)
+            });
+            arrivals.push((r.arrival_ms, id));
+        }
+        // stable: equal arrival times keep trace order
+        arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        let workers_n = cfg.workers;
+        Ok(Coordinator {
+            engines,
+            scheduler,
+            table,
+            arrivals,
+            next_arrival: 0,
+            queued: vec![Vec::new(); workers_n],
+            workers: (0..workers_n)
+                .map(|_| WorkerSlot { pending: None })
+                .collect(),
+            state: GlobalState::new(workers_n),
+            lb: LoadBalancer::new(cfg.lb, cfg.seed),
+            buffer: PriorityBuffer::new(workers_n),
+            batcher: Batcher::new(workers_n, cfg.max_batch),
+            sinks,
+            now: 0.0,
+            wall_start: Instant::now(),
+            finished: 0,
+            total_preemptions: 0,
+            sched_overhead_ns: 0,
+            iterations: 0,
+            cfg,
+        })
+    }
+}
+
+/// The serving frontend: owns jobs, queues, balancer, buffer, and batcher;
+/// borrows the engines and scheduler for the lifetime of the run.
+pub struct Coordinator<'a> {
+    cfg: ServeConfig,
+    engines: &'a mut [Box<dyn Engine>],
+    scheduler: &'a mut Scheduler,
+    table: JobTable,
+    /// (arrival_ms, id), sorted by arrival time
+    arrivals: Vec<(f64, JobId)>,
+    next_arrival: usize,
+    /// per-node pool of waiting jobs; kept in last drain order
+    queued: Vec<Vec<JobId>>,
+    workers: Vec<WorkerSlot>,
+    state: GlobalState,
+    lb: LoadBalancer,
+    buffer: PriorityBuffer,
+    batcher: Batcher,
+    sinks: Vec<Box<dyn EventSink>>,
+    now: f64,
+    wall_start: Instant,
+    finished: usize,
+    total_preemptions: u64,
+    sched_overhead_ns: u128,
+    iterations: u64,
+}
+
+impl<'a> Coordinator<'a> {
+    // ---- observers / accessors ------------------------------------------
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Current coordinator time (virtual or wall ms).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn total_jobs(&self) -> usize {
+        self.table.len()
+    }
+
+    pub fn finished_jobs(&self) -> usize {
+        self.finished
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.finished == self.table.len()
+    }
+
+    /// Scheduling iterations executed so far.
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    pub fn table(&self) -> &JobTable {
+        &self.table
+    }
+
+    /// Jobs waiting in `node`'s pool (excludes the running batch).
+    pub fn queue_len(&self, node: usize) -> usize {
+        self.queued[node].len()
+    }
+
+    /// Per-worker active-job counts maintained by the load balancer.
+    pub fn global_state(&self) -> &GlobalState {
+        &self.state
+    }
+
+    pub fn transfer_stats(&self) -> &super::batcher::TransferStats {
+        &self.batcher.stats
+    }
+
+    fn wall_ms(&self) -> f64 {
+        self.wall_start.elapsed().as_secs_f64() * 1e3
+    }
+
+    // ---- composable steps -----------------------------------------------
+
+    /// Admit every arrival due at `now` (Algorithm 1 lines 1–5): the load
+    /// balancer picks its node and the job joins that node's pool.
+    /// Returns the number of jobs admitted.
+    pub fn ingest(&mut self, now: f64) -> usize {
+        let mut admitted = 0;
+        while self.next_arrival < self.arrivals.len()
+            && self.arrivals[self.next_arrival].0 <= now
+        {
+            let (_, id) = self.arrivals[self.next_arrival];
+            self.next_arrival += 1;
+            let node = self.lb.assign(&mut self.state);
+            self.table[id].node = Some(node);
+            self.queued[node].push(id);
+            for s in self.sinks.iter_mut() {
+                s.on_job_admitted(id, node, now);
+            }
+            admitted += 1;
+        }
+        admitted
+    }
+
+    /// Apply every pending window outcome due at `now` (virtual mode; wall
+    /// mode applies outcomes inline in [`dispatch`](Self::dispatch)).
+    /// Returns the number of windows applied.
+    pub fn poll_completions(&mut self, now: f64) -> usize {
+        let mut due: Vec<(usize, PendingWindow)> = Vec::new();
+        for w in 0..self.workers.len() {
+            if matches!(&self.workers[w].pending, Some(p) if p.done_at <= now)
+            {
+                due.push((w, self.workers[w].pending.take().unwrap()));
+            }
+        }
+        // apply in completion-time order (ties: worker index) so sinks and
+        // the online predictor see windows chronologically even when the
+        // caller jumps `now` past several completions at once
+        due.sort_by(|a, b| {
+            a.1.done_at.total_cmp(&b.1.done_at).then(a.0.cmp(&b.0))
+        });
+        let applied = due.len();
+        for (w, p) in due {
+            self.apply_outcome(p.done_at, p.outcome, &p.batch, w);
+        }
+        applied
+    }
+
+    /// Run one scheduling iteration on every idle worker with queued jobs
+    /// (Algorithm 1 lines 6–20): refresh priorities, rebuild the node's
+    /// priority queue, set the preemption-victim order, form the batch,
+    /// and execute one window.  Returns the number of windows dispatched.
+    pub fn dispatch(&mut self, now: f64) -> Result<usize> {
+        let mut dispatched = 0;
+        for w in 0..self.cfg.workers {
+            if self.workers[w].pending.is_some() || self.queued[w].is_empty() {
+                continue;
+            }
+            self.iterations += 1;
+            if self.cfg.max_iterations > 0
+                && self.iterations > self.cfg.max_iterations
+            {
+                bail!("iteration cap {} exceeded (livelock?)",
+                      self.cfg.max_iterations);
+            }
+            let t_sched = Instant::now();
+
+            // refresh priorities of every queued job on this node: disjoint
+            // slab references, no per-iteration map rebuild or cloning
+            let ids: Vec<JobId> = std::mem::take(&mut self.queued[w]);
+            {
+                let (table, scheduler) =
+                    (&mut self.table, &mut *self.scheduler);
+                table.with_mut_refs(&ids, |refs| scheduler.refresh(refs, now));
+            }
+
+            // rebuild this node's priority queue and drain it sorted
+            for &id in &ids {
+                let (priority, arrival_ms) = {
+                    let j = &self.table[id];
+                    (j.priority.unwrap_or(f64::MAX), j.arrival_ms)
+                };
+                self.buffer.push(w, Entry { priority, arrival_ms, id });
+            }
+            let full_order = self.buffer.drain_sorted(w);
+
+            // preemption victim ordering for the engine
+            let ranked: Vec<(JobId, usize)> = full_order
+                .iter()
+                .map(|e| (e.id, self.table[e.id].preemptions))
+                .collect();
+            let victims: Vec<u64> = self
+                .cfg
+                .preemption
+                .victim_order(&ranked)
+                .iter()
+                .map(|id| id.raw())
+                .collect();
+            self.engines[w].set_priority_order(&victims);
+
+            // form the batch from the highest-priority prefix
+            let take = self.cfg.max_batch.min(self.engines[w].max_batch());
+            let batch: Vec<JobId> =
+                full_order.iter().take(take).map(|e| e.id).collect();
+
+            // admit + (modelled) prompt transfer
+            for &id in &batch {
+                let prompt_tokens = self.table[id].prompt.len();
+                if !self.table[id].engine_admitted {
+                    let spec = {
+                        let j = &self.table[id];
+                        SeqSpec {
+                            id: id.raw(),
+                            prompt: j.prompt.clone(),
+                            target_total: j.total_len,
+                            topic: j.topic,
+                        }
+                    };
+                    if let Err(err) = self.engines[w].admit(spec) {
+                        // restore the drained pool so the coordinator stays
+                        // consistent for callers that outlive the error
+                        self.queued[w]
+                            .extend(full_order.iter().map(|e| e.id));
+                        return Err(err);
+                    }
+                    self.table[id].engine_admitted = true;
+                }
+                self.batcher.mark_prompt_sent(w, id, prompt_tokens);
+            }
+            self.sched_overhead_ns += t_sched.elapsed().as_nanos();
+            for s in self.sinks.iter_mut() {
+                s.on_batch_formed(w, &batch, now);
+            }
+
+            // execute one scheduling window
+            let raw_batch: Vec<u64> = batch.iter().map(|id| id.raw()).collect();
+            let outcome = match self.engines[w].run_window(&raw_batch) {
+                Ok(o) => o,
+                Err(err) => {
+                    // as above: no job may be lost on an engine error
+                    self.queued[w].extend(full_order.iter().map(|e| e.id));
+                    return Err(err);
+                }
+            };
+
+            // the sorted remainder becomes the node's new pool (the
+            // monolith instead re-scanned the old queue with
+            // `batch_ids.contains` per element)
+            self.queued[w].extend(full_order.iter().skip(take).map(|e| e.id));
+            for &id in &batch {
+                self.table[id].state = JobState::Running;
+            }
+
+            match self.cfg.clock {
+                ClockMode::Virtual => {
+                    let done_at = now + outcome.service_ms
+                        + self.cfg.overhead_ms_per_iter;
+                    self.workers[w].pending =
+                        Some(PendingWindow { done_at, outcome, batch });
+                }
+                ClockMode::Wall => {
+                    let t_done = self.wall_ms();
+                    self.apply_outcome(t_done, outcome, &batch, w);
+                }
+            }
+            dispatched += 1;
+        }
+        Ok(dispatched)
+    }
+
+    /// One full scheduling iteration: ingest → poll completions → dispatch,
+    /// advancing the clock (virtual) or sleeping (wall) when no worker
+    /// could run.  A no-op once [`is_done`](Self::is_done).
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        if self.is_done() {
+            return Ok(StepOutcome {
+                now_ms: self.now,
+                admitted: 0,
+                completed: 0,
+                dispatched: 0,
+                idled: false,
+                done: true,
+            });
+        }
+        if self.cfg.clock == ClockMode::Wall {
+            self.now = self.wall_ms();
+        }
+        let now = self.now;
+        let admitted = self.ingest(now);
+        let completed = self.poll_completions(now);
+        let dispatched = self.dispatch(now)?;
+        let mut idled = false;
+        if !self.is_done() && dispatched == 0 {
+            self.advance_clock()?;
+            idled = true;
+        }
+        Ok(StepOutcome {
+            now_ms: self.now,
+            admitted,
+            completed,
+            dispatched,
+            idled,
+            done: self.is_done(),
+        })
+    }
+
+    /// Step until every job finishes; returns the final report.
+    pub fn run_to_completion(&mut self) -> Result<ServeReport> {
+        while !self.is_done() {
+            self.step()?;
+        }
+        Ok(self.report())
+    }
+
+    /// Snapshot the run metrics (records cover finished jobs only, so this
+    /// is also meaningful mid-run).
+    pub fn report(&self) -> ServeReport {
+        let makespan_ms = self
+            .table
+            .iter()
+            .filter_map(|j| j.finish_ms)
+            .fold(0.0, f64::max);
+        let records: Vec<JobRecord> =
+            self.table.iter().filter_map(JobRecord::from_job).collect();
+        ServeReport {
+            scheduler: self.scheduler.policy.name().to_string(),
+            predictor_name: self.scheduler.predictor_name().to_string(),
+            records,
+            makespan_ms,
+            total_preemptions: self.total_preemptions,
+            sched_overhead_ms_avg: if self.iterations == 0 {
+                0.0
+            } else {
+                self.sched_overhead_ns as f64 / self.iterations as f64 / 1e6
+            },
+            sched_iterations: self.iterations,
+        }
+    }
+
+    // ---- internals ------------------------------------------------------
+
+    /// Fold a finished window back into coordinator state: count
+    /// preemptions, append tokens, retire finished jobs, return the rest
+    /// to their node's pool.
+    fn apply_outcome(&mut self, t_done: f64, outcome: WindowOutcome,
+                     batch: &[JobId], node: usize) {
+        for &pid_raw in &outcome.preempted {
+            let pid = JobId::from_raw(pid_raw);
+            if let Some(j) = self.table.get_mut(pid) {
+                j.preemptions += 1;
+            }
+            self.total_preemptions += 1;
+            for s in self.sinks.iter_mut() {
+                s.on_job_preempted(pid, node, t_done);
+            }
+        }
+        for out in &outcome.outputs {
+            let id = JobId::from_raw(out.id);
+            let j = &mut self.table[id];
+            j.windows += 1;
+            j.service_ms += outcome.service_ms;
+            if !out.new_tokens.is_empty() && j.first_token_ms.is_none() {
+                j.first_token_ms = Some(t_done);
+            }
+            j.generated += out.new_tokens.len();
+            j.response.extend_from_slice(&out.new_tokens);
+            if out.done {
+                j.state = JobState::Finished;
+                j.finish_ms = Some(t_done);
+                let jct_ms = t_done - j.arrival_ms;
+                let (prompt_len, total_len) = (j.prompt.len(), j.total_len);
+                self.finished += 1;
+                self.state.on_finish(node);
+                self.scheduler.observe_completion(prompt_len, total_len);
+                self.scheduler.forget(id);
+                self.batcher.forget(node, id);
+                self.engines[node].remove(out.id);
+                for s in self.sinks.iter_mut() {
+                    s.on_job_finished(id, node, jct_ms, t_done);
+                }
+            } else {
+                j.state = JobState::Queued;
+                self.queued[node].push(id);
+            }
+        }
+        // batch jobs that produced no output (couldn't be staged) go back
+        for &id in batch {
+            let j = &mut self.table[id];
+            if j.state == JobState::Running {
+                j.state = JobState::Queued;
+                self.queued[node].push(id);
+            }
+        }
+        // window-done fires after the window's per-job events
+        for s in self.sinks.iter_mut() {
+            s.on_window_done(node, batch, outcome.service_ms, t_done);
+        }
+    }
+
+    /// Nothing could run: jump the virtual clock to the next event, or
+    /// sleep until it in wall mode.  Errors on deadlock (unfinished jobs
+    /// but no future event).
+    fn advance_clock(&mut self) -> Result<()> {
+        let next_completion = self
+            .workers
+            .iter()
+            .filter_map(|s| s.pending.as_ref().map(|p| p.done_at))
+            .fold(f64::INFINITY, f64::min);
+        let next_arrival_t = if self.next_arrival < self.arrivals.len() {
+            self.arrivals[self.next_arrival].0
+        } else {
+            f64::INFINITY
+        };
+        let next_t = next_completion.min(next_arrival_t);
+        match self.cfg.clock {
+            ClockMode::Virtual => {
+                if !next_t.is_finite() {
+                    bail!("deadlock: no pending work but {} jobs unfinished",
+                          self.table.len() - self.finished);
+                }
+                self.now = next_t.max(self.now);
+            }
+            ClockMode::Wall => {
+                if next_t.is_finite() {
+                    let wait_ms = next_t - self.wall_ms();
+                    if wait_ms > 0.0 {
+                        std::thread::sleep(std::time::Duration::from_secs_f64(
+                            wait_ms / 1e3,
+                        ));
+                    }
+                } else {
+                    bail!("deadlock: no pending work but {} jobs unfinished",
+                          self.table.len() - self.finished);
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -16,8 +16,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use elis::coordinator::{
-    run_serving, ClockMode, LbStrategy, Policy, PreemptionPolicy, Scheduler,
-    ServeConfig,
+    ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
+    Scheduler, ServeConfig,
 };
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
@@ -63,8 +63,9 @@ USAGE: elis <subcommand> [--flags]
   info              artifact + model summary
   serve             real PJRT serving (wall clock): --n --rps --scheduler
                     --workers --predictor(hlo|heuristic|oracle)
+                    --lb(minload|rr|random)
   simulate          calibrated simulation: --model --scheduler --rps-mult
-                    --batch --workers --n --shuffles --predictor
+                    --batch --workers --n --shuffles --predictor --lb
   trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
   preempt-profile   Table 6 reproduction: --model(all|abbrev)
   gen-trace         standalone request generator: --n --rps --out file
@@ -132,8 +133,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.usize("n", 12);
     let rps = args.f64("rps", 0.5);
     let workers = args.usize("workers", 1);
-    let policy = Policy::parse(&args.str("scheduler", "isrtf"))
-        .ok_or_else(|| anyhow!("bad --scheduler"))?;
+    let policy = args.parse_with("scheduler", "isrtf", Policy::parse)?;
+    let lb = args.parse_with("lb", "minload", LbStrategy::parse)?;
     let predictor_kind = args.str("predictor", "hlo");
     let seed = args.u64("seed", 42);
 
@@ -159,14 +160,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = ServeConfig {
         workers,
         max_batch: args.usize("batch", 4),
-        lb: LbStrategy::MinLoad,
+        lb,
         preemption: PreemptionPolicy::default(),
         overhead_ms_per_iter: 0.0,
         clock: ClockMode::Wall,
         seed,
         max_iterations: 1_000_000,
     };
-    let report = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+    let report = CoordinatorBuilder::from_config(cfg)
+        .build(&trace, &mut engines, &mut sched)?
+        .run_to_completion()?;
     report.print_summary();
     println!("avg TTFT {:.2}s  TPOT {:.1}ms  tokens/s {:.1}",
              report.avg_ttft_s(), report.avg_tpot_s() * 1e3,
@@ -188,8 +191,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown model {model}"))?
         .clone();
 
-    let policy = Policy::parse(&args.str("scheduler", "isrtf"))
-        .ok_or_else(|| anyhow!("bad --scheduler"))?;
+    let policy = args.parse_with("scheduler", "isrtf", Policy::parse)?;
+    let lb = args.parse_with("lb", "minload", LbStrategy::parse)?;
     let predictor_kind = args.str("predictor", "hlo");
     let batch = args.usize("batch", 4);
     let workers = args.usize("workers", 1);
@@ -223,12 +226,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let cfg = ServeConfig {
             workers,
             max_batch: batch,
+            lb,
             clock: ClockMode::Virtual,
             seed: seed + s as u64,
             max_iterations: 10_000_000,
             ..Default::default()
         };
-        let report = run_serving(&cfg, &trace, &mut engines, &mut sched)?;
+        let report = CoordinatorBuilder::from_config(cfg)
+            .build(&trace, &mut engines, &mut sched)?
+            .run_to_completion()?;
         report.print_summary();
         jcts.push(report.avg_jct_s());
     }

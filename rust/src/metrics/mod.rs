@@ -6,7 +6,7 @@ use crate::coordinator::job::Job;
 use crate::stats::summary::{Percentiles, Summary};
 use crate::util::json::Json;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
     pub id: u64,
     pub node: usize,
@@ -24,7 +24,7 @@ pub struct JobRecord {
 impl JobRecord {
     pub fn from_job(j: &Job) -> Option<JobRecord> {
         Some(JobRecord {
-            id: j.id,
+            id: j.id.raw(),
             node: j.node?,
             arrival_ms: j.arrival_ms,
             finish_ms: j.finish_ms?,
@@ -216,9 +216,10 @@ mod tests {
 
     #[test]
     fn from_job_requires_finish() {
-        let j = Job::new(1, vec![1], 10, 0, 0.0);
+        use crate::coordinator::job::JobId;
+        let j = Job::new(JobId::new(1), vec![1], 10, 0, 0.0);
         assert!(JobRecord::from_job(&j).is_none());
-        let mut j2 = Job::new(2, vec![1], 10, 0, 0.0);
+        let mut j2 = Job::new(JobId::new(2), vec![1], 10, 0, 0.0);
         j2.node = Some(0);
         j2.finish_ms = Some(50.0);
         assert!(JobRecord::from_job(&j2).is_some());

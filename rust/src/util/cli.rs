@@ -71,6 +71,17 @@ impl Args {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
     }
 
+    /// Parse a flag through a fallible enum parser (e.g. `Policy::parse`,
+    /// `LbStrategy::parse`), attributing the error to the flag instead of
+    /// silently falling back to a default.
+    pub fn parse_with<T>(
+        &self, key: &str, default: &str,
+        parse: impl Fn(&str) -> Result<T, String>,
+    ) -> anyhow::Result<T> {
+        let raw = self.str(key, default);
+        parse(&raw).map_err(|e| anyhow::anyhow!("--{key}: {e}"))
+    }
+
     /// Comma-separated list flag, e.g. `--models opt13,lam13`.
     pub fn list(&self, key: &str) -> Vec<String> {
         self.flags
@@ -124,6 +135,27 @@ mod tests {
         assert_eq!(a.f64("missing", 1.5), 1.5);
         assert_eq!(a.str("missing", "d"), "d");
         assert!(a.opt_str("missing").is_none());
+    }
+
+    #[test]
+    fn parse_with_reports_flag_name() {
+        let a = parse("x --mode bogus");
+        let ok: anyhow::Result<usize> = a.parse_with("mode", "fast", |s| {
+            match s {
+                "fast" => Ok(1),
+                "slow" => Ok(2),
+                _ => Err(format!("unknown mode '{s}' (valid: fast, slow)")),
+            }
+        });
+        let err = format!("{:#}", ok.unwrap_err());
+        assert!(err.contains("--mode") && err.contains("bogus"), "{err}");
+
+        let dflt: usize = parse("x")
+            .parse_with("mode", "slow", |s| if s == "slow" { Ok(2) } else {
+                Err("nope".into())
+            })
+            .unwrap();
+        assert_eq!(dflt, 2);
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! calibrated discrete-event engine.
 
 use elis::coordinator::{
-    run_serving, ClockMode, LbStrategy, Policy, PreemptionPolicy, Scheduler,
-    ServeConfig,
+    run_serving, ClockMode, CoordinatorBuilder, LbStrategy, Policy,
+    PreemptionPolicy, Scheduler, ServeConfig, SharedCounter,
 };
 use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
@@ -256,6 +256,111 @@ fn mlfq_baseline_runs_and_degrades_gracefully() {
     assert_eq!(mlfq.n(), 80);
     // MLFQ should at least not be catastrophically worse than FCFS
     assert!(mlfq.avg_jct_s() < fcfs.avg_jct_s() * 2.0);
+}
+
+#[test]
+fn run_serving_matches_coordinator_builder() {
+    // acceptance: the compatibility wrapper and a hand-built Coordinator
+    // must produce identical reports (records, makespan, preemptions) for
+    // a fixed seed, on the same trace
+    let corpus = Corpus::synthetic(300, 41);
+    let mut gen = RequestGenerator::fabrix(3.0, 41);
+    let trace = gen.trace(&corpus, 60);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_iterations: 5_000_000,
+        seed: 41,
+        ..Default::default()
+    };
+
+    let mut sched_a = Scheduler::new(Policy::Isrtf,
+                                     Box::new(SurrogatePredictor::calibrated(41)));
+    let mut e_a = engines(2, 8 << 30);
+    let a = run_serving(&cfg, &trace, &mut e_a, &mut sched_a).unwrap();
+
+    let mut sched_b = Scheduler::new(Policy::Isrtf,
+                                     Box::new(SurrogatePredictor::calibrated(41)));
+    let mut e_b = engines(2, 8 << 30);
+    let b = CoordinatorBuilder::from_config(cfg)
+        .build(&trace, &mut e_b, &mut sched_b)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    assert_eq!(a.records, b.records, "per-job records must be identical");
+    assert_eq!(a.makespan_ms, b.makespan_ms);
+    assert_eq!(a.total_preemptions, b.total_preemptions);
+    assert_eq!(a.sched_iterations, b.sched_iterations);
+    assert_eq!(a.scheduler, b.scheduler);
+    assert_eq!(a.predictor_name, b.predictor_name);
+}
+
+#[test]
+fn stepped_api_exposes_progress() {
+    let corpus = Corpus::synthetic(200, 43);
+    let mut gen = RequestGenerator::fabrix(4.0, 43);
+    let trace = gen.trace(&corpus, 30);
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let mut e = engines(1, 8 << 30);
+    let mut coord = CoordinatorBuilder::new()
+        .max_iterations(5_000_000)
+        .seed(43)
+        .build(&trace, &mut e, &mut sched)
+        .unwrap();
+
+    assert_eq!(coord.total_jobs(), 30);
+    assert_eq!(coord.finished_jobs(), 0);
+    assert!(!coord.is_done());
+
+    let (mut admitted, mut completed, mut dispatched) = (0usize, 0usize, 0usize);
+    let mut last_now = 0.0f64;
+    while !coord.is_done() {
+        let s = coord.step().unwrap();
+        assert!(s.now_ms >= last_now, "virtual time must be monotone");
+        last_now = s.now_ms;
+        admitted += s.admitted;
+        completed += s.completed;
+        dispatched += s.dispatched;
+    }
+    assert_eq!(admitted, 30, "every arrival is ingested exactly once");
+    assert_eq!(completed as u64, coord.iterations(),
+               "virtual mode applies every dispatched window once");
+    assert_eq!(dispatched as u64, coord.iterations());
+    assert_eq!(coord.finished_jobs(), 30);
+    let r = coord.report();
+    assert_eq!(r.n(), 30);
+    assert_eq!(r.sched_iterations, coord.iterations());
+
+    // stepping a finished coordinator is a no-op
+    let s = coord.step().unwrap();
+    assert!(s.done && s.admitted == 0 && s.dispatched == 0 && !s.idled);
+}
+
+#[test]
+fn event_sink_sees_the_whole_run() {
+    let corpus = Corpus::synthetic(200, 47);
+    let mut gen = RequestGenerator::fabrix(3.0, 47);
+    let trace = gen.trace(&corpus, 40);
+    let mut sched = Scheduler::new(Policy::Isrtf,
+                                   Box::new(SurrogatePredictor::calibrated(47)));
+    let mut e = engines(2, 8 << 30);
+    let counter = SharedCounter::new();
+    let r = CoordinatorBuilder::new()
+        .workers(2)
+        .max_iterations(5_000_000)
+        .sink(Box::new(counter.clone()))
+        .build(&trace, &mut e, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    let c = counter.snapshot();
+    assert_eq!(c.admitted, 40);
+    assert_eq!(c.finished, 40);
+    assert_eq!(c.preempted, r.total_preemptions);
+    assert_eq!(c.batches, r.sched_iterations);
+    assert_eq!(c.windows, r.sched_iterations,
+               "every formed batch completes exactly one window");
 }
 
 #[test]
