@@ -7,13 +7,40 @@
 //! synchronously from inside the loop, so they see events in exact causal
 //! order with the coordinator's own timestamps (virtual or wall ms).
 //!
-//! This is the extension point the ROADMAP's follow-on scenarios hang off:
-//! SLO-aware scheduling (watch per-job latency as windows complete),
-//! streaming admission control (watch queue growth at admit time),
-//! multi-tenant fairness accounting, structured logging, and live metrics
-//! export — none of which need to touch the serving loop itself.
+//! Job-scoped events carry a [`JobMeta`] — the job's identity, tenant tag,
+//! and size facts — so sinks can do per-tenant accounting without access
+//! to the job table; completions additionally carry [`FinishStats`] with
+//! the latency measurements.  This is the extension point the ROADMAP's
+//! follow-on scenarios hang off: the live telemetry subsystem
+//! ([`telemetry`](crate::telemetry)) builds its streaming sketches,
+//! Prometheus export, and SLO policy feedback entirely from these hooks.
 
 use super::job::JobId;
+
+/// Immutable facts about a job, passed alongside lifecycle events.
+#[derive(Debug, Clone, Copy)]
+pub struct JobMeta<'a> {
+    pub id: JobId,
+    /// accounting tag threaded from `TraceRequest::tenant`
+    pub tenant: Option<&'a str>,
+    pub arrival_ms: f64,
+    pub prompt_len: usize,
+    pub total_len: usize,
+}
+
+/// Latency measurements delivered with [`EventSink::on_job_finished`].
+#[derive(Debug, Clone, Copy)]
+pub struct FinishStats {
+    /// completion time: finish − arrival
+    pub jct_ms: f64,
+    /// None if the job finished without emitting tokens (engine anomaly)
+    pub ttft_ms: Option<f64>,
+    pub queue_delay_ms: f64,
+    /// cumulative time inside executing batches
+    pub service_ms: f64,
+    /// response tokens generated
+    pub tokens: usize,
+}
 
 /// Receiver for coordinator lifecycle events.  All methods default to
 /// no-ops; implement only what you need.  Times are coordinator time
@@ -21,20 +48,26 @@ use super::job::JobId;
 /// serving start otherwise).
 pub trait EventSink {
     /// A job arrived and was assigned to `node` by the load balancer.
-    fn on_job_admitted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
+    fn on_job_admitted(&mut self, _job: &JobMeta<'_>, _node: usize,
+                       _now_ms: f64) {
+    }
 
     /// A batch was formed for `node` (jobs in priority order) and is about
     /// to execute one scheduling window.
     fn on_batch_formed(&mut self, _node: usize, _jobs: &[JobId],
-                       _now_ms: f64) {}
+                       _now_ms: f64) {
+    }
 
-    /// A scheduling window completed on `node` after `service_ms`.
+    /// A scheduling window completed on `node` after `service_ms`,
+    /// producing `tokens` new tokens across the batch.
     fn on_window_done(&mut self, _node: usize, _batch: &[JobId],
-                      _service_ms: f64, _now_ms: f64) {}
+                      _tokens: usize, _service_ms: f64, _now_ms: f64) {
+    }
 
-    /// A job produced its full response; `jct_ms` is its completion time.
-    fn on_job_finished(&mut self, _job: JobId, _node: usize, _jct_ms: f64,
-                       _now_ms: f64) {}
+    /// A job produced its full response.
+    fn on_job_finished(&mut self, _job: &JobMeta<'_>, _node: usize,
+                       _stats: &FinishStats, _now_ms: f64) {
+    }
 
     /// The engine evicted a job's KV during the last window.
     fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
@@ -52,7 +85,8 @@ pub struct EventCounter {
 }
 
 impl EventSink for EventCounter {
-    fn on_job_admitted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {
+    fn on_job_admitted(&mut self, _job: &JobMeta<'_>, _node: usize,
+                       _now_ms: f64) {
         self.admitted += 1;
     }
 
@@ -62,12 +96,12 @@ impl EventSink for EventCounter {
     }
 
     fn on_window_done(&mut self, _node: usize, _batch: &[JobId],
-                      _service_ms: f64, _now_ms: f64) {
+                      _tokens: usize, _service_ms: f64, _now_ms: f64) {
         self.windows += 1;
     }
 
-    fn on_job_finished(&mut self, _job: JobId, _node: usize, _jct_ms: f64,
-                       _now_ms: f64) {
+    fn on_job_finished(&mut self, _job: &JobMeta<'_>, _node: usize,
+                       _stats: &FinishStats, _now_ms: f64) {
         self.finished += 1;
     }
 
@@ -92,7 +126,8 @@ impl SharedCounter {
 }
 
 impl EventSink for SharedCounter {
-    fn on_job_admitted(&mut self, job: JobId, node: usize, now_ms: f64) {
+    fn on_job_admitted(&mut self, job: &JobMeta<'_>, node: usize,
+                       now_ms: f64) {
         self.0.borrow_mut().on_job_admitted(job, node, now_ms);
     }
 
@@ -101,13 +136,14 @@ impl EventSink for SharedCounter {
     }
 
     fn on_window_done(&mut self, node: usize, batch: &[JobId],
-                      service_ms: f64, now_ms: f64) {
-        self.0.borrow_mut().on_window_done(node, batch, service_ms, now_ms);
+                      tokens: usize, service_ms: f64, now_ms: f64) {
+        self.0.borrow_mut().on_window_done(node, batch, tokens, service_ms,
+                                           now_ms);
     }
 
-    fn on_job_finished(&mut self, job: JobId, node: usize, jct_ms: f64,
-                       now_ms: f64) {
-        self.0.borrow_mut().on_job_finished(job, node, jct_ms, now_ms);
+    fn on_job_finished(&mut self, job: &JobMeta<'_>, node: usize,
+                       stats: &FinishStats, now_ms: f64) {
+        self.0.borrow_mut().on_job_finished(job, node, stats, now_ms);
     }
 
     fn on_job_preempted(&mut self, job: JobId, node: usize, now_ms: f64) {
@@ -119,14 +155,34 @@ impl EventSink for SharedCounter {
 mod tests {
     use super::*;
 
+    fn meta(id: usize) -> JobMeta<'static> {
+        JobMeta {
+            id: JobId::new(id),
+            tenant: None,
+            arrival_ms: 0.0,
+            prompt_len: 4,
+            total_len: 20,
+        }
+    }
+
+    fn stats() -> FinishStats {
+        FinishStats {
+            jct_ms: 52.0,
+            ttft_ms: Some(50.0),
+            queue_delay_ms: 2.0,
+            service_ms: 50.0,
+            tokens: 20,
+        }
+    }
+
     #[test]
     fn counter_counts() {
         let mut c = EventCounter::default();
-        c.on_job_admitted(JobId::new(0), 0, 0.0);
-        c.on_job_admitted(JobId::new(1), 0, 1.0);
+        c.on_job_admitted(&meta(0), 0, 0.0);
+        c.on_job_admitted(&meta(1), 0, 1.0);
         c.on_batch_formed(0, &[JobId::new(0)], 2.0);
-        c.on_window_done(0, &[JobId::new(0)], 50.0, 52.0);
-        c.on_job_finished(JobId::new(0), 0, 52.0, 52.0);
+        c.on_window_done(0, &[JobId::new(0)], 20, 50.0, 52.0);
+        c.on_job_finished(&meta(0), 0, &stats(), 52.0);
         c.on_job_preempted(JobId::new(1), 0, 52.0);
         assert_eq!((c.admitted, c.batches, c.windows, c.finished, c.preempted),
                    (2, 1, 1, 1, 1));
@@ -136,8 +192,8 @@ mod tests {
     fn shared_counter_reads_through_clone() {
         let shared = SharedCounter::new();
         let mut handle = shared.clone();
-        handle.on_job_admitted(JobId::new(3), 1, 0.0);
-        handle.on_job_finished(JobId::new(3), 1, 9.0, 9.0);
+        handle.on_job_admitted(&meta(3), 1, 0.0);
+        handle.on_job_finished(&meta(3), 1, &stats(), 9.0);
         let snap = shared.snapshot();
         assert_eq!(snap.admitted, 1);
         assert_eq!(snap.finished, 1);

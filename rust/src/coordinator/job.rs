@@ -69,6 +69,9 @@ pub struct Job {
     /// predictors may read it)
     pub total_len: usize,
     pub topic: usize,
+    /// accounting tag threaded from `TraceRequest::tenant` (multi-tenant
+    /// telemetry + SLO budgets); None = untagged
+    pub tenant: Option<String>,
     pub arrival_ms: f64,
     /// backend worker chosen by the load balancer
     pub node: Option<usize>,
@@ -101,6 +104,7 @@ impl Job {
             prompt,
             total_len: total_len.max(1),
             topic,
+            tenant: None,
             arrival_ms,
             node: None,
             priority: None,

@@ -35,11 +35,12 @@ pub mod priority_buffer;
 pub mod scheduler;
 pub mod serving;
 
-pub use events::{EventCounter, EventSink, SharedCounter};
+pub use events::{EventCounter, EventSink, FinishStats, JobMeta,
+                 SharedCounter};
 pub use frontend::{peak_rps_search, run_serving};
 pub use job::{Job, JobId, JobState, JobTable};
 pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 pub use preemption::PreemptionPolicy;
-pub use scheduler::{Policy, Scheduler};
+pub use scheduler::{Policy, PriorityShaper, Scheduler};
 pub use serving::{ClockMode, Coordinator, CoordinatorBuilder, ServeConfig,
                   StepOutcome};

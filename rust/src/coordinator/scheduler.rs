@@ -21,6 +21,21 @@ use crate::predictor::{LengthPredictor, PredictQuery};
 
 use super::job::{Job, JobId};
 
+/// Post-scheduler priority hook, called by the coordinator's dispatch for
+/// every queued job each scheduling iteration — after the base policy
+/// assigned `base_priority` ([`Scheduler::refresh`]) and before the job
+/// enters its node's priority queue.  Returns the priority actually used
+/// for ordering (lower still runs first).
+///
+/// This is the seam SLO-aware policies plug into (e.g.
+/// `telemetry::SloPolicy`, which re-orders work earliest-deadline-first
+/// against per-tenant budgets using live latency sketches).  When no
+/// shaper is registered the base priority is used untouched, so the
+/// schedule — and every report — is bit-identical to a shaper-less run.
+pub trait PriorityShaper {
+    fn shape(&mut self, job: &Job, base_priority: f64, now_ms: f64) -> f64;
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
     Fcfs,

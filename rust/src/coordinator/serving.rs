@@ -39,12 +39,12 @@ use crate::metrics::{JobRecord, ServeReport};
 use crate::workload::TraceRequest;
 
 use super::batcher::Batcher;
-use super::events::EventSink;
+use super::events::{EventSink, FinishStats, JobMeta};
 use super::job::{Job, JobId, JobState, JobTable};
 use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 use super::preemption::PreemptionPolicy;
 use super::priority_buffer::{Entry, PriorityBuffer};
-use super::scheduler::Scheduler;
+use super::scheduler::{PriorityShaper, Scheduler};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClockMode {
@@ -113,11 +113,13 @@ struct WorkerSlot {
     pending: Option<PendingWindow>,
 }
 
-/// Builder for [`Coordinator`]: a [`ServeConfig`] plus observers.
+/// Builder for [`Coordinator`]: a [`ServeConfig`] plus observers and an
+/// optional priority shaper.
 #[derive(Default)]
 pub struct CoordinatorBuilder {
     cfg: ServeConfig,
     sinks: Vec<Box<dyn EventSink>>,
+    shaper: Option<Box<dyn PriorityShaper>>,
 }
 
 impl CoordinatorBuilder {
@@ -126,7 +128,7 @@ impl CoordinatorBuilder {
     }
 
     pub fn from_config(cfg: ServeConfig) -> CoordinatorBuilder {
-        CoordinatorBuilder { cfg, sinks: Vec::new() }
+        CoordinatorBuilder { cfg, sinks: Vec::new(), shaper: None }
     }
 
     pub fn workers(mut self, workers: usize) -> Self {
@@ -176,6 +178,14 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Register a priority shaper: dispatch passes every queued job's base
+    /// priority through it before ordering (the SLO-policy seam).  Without
+    /// one, scheduling is bit-identical to the pre-shaper coordinator.
+    pub fn priority_shaper(mut self, shaper: Box<dyn PriorityShaper>) -> Self {
+        self.shaper = Some(shaper);
+        self
+    }
+
     /// Load `trace` into a job table and wire up the serving state.
     /// `engines[i]` is worker i's backend; `scheduler` owns the policy and
     /// the length predictor.
@@ -183,7 +193,7 @@ impl CoordinatorBuilder {
                      engines: &'a mut [Box<dyn Engine>],
                      scheduler: &'a mut Scheduler)
                      -> Result<Coordinator<'a>> {
-        let CoordinatorBuilder { cfg, sinks } = self;
+        let CoordinatorBuilder { cfg, sinks, shaper } = self;
         if engines.len() != cfg.workers {
             bail!("expected {} engines, got {}", cfg.workers, engines.len());
         }
@@ -195,13 +205,21 @@ impl CoordinatorBuilder {
         let mut arrivals: Vec<(f64, JobId)> = Vec::with_capacity(trace.len());
         for r in trace {
             let id = table.insert_with(|id| {
-                Job::new(id, r.prompt.clone(), r.total_len, r.topic,
-                         r.arrival_ms)
+                let mut job = Job::new(id, r.prompt.clone(), r.total_len,
+                                       r.topic, r.arrival_ms);
+                job.tenant = r.tenant.clone();
+                job
             });
             arrivals.push((r.arrival_ms, id));
         }
         // stable: equal arrival times keep trace order
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+        // preemption frequency control (§3.4) is enforced inside the
+        // engines: each may evict at most this many sequences per window
+        for e in engines.iter_mut() {
+            e.set_preemption_cap(cfg.preemption.max_per_iteration);
+        }
 
         let workers_n = cfg.workers;
         Ok(Coordinator {
@@ -219,6 +237,7 @@ impl CoordinatorBuilder {
             buffer: PriorityBuffer::new(workers_n),
             batcher: Batcher::new(workers_n, cfg.max_batch),
             sinks,
+            shaper,
             now: 0.0,
             wall_start: Instant::now(),
             finished: 0,
@@ -248,6 +267,7 @@ pub struct Coordinator<'a> {
     buffer: PriorityBuffer,
     batcher: Batcher,
     sinks: Vec<Box<dyn EventSink>>,
+    shaper: Option<Box<dyn PriorityShaper>>,
     now: f64,
     wall_start: Instant,
     finished: usize,
@@ -322,12 +342,42 @@ impl<'a> Coordinator<'a> {
             let node = self.lb.assign(&mut self.state);
             self.table[id].node = Some(node);
             self.queued[node].push(id);
+            let j = &self.table[id];
+            let meta = JobMeta {
+                id,
+                tenant: j.tenant.as_deref(),
+                arrival_ms: j.arrival_ms,
+                prompt_len: j.prompt.len(),
+                total_len: j.total_len,
+            };
             for s in self.sinks.iter_mut() {
-                s.on_job_admitted(id, node, now);
+                s.on_job_admitted(&meta, node, now);
             }
             admitted += 1;
         }
         admitted
+    }
+
+    /// Streaming admission: append a new request to a (possibly running)
+    /// coordinator.  The job is admitted by the next
+    /// [`ingest`](Self::ingest) whose `now` has reached its `arrival_ms`
+    /// (an arrival already in the past is picked up on the very next
+    /// step), so mid-run and out-of-order pushes are each admitted,
+    /// scheduled, and counted exactly once.  Returns the new job's id.
+    pub fn push_request(&mut self, r: &TraceRequest) -> JobId {
+        let id = self.table.insert_with(|id| {
+            let mut job = Job::new(id, r.prompt.clone(), r.total_len,
+                                   r.topic, r.arrival_ms);
+            job.tenant = r.tenant.clone();
+            job
+        });
+        // keep the un-ingested tail of `arrivals` sorted by arrival time;
+        // everything before `next_arrival` has already been admitted
+        let tail = &self.arrivals[self.next_arrival..];
+        let pos = self.next_arrival
+            + tail.partition_point(|&(t, _)| t <= r.arrival_ms);
+        self.arrivals.insert(pos, (r.arrival_ms, id));
+        id
     }
 
     /// Apply every pending window outcome due at `now` (virtual mode; wall
@@ -382,11 +432,17 @@ impl<'a> Coordinator<'a> {
                 table.with_mut_refs(&ids, |refs| scheduler.refresh(refs, now));
             }
 
-            // rebuild this node's priority queue and drain it sorted
+            // rebuild this node's priority queue and drain it sorted; an
+            // optional shaper (SLO policy) adjusts each base priority
             for &id in &ids {
                 let (priority, arrival_ms) = {
                     let j = &self.table[id];
-                    (j.priority.unwrap_or(f64::MAX), j.arrival_ms)
+                    let base = j.priority.unwrap_or(f64::MAX);
+                    let shaped = match self.shaper.as_mut() {
+                        Some(s) => s.shape(j, base, now),
+                        None => base,
+                    };
+                    (shaped, j.arrival_ms)
                 };
                 self.buffer.push(w, Entry { priority, arrival_ms, id });
             }
@@ -552,6 +608,8 @@ impl<'a> Coordinator<'a> {
     /// to their node's pool.
     fn apply_outcome(&mut self, t_done: f64, outcome: WindowOutcome,
                      batch: &[JobId], node: usize) {
+        let window_tokens: usize =
+            outcome.outputs.iter().map(|o| o.new_tokens.len()).sum();
         for &pid_raw in &outcome.preempted {
             let pid = JobId::from_raw(pid_raw);
             if let Some(j) = self.table.get_mut(pid) {
@@ -575,7 +633,6 @@ impl<'a> Coordinator<'a> {
             if out.done {
                 j.state = JobState::Finished;
                 j.finish_ms = Some(t_done);
-                let jct_ms = t_done - j.arrival_ms;
                 let (prompt_len, total_len) = (j.prompt.len(), j.total_len);
                 self.finished += 1;
                 self.state.on_finish(node);
@@ -583,8 +640,23 @@ impl<'a> Coordinator<'a> {
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
                 self.engines[node].remove(out.id);
+                let j = &self.table[id];
+                let meta = JobMeta {
+                    id,
+                    tenant: j.tenant.as_deref(),
+                    arrival_ms: j.arrival_ms,
+                    prompt_len,
+                    total_len,
+                };
+                let stats = FinishStats {
+                    jct_ms: t_done - j.arrival_ms,
+                    ttft_ms: j.ttft_ms(),
+                    queue_delay_ms: j.queue_delay_ms().unwrap_or(0.0),
+                    service_ms: j.service_ms,
+                    tokens: j.generated,
+                };
                 for s in self.sinks.iter_mut() {
-                    s.on_job_finished(id, node, jct_ms, t_done);
+                    s.on_job_finished(&meta, node, &stats, t_done);
                 }
             } else {
                 j.state = JobState::Queued;
@@ -601,7 +673,8 @@ impl<'a> Coordinator<'a> {
         }
         // window-done fires after the window's per-job events
         for s in self.sinks.iter_mut() {
-            s.on_window_done(node, batch, outcome.service_ms, t_done);
+            s.on_window_done(node, batch, window_tokens, outcome.service_ms,
+                             t_done);
         }
     }
 

@@ -100,6 +100,11 @@ pub trait Engine {
     /// patch to vLLM.
     fn set_priority_order(&mut self, order: &[u64]);
 
+    /// Cap on engine-initiated preemptions per window
+    /// (`PreemptionPolicy::max_per_iteration`, paper §3.4 frequency
+    /// control).  Engines that cannot preempt may ignore it.
+    fn set_preemption_cap(&mut self, _cap: usize) {}
+
     /// Drop a sequence entirely (finished or cancelled).
     fn remove(&mut self, seq_id: u64);
 

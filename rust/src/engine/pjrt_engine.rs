@@ -60,6 +60,10 @@ pub struct PjrtEngine {
     seqs: BTreeMap<u64, PjrtSeq>,
     blocks: BlockManager,
     priority_order: Vec<u64>,
+    /// PreemptionPolicy::max_per_iteration — evictions allowed per window
+    preempt_cap: usize,
+    /// evictions so far in the current window
+    window_preemptions: usize,
     pub total_preemptions: u64,
     /// cumulative ms spent inside PJRT execute (vs host re-batching)
     pub exec_ms: f64,
@@ -109,6 +113,8 @@ impl PjrtEngine {
             blocks: BlockManager::from_memory(
                 max_resident_tokens * bytes_per_token, bytes_per_token),
             priority_order: Vec::new(),
+            preempt_cap: usize::MAX,
+            window_preemptions: 0,
             total_preemptions: 0,
             exec_ms: 0.0,
             host_ms: 0.0,
@@ -130,6 +136,10 @@ impl PjrtEngine {
             match outcome {
                 AllocOutcome::Ok => return true,
                 AllocOutcome::OutOfMemory { .. } => {
+                    // per-window eviction budget (§3.4 frequency control)
+                    if self.window_preemptions >= self.preempt_cap {
+                        return false;
+                    }
                     let victim = self
                         .priority_order
                         .iter()
@@ -141,6 +151,7 @@ impl PjrtEngine {
                         Some(v) => {
                             self.evict(v);
                             self.total_preemptions += 1;
+                            self.window_preemptions += 1;
                             preempted.push(v);
                         }
                         None => return false,
@@ -294,6 +305,7 @@ impl Engine for PjrtEngine {
             bail!("batch {} exceeds max {}", seq_ids.len(), self.max_batch);
         }
         let t0 = Instant::now();
+        self.window_preemptions = 0;
         let mut preempted = Vec::new();
 
         // account KV blocks + mark resident
@@ -361,6 +373,10 @@ impl Engine for PjrtEngine {
 
     fn set_priority_order(&mut self, order: &[u64]) {
         self.priority_order = order.to_vec();
+    }
+
+    fn set_preemption_cap(&mut self, cap: usize) {
+        self.preempt_cap = cap;
     }
 
     fn remove(&mut self, seq_id: u64) {

@@ -34,6 +34,10 @@ pub struct SimEngine {
     seqs: BTreeMap<u64, SimSeq>,
     /// coordinator-provided priority order, highest first
     priority_order: Vec<u64>,
+    /// PreemptionPolicy::max_per_iteration — evictions allowed per window
+    preempt_cap: usize,
+    /// evictions so far in the current window
+    window_preemptions: usize,
     pub total_preemptions: u64,
     pub total_recompute_tokens: u64,
 }
@@ -50,6 +54,8 @@ impl SimEngine {
             blocks,
             seqs: BTreeMap::new(),
             priority_order: Vec::new(),
+            preempt_cap: usize::MAX,
+            window_preemptions: 0,
             total_preemptions: 0,
             total_recompute_tokens: 0,
         }
@@ -67,8 +73,12 @@ impl SimEngine {
     }
 
     /// Evict the lowest-priority resident sequence not in `protect`.
-    /// Returns the victim id if one was found.
+    /// Returns the victim id if one was found and the per-window eviction
+    /// budget (`PreemptionPolicy::max_per_iteration`) is not exhausted.
     fn preempt_victim(&mut self, protect: &[u64]) -> Option<u64> {
+        if self.window_preemptions >= self.preempt_cap {
+            return None;
+        }
         // priority_order is highest-first; walk from the back
         let victim = self
             .priority_order
@@ -90,6 +100,7 @@ impl SimEngine {
             })?;
         self.do_evict(victim);
         self.total_preemptions += 1;
+        self.window_preemptions += 1;
         Some(victim)
     }
 
@@ -165,6 +176,7 @@ impl Engine for SimEngine {
         if seq_ids.len() > self.max_batch {
             bail!("batch {} exceeds max {}", seq_ids.len(), self.max_batch);
         }
+        self.window_preemptions = 0;
         let mut preempted = Vec::new();
         let mut fresh = 0usize;
         let mut active: Vec<u64> = Vec::with_capacity(seq_ids.len());
@@ -269,6 +281,10 @@ impl Engine for SimEngine {
 
     fn set_priority_order(&mut self, order: &[u64]) {
         self.priority_order = order.to_vec();
+    }
+
+    fn set_preemption_cap(&mut self, cap: usize) {
+        self.preempt_cap = cap;
     }
 
     fn remove(&mut self, seq_id: u64) {
@@ -408,6 +424,37 @@ mod tests {
         big.admit(spec(1, 5, 60)).unwrap();
         big.admit(spec(2, 5, 60)).unwrap();
         assert!(big.run_window(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn preemption_cap_limits_evictions_per_window() {
+        // pool of 4 blocks (64 tokens), window of 1 token: two resident
+        // seqs fill the pool; staging + growing two new higher-priority
+        // seqs wants two evictions in one window
+        let run_contended = |cap: usize| {
+            let p = profile();
+            let bpt = p.kv_bytes_per_token;
+            let mut e = SimEngine::new(p, 1, 8, 1);
+            e.blocks = BlockManager::with_blocks(4, bpt);
+            e.admit(spec(1, 16, 20)).unwrap();
+            e.admit(spec(2, 16, 20)).unwrap();
+            e.set_priority_order(&[1, 2]);
+            let warm = e.run_window(&[1, 2]).unwrap();
+            assert!(warm.preempted.is_empty(), "{:?}", warm.preempted);
+            e.admit(spec(3, 16, 20)).unwrap();
+            e.admit(spec(4, 16, 20)).unwrap();
+            e.set_priority_order(&[3, 4, 1, 2]);
+            e.set_preemption_cap(cap);
+            e.run_window(&[3, 4]).unwrap()
+        };
+        let uncapped = run_contended(usize::MAX);
+        assert!(uncapped.preempted.len() >= 2,
+                "contention must evict both residents: {:?}",
+                uncapped.preempted);
+        let capped = run_contended(1);
+        assert_eq!(capped.preempted.len(), 1,
+                   "cap=1 must bound evictions per window: {:?}",
+                   capped.preempted);
     }
 
     #[test]

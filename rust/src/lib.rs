@@ -21,6 +21,7 @@ pub mod metrics;
 pub mod predictor;
 pub mod runtime;
 pub mod stats;
+pub mod telemetry;
 pub mod testing;
 pub mod util;
 pub mod workload;

@@ -19,6 +19,7 @@ use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
     Scheduler, ServeConfig,
 };
+use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::pjrt_engine::PjrtEngine;
@@ -63,16 +64,85 @@ USAGE: elis <subcommand> [--flags]
   info              artifact + model summary
   serve             real PJRT serving (wall clock): --n --rps --scheduler
                     --workers --predictor(hlo|heuristic|oracle)
-                    --lb(minload|rr|random)
+                    --lb(minload|rr|random) --tenants --slo-ms
   simulate          calibrated simulation: --model --scheduler --rps-mult
                     --batch --workers --n --shuffles --predictor --lb
+                    --tenants name[=weight],... (weighted round-robin tags)
+                    --slo-ms N (default JCT budget; enables the SLO-aware
+                    priority policy + live telemetry; prints a Prometheus
+                    snapshot and per-tenant deadline misses)
   trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
   preempt-profile   Table 6 reproduction: --model(all|abbrev)
   gen-trace         standalone request generator: --n --rps --out file
-                    (--process gamma|poisson|uniform); replay with
-                    serve/simulate --trace file
+                    (--process gamma|poisson|uniform) --tenants; replay
+                    with serve/simulate --trace file
   k8s-manifests     --workers --policy --image
 ";
+
+/// Parse a `--tenants` spec: comma-separated `name` or `name=weight`.
+fn parse_tenant_spec(items: &[String]) -> Result<Vec<(String, u32)>> {
+    items
+        .iter()
+        .map(|item| match item.split_once('=') {
+            Some((name, w)) => {
+                let weight: u32 = w.trim().parse().map_err(|_| {
+                    anyhow!("--tenants: bad weight in '{item}' \
+                             (expected name=integer)")
+                })?;
+                Ok((name.trim().to_string(), weight))
+            }
+            None => Ok((item.trim().to_string(), 1)),
+        })
+        .collect()
+}
+
+/// Shared `--tenants`/`--slo-ms` wiring: tag the trace, and when tenants
+/// or an SLO budget are configured return the telemetry sink plus the
+/// budget (ms; 0 = observe only, no SLO policy).
+fn telemetry_for(args: &Args, workers: usize,
+                 trace: &mut [elis::workload::TraceRequest])
+                 -> Result<Option<(TelemetrySink, f64)>> {
+    let spec = parse_tenant_spec(&args.list("tenants"))?;
+    if !spec.is_empty() {
+        elis::workload::assign_tenants(trace, &spec);
+    }
+    let slo_ms = args.f64("slo-ms", 0.0);
+    if slo_ms <= 0.0 && spec.is_empty() {
+        return Ok(None);
+    }
+    let sink = TelemetrySink::with_slo(workers, SloSpec::new(slo_ms));
+    Ok(Some((sink, slo_ms)))
+}
+
+/// Register the telemetry sink (and, when a budget is set, the SLO
+/// policy) on a builder — shared by `serve` and `simulate`.
+fn register_telemetry(mut builder: CoordinatorBuilder,
+                      telemetry: &Option<(TelemetrySink, f64)>)
+                      -> CoordinatorBuilder {
+    if let Some((sink, slo_ms)) = telemetry {
+        builder = builder.sink(Box::new(sink.clone()));
+        if *slo_ms > 0.0 {
+            builder = builder.priority_shaper(Box::new(SloPolicy::new(
+                sink, SloSpec::new(*slo_ms))));
+        }
+    }
+    builder
+}
+
+fn print_telemetry(sink: &TelemetrySink) {
+    println!("--- telemetry snapshot (Prometheus text exposition) ---");
+    print!("{}", sink.render_prometheus());
+    sink.with_state(|st| {
+        for (tenant, t) in &st.tenants {
+            println!(
+                "tenant {tenant}: {}/{} finished, p50 jct {:.0} ms, \
+                 p99 jct {:.0} ms, deadline misses {}",
+                t.finished, t.admitted, t.jct_ms.p50(), t.jct_ms.p99(),
+                t.deadline_misses
+            );
+        }
+    });
+}
 
 /// Build a scheduler with the right predictor wiring for a policy.
 pub fn scheduler_for(policy: Policy, predictor_kind: &str,
@@ -138,11 +208,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let predictor_kind = args.str("predictor", "hlo");
     let seed = args.u64("seed", 42);
 
-    let trace = match args.opt_str("trace") {
+    let mut trace = match args.opt_str("trace") {
         Some(path) => elis::workload::trace_io::load(std::path::Path::new(path))?,
         None => RequestGenerator::fabrix(rps, seed).trace(&corpus, n),
     };
     let n = trace.len();
+    let telemetry = telemetry_for(args, workers, &mut trace)?;
     println!("serving {n} requests at {rps} rps over {workers} worker(s), \
               policy {}", policy.name());
 
@@ -167,13 +238,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         seed,
         max_iterations: 1_000_000,
     };
-    let report = CoordinatorBuilder::from_config(cfg)
+    let report = register_telemetry(CoordinatorBuilder::from_config(cfg),
+                                    &telemetry)
         .build(&trace, &mut engines, &mut sched)?
         .run_to_completion()?;
     report.print_summary();
     println!("avg TTFT {:.2}s  TPOT {:.1}ms  tokens/s {:.1}",
              report.avg_ttft_s(), report.avg_tpot_s() * 1e3,
              report.tokens_per_s());
+    if let Some((sink, _)) = &telemetry {
+        print_telemetry(sink);
+    }
     if let Some(path) = args.opt_str("json-out") {
         std::fs::write(path, report.to_json().to_string())?;
         println!("report written to {path}");
@@ -213,7 +288,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut jcts = Vec::new();
     for s in 0..shuffles {
         let mut gen = RequestGenerator::fabrix(rps, seed + s as u64);
-        let trace = gen.trace(&corpus, n);
+        let mut trace = gen.trace(&corpus, n);
+        let telemetry = telemetry_for(args, workers, &mut trace)?;
         let mut engines: Vec<Box<dyn Engine>> = (0..workers)
             .map(|_| {
                 Box::new(SimEngine::with_profile_budget(
@@ -232,10 +308,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             max_iterations: 10_000_000,
             ..Default::default()
         };
-        let report = CoordinatorBuilder::from_config(cfg)
+        let report = register_telemetry(CoordinatorBuilder::from_config(cfg),
+                                        &telemetry)
             .build(&trace, &mut engines, &mut sched)?
             .run_to_completion()?;
         report.print_summary();
+        if let Some((sink, _)) = &telemetry {
+            print_telemetry(sink);
+        }
         jcts.push(report.avg_jct_s());
     }
     let avg = jcts.iter().sum::<f64>() / jcts.len() as f64;
@@ -331,7 +411,11 @@ fn cmd_gen_trace(args: &Args) -> Result<()> {
         other => bail!("unknown process {other}"),
     };
     let mut gen = RequestGenerator::new(process, 0.73, rps, seed);
-    let trace = gen.trace(&corpus, n);
+    let mut trace = gen.trace(&corpus, n);
+    let spec = parse_tenant_spec(&args.list("tenants"))?;
+    if !spec.is_empty() {
+        elis::workload::assign_tenants(&mut trace, &spec);
+    }
     elis::workload::trace_io::save(&trace, std::path::Path::new(&out))?;
     println!("wrote {n} requests ({:?}, {rps} rps) to {out}", process);
     Ok(())

@@ -9,12 +9,16 @@ use crate::util::json::Json;
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
     pub id: u64,
+    /// accounting tag threaded from `TraceRequest::tenant`
+    pub tenant: Option<String>,
     pub node: usize,
     pub arrival_ms: f64,
     pub finish_ms: f64,
     pub jct_ms: f64,
     pub queue_delay_ms: f64,
-    pub ttft_ms: f64,
+    /// None if the job finished without ever emitting a token; averaged
+    /// skip-missing (a 0.0 placeholder would deflate [`ServeReport::avg_ttft_s`])
+    pub ttft_ms: Option<f64>,
     pub service_ms: f64,
     pub tokens: usize,
     pub windows: usize,
@@ -25,12 +29,13 @@ impl JobRecord {
     pub fn from_job(j: &Job) -> Option<JobRecord> {
         Some(JobRecord {
             id: j.id.raw(),
+            tenant: j.tenant.clone(),
             node: j.node?,
             arrival_ms: j.arrival_ms,
             finish_ms: j.finish_ms?,
             jct_ms: j.jct_ms()?,
             queue_delay_ms: j.queue_delay_ms()?,
-            ttft_ms: j.ttft_ms().unwrap_or(0.0),
+            ttft_ms: j.ttft_ms(),
             service_ms: j.service_ms,
             tokens: j.generated,
             windows: j.windows,
@@ -75,19 +80,33 @@ impl ServeReport {
         self.mean(|r| r.queue_delay_ms) / 1000.0
     }
 
+    /// Mean TTFT over the jobs that produced a first token (skip-missing,
+    /// like [`avg_tpot_s`](Self::avg_tpot_s) — a 0.0 placeholder for the
+    /// rare tokenless finish would deflate the average).
     pub fn avg_ttft_s(&self) -> f64 {
-        self.mean(|r| r.ttft_ms) / 1000.0
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for r in &self.records {
+            if let Some(ttft) = r.ttft_ms {
+                sum += ttft;
+                n += 1;
+            }
+        }
+        if n == 0 { 0.0 } else { sum / n as f64 / 1000.0 }
     }
 
     /// Average time per output token across jobs (s/token).
     pub fn avg_tpot_s(&self) -> f64 {
-        let s: f64 = self
-            .records
-            .iter()
-            .filter(|r| r.tokens > 1)
-            .map(|r| (r.jct_ms - r.ttft_ms) / 1000.0 / (r.tokens - 1) as f64)
-            .sum();
-        let n = self.records.iter().filter(|r| r.tokens > 1).count();
+        let mut s = 0.0;
+        let mut n = 0usize;
+        for r in &self.records {
+            if r.tokens > 1 {
+                if let Some(ttft) = r.ttft_ms {
+                    s += (r.jct_ms - ttft) / 1000.0 / (r.tokens - 1) as f64;
+                    n += 1;
+                }
+            }
+        }
         if n == 0 { 0.0 } else { s / n as f64 }
     }
 
@@ -177,12 +196,13 @@ mod tests {
     fn record(id: u64, jct_ms: f64, qd_ms: f64, tokens: usize) -> JobRecord {
         JobRecord {
             id,
+            tenant: None,
             node: 0,
             arrival_ms: 0.0,
             finish_ms: jct_ms,
             jct_ms,
             queue_delay_ms: qd_ms,
-            ttft_ms: 100.0,
+            ttft_ms: Some(100.0),
             service_ms: jct_ms - qd_ms,
             tokens,
             windows: 1,
@@ -212,6 +232,33 @@ mod tests {
         assert!((r.avg_queue_delay_s() - 1.0).abs() < 1e-9);
         assert!((r.throughput_rps() - 0.2).abs() < 1e-9);
         assert!((r.tokens_per_s() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn missing_ttft_does_not_deflate_average() {
+        // regression: a tokenless finish used to be recorded as ttft 0.0,
+        // dragging the mean down; skip-missing keeps it honest
+        let a = record(1, 2000.0, 0.0, 10); // ttft 100 ms
+        let mut b = record(2, 4000.0, 0.0, 10);
+        b.ttft_ms = None;
+        let r = report(vec![a, b]);
+        assert!((r.avg_ttft_s() - 0.1).abs() < 1e-9,
+                "avg must ignore the missing sample: {}", r.avg_ttft_s());
+        // and tpot likewise skips the record with no first token
+        let with_all = report(vec![record(1, 2000.0, 0.0, 11)]);
+        assert!(with_all.avg_tpot_s() > 0.0);
+    }
+
+    #[test]
+    fn tenant_threads_through_records() {
+        use crate::coordinator::job::JobId;
+        let mut j = Job::new(JobId::new(3), vec![1], 10, 0, 0.0);
+        j.node = Some(0);
+        j.finish_ms = Some(50.0);
+        j.tenant = Some("paid".into());
+        let rec = JobRecord::from_job(&j).unwrap();
+        assert_eq!(rec.tenant.as_deref(), Some("paid"));
+        assert_eq!(rec.ttft_ms, None, "no first token -> no TTFT");
     }
 
     #[test]

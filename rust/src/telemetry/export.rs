@@ -1,0 +1,298 @@
+//! Prometheus text-exposition renderer (format version 0.0.4) for the
+//! telemetry state — no dependencies, just `# HELP`/`# TYPE` headers and
+//! labeled samples, so the output can be served from a `/metrics` endpoint
+//! or scraped from logs.
+//!
+//! Latency digests render as Prometheus summaries (`{quantile="…"}`
+//! samples plus `_sum`/`_count`); monotone totals as counters; occupancy
+//! and windowed rates as gauges.  Every label value is escaped per the
+//! exposition grammar.
+
+use std::fmt::Write;
+
+use super::sink::{TelemetryState, TenantStats};
+use super::sketch::QuantileSketch;
+
+/// Escape a label value: backslash, double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, help: &str, typ: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {typ}");
+}
+
+fn sample(out: &mut String, name: &str, labels: &[(&str, &str)], value: f64) {
+    if labels.is_empty() {
+        let _ = writeln!(out, "{name} {value}");
+        return;
+    }
+    let rendered: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    let _ = writeln!(out, "{name}{{{}}} {value}", rendered.join(","));
+}
+
+fn pick_jct(t: &TenantStats) -> &QuantileSketch {
+    &t.jct_ms
+}
+
+fn pick_ttft(t: &TenantStats) -> &QuantileSketch {
+    &t.ttft_ms
+}
+
+fn pick_queue_delay(t: &TenantStats) -> &QuantileSketch {
+    &t.queue_delay_ms
+}
+
+/// Emit one latency summary family (quantile samples + `_sum`/`_count`)
+/// labeled by tenant.
+fn summary_family(out: &mut String, name: &str, help: &str,
+                  tenants: &[(&str, &TenantStats)],
+                  pick: fn(&TenantStats) -> &QuantileSketch) {
+    header(out, name, help, "summary");
+    for &(tenant, stats) in tenants {
+        let sketch = pick(stats);
+        if sketch.count() > 0 {
+            for (q, v) in [("0.5", sketch.p50()), ("0.9", sketch.p90()),
+                           ("0.99", sketch.p99())] {
+                sample(out, name, &[("tenant", tenant), ("quantile", q)], v);
+            }
+        }
+        let sum_name = format!("{name}_sum");
+        let count_name = format!("{name}_count");
+        sample(out, &sum_name, &[("tenant", tenant)], sketch.sum());
+        sample(out, &count_name, &[("tenant", tenant)],
+               sketch.count() as f64);
+    }
+}
+
+/// Render the full exposition snapshot.  Takes `&mut` because windowed
+/// rates advance their ring to the snapshot time.
+pub fn render(state: &mut TelemetryState) -> String {
+    let now = state.last_event_ms;
+    let mut out = String::new();
+
+    // ---- per-node counters and gauges -----------------------------------
+    let node_counters: [(&str, &str, fn(&super::sink::NodeStats) -> f64); 6] = [
+        ("elis_node_jobs_admitted_total", "Jobs assigned to the node.",
+         |n| n.admitted as f64),
+        ("elis_node_jobs_finished_total", "Jobs completed on the node.",
+         |n| n.finished as f64),
+        ("elis_node_batches_total", "Batches formed for the node.",
+         |n| n.batches as f64),
+        ("elis_node_windows_total", "Scheduling windows executed.",
+         |n| n.windows as f64),
+        ("elis_node_preemptions_total", "KV evictions on the node.",
+         |n| n.preempted as f64),
+        ("elis_node_tokens_total", "Response tokens generated.",
+         |n| n.tokens as f64),
+    ];
+    for (name, help, get) in node_counters {
+        header(&mut out, name, help, "counter");
+        for (i, n) in state.nodes.iter().enumerate() {
+            sample(&mut out, name, &[("node", &i.to_string())], get(n));
+        }
+    }
+    header(&mut out, "elis_node_service_ms_total",
+           "Cumulative window service time (ms).", "counter");
+    for (i, n) in state.nodes.iter().enumerate() {
+        sample(&mut out, "elis_node_service_ms_total",
+               &[("node", &i.to_string())], n.service_ms_sum);
+    }
+    header(&mut out, "elis_node_jobs_active",
+           "Jobs currently assigned (queued or running).", "gauge");
+    for (i, n) in state.nodes.iter().enumerate() {
+        sample(&mut out, "elis_node_jobs_active",
+               &[("node", &i.to_string())], n.active as f64);
+    }
+    header(&mut out, "elis_node_token_rate_per_s",
+           "Token throughput over the trailing window.", "gauge");
+    for (i, n) in state.nodes.iter_mut().enumerate() {
+        let rate = n.token_rate.rate_per_s(now);
+        sample(&mut out, "elis_node_token_rate_per_s",
+               &[("node", &i.to_string())], rate);
+    }
+
+    // ---- per-tenant counters, gauges, and latency summaries -------------
+    let tenants: Vec<(&str, &TenantStats)> =
+        state.tenants.iter().map(|(k, v)| (k.as_str(), v)).collect();
+    let tenant_counters: [(&str, &str, fn(&TenantStats) -> f64); 4] = [
+        ("elis_tenant_jobs_admitted_total", "Jobs admitted for the tenant.",
+         |t| t.admitted as f64),
+        ("elis_tenant_jobs_finished_total", "Jobs finished for the tenant.",
+         |t| t.finished as f64),
+        ("elis_tenant_tokens_total", "Response tokens for the tenant.",
+         |t| t.tokens as f64),
+        ("elis_tenant_deadline_misses_total",
+         "Finished jobs whose JCT exceeded the tenant SLO.",
+         |t| t.deadline_misses as f64),
+    ];
+    for (name, help, get) in tenant_counters {
+        header(&mut out, name, help, "counter");
+        for &(tenant, t) in &tenants {
+            sample(&mut out, name, &[("tenant", tenant)], get(t));
+        }
+    }
+    header(&mut out, "elis_tenant_jobs_active",
+           "Tenant jobs admitted but not yet finished.", "gauge");
+    for &(tenant, t) in &tenants {
+        sample(&mut out, "elis_tenant_jobs_active", &[("tenant", tenant)],
+               t.active as f64);
+    }
+    summary_family(&mut out, "elis_tenant_jct_ms",
+                   "Job completion time (ms), streaming P2 quantiles.",
+                   &tenants, pick_jct);
+    summary_family(&mut out, "elis_tenant_ttft_ms",
+                   "Time to first token (ms), streaming P2 quantiles.",
+                   &tenants, pick_ttft);
+    summary_family(&mut out, "elis_tenant_queue_delay_ms",
+                   "Queueing delay (ms), streaming P2 quantiles.",
+                   &tenants, pick_queue_delay);
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::super::sink::{SloSpec, TelemetrySink};
+    use super::*;
+    use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+    use crate::coordinator::job::JobId;
+
+    fn populated_sink() -> TelemetrySink {
+        let sink = TelemetrySink::with_slo(
+            2, SloSpec::new(5_000.0).tenant("paid", 1_000.0));
+        let mut h = sink.clone();
+        for i in 0..20u32 {
+            let tenant = if i % 3 == 0 { "paid" } else { "fr\"ee" };
+            let m = JobMeta {
+                id: JobId::new(i as usize),
+                tenant: Some(tenant),
+                arrival_ms: i as f64 * 10.0,
+                prompt_len: 8,
+                total_len: 40,
+            };
+            let node = (i % 2) as usize;
+            h.on_job_admitted(&m, node, m.arrival_ms);
+            h.on_batch_formed(node, &[m.id], m.arrival_ms + 1.0);
+            h.on_window_done(node, &[m.id], 40, 600.0,
+                             m.arrival_ms + 601.0);
+            let jct = 500.0 + i as f64 * 120.0;
+            h.on_job_finished(&m, node, &FinishStats {
+                jct_ms: jct,
+                ttft_ms: Some(80.0 + i as f64),
+                queue_delay_ms: jct * 0.4,
+                service_ms: jct * 0.6,
+                tokens: 40,
+            }, m.arrival_ms + jct);
+        }
+        sink
+    }
+
+    /// Minimal exposition-format validator: every sample line must be
+    /// `name{labels} value` with a parseable float value, and every sample
+    /// must belong to a family declared with # TYPE (allowing the summary
+    /// `_sum`/`_count` suffixes).
+    fn validate(text: &str) {
+        let mut families: BTreeSet<String> = BTreeSet::new();
+        let mut samples = 0usize;
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().expect("TYPE line must name a metric");
+                let typ = it.next().expect("TYPE line must carry a type");
+                assert!(matches!(typ, "counter" | "gauge" | "summary"),
+                        "bad type: {line}");
+                families.insert(name.to_string());
+                continue;
+            }
+            if line.starts_with('#') {
+                continue;
+            }
+            let (name_part, value_part) = match line.find('{') {
+                Some(brace) => {
+                    let close = line.rfind('}')
+                        .unwrap_or_else(|| panic!("unclosed labels: {line}"));
+                    let labels = &line[brace + 1..close];
+                    for pair in labels.split(',') {
+                        let (k, v) = pair.split_once('=')
+                            .unwrap_or_else(|| panic!("bad label: {line}"));
+                        assert!(!k.is_empty());
+                        assert!(v.starts_with('"') && v.ends_with('"'),
+                                "unquoted label value: {line}");
+                    }
+                    (&line[..brace], line[close + 1..].trim())
+                }
+                None => {
+                    let sp = line.find(' ')
+                        .unwrap_or_else(|| panic!("no value: {line}"));
+                    (&line[..sp], line[sp + 1..].trim())
+                }
+            };
+            value_part.parse::<f64>()
+                .unwrap_or_else(|_| panic!("bad value: {line}"));
+            let family = name_part
+                .strip_suffix("_sum")
+                .or_else(|| name_part.strip_suffix("_count"))
+                .filter(|f| families.contains(*f))
+                .unwrap_or(name_part);
+            assert!(families.contains(family),
+                    "sample without TYPE header: {line}");
+            samples += 1;
+        }
+        assert!(samples > 0, "snapshot rendered no samples");
+    }
+
+    #[test]
+    fn snapshot_is_valid_exposition() {
+        let sink = populated_sink();
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_tenant_jct_ms{tenant=\"paid\",quantile=\"0.5\"}"),
+                "missing per-tenant quantile sample:\n{text}");
+        assert!(text.contains("elis_node_jobs_admitted_total{node=\"0\"}"));
+        assert!(text.contains("elis_tenant_deadline_misses_total"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let sink = populated_sink();
+        let text = sink.render_prometheus();
+        // the tenant name contains a double quote; it must render escaped
+        assert!(text.contains("tenant=\"fr\\\"ee\""), "{text}");
+        validate(&text);
+    }
+
+    #[test]
+    fn empty_state_renders_headers_only_for_nodes() {
+        let sink = TelemetrySink::new(1);
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_node_jobs_admitted_total{node=\"0\"} 0"));
+        // no tenants yet -> no tenant samples, but families still declared
+        assert!(text.contains("# TYPE elis_tenant_jct_ms summary"));
+    }
+
+    #[test]
+    fn escape_handles_backslash_and_newline() {
+        assert_eq!(escape_label("a\\b\"c"), "a\\\\b\\\"c");
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+    }
+}

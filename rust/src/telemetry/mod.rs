@@ -1,0 +1,38 @@
+//! Live telemetry subsystem (paper §6 industrial framing: operators watch
+//! JCT/TTFT percentiles live and act on them).
+//!
+//! Everything here consumes the coordinator's [`EventSink`] hooks — the
+//! serving loop is never touched:
+//!
+//! * [`sketch`] — streaming statistics: the P² quantile estimator
+//!   ([`P2Quantile`]/[`QuantileSketch`], O(1) memory per metric) and the
+//!   ring-buffer [`WindowedRate`].
+//! * [`sink`] — [`TelemetrySink`], a clonable [`EventSink`] maintaining
+//!   live per-node and per-tenant JCT/TTFT/queue-delay sketches, queue
+//!   depths, token throughput, and deadline-miss counters.
+//! * [`export`] — dependency-free Prometheus text exposition
+//!   (`# HELP`/`# TYPE` + labeled samples), snapshotted between `step()`s.
+//! * [`slo`] — [`SloPolicy`], a
+//!   [`PriorityShaper`](crate::coordinator::PriorityShaper) that orders
+//!   work earliest-deadline-first against per-tenant SLO budgets, boosting
+//!   tenants whose *live* p99 (read from the shared sink) is over budget
+//!   and shedding hopelessly-late jobs behind in-budget work.
+//!
+//! ```text
+//! coordinator events ──> TelemetrySink ──> Prometheus snapshot
+//!                              │
+//!                              └──(live sketches)──> SloPolicy ──> dispatch
+//! ```
+//!
+//! [`EventSink`]: crate::coordinator::EventSink
+
+pub mod export;
+pub mod sink;
+pub mod sketch;
+pub mod slo;
+
+pub use export::render;
+pub use sink::{NodeStats, SloSpec, TelemetrySink, TelemetryState,
+               TenantStats, DEFAULT_TENANT};
+pub use sketch::{P2Quantile, QuantileSketch, WindowedRate};
+pub use slo::SloPolicy;

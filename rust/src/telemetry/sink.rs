@@ -1,0 +1,350 @@
+//! The live telemetry sink: an [`EventSink`] that folds coordinator events
+//! into streaming per-node and per-tenant statistics.
+//!
+//! [`TelemetrySink`] is a cheap-to-clone handle over shared state (like
+//! [`SharedCounter`](crate::coordinator::events::SharedCounter)): register
+//! one clone on the [`CoordinatorBuilder`](crate::coordinator::CoordinatorBuilder)
+//! and keep another to read snapshots between `step()`s — render a
+//! Prometheus exposition with [`TelemetrySink::render_prometheus`], or feed
+//! an [`SloPolicy`](super::slo::SloPolicy) that shapes priorities from the
+//! live sketches.  The sink only observes: registering it leaves the
+//! serving schedule (and hence every report) bit-identical.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+use crate::coordinator::job::JobId;
+
+use super::sketch::{QuantileSketch, WindowedRate};
+
+/// Tenant label applied to requests that carry no tenant tag.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Per-tenant SLO budgets for deadline accounting and the SLO policy.
+/// A budget of 0 (or a non-finite value) disables the deadline for that
+/// tenant.
+#[derive(Debug, Clone)]
+pub struct SloSpec {
+    pub default_slo_ms: f64,
+    pub per_tenant: BTreeMap<String, f64>,
+}
+
+impl SloSpec {
+    pub fn new(default_slo_ms: f64) -> SloSpec {
+        SloSpec { default_slo_ms, per_tenant: BTreeMap::new() }
+    }
+
+    /// Override the budget for one tenant (builder-style).
+    pub fn tenant(mut self, name: &str, slo_ms: f64) -> SloSpec {
+        self.per_tenant.insert(name.to_string(), slo_ms);
+        self
+    }
+
+    pub fn slo_for(&self, tenant: &str) -> f64 {
+        self.per_tenant.get(tenant).copied().unwrap_or(self.default_slo_ms)
+    }
+}
+
+/// Live statistics for one backend worker.
+#[derive(Debug, Clone)]
+pub struct NodeStats {
+    /// jobs currently assigned to the node (admitted − finished)
+    pub active: u64,
+    pub admitted: u64,
+    pub finished: u64,
+    pub batches: u64,
+    pub windows: u64,
+    pub preempted: u64,
+    pub tokens: u64,
+    pub service_ms_sum: f64,
+    pub token_rate: WindowedRate,
+}
+
+impl NodeStats {
+    fn new() -> NodeStats {
+        NodeStats {
+            active: 0,
+            admitted: 0,
+            finished: 0,
+            batches: 0,
+            windows: 0,
+            preempted: 0,
+            tokens: 0,
+            service_ms_sum: 0.0,
+            token_rate: WindowedRate::default_window(),
+        }
+    }
+}
+
+/// Live statistics for one tenant.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    pub active: u64,
+    pub admitted: u64,
+    pub finished: u64,
+    pub tokens: u64,
+    /// finished jobs whose JCT exceeded the tenant's SLO budget
+    pub deadline_misses: u64,
+    pub jct_ms: QuantileSketch,
+    pub ttft_ms: QuantileSketch,
+    pub queue_delay_ms: QuantileSketch,
+}
+
+impl TenantStats {
+    fn new() -> TenantStats {
+        TenantStats {
+            active: 0,
+            admitted: 0,
+            finished: 0,
+            tokens: 0,
+            deadline_misses: 0,
+            jct_ms: QuantileSketch::new(),
+            ttft_ms: QuantileSketch::new(),
+            queue_delay_ms: QuantileSketch::new(),
+        }
+    }
+}
+
+/// The shared state behind a [`TelemetrySink`] and its clones.
+#[derive(Debug, Clone)]
+pub struct TelemetryState {
+    pub nodes: Vec<NodeStats>,
+    pub tenants: BTreeMap<String, TenantStats>,
+    /// SLO budgets; when set, finishes are checked for deadline misses
+    pub slo: Option<SloSpec>,
+    /// coordinator time of the most recent event (drives rate windows)
+    pub last_event_ms: f64,
+}
+
+impl TelemetryState {
+    fn new(nodes: usize, slo: Option<SloSpec>) -> TelemetryState {
+        TelemetryState {
+            nodes: (0..nodes).map(|_| NodeStats::new()).collect(),
+            tenants: BTreeMap::new(),
+            slo,
+            last_event_ms: 0.0,
+        }
+    }
+
+    fn node_mut(&mut self, node: usize) -> &mut NodeStats {
+        while self.nodes.len() <= node {
+            self.nodes.push(NodeStats::new());
+        }
+        &mut self.nodes[node]
+    }
+
+    fn tenant_mut(&mut self, name: Option<&str>) -> &mut TenantStats {
+        self.tenants
+            .entry(name.unwrap_or(DEFAULT_TENANT).to_string())
+            .or_insert_with(TenantStats::new)
+    }
+
+    pub fn total_deadline_misses(&self) -> u64 {
+        self.tenants.values().map(|t| t.deadline_misses).sum()
+    }
+}
+
+/// Clonable handle + [`EventSink`] over shared [`TelemetryState`].
+#[derive(Debug, Clone)]
+pub struct TelemetrySink {
+    state: Rc<RefCell<TelemetryState>>,
+}
+
+impl TelemetrySink {
+    pub fn new(nodes: usize) -> TelemetrySink {
+        TelemetrySink { state: Rc::new(RefCell::new(TelemetryState::new(nodes, None))) }
+    }
+
+    /// A sink that also tracks deadline misses against `slo`.
+    pub fn with_slo(nodes: usize, slo: SloSpec) -> TelemetrySink {
+        TelemetrySink {
+            state: Rc::new(RefCell::new(TelemetryState::new(nodes, Some(slo)))),
+        }
+    }
+
+    /// Read access to the live state (snapshot between `step()`s).
+    pub fn with_state<R>(&self, f: impl FnOnce(&TelemetryState) -> R) -> R {
+        f(&self.state.borrow())
+    }
+
+    /// Render a Prometheus text-exposition snapshot of the current state.
+    pub fn render_prometheus(&self) -> String {
+        super::export::render(&mut self.state.borrow_mut())
+    }
+
+    pub fn deadline_misses(&self, tenant: &str) -> u64 {
+        self.state
+            .borrow()
+            .tenants
+            .get(tenant)
+            .map(|t| t.deadline_misses)
+            .unwrap_or(0)
+    }
+
+    pub fn total_deadline_misses(&self) -> u64 {
+        self.state.borrow().total_deadline_misses()
+    }
+
+    /// Live p99 JCT for a tenant, once at least `min_samples` of its jobs
+    /// have finished (the SLO policy's feedback signal).
+    pub fn tenant_p99_jct_ms(&self, tenant: &str, min_samples: u64) -> Option<f64> {
+        let st = self.state.borrow();
+        let t = st.tenants.get(tenant)?;
+        if t.jct_ms.count() < min_samples {
+            return None;
+        }
+        Some(t.jct_ms.p99())
+    }
+}
+
+impl EventSink for TelemetrySink {
+    fn on_job_admitted(&mut self, job: &JobMeta<'_>, node: usize, now_ms: f64) {
+        let mut st = self.state.borrow_mut();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        let n = st.node_mut(node);
+        n.admitted += 1;
+        n.active += 1;
+        let t = st.tenant_mut(job.tenant);
+        t.admitted += 1;
+        t.active += 1;
+    }
+
+    fn on_batch_formed(&mut self, node: usize, _jobs: &[JobId], now_ms: f64) {
+        let mut st = self.state.borrow_mut();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        st.node_mut(node).batches += 1;
+    }
+
+    fn on_window_done(&mut self, node: usize, _batch: &[JobId], tokens: usize,
+                      service_ms: f64, now_ms: f64) {
+        let mut st = self.state.borrow_mut();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        let n = st.node_mut(node);
+        n.windows += 1;
+        n.tokens += tokens as u64;
+        n.service_ms_sum += service_ms;
+        n.token_rate.add(now_ms, tokens as f64);
+    }
+
+    fn on_job_finished(&mut self, job: &JobMeta<'_>, node: usize,
+                       stats: &FinishStats, now_ms: f64) {
+        let mut st = self.state.borrow_mut();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        let n = st.node_mut(node);
+        n.finished += 1;
+        n.active = n.active.saturating_sub(1);
+        let slo_ms = st
+            .slo
+            .as_ref()
+            .map(|s| s.slo_for(job.tenant.unwrap_or(DEFAULT_TENANT)));
+        let t = st.tenant_mut(job.tenant);
+        t.finished += 1;
+        t.active = t.active.saturating_sub(1);
+        t.tokens += stats.tokens as u64;
+        t.jct_ms.add(stats.jct_ms);
+        if let Some(ttft) = stats.ttft_ms {
+            t.ttft_ms.add(ttft);
+        }
+        t.queue_delay_ms.add(stats.queue_delay_ms);
+        if let Some(slo_ms) = slo_ms {
+            if slo_ms.is_finite() && slo_ms > 0.0 && stats.jct_ms > slo_ms {
+                t.deadline_misses += 1;
+            }
+        }
+    }
+
+    fn on_job_preempted(&mut self, _job: JobId, node: usize, now_ms: f64) {
+        let mut st = self.state.borrow_mut();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        st.node_mut(node).preempted += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta<'a>(id: u32, tenant: Option<&'a str>, arrival: f64) -> JobMeta<'a> {
+        JobMeta {
+            id: JobId::new(id as usize),
+            tenant,
+            arrival_ms: arrival,
+            prompt_len: 8,
+            total_len: 40,
+        }
+    }
+
+    fn finish(jct: f64, tokens: usize) -> FinishStats {
+        FinishStats {
+            jct_ms: jct,
+            ttft_ms: Some(jct * 0.1),
+            queue_delay_ms: jct * 0.5,
+            service_ms: jct * 0.5,
+            tokens,
+        }
+    }
+
+    #[test]
+    fn per_tenant_and_per_node_accounting() {
+        let sink = TelemetrySink::new(2);
+        let mut handle = sink.clone();
+        handle.on_job_admitted(&meta(0, Some("paid"), 0.0), 0, 0.0);
+        handle.on_job_admitted(&meta(1, Some("free"), 1.0), 1, 1.0);
+        handle.on_job_admitted(&meta(2, None, 2.0), 0, 2.0);
+        handle.on_batch_formed(0, &[JobId::new(0)], 3.0);
+        handle.on_window_done(0, &[JobId::new(0)], 50, 800.0, 803.0);
+        handle.on_job_finished(&meta(0, Some("paid"), 0.0), 0,
+                               &finish(803.0, 50), 803.0);
+        sink.with_state(|st| {
+            assert_eq!(st.nodes[0].admitted, 2);
+            assert_eq!(st.nodes[0].active, 1);
+            assert_eq!(st.nodes[0].finished, 1);
+            assert_eq!(st.nodes[0].tokens, 50);
+            assert_eq!(st.nodes[1].admitted, 1);
+            assert_eq!(st.tenants["paid"].finished, 1);
+            assert_eq!(st.tenants["paid"].tokens, 50);
+            assert_eq!(st.tenants["paid"].jct_ms.count(), 1);
+            assert_eq!(st.tenants["free"].active, 1);
+            assert_eq!(st.tenants[DEFAULT_TENANT].admitted, 1);
+            assert!((st.last_event_ms - 803.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn deadline_misses_follow_slo_spec() {
+        let spec = SloSpec::new(10_000.0).tenant("paid", 1_000.0);
+        assert_eq!(spec.slo_for("paid"), 1_000.0);
+        assert_eq!(spec.slo_for("anyone"), 10_000.0);
+        let sink = TelemetrySink::with_slo(1, spec);
+        let mut handle = sink.clone();
+        for (id, tenant, jct) in [(0, "paid", 1_500.0), (1, "paid", 500.0),
+                                  (2, "free", 1_500.0)] {
+            handle.on_job_admitted(&meta(id, Some(tenant), 0.0), 0, 0.0);
+            handle.on_job_finished(&meta(id, Some(tenant), 0.0), 0,
+                                   &finish(jct, 10), jct);
+        }
+        assert_eq!(sink.deadline_misses("paid"), 1);
+        assert_eq!(sink.deadline_misses("free"), 0);
+        assert_eq!(sink.total_deadline_misses(), 1);
+    }
+
+    #[test]
+    fn p99_feedback_needs_min_samples() {
+        let sink = TelemetrySink::new(1);
+        let mut handle = sink.clone();
+        for i in 0..4 {
+            handle.on_job_admitted(&meta(i, Some("t"), 0.0), 0, 0.0);
+            handle.on_job_finished(&meta(i, Some("t"), 0.0), 0,
+                                   &finish(100.0, 5), 100.0);
+        }
+        assert!(sink.tenant_p99_jct_ms("t", 5).is_none());
+        handle.on_job_admitted(&meta(4, Some("t"), 0.0), 0, 0.0);
+        handle.on_job_finished(&meta(4, Some("t"), 0.0), 0,
+                               &finish(100.0, 5), 100.0);
+        let p99 = sink.tenant_p99_jct_ms("t", 5).unwrap();
+        assert!((p99 - 100.0).abs() < 1e-9);
+        assert!(sink.tenant_p99_jct_ms("missing", 1).is_none());
+    }
+}

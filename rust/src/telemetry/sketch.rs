@@ -1,0 +1,410 @@
+//! Streaming statistics for live telemetry: the P² (piecewise-parabolic)
+//! quantile estimator and a fixed-memory sliding-window rate counter.
+//!
+//! [`stats::summary::Percentiles`](crate::stats::summary::Percentiles) is
+//! exact but stores every sample — fine for a terminal `ServeReport`,
+//! wrong for a sink that watches millions of jobs.  [`P2Quantile`] (Jain &
+//! Chlamtac 1985) tracks one quantile with five markers in O(1) memory and
+//! O(1) time per observation; [`QuantileSketch`] bundles the p50/p90/p99
+//! trackers every latency metric wants, plus count/sum/min/max.
+//! [`WindowedRate`] is a ring of time buckets for "tokens per second over
+//! the last N seconds" gauges.
+
+/// Single-quantile P² estimator: five markers whose heights approximate
+/// the min, p/2, p, (1+p)/2 and max quantiles, adjusted per observation by
+/// a piecewise-parabolic interpolation.  Exact until five samples arrive.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// marker heights
+    q: [f64; 5],
+    /// actual marker positions (1-based ranks)
+    n: [f64; 5],
+    /// desired marker positions
+    np: [f64; 5],
+    /// desired-position increments per observation
+    dn: [f64; 5],
+    count: u64,
+    /// first five observations (exact phase)
+    warmup: [f64; 5],
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&p), "quantile out of range: {p}");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [0.0; 5],
+            np: [0.0; 5],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+            warmup: [0.0; 5],
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if self.count < 5 {
+            self.warmup[self.count as usize] = x;
+            self.count += 1;
+            if self.count == 5 {
+                let mut w = self.warmup;
+                w.sort_by(f64::total_cmp);
+                self.q = w;
+                self.n = [1.0, 2.0, 3.0, 4.0, 5.0];
+                let p = self.p;
+                self.np = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0];
+            }
+            return;
+        }
+        self.count += 1;
+
+        // locate the cell k with q[k] <= x < q[k+1], extending the extremes
+        let k: usize = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 0..4 {
+                if x >= self.q[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+
+        // nudge interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                let qp = self.parabolic(i, d);
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    self.linear(i, d)
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (qm, qc, qp) = (self.q[i - 1], self.q[i], self.q[i + 1]);
+        let (nm, nc, np) = (self.n[i - 1], self.n[i], self.n[i + 1]);
+        qc + d / (np - nm)
+            * ((nc - nm + d) * (qp - qc) / (np - nc)
+                + (np - nc - d) * (qc - qm) / (nc - nm))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+    }
+
+    /// Current estimate of the tracked quantile (NaN before any sample;
+    /// exact below five samples).
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            let m = self.count as usize;
+            let mut w: Vec<f64> = self.warmup[..m].to_vec();
+            w.sort_by(f64::total_cmp);
+            let pos = self.p * (m - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = pos.ceil() as usize;
+            let frac = pos - lo as f64;
+            return w[lo] * (1.0 - frac) + w[hi] * frac;
+        }
+        self.q[2]
+    }
+}
+
+/// The latency digest the telemetry sink keeps per node and per tenant:
+/// O(1)-memory p50/p90/p99 plus count, sum, min and max.
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    p50: P2Quantile,
+    p90: P2Quantile,
+    p99: P2Quantile,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        QuantileSketch::new()
+    }
+}
+
+impl QuantileSketch {
+    pub fn new() -> QuantileSketch {
+        QuantileSketch {
+            p50: P2Quantile::new(0.50),
+            p90: P2Quantile::new(0.90),
+            p99: P2Quantile::new(0.99),
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.p50.add(x);
+        self.p90.add(x);
+        self.p99.add(x);
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.p90.value()
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+}
+
+/// Sliding-window rate over a fixed ring of time buckets — O(1) memory,
+/// O(1) amortised updates.  `add` events carry a weight (1.0 for counts,
+/// token counts for throughput); `rate_per_s` averages over the window.
+#[derive(Debug, Clone)]
+pub struct WindowedRate {
+    bucket_ms: f64,
+    buckets: Vec<f64>,
+    /// absolute bucket index (floor(now / bucket_ms)) the cursor maps to
+    abs: i64,
+    cursor: usize,
+    total: f64,
+}
+
+impl WindowedRate {
+    pub fn new(window_ms: f64, buckets: usize) -> WindowedRate {
+        assert!(window_ms > 0.0 && buckets > 0);
+        WindowedRate {
+            bucket_ms: window_ms / buckets as f64,
+            buckets: vec![0.0; buckets],
+            abs: 0,
+            cursor: 0,
+            total: 0.0,
+        }
+    }
+
+    /// 10-second window in 20 buckets — the default for token-rate gauges.
+    pub fn default_window() -> WindowedRate {
+        WindowedRate::new(10_000.0, 20)
+    }
+
+    fn advance(&mut self, now_ms: f64) {
+        let target = (now_ms / self.bucket_ms).floor() as i64;
+        if target <= self.abs {
+            return; // ignore slightly out-of-order timestamps
+        }
+        let steps = ((target - self.abs) as usize).min(self.buckets.len());
+        for _ in 0..steps {
+            self.cursor = (self.cursor + 1) % self.buckets.len();
+            self.buckets[self.cursor] = 0.0;
+        }
+        self.abs = target;
+    }
+
+    pub fn add(&mut self, now_ms: f64, weight: f64) {
+        self.advance(now_ms);
+        self.buckets[self.cursor] += weight;
+        self.total += weight;
+    }
+
+    /// Average rate per second over the window, as of `now_ms`.
+    pub fn rate_per_s(&mut self, now_ms: f64) -> f64 {
+        self.advance(now_ms);
+        let window_s = self.bucket_ms * self.buckets.len() as f64 / 1000.0;
+        self.buckets.iter().sum::<f64>() / window_s
+    }
+
+    /// Lifetime sum of weights (a monotone counter).
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dist;
+    use crate::stats::rng::Pcg64;
+    use crate::stats::summary::Percentiles;
+
+    fn rel_err(est: f64, exact: f64) -> f64 {
+        (est - exact).abs() / exact.abs().max(1e-12)
+    }
+
+    /// Acceptance: p50/p90/p99 within 5% relative error of the exact
+    /// percentiles on 10k samples.
+    fn assert_close(samples: &[f64], label: &str) {
+        let mut sketch = QuantileSketch::new();
+        let mut exact = Percentiles::new();
+        for &x in samples {
+            sketch.add(x);
+            exact.add(x);
+        }
+        for (est, q) in [(sketch.p50(), 0.50), (sketch.p90(), 0.90),
+                         (sketch.p99(), 0.99)] {
+            let truth = exact.quantile(q);
+            assert!(rel_err(est, truth) < 0.05,
+                    "{label} q{q}: sketch {est} vs exact {truth}");
+        }
+        assert_eq!(sketch.count(), samples.len() as u64);
+    }
+
+    #[test]
+    fn matches_exact_on_uniform_10k() {
+        let mut rng = Pcg64::new(7);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.range_f64(0.0, 1000.0)).collect();
+        assert_close(&xs, "uniform");
+    }
+
+    #[test]
+    fn matches_exact_on_exponential_10k() {
+        let mut rng = Pcg64::new(11);
+        let xs: Vec<f64> = (0..10_000).map(|_| dist::exponential(&mut rng, 250.0)).collect();
+        assert_close(&xs, "exponential");
+    }
+
+    #[test]
+    fn matches_exact_on_gamma_10k() {
+        // the paper's bursty inter-arrival shape (heavy right tail)
+        let mut rng = Pcg64::new(13);
+        let xs: Vec<f64> = (0..10_000).map(|_| dist::gamma(&mut rng, 0.73, 137.0)).collect();
+        assert_close(&xs, "gamma");
+    }
+
+    #[test]
+    fn exact_below_five_samples() {
+        let mut p = P2Quantile::new(0.5);
+        assert!(p.value().is_nan());
+        p.add(10.0);
+        assert_eq!(p.value(), 10.0);
+        p.add(20.0);
+        assert_eq!(p.value(), 15.0);
+        p.add(30.0);
+        assert_eq!(p.value(), 20.0);
+    }
+
+    #[test]
+    fn constant_stream_is_exact() {
+        let mut s = QuantileSketch::new();
+        for _ in 0..1000 {
+            s.add(42.0);
+        }
+        assert_eq!(s.p50(), 42.0);
+        assert_eq!(s.p99(), 42.0);
+        assert_eq!(s.min(), 42.0);
+        assert_eq!(s.max(), 42.0);
+        assert!((s.mean() - 42.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sorted_and_shuffled_inputs_agree_roughly() {
+        // estimator must not depend pathologically on input order
+        let sorted: Vec<f64> = (1..=10_000).map(|i| i as f64).collect();
+        let mut shuffled = sorted.clone();
+        Pcg64::new(3).shuffle(&mut shuffled);
+        let run = |xs: &[f64]| {
+            let mut s = QuantileSketch::new();
+            for &x in xs {
+                s.add(x);
+            }
+            s.p90()
+        };
+        let (a, b) = (run(&sorted), run(&shuffled));
+        assert!(rel_err(a, 9000.0) < 0.05, "sorted p90 {a}");
+        assert!(rel_err(b, 9000.0) < 0.05, "shuffled p90 {b}");
+    }
+
+    #[test]
+    fn windowed_rate_steady_state() {
+        let mut r = WindowedRate::new(1000.0, 20);
+        // one event of weight 5 every 10 ms -> 500/s
+        let mut t = 0.0;
+        for _ in 0..200 {
+            r.add(t, 5.0);
+            t += 10.0;
+        }
+        let rate = r.rate_per_s(t);
+        assert!((rate - 500.0).abs() < 50.0, "rate {rate}");
+        assert_eq!(r.total(), 1000.0);
+    }
+
+    #[test]
+    fn windowed_rate_ages_out() {
+        let mut r = WindowedRate::new(1000.0, 20);
+        for i in 0..100 {
+            r.add(i as f64 * 10.0, 1.0);
+        }
+        assert!(r.rate_per_s(1000.0) > 0.0);
+        // two full windows later every bucket has been recycled
+        assert_eq!(r.rate_per_s(3000.0), 0.0);
+        assert_eq!(r.total(), 100.0, "lifetime counter survives aging");
+    }
+
+    #[test]
+    fn windowed_rate_tolerates_out_of_order() {
+        let mut r = WindowedRate::new(1000.0, 10);
+        r.add(500.0, 1.0);
+        r.add(400.0, 1.0); // late event lands in the current bucket
+        assert_eq!(r.total(), 2.0);
+        assert!(r.rate_per_s(500.0) > 0.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! SLO-aware admission/priority policy driven by live telemetry.
+//!
+//! [`SloPolicy`] implements
+//! [`PriorityShaper`](crate::coordinator::scheduler::PriorityShaper): the
+//! coordinator calls it for every queued job each scheduling iteration,
+//! after the base scheduler assigned its priority and before the job
+//! enters the node's priority queue.  The policy orders work
+//! earliest-deadline-first against each tenant's SLO budget, with two
+//! telemetry-driven refinements:
+//!
+//! * **boost** — a tenant whose *observed* p99 JCT (streaming P² sketch
+//!   from the shared [`TelemetrySink`]) exceeds its budget has its jobs'
+//!   slack scaled by the overload ratio, so persistently-late tenants win
+//!   against on-track ones even at equal nominal slack;
+//! * **shed** — a job older than `shed_after × slo` has already missed by
+//!   so much that serving it first only converts other jobs into misses
+//!   too; it is parked behind all in-budget work (still finite priority,
+//!   so it drains once the queue clears — no job is ever dropped).
+//!
+//! Tenants whose budget is 0/∞ are exempt: their jobs keep the base
+//! scheduler priority, offset behind all deadline-carrying work.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::job::Job;
+use crate::coordinator::scheduler::PriorityShaper;
+
+use super::sink::{SloSpec, TelemetrySink, DEFAULT_TENANT};
+
+/// Priority band for shed (hopelessly late) jobs.  Far above any slack
+/// value yet finite, so shed work still drains when the system is idle.
+const SHED_BAND: f64 = 1e15;
+/// Priority band for jobs of SLO-exempt tenants: behind every
+/// deadline-carrying job, ahead of shed work.
+const EXEMPT_BAND: f64 = 1e12;
+
+pub struct SloPolicy {
+    telemetry: TelemetrySink,
+    slo: SloSpec,
+    /// scale slack by live p99/slo overload (set false for pure EDF)
+    pub live_boost: bool,
+    /// shed jobs older than this multiple of their SLO (∞ disables)
+    pub shed_after: f64,
+    /// sketch samples required before live feedback engages
+    pub min_samples: u64,
+    /// per-dispatch-round memo: pressure is identical for every job of a
+    /// tenant at one `now_ms`, so compute it once per tenant per round
+    /// instead of once per queued job (dispatch is the hot loop)
+    pressure_memo: (f64, BTreeMap<String, f64>),
+}
+
+impl SloPolicy {
+    /// `telemetry` must be (a clone of) the sink registered on the same
+    /// coordinator, so the policy sees the run's own live sketches.
+    pub fn new(telemetry: &TelemetrySink, slo: SloSpec) -> SloPolicy {
+        SloPolicy {
+            telemetry: telemetry.clone(),
+            slo,
+            live_boost: true,
+            shed_after: f64::INFINITY,
+            min_samples: 5,
+            pressure_memo: (f64::NEG_INFINITY, BTreeMap::new()),
+        }
+    }
+
+    /// Builder-style: shed jobs older than `mult × slo`.
+    pub fn shed_after(mut self, mult: f64) -> SloPolicy {
+        self.shed_after = mult;
+        self
+    }
+
+    /// Builder-style: disable the live-sketch boost (pure EDF).
+    pub fn without_live_boost(mut self) -> SloPolicy {
+        self.live_boost = false;
+        self
+    }
+
+    /// Overload ratio for a tenant: observed p99 JCT over budget, floored
+    /// at 1 (on-track tenants get no boost).  Memoised per (now_ms,
+    /// tenant) — one sketch read per tenant per dispatch round.
+    fn pressure(&mut self, tenant: &str, slo_ms: f64, now_ms: f64) -> f64 {
+        if !self.live_boost {
+            return 1.0;
+        }
+        if self.pressure_memo.0 != now_ms {
+            self.pressure_memo.0 = now_ms;
+            self.pressure_memo.1.clear();
+        }
+        if let Some(&p) = self.pressure_memo.1.get(tenant) {
+            return p;
+        }
+        let p = match self.telemetry.tenant_p99_jct_ms(tenant,
+                                                       self.min_samples) {
+            Some(p99) => (p99 / slo_ms).max(1.0),
+            None => 1.0,
+        };
+        self.pressure_memo.1.insert(tenant.to_string(), p);
+        p
+    }
+}
+
+impl PriorityShaper for SloPolicy {
+    fn shape(&mut self, job: &Job, base_priority: f64, now_ms: f64) -> f64 {
+        let tenant = job.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+        let slo_ms = self.slo.slo_for(tenant);
+        if !(slo_ms > 0.0) || !slo_ms.is_finite() {
+            // no deadline for this tenant: keep the scheduler's order,
+            // parked behind every deadline-carrying job
+            return EXEMPT_BAND + base_priority.clamp(-1e11, 1e11);
+        }
+        let age = now_ms - job.arrival_ms;
+        if age > self.shed_after * slo_ms {
+            // hopeless: drain FIFO once in-budget work is clear
+            return SHED_BAND + job.arrival_ms;
+        }
+        let slack = (job.arrival_ms + slo_ms) - now_ms;
+        let pressure = self.pressure(tenant, slo_ms, now_ms);
+        // smaller runs first; overloaded tenants shrink positive slack
+        // (run sooner) and amplify lateness (run sooner still)
+        if slack >= 0.0 {
+            slack / pressure
+        } else {
+            slack * pressure
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+    use crate::coordinator::job::{Job, JobId};
+
+    fn job(id: usize, tenant: Option<&str>, arrival_ms: f64) -> Job {
+        let mut j = Job::new(JobId::new(id), vec![1, 2, 3], 50, 0, arrival_ms);
+        j.tenant = tenant.map(str::to_string);
+        j
+    }
+
+    fn policy(spec: SloSpec) -> (TelemetrySink, SloPolicy) {
+        let sink = TelemetrySink::with_slo(1, spec.clone());
+        let p = SloPolicy::new(&sink, spec);
+        (sink, p)
+    }
+
+    #[test]
+    fn tight_budget_outranks_loose_budget() {
+        let spec = SloSpec::new(60_000.0).tenant("paid", 5_000.0);
+        let (_sink, mut p) = policy(spec);
+        let paid = job(0, Some("paid"), 0.0);
+        let free = job(1, Some("free"), 0.0);
+        let now = 1_000.0;
+        assert!(p.shape(&paid, 0.0, now) < p.shape(&free, 0.0, now),
+                "tighter deadline must run first");
+    }
+
+    #[test]
+    fn older_job_outranks_newer_same_tenant() {
+        let spec = SloSpec::new(10_000.0);
+        let (_sink, mut p) = policy(spec);
+        let old = job(0, None, 0.0);
+        let new = job(1, None, 4_000.0);
+        assert!(p.shape(&old, 0.0, 5_000.0) < p.shape(&new, 0.0, 5_000.0));
+    }
+
+    #[test]
+    fn live_pressure_boosts_late_tenant() {
+        let spec = SloSpec::new(10_000.0).tenant("late", 1_000.0)
+            .tenant("ontrack", 1_000.0);
+        let (sink, mut p) = policy(spec);
+        // feed the sketches: "late" finishes at 4x its budget, "ontrack"
+        // well inside it
+        let mut h = sink.clone();
+        for i in 0..6 {
+            for (tenant, jct) in [("late", 4_000.0), ("ontrack", 200.0)] {
+                let m = JobMeta {
+                    id: JobId::new(i),
+                    tenant: Some(tenant),
+                    arrival_ms: 0.0,
+                    prompt_len: 3,
+                    total_len: 50,
+                };
+                h.on_job_finished(&m, 0, &FinishStats {
+                    jct_ms: jct,
+                    ttft_ms: Some(50.0),
+                    queue_delay_ms: 10.0,
+                    service_ms: jct,
+                    tokens: 50,
+                }, jct);
+            }
+        }
+        // equal nominal slack: both arrived now, same 1s budget
+        let late = job(0, Some("late"), 0.0);
+        let ontrack = job(1, Some("ontrack"), 0.0);
+        let (a, b) = (p.shape(&late, 0.0, 0.0), p.shape(&ontrack, 0.0, 0.0));
+        assert!(a < b, "overloaded tenant must be boosted: {a} vs {b}");
+        // pure EDF sees them as equal
+        let mut pure = SloPolicy::new(&sink,
+            SloSpec::new(10_000.0).tenant("late", 1_000.0)
+                .tenant("ontrack", 1_000.0)).without_live_boost();
+        let (a, b) = (pure.shape(&late, 0.0, 0.0),
+                      pure.shape(&ontrack, 0.0, 0.0));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shed_parks_hopeless_jobs_behind_everything() {
+        let spec = SloSpec::new(1_000.0);
+        let (_sink, mut p) = policy(spec);
+        p = p.shed_after(3.0);
+        let hopeless = job(0, None, 0.0);
+        let fresh = job(1, None, 3_400.0);
+        let now = 3_500.0; // hopeless is 3.5 budgets old
+        let (h, f) = (p.shape(&hopeless, 0.0, now), p.shape(&fresh, 0.0, now));
+        assert!(h > f, "shed job must not outrank in-budget work");
+        assert!(h >= SHED_BAND);
+        assert!(h.is_finite(), "shed priority must stay orderable");
+        // just-late (but not hopeless) jobs are NOT shed: lateness boosts
+        let late = job(2, None, now - 1_500.0); // 1.5 budgets old
+        assert!(p.shape(&late, 0.0, now) < f,
+                "late-but-recoverable work still outranks fresh work");
+    }
+
+    #[test]
+    fn exempt_tenant_keeps_base_order_behind_deadlines() {
+        let spec = SloSpec::new(0.0).tenant("slo", 5_000.0);
+        let (_sink, mut p) = policy(spec);
+        let exempt_a = job(0, None, 0.0);
+        let exempt_b = job(1, None, 100.0);
+        let deadline = job(2, Some("slo"), 0.0);
+        let now = 200.0;
+        let (a, b) = (p.shape(&exempt_a, 1.0, now),
+                      p.shape(&exempt_b, 2.0, now));
+        assert!(a < b, "base priority still orders exempt jobs");
+        assert!(p.shape(&deadline, 9.0, now) < a,
+                "deadline work outranks exempt work");
+    }
+}

@@ -29,6 +29,9 @@ pub struct TraceRequest {
     pub prompt: Vec<i32>,
     pub total_len: usize,
     pub topic: usize,
+    /// accounting tag for multi-tenant telemetry and SLO budgets; None =
+    /// untagged (reported under the default tenant)
+    pub tenant: Option<String>,
 }
 
 pub struct RequestGenerator {
@@ -96,6 +99,7 @@ impl RequestGenerator {
                     prompt: e.tokens.clone(),
                     total_len: e.total_len,
                     topic: e.topic,
+                    tenant: None,
                 }
             })
             .collect()
@@ -104,6 +108,26 @@ impl RequestGenerator {
     /// Raw interval samples (Fig 4 analysis).
     pub fn intervals(&mut self, n: usize) -> Vec<f64> {
         (0..n).map(|_| self.next_interval_ms()).collect()
+    }
+}
+
+/// Tag a trace with tenants by weighted round-robin: `spec` is
+/// (name, weight) pairs, and requests are assigned in a deterministic
+/// repeating cycle where each tenant occupies `weight` consecutive slots
+/// (e.g. `[("paid", 1), ("free", 3)]` tags every 4th request "paid").
+/// An empty spec (or all-zero weights) leaves the trace untagged.
+pub fn assign_tenants(trace: &mut [TraceRequest], spec: &[(String, u32)]) {
+    let pattern: Vec<&str> = spec
+        .iter()
+        .flat_map(|(name, w)| {
+            std::iter::repeat(name.as_str()).take(*w as usize)
+        })
+        .collect();
+    if pattern.is_empty() {
+        return;
+    }
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.tenant = Some(pattern[i % pattern.len()].to_string());
     }
 }
 
@@ -153,6 +177,25 @@ mod tests {
         let mut g = RequestGenerator::new(ArrivalProcess::Uniform, 0.73, 10.0, 5);
         let iv = g.intervals(10);
         assert!(iv.iter().all(|&x| (x - 100.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn assign_tenants_weighted_cycle() {
+        let c = Corpus::synthetic(30, 8);
+        let mut g = RequestGenerator::fabrix(1.0, 8);
+        let mut t = g.trace(&c, 8);
+        assert!(t.iter().all(|r| r.tenant.is_none()));
+        assign_tenants(&mut t, &[("paid".into(), 1), ("free".into(), 3)]);
+        let tags: Vec<&str> =
+            t.iter().map(|r| r.tenant.as_deref().unwrap()).collect();
+        assert_eq!(tags, vec!["paid", "free", "free", "free",
+                              "paid", "free", "free", "free"]);
+        // empty spec leaves tags untouched
+        let before = tags.clone();
+        assign_tenants(&mut t, &[]);
+        let after: Vec<&str> =
+            t.iter().map(|r| r.tenant.as_deref().unwrap()).collect();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -8,4 +8,5 @@ pub mod trace_io;
 pub mod tracefit;
 
 pub use corpus::{Corpus, CorpusEntry};
-pub use generator::{RequestGenerator, TraceRequest, ArrivalProcess};
+pub use generator::{assign_tenants, ArrivalProcess, RequestGenerator,
+                    TraceRequest};

@@ -18,14 +18,18 @@ pub fn to_json(trace: &[TraceRequest]) -> Json {
         trace
             .iter()
             .map(|r| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::Num(r.id as f64)),
                     ("arrival_ms", Json::Num(r.arrival_ms)),
                     ("prompt", Json::Arr(
                         r.prompt.iter().map(|&t| Json::Num(t as f64)).collect())),
                     ("total_len", Json::Num(r.total_len as f64)),
                     ("topic", Json::Num(r.topic as f64)),
-                ])
+                ];
+                if let Some(tenant) = &r.tenant {
+                    fields.push(("tenant", Json::Str(tenant.clone())));
+                }
+                Json::obj(fields)
             })
             .collect(),
     )
@@ -51,6 +55,10 @@ pub fn from_json(j: &Json) -> Result<Vec<TraceRequest>> {
                     .and_then(Json::as_usize)
                     .ok_or_else(|| anyhow!("request missing total_len"))?,
                 topic: e.get("topic").and_then(Json::as_usize).unwrap_or(0),
+                tenant: e
+                    .get("tenant")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
             })
         })
         .collect()
@@ -77,7 +85,10 @@ mod tests {
     fn roundtrip_preserves_trace() {
         let corpus = Corpus::synthetic(40, 3);
         let mut gen = RequestGenerator::fabrix(2.0, 9);
-        let trace = gen.trace(&corpus, 15);
+        let mut trace = gen.trace(&corpus, 15);
+        // mixed tagged/untagged requests must both survive the roundtrip
+        crate::workload::assign_tenants(
+            &mut trace[..10], &[("paid".into(), 1), ("free".into(), 2)]);
         let j = to_json(&trace);
         let back = from_json(&j).unwrap();
         assert_eq!(back.len(), trace.len());
@@ -87,7 +98,10 @@ mod tests {
             assert_eq!(a.prompt, b.prompt);
             assert_eq!(a.total_len, b.total_len);
             assert_eq!(a.topic, b.topic);
+            assert_eq!(a.tenant, b.tenant);
         }
+        assert!(back[..10].iter().all(|r| r.tenant.is_some()));
+        assert!(back[10..].iter().all(|r| r.tenant.is_none()));
     }
 
     #[test]

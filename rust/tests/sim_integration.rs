@@ -2,9 +2,13 @@
 //! No artifacts required — everything runs on synthetic corpora and the
 //! calibrated discrete-event engine.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use elis::coordinator::{
-    run_serving, ClockMode, CoordinatorBuilder, LbStrategy, Policy,
-    PreemptionPolicy, Scheduler, ServeConfig, SharedCounter,
+    run_serving, ClockMode, CoordinatorBuilder, EventSink, JobId,
+    LbStrategy, Policy, PreemptionPolicy, Scheduler, ServeConfig,
+    SharedCounter,
 };
 use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
@@ -14,7 +18,8 @@ use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
 use elis::predictor::surrogate::SurrogatePredictor;
 use elis::predictor::LengthPredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::workload::{Corpus, RequestGenerator};
+use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink};
+use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
 fn profile(avg_latency_ms: f64) -> ModelProfile {
     ModelProfile::from_meta(&ServedModelMeta {
@@ -67,7 +72,7 @@ fn every_job_completes_with_consistent_metrics() {
     for rec in &r.records {
         assert!(rec.finish_ms >= rec.arrival_ms);
         assert!(rec.jct_ms >= rec.service_ms - 1e-6 || rec.queue_delay_ms == 0.0);
-        assert!(rec.ttft_ms >= 0.0);
+        assert!(rec.ttft_ms.expect("finished jobs have a first token") >= 0.0);
         assert!(rec.windows >= 1);
         assert!(rec.tokens >= 1);
     }
@@ -361,6 +366,244 @@ fn event_sink_sees_the_whole_run() {
     assert_eq!(c.batches, r.sched_iterations);
     assert_eq!(c.windows, r.sched_iterations,
                "every formed batch completes exactly one window");
+}
+
+// ---------------------------------------------------------------------------
+// telemetry subsystem + SLO policy + streaming admission (PR 2)
+// ---------------------------------------------------------------------------
+
+/// Two-tenant trace engineered so FCFS badly misses the tight budget:
+/// six long "free" jobs sit ahead of six short "paid" jobs, all arriving
+/// at t=0, so arrival-order service makes every paid job wait ~all of the
+/// free work while deadline-order service clears paid almost immediately.
+fn skewed_two_tenant_trace() -> Vec<TraceRequest> {
+    (0..12u64)
+        .map(|i| {
+            let long = i < 6;
+            TraceRequest {
+                id: i,
+                arrival_ms: 0.0,
+                prompt: vec![7; 16],
+                total_len: if long { 400 } else { 20 },
+                topic: 0,
+                tenant: Some(if long { "free" } else { "paid" }.to_string()),
+            }
+        })
+        .collect()
+}
+
+fn paid_free_slo() -> SloSpec {
+    SloSpec::new(120_000.0).tenant("paid", 6_000.0)
+}
+
+#[test]
+fn slo_policy_cuts_deadline_misses_vs_fcfs() {
+    let trace = skewed_two_tenant_trace();
+    let run = |with_policy: bool| {
+        let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        let mut e = engines(1, 8 << 30);
+        let cfg = ServeConfig { max_iterations: 1_000_000, ..Default::default() };
+        let telemetry = TelemetrySink::with_slo(1, paid_free_slo());
+        let mut b = CoordinatorBuilder::from_config(cfg)
+            .sink(Box::new(telemetry.clone()));
+        if with_policy {
+            b = b.priority_shaper(Box::new(SloPolicy::new(&telemetry,
+                                                          paid_free_slo())));
+        }
+        let r = b.build(&trace, &mut e, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        (r, telemetry)
+    };
+
+    let (fcfs_report, fcfs_tel) = run(false);
+    let (slo_report, slo_tel) = run(true);
+    assert_eq!(fcfs_report.n(), 12);
+    assert_eq!(slo_report.n(), 12, "SLO policy must not lose jobs");
+
+    // the sink's ledger must agree with an independent count off the records
+    let misses = |r: &ServeReport| {
+        let spec = paid_free_slo();
+        r.records
+            .iter()
+            .filter(|rec| rec.jct_ms > spec.slo_for(rec.tenant.as_deref().unwrap()))
+            .count() as u64
+    };
+    assert_eq!(misses(&fcfs_report), fcfs_tel.total_deadline_misses());
+    assert_eq!(misses(&slo_report), slo_tel.total_deadline_misses());
+
+    // FCFS serves the long free jobs first -> paid blows its 6 s budget
+    assert!(fcfs_tel.deadline_misses("paid") >= 4,
+            "skew must hurt FCFS: {} paid misses",
+            fcfs_tel.deadline_misses("paid"));
+    assert!(slo_tel.total_deadline_misses() < fcfs_tel.total_deadline_misses(),
+            "SLO policy must cut misses: {} vs {}",
+            slo_tel.total_deadline_misses(), fcfs_tel.total_deadline_misses());
+}
+
+#[test]
+fn telemetry_observer_leaves_reports_identical() {
+    // acceptance: a registered sink (no policy) must not perturb the
+    // schedule — reports stay byte-identical to a sink-less run
+    let corpus = Corpus::synthetic(300, 61);
+    let mut gen = RequestGenerator::fabrix(3.0, 61);
+    let mut trace = gen.trace(&corpus, 50);
+    elis::workload::assign_tenants(
+        &mut trace, &[("paid".into(), 1), ("free".into(), 2)]);
+    let cfg = ServeConfig {
+        workers: 2,
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+
+    let mut sched_a = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let mut e_a = engines(2, 8 << 30);
+    let plain = run_serving(&cfg, &trace, &mut e_a, &mut sched_a).unwrap();
+
+    let mut sched_b = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let mut e_b = engines(2, 8 << 30);
+    let telemetry = TelemetrySink::new(2);
+    let observed = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(telemetry.clone()))
+        .build(&trace, &mut e_b, &mut sched_b)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+
+    assert_eq!(plain.records, observed.records);
+    assert_eq!(plain.makespan_ms, observed.makespan_ms);
+    assert_eq!(plain.total_preemptions, observed.total_preemptions);
+    assert_eq!(plain.sched_iterations, observed.sched_iterations);
+
+    // and the sink saw the whole run, split by tenant
+    telemetry.with_state(|st| {
+        let finished: u64 = st.tenants.values().map(|t| t.finished).sum();
+        assert_eq!(finished, 50);
+        assert_eq!(st.tenants["paid"].finished
+                       + st.tenants["free"].finished, 50);
+        for t in st.tenants.values() {
+            assert_eq!(t.jct_ms.count(), t.finished);
+            assert_eq!(t.active, 0, "everything finished");
+            let p50 = t.jct_ms.p50();
+            assert!(p50 >= t.jct_ms.min() && p50 <= t.jct_ms.max());
+        }
+        let node_tokens: u64 = st.nodes.iter().map(|n| n.tokens).sum();
+        let record_tokens: u64 =
+            plain.records.iter().map(|r| r.tokens as u64).sum();
+        assert_eq!(node_tokens, record_tokens,
+                   "window token events must cover every generated token");
+    });
+
+    // the snapshot renders per-tenant labels mid-pipeline formats
+    let text = telemetry.render_prometheus();
+    assert!(text.contains("elis_tenant_jct_ms{tenant=\"paid\",quantile=\"0.99\"}"));
+    assert!(text.contains("# TYPE elis_node_tokens_total counter"));
+}
+
+#[test]
+fn streaming_ingest_mid_run_admits_exactly_once() {
+    let corpus = Corpus::synthetic(100, 51);
+    let mut gen = RequestGenerator::fabrix(3.0, 51);
+    let trace = gen.trace(&corpus, 20);
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let mut e = engines(1, 8 << 30);
+    let counter = SharedCounter::new();
+    let mut coord = CoordinatorBuilder::new()
+        .max_iterations(1_000_000)
+        .sink(Box::new(counter.clone()))
+        .build(&trace, &mut e, &mut sched)
+        .unwrap();
+
+    // run until half the preloaded jobs finished, then stream two more in:
+    // one future arrival and one out-of-order arrival already in the past
+    while coord.finished_jobs() < 10 {
+        coord.step().unwrap();
+    }
+    let now = coord.now();
+    let mk = |id: u64, arrival_ms: f64| TraceRequest {
+        id,
+        arrival_ms,
+        prompt: vec![5; 12],
+        total_len: 30,
+        topic: 0,
+        tenant: Some("late".into()),
+    };
+    coord.push_request(&mk(100, now + 500.0));
+    coord.push_request(&mk(101, 0.0));
+    assert_eq!(coord.total_jobs(), 22);
+    assert!(!coord.is_done());
+
+    while !coord.step().unwrap().done {}
+    let r = coord.report();
+    assert_eq!(r.n(), 22, "streamed jobs must be scheduled and finish");
+    let c = counter.snapshot();
+    assert_eq!(c.admitted, 22, "each job admitted exactly once");
+    assert_eq!(c.finished, 22, "each job finished exactly once");
+
+    let streamed: Vec<_> = r
+        .records
+        .iter()
+        .filter(|rec| rec.tenant.as_deref() == Some("late"))
+        .collect();
+    assert_eq!(streamed.len(), 2, "both streamed jobs counted exactly once");
+    for rec in streamed {
+        assert_eq!(rec.tokens, 30);
+        assert!(rec.finish_ms >= rec.arrival_ms);
+        assert!(rec.finish_ms >= now, "streamed work completes after push");
+    }
+}
+
+/// Counts engine evictions between consecutive window-done events.
+#[derive(Default, Clone)]
+struct EvictionsPerWindow(Rc<RefCell<(u64, Vec<u64>)>>);
+
+impl EventSink for EvictionsPerWindow {
+    fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {
+        self.0.borrow_mut().0 += 1;
+    }
+
+    fn on_window_done(&mut self, _node: usize, _batch: &[JobId],
+                      _tokens: usize, _service_ms: f64, _now_ms: f64) {
+        let mut inner = self.0.borrow_mut();
+        let count = inner.0;
+        inner.0 = 0;
+        inner.1.push(count);
+    }
+}
+
+#[test]
+fn max_per_iteration_bounds_evictions_per_window() {
+    // regression for the previously-ignored PreemptionPolicy knob: with a
+    // starved KV pool and max_per_iteration=1, no window may evict twice
+    let corpus = Corpus::synthetic(200, 11);
+    let mut gen = RequestGenerator::fabrix(5.0, 11);
+    let trace = gen.trace(&corpus, 40);
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        preemption: PreemptionPolicy {
+            enabled: true,
+            max_preemptions_per_job: 100,
+            max_per_iteration: 1,
+        },
+        max_iterations: 5_000_000,
+        ..Default::default()
+    };
+    let evictions = EvictionsPerWindow::default();
+    let mut e: Vec<Box<dyn Engine>> = vec![Box::new(SimEngine::new(
+        profile(2000.0), 50, 4, 40 * 16 * (1 << 20)))];
+    let r = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(evictions.clone()))
+        .build(&trace, &mut e, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    assert_eq!(r.n(), 40, "all jobs finish under the eviction cap");
+    assert!(r.total_preemptions > 0, "tiny pool must still preempt");
+    let per_window = evictions.0.borrow().1.clone();
+    assert_eq!(per_window.iter().sum::<u64>(), r.total_preemptions);
+    assert!(per_window.iter().all(|&c| c <= 1),
+            "cap violated: {per_window:?}");
 }
 
 #[test]
