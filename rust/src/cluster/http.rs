@@ -1,0 +1,572 @@
+//! Minimal HTTP/1.1 frontend on `std::net` — no dependencies.
+//!
+//! The paper deploys the frontend scheduler as a Kubernetes Deployment
+//! with an HTTP port (§5); this module is that service surface for the
+//! in-process cluster runtime:
+//!
+//! * `GET /healthz` — liveness probe (the k8s manifests' port 8080).
+//! * `GET /metrics` — Prometheus text exposition, snapshotted live from
+//!   the shared [`TelemetrySink`] (thread-safe — handler threads render
+//!   while the serving loop appends events).
+//! * `POST /v1/generate` — admit a JSON request into the *running*
+//!   coordinator via [`Coordinator::push_request`].  Body fields (all
+//!   optional): `prompt` (array of token ids) or `prompt_len`,
+//!   `total_len`, `topic`, `tenant`, `arrival_ms` (defaults to "now";
+//!   trusted only within the trailing [`MAX_BACKDATE_MS`], anything else
+//!   is re-stamped), and `wait` (block until the job finishes and report
+//!   its stats).
+//!
+//! Connections are handled by a small thread pool; [`HttpServer::shutdown`]
+//! stops accepting, drains the handler threads, and joins everything
+//! (also run on drop).
+//!
+//! The serving loop stays single-threaded and lock-free: handlers never
+//! touch the [`Coordinator`].  They enqueue [`ApiRequest`]s on an mpsc
+//! channel; the loop driving the coordinator calls [`ApiBridge::pump`]
+//! between steps to admit them, and a [`CompletionNotifier`] sink resolves
+//! `wait`ing handlers when their job finishes.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+//! [`Coordinator::push_request`]: crate::coordinator::Coordinator::push_request
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener,
+               TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+use crate::coordinator::Coordinator;
+use crate::telemetry::TelemetrySink;
+use crate::util::json::Json;
+use crate::workload::TraceRequest;
+
+/// Maximum accepted request body (1 MiB).
+const MAX_BODY: usize = 1 << 20;
+/// Maximum accepted header block (16 KiB).
+const MAX_HEADER: usize = 16 << 10;
+/// How far in the past a client-supplied `arrival_ms` may lie before it
+/// is re-stamped with the live clock (see [`ApiBridge::pump`]).
+pub const MAX_BACKDATE_MS: f64 = 60_000.0;
+
+// ---------------------------------------------------------------------------
+// serving-loop side: admission bridge + completion notifier
+// ---------------------------------------------------------------------------
+
+/// One `POST /v1/generate`, en route from a handler thread to the loop
+/// driving the coordinator.
+pub struct ApiRequest {
+    pub request: TraceRequest,
+    /// hold the HTTP response until the job finishes
+    pub wait: bool,
+    /// where the handler thread blocks for its reply
+    pub reply: Sender<GenerateReply>,
+}
+
+/// Reply to one [`ApiRequest`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum GenerateReply {
+    /// admitted; the job runs asynchronously (`wait: false`)
+    Accepted { job_id: u64 },
+    /// finished end-to-end (`wait: true`)
+    Finished { job_id: u64, tokens: usize, jct_ms: f64 },
+}
+
+type Waiters = Arc<Mutex<HashMap<u64, Sender<GenerateReply>>>>;
+
+/// The serving loop's end of the admission channel.  Call
+/// [`pump`](Self::pump) between coordinator steps.
+pub struct ApiBridge {
+    rx: Receiver<ApiRequest>,
+    waiters: Waiters,
+}
+
+impl ApiBridge {
+    /// Create the channel pair: the `Sender` goes into the [`Gateway`]
+    /// (handler threads), the bridge stays with the serving loop.
+    pub fn channel() -> (Sender<ApiRequest>, ApiBridge) {
+        let (tx, rx) = channel();
+        let bridge = ApiBridge { rx, waiters: Waiters::default() };
+        (tx, bridge)
+    }
+
+    /// The [`EventSink`] that resolves `wait`ing handlers; register it on
+    /// the same coordinator this bridge pumps into.
+    pub fn completion_sink(&self) -> CompletionNotifier {
+        CompletionNotifier { waiters: self.waiters.clone() }
+    }
+
+    /// Drain every pending API admission into the coordinator (non-
+    /// blocking).  Requests are stamped with the coordinator's *live*
+    /// time (`admission_now_ms` — the wall clock in wall mode, since
+    /// `now()` goes stale while the loop idles) unless they carry an
+    /// `arrival_ms` within the trailing [`MAX_BACKDATE_MS`]: a future
+    /// stamp would park the job forever (wedging `is_done()` and any
+    /// idle-exit logic) and an ancient one fabricates a huge JCT that
+    /// pollutes the latency sketches and SLO accounting.  Returns how
+    /// many were admitted.
+    pub fn pump(&mut self, coord: &mut Coordinator<'_>) -> usize {
+        let mut admitted = 0;
+        while let Ok(mut req) = self.rx.try_recv() {
+            let now = coord.admission_now_ms();
+            let a = req.request.arrival_ms;
+            if !a.is_finite() || a < 0.0 || a > now
+                || a < now - MAX_BACKDATE_MS
+            {
+                req.request.arrival_ms = now;
+            }
+            let id = coord.push_request(&req.request);
+            if req.wait {
+                self.waiters
+                    .lock()
+                    .unwrap()
+                    .insert(id.raw(), req.reply);
+            } else {
+                // a dropped receiver just means the handler timed out
+                let _ = req.reply.send(GenerateReply::Accepted {
+                    job_id: id.raw(),
+                });
+            }
+            admitted += 1;
+        }
+        admitted
+    }
+}
+
+/// [`EventSink`] resolving `wait: true` generate calls on job finish.
+pub struct CompletionNotifier {
+    waiters: Waiters,
+}
+
+impl EventSink for CompletionNotifier {
+    fn on_job_finished(&mut self, job: &JobMeta<'_>, _node: usize,
+                       stats: &FinishStats, _now_ms: f64) {
+        if let Some(tx) = self.waiters.lock().unwrap().remove(&job.id.raw()) {
+            let _ = tx.send(GenerateReply::Finished {
+                job_id: job.id.raw(),
+                tokens: stats.tokens,
+                jct_ms: stats.jct_ms,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// handler side: shared context + server
+// ---------------------------------------------------------------------------
+
+/// Everything a handler thread needs (cheap to clone; one per thread).
+#[derive(Clone)]
+pub struct Gateway {
+    /// `/metrics` source; `None` renders 503 (no telemetry configured)
+    pub telemetry: Option<TelemetrySink>,
+    /// admission channel into the serving loop
+    pub api_tx: Sender<ApiRequest>,
+    /// how long a `wait: true` generate may block before 504
+    pub wait_timeout: Duration,
+}
+
+/// The listening server: an accept thread feeding a handler thread pool.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
+    /// start `handler_threads` connection handlers.
+    pub fn serve(addr: &str, gateway: Gateway, handler_threads: usize)
+                 -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding HTTP frontend to {addr}"))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let (conn_tx, conn_rx) = channel::<TcpStream>();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let handlers = (0..handler_threads.max(1))
+            .map(|i| {
+                let rx = conn_rx.clone();
+                let gw = gateway.clone();
+                std::thread::Builder::new()
+                    .name(format!("elis-http-{i}"))
+                    .spawn(move || loop {
+                        // hold the lock only while dequeuing
+                        let conn = rx.lock().unwrap().recv();
+                        match conn {
+                            Ok(stream) => handle_connection(stream, &gw),
+                            Err(_) => return, // accept loop gone
+                        }
+                    })
+                    .expect("spawning HTTP handler thread")
+            })
+            .collect();
+
+        let stop_flag = stop.clone();
+        let accept = std::thread::Builder::new()
+            .name("elis-http-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        return; // drops conn_tx -> handlers drain and exit
+                    }
+                    if let Ok(stream) = conn {
+                        if conn_tx.send(stream).is_err() {
+                            return;
+                        }
+                    }
+                }
+            })
+            .expect("spawning HTTP accept thread");
+
+        Ok(HttpServer { addr, stop, accept: Some(accept), handlers })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Graceful shutdown: stop accepting, finish queued connections, join
+    /// every thread.  Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the accept loop with one throwaway connection; a
+        // wildcard bind (0.0.0.0 / [::]) is not connectable on every
+        // platform, so poke loopback on the bound port instead
+        let mut poke = self.addr;
+        if poke.ip().is_unspecified() {
+            poke.set_ip(match self.addr {
+                SocketAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                SocketAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let poked =
+            TcpStream::connect_timeout(&poke, Duration::from_secs(1)).is_ok();
+        if !poked {
+            // the poke could not land (firewalled self-connect?): leave
+            // the threads parked — the stop flag retires the accept loop
+            // on the next real connection — rather than hanging shutdown
+            return;
+        }
+        if let Some(join) = self.accept.take() {
+            let _ = join.join();
+        }
+        // the accept thread has dropped conn_tx, so the handlers drain
+        // their queue and exit
+        for join in self.handlers.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request / response plumbing
+// ---------------------------------------------------------------------------
+
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+struct Response {
+    status: u16,
+    content_type: &'static str,
+    body: String,
+}
+
+impl Response {
+    fn text(status: u16, body: &str) -> Response {
+        Response { status, content_type: "text/plain; charset=utf-8",
+                   body: body.to_string() }
+    }
+
+    fn json(status: u16, body: Json) -> Response {
+        Response { status, content_type: "application/json",
+                   body: format!("{body}\n") }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let reason = match self.status {
+            200 => "OK",
+            202 => "Accepted",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
+            _ => "Unknown",
+        };
+        write!(
+            stream,
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+            self.status, reason, self.content_type, self.body.len(), self.body
+        )?;
+        stream.flush()
+    }
+}
+
+/// Parse one HTTP/1.1 request (request line, headers, Content-Length
+/// body) off a reader.  Generic for testability.
+///
+/// The reader is hard-capped at `MAX_HEADER + MAX_BODY` + slack *before*
+/// any line parsing: `read_line` buffers until a newline, so without the
+/// cap a single newline-free request line could grow memory without
+/// bound regardless of the per-line checks below.
+fn read_request(reader: impl Read) -> Result<Request> {
+    let mut reader =
+        BufReader::new(reader.take((MAX_HEADER + MAX_BODY + 1024) as u64));
+    let mut line = String::new();
+    reader.read_line(&mut line).context("reading request line")?;
+    if line.len() > MAX_HEADER {
+        bail!("request line exceeds {} bytes", MAX_HEADER);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow!("request line has no path"))?
+        .to_string();
+
+    let mut content_length = 0usize;
+    let mut header_bytes = line.len();
+    loop {
+        let mut header = String::new();
+        if reader.read_line(&mut header).context("reading header")? == 0 {
+            break; // EOF before blank line: tolerate bodyless requests
+        }
+        header_bytes += header.len();
+        if header_bytes > MAX_HEADER {
+            bail!("header block exceeds {} bytes", MAX_HEADER);
+        }
+        let trimmed = header.trim();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("bad content-length"))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        bail!("body of {} bytes exceeds {} limit", content_length, MAX_BODY);
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("reading body")?;
+    Ok(Request { method, path, body })
+}
+
+fn handle_connection(mut stream: TcpStream, gw: &Gateway) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let response = match read_request(&mut stream) {
+        Ok(request) => route(&request, gw),
+        Err(e) => Response::text(400, &format!("bad request: {e:#}\n")),
+    };
+    let _ = response.write_to(&mut stream);
+}
+
+fn route(req: &Request, gw: &Gateway) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::text(200, "ok\n"),
+        ("GET", "/metrics") => match &gw.telemetry {
+            Some(sink) => Response {
+                status: 200,
+                // Prometheus text exposition format version
+                content_type: "text/plain; version=0.0.4",
+                body: sink.render_prometheus(),
+            },
+            None => Response::text(503, "no telemetry sink configured\n"),
+        },
+        ("POST", "/v1/generate") => handle_generate(&req.body, gw),
+        ("GET" | "POST" | "HEAD" | "DELETE" | "PUT", _) => {
+            Response::text(404, "not found\n")
+        }
+        _ => Response::text(405, "method not allowed\n"),
+    }
+}
+
+/// Build the [`TraceRequest`] a `POST /v1/generate` body describes.
+/// Exposed for the CLI and tests.
+pub fn trace_request_from_json(j: &Json) -> Result<TraceRequest> {
+    let total_len = j
+        .get("total_len")
+        .and_then(Json::as_usize)
+        .unwrap_or(50)
+        .max(1);
+    let prompt = match j.get("prompt") {
+        Some(p) => p
+            .as_i32_vec()
+            .ok_or_else(|| anyhow!("'prompt' must be an array of token ids"))?,
+        None => {
+            let n = j
+                .get("prompt_len")
+                .and_then(Json::as_usize)
+                .unwrap_or(16)
+                .clamp(1, 4096);
+            // deterministic filler tokens, small ids
+            (0..n).map(|i| (i % 97) as i32 + 3).collect()
+        }
+    };
+    let tenant = j.get("tenant").and_then(Json::as_str).map(str::to_string);
+    let topic = j.get("topic").and_then(Json::as_usize).unwrap_or(0);
+    // NaN = "stamp with the coordinator's now" (ApiBridge::pump)
+    let arrival_ms = j
+        .get("arrival_ms")
+        .and_then(Json::as_f64)
+        .unwrap_or(f64::NAN);
+    Ok(TraceRequest { id: 0, arrival_ms, prompt, total_len, topic, tenant })
+}
+
+fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::text(400, "body is not utf-8\n"),
+    };
+    let parsed = match Json::parse(if text.trim().is_empty() { "{}" } else { text }) {
+        Ok(j) => j,
+        Err(e) => return Response::text(400, &format!("bad json: {e}\n")),
+    };
+    let request = match trace_request_from_json(&parsed) {
+        Ok(r) => r,
+        Err(e) => return Response::text(400, &format!("bad request: {e}\n")),
+    };
+    let wait = parsed.get("wait").and_then(Json::as_bool).unwrap_or(false);
+
+    let (reply_tx, reply_rx) = channel();
+    let api = ApiRequest { request, wait, reply: reply_tx };
+    if gw.api_tx.send(api).is_err() {
+        return Response::text(503, "serving loop is not running\n");
+    }
+    // non-wait admissions are acked by the next pump(); give them a
+    // generous bound anyway so a stalled loop surfaces as 504, not a hang
+    let timeout = if wait { gw.wait_timeout } else { Duration::from_secs(10) };
+    match reply_rx.recv_timeout(timeout) {
+        Ok(GenerateReply::Accepted { job_id }) => Response::json(
+            202,
+            Json::obj(vec![
+                ("job_id", Json::Num(job_id as f64)),
+                ("status", Json::Str("accepted".into())),
+            ]),
+        ),
+        Ok(GenerateReply::Finished { job_id, tokens, jct_ms }) => {
+            Response::json(
+                200,
+                Json::obj(vec![
+                    ("job_id", Json::Num(job_id as f64)),
+                    ("status", Json::Str("finished".into())),
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("jct_ms", Json::Num(jct_ms)),
+                ]),
+            )
+        }
+        Err(_) => Response::text(504, "timed out waiting for the job\n"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_line_headers_and_body() {
+        let raw = "POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
+                   Content-Length: 11\r\n\r\nhello world";
+        let req = read_request(raw.as_bytes()).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn tolerates_missing_body_and_rejects_garbage() {
+        let req = read_request("GET /healthz HTTP/1.1\r\n\r\n".as_bytes())
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert!(read_request("\r\n".as_bytes()).is_err());
+        assert!(read_request("GET\r\n\r\n".as_bytes()).is_err());
+        let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                           MAX_BODY + 1);
+        assert!(read_request(huge.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn generate_json_defaults_and_overrides() {
+        let r = trace_request_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(r.total_len, 50);
+        assert_eq!(r.prompt.len(), 16);
+        assert!(r.tenant.is_none());
+        assert!(!r.arrival_ms.is_finite(), "unset arrival means 'now'");
+
+        let j = Json::parse(
+            r#"{"prompt":[5,6,7],"total_len":30,"tenant":"paid",
+                "topic":2,"arrival_ms":125.5}"#,
+        )
+        .unwrap();
+        let r = trace_request_from_json(&j).unwrap();
+        assert_eq!(r.prompt, vec![5, 6, 7]);
+        assert_eq!(r.total_len, 30);
+        assert_eq!(r.tenant.as_deref(), Some("paid"));
+        assert_eq!(r.topic, 2);
+        assert!((r.arrival_ms - 125.5).abs() < 1e-9);
+
+        let bad = Json::parse(r#"{"prompt":"nope"}"#).unwrap();
+        assert!(trace_request_from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn response_has_content_length_and_reason() {
+        // write through a real socket pair to exercise write_to
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        });
+        let (mut server_side, _) = listener.accept().unwrap();
+        Response::json(202, Json::obj(vec![("job_id", Json::Num(7.0))]))
+            .write_to(&mut server_side)
+            .unwrap();
+        drop(server_side);
+        let got = client.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 202 Accepted\r\n"), "{got}");
+        assert!(got.contains("Content-Type: application/json"), "{got}");
+        assert!(got.contains("\"job_id\":7"), "{got}");
+        let len_line = got
+            .lines()
+            .find(|l| l.starts_with("Content-Length: "))
+            .expect("content-length header");
+        let n: usize = len_line["Content-Length: ".len()..].parse().unwrap();
+        let body = got.split("\r\n\r\n").nth(1).unwrap();
+        assert_eq!(n, body.len());
+    }
+}

@@ -1,0 +1,36 @@
+//! Cluster runtime: the concurrency + network layer that turns the
+//! offline reproduction into the deployable service the paper's
+//! Kubernetes manifests describe (§5) — dependency-free, `std` only.
+//!
+//! * [`pool`] — [`WorkerPool`]: one OS thread per backend engine.
+//!   Wall-clock dispatch sends each formed batch over a per-worker mpsc
+//!   channel and completions drain from one shared channel, so
+//!   multi-worker wall-clock runs genuinely overlap scheduling windows
+//!   (previously every window executed inline and sequentially on one
+//!   thread).  Virtual-clock runs keep the inline path and stay
+//!   bit-identical.
+//! * [`http`] — [`HttpServer`]: a minimal HTTP/1.1 frontend on
+//!   `std::net::TcpListener` with a connection-handling thread pool and
+//!   graceful shutdown.  `GET /healthz` for probes, `GET /metrics` for a
+//!   live Prometheus scrape of the telemetry sink, and
+//!   `POST /v1/generate` for streaming admission into a running
+//!   coordinator (via [`ApiBridge`] + `Coordinator::push_request`).
+//!
+//! Wiring: `elis serve --listen <addr>` runs both; see
+//! `examples/cluster_serve.rs` for the embedded-API shape.
+//!
+//! ```text
+//!   HTTP clients ──> HttpServer (handler threads)
+//!        │  /metrics ◀── TelemetrySink (shared, thread-safe)
+//!        └─ /v1/generate ──> ApiBridge ──> Coordinator (serving loop)
+//!                                              │ dispatch (mpsc)
+//!                                              ▼
+//!                                    WorkerPool threads (one engine each)
+//! ```
+
+pub mod http;
+pub mod pool;
+
+pub use http::{ApiBridge, ApiRequest, CompletionNotifier, Gateway,
+               GenerateReply, HttpServer};
+pub use pool::{WindowDone, WorkerCmd, WorkerPool};

@@ -1,0 +1,301 @@
+//! Threaded worker pool: one OS thread per backend engine.
+//!
+//! The paper's deployment (§5) runs each backend worker as its own pod; in
+//! wall-clock mode this pool is the in-process equivalent — each engine is
+//! moved onto a dedicated thread at spawn ([`Engine`] is `Send`; usage is
+//! strictly thread-confined afterwards) and the coordinator talks to it
+//! over `std::sync::mpsc` channels:
+//!
+//! * commands flow down a per-worker channel ([`WorkerCmd`]), so each
+//!   worker sees its admissions, priority order, and windows in exact
+//!   dispatch order;
+//! * results flow back up one shared completion channel ([`WindowDone`]),
+//!   which [`Coordinator::poll_completions`] drains without blocking —
+//!   this is what lets a multi-worker wall-clock run genuinely overlap
+//!   scheduling windows across threads instead of executing them inline
+//!   and sequentially.
+//!
+//! Exactly one [`WindowDone`] answers every
+//! [`WorkerCmd::RunWindow`]; the coordinator tracks in-flight windows per
+//! worker off that invariant.  Dropping the pool closes the command
+//! channels, which ends each worker loop, and joins every thread.
+//!
+//! [`Coordinator::poll_completions`]: crate::coordinator::Coordinator::poll_completions
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::job::JobId;
+use crate::engine::{Engine, SeqSpec, WindowOutcome};
+
+/// A command for one worker thread, sent in dispatch order.
+pub enum WorkerCmd {
+    /// Register fresh sequences, install the preemption-victim order, and
+    /// execute one scheduling window.  Always answered by exactly one
+    /// [`WindowDone`] on the shared completion channel.
+    RunWindow {
+        /// sequences not yet admitted to this engine (first window)
+        admits: Vec<SeqSpec>,
+        /// engine preemption-victim order, highest priority first
+        priority_order: Vec<u64>,
+        /// engine-layer sequence ids of the batch
+        batch: Vec<u64>,
+        /// coordinator-side ids echoed back with the outcome
+        echo: Vec<JobId>,
+    },
+    /// `PreemptionPolicy::max_per_iteration` (paper §3.4).
+    SetPreemptionCap(usize),
+    /// Drop a finished sequence's engine state.
+    Remove(u64),
+}
+
+/// Result of one [`WorkerCmd::RunWindow`], delivered on the pool's shared
+/// completion channel.
+pub struct WindowDone {
+    pub worker: usize,
+    /// the `echo` ids from the command, in batch order
+    pub batch: Vec<JobId>,
+    /// engine-layer ids this command *tried* to admit (its `admits`) —
+    /// on error the coordinator wipes exactly these from the engine so a
+    /// retry can re-admit them cleanly
+    pub fresh: Vec<u64>,
+    /// the window outcome, or the admit/window error that aborted it
+    pub outcome: Result<WindowOutcome>,
+}
+
+struct WorkerHandle {
+    /// `None` once shut down (closing the channel ends the worker loop)
+    cmd_tx: Option<Sender<WorkerCmd>>,
+    max_batch: usize,
+    describe: String,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Owns the worker threads and both channel ends the coordinator uses.
+pub struct WorkerPool {
+    workers: Vec<WorkerHandle>,
+    done_rx: Receiver<WindowDone>,
+}
+
+impl WorkerPool {
+    /// Move each engine onto its own named OS thread
+    /// (`elis-worker-<i>`).  `engines[i]` becomes worker `i`'s backend.
+    pub fn new(engines: Vec<Box<dyn Engine>>) -> WorkerPool {
+        let (done_tx, done_rx) = channel();
+        let workers = engines
+            .into_iter()
+            .enumerate()
+            .map(|(i, engine)| {
+                let (cmd_tx, cmd_rx) = channel();
+                let done_tx = done_tx.clone();
+                let max_batch = engine.max_batch();
+                let describe = engine.describe();
+                let join = std::thread::Builder::new()
+                    .name(format!("elis-worker-{i}"))
+                    .spawn(move || worker_main(i, engine, cmd_rx, done_tx))
+                    .expect("spawning worker thread");
+                WorkerHandle {
+                    cmd_tx: Some(cmd_tx),
+                    max_batch,
+                    describe,
+                    join: Some(join),
+                }
+            })
+            .collect();
+        WorkerPool { workers, done_rx }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The engine's `max_batch`, captured before the engine moved to its
+    /// thread.
+    pub fn max_batch(&self, worker: usize) -> usize {
+        self.workers[worker].max_batch
+    }
+
+    /// The engine's `describe()`, captured before the move.
+    pub fn describe(&self, worker: usize) -> &str {
+        &self.workers[worker].describe
+    }
+
+    /// Send a command to one worker.  Errs if the worker thread is gone
+    /// (panicked or already shut down).
+    pub fn send(&self, worker: usize, cmd: WorkerCmd) -> Result<()> {
+        self.workers[worker]
+            .cmd_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("worker {worker} already shut down"))?
+            .send(cmd)
+            .map_err(|_| anyhow!("worker thread {worker} is gone"))
+    }
+
+    /// Send one command (built per worker) to every worker.
+    pub fn broadcast(&self, mut make: impl FnMut() -> WorkerCmd) -> Result<()> {
+        for w in 0..self.workers.len() {
+            self.send(w, make())?;
+        }
+        Ok(())
+    }
+
+    /// Non-blocking drain of the next completed window, if any.
+    pub fn try_recv_done(&self) -> Option<WindowDone> {
+        self.done_rx.try_recv().ok()
+    }
+
+    /// Blocking drain with a timeout (handy for tests and drivers that
+    /// have nothing else to do while windows run).
+    pub fn recv_done_timeout(&self, timeout: Duration) -> Option<WindowDone> {
+        self.done_rx.recv_timeout(timeout).ok()
+    }
+
+    /// Whether the worker's thread is still running.  A thread that died
+    /// (engine panic) can never answer an in-flight window — the
+    /// coordinator uses this to fail fast instead of idling forever.
+    pub fn worker_alive(&self, worker: usize) -> bool {
+        self.workers[worker]
+            .join
+            .as_ref()
+            .map(|j| !j.is_finished())
+            .unwrap_or(false)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // close every command channel first so all workers wind down in
+        // parallel, then join
+        for w in &mut self.workers {
+            w.cmd_tx = None;
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+/// Worker thread body: apply commands in order until the channel closes.
+fn worker_main(idx: usize, mut engine: Box<dyn Engine>,
+               cmd_rx: Receiver<WorkerCmd>, done_tx: Sender<WindowDone>) {
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
+            WorkerCmd::Remove(id) => engine.remove(id),
+            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+                let fresh: Vec<u64> = admits.iter().map(|s| s.id).collect();
+                let mut admit_err = None;
+                for spec in admits {
+                    if let Err(e) = engine.admit(spec) {
+                        admit_err = Some(e);
+                        break;
+                    }
+                }
+                let outcome = match admit_err {
+                    Some(e) => Err(e),
+                    None => {
+                        engine.set_priority_order(&priority_order);
+                        engine.run_window(&batch)
+                    }
+                };
+                let done =
+                    WindowDone { worker: idx, batch: echo, fresh, outcome };
+                if done_tx.send(done).is_err() {
+                    return; // pool dropped mid-window
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::*;
+    use crate::engine::profiles::ModelProfile;
+    use crate::engine::sim_engine::SimEngine;
+    use crate::runtime::manifest::ServedModelMeta;
+
+    fn sim_engines(n: usize) -> Vec<Box<dyn Engine>> {
+        let profile = ModelProfile::from_meta(&ServedModelMeta {
+            name: "test".into(),
+            abbrev: "test".into(),
+            params_b: 7.0,
+            avg_latency_ms: 2000.0,
+            kv_bytes_per_token: 1 << 20,
+            preempt_batch: 0,
+            mem_limit_frac: 0.9,
+        });
+        (0..n)
+            .map(|_| {
+                Box::new(SimEngine::new(profile.clone(), 50, 4, 8 << 30))
+                    as Box<dyn Engine>
+            })
+            .collect()
+    }
+
+    fn spec(id: u64, total: usize) -> SeqSpec {
+        SeqSpec { id, prompt: vec![3; 8], target_total: total, topic: 0 }
+    }
+
+    #[test]
+    fn windows_run_on_worker_threads_and_echo_back() {
+        let pool = WorkerPool::new(sim_engines(2));
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.max_batch(0), 4);
+        assert!(pool.describe(0).contains("SimEngine"),
+                "{}", pool.describe(0));
+        for w in 0..2u64 {
+            pool.send(w as usize, WorkerCmd::RunWindow {
+                admits: vec![spec(w, 30)],
+                priority_order: vec![w],
+                batch: vec![w],
+                echo: vec![JobId::from_raw(w)],
+            }).unwrap();
+        }
+        let mut seen = BTreeSet::new();
+        for _ in 0..2 {
+            let done = pool
+                .recv_done_timeout(Duration::from_secs(10))
+                .expect("window must complete");
+            let outcome = done.outcome.expect("window must succeed");
+            assert_eq!(done.batch.len(), 1);
+            assert_eq!(done.batch[0].raw(), done.worker as u64);
+            assert_eq!(outcome.outputs.len(), 1);
+            assert!(!outcome.outputs[0].new_tokens.is_empty());
+            seen.insert(done.worker);
+        }
+        assert_eq!(seen.len(), 2, "both workers must have answered");
+        assert!(pool.try_recv_done().is_none(), "exactly one reply per window");
+    }
+
+    #[test]
+    fn admit_error_is_reported_not_lost() {
+        let pool = WorkerPool::new(sim_engines(1));
+        // admitting the same id twice errs inside the engine; the error
+        // must come back as the window outcome
+        pool.send(0, WorkerCmd::RunWindow {
+            admits: vec![spec(7, 30), spec(7, 30)],
+            priority_order: vec![7],
+            batch: vec![7],
+            echo: vec![JobId::from_raw(7)],
+        }).unwrap();
+        let done = pool
+            .recv_done_timeout(Duration::from_secs(10))
+            .expect("an errored window still answers");
+        assert!(done.outcome.is_err());
+    }
+
+    #[test]
+    fn drop_joins_worker_threads() {
+        let pool = WorkerPool::new(sim_engines(3));
+        pool.send(2, WorkerCmd::SetPreemptionCap(1)).unwrap();
+        drop(pool); // must not hang or panic
+    }
+}

@@ -64,6 +64,16 @@ pub trait EventSink {
                       _tokens: usize, _service_ms: f64, _now_ms: f64) {
     }
 
+    /// One job produced `new_tokens` tokens inside a window.  Fires once
+    /// per producing job per window, *before* that job's
+    /// [`on_job_finished`](Self::on_job_finished) on its final window —
+    /// this is the live-throughput signal (per-tenant token accounting
+    /// would otherwise only move at job completion, which starves
+    /// fairness policies of in-flight service for long jobs).
+    fn on_job_progress(&mut self, _job: &JobMeta<'_>, _node: usize,
+                       _new_tokens: usize, _now_ms: f64) {
+    }
+
     /// A job produced its full response.
     fn on_job_finished(&mut self, _job: &JobMeta<'_>, _node: usize,
                        _stats: &FinishStats, _now_ms: f64) {

@@ -2,14 +2,15 @@
 //! first-class API instead of a closed loop.
 //!
 //! [`Coordinator`] owns the serving state (job table, per-node queues,
-//! load balancer, priority buffer, batcher, preemption policy) and borrows
-//! the engines and scheduler for the duration of a run.  The serving loop
+//! load balancer, priority buffer, batcher, preemption policy) and drives
+//! a backend of engines for the duration of a run.  The serving loop
 //! is decomposed into composable steps:
 //!
 //! * [`Coordinator::ingest`] — admit arrivals due at `now` (Algorithm 1
 //!   lines 1–5: load-balance each new job onto a node).
 //! * [`Coordinator::poll_completions`] — apply window outcomes whose
-//!   (virtual) completion time has passed.
+//!   (virtual) completion time has passed, and drain finished windows off
+//!   the worker-pool completion channel in threaded wall-clock mode.
 //! * [`Coordinator::dispatch`] — for every idle worker with queued jobs:
 //!   refresh priorities, rebuild the node's priority queue, form a batch,
 //!   and execute one scheduling window (Algorithm 1 lines 6–20).
@@ -27,13 +28,26 @@
 //!
 //! Both evaluation modes of the paper are supported via [`ClockMode`]:
 //! virtual (discrete-event; engine `service_ms` advances a simulated
-//! timeline) and wall (real time; arrivals are waited for, windows block).
-//! The scheduling-iteration structure is identical in both.
+//! timeline) and wall (real time; arrivals are waited for).  The
+//! scheduling-iteration structure is identical in both.  Engines attach
+//! through one of two backends:
+//!
+//! * **inline** ([`CoordinatorBuilder::build`]) — the coordinator borrows
+//!   the engines and executes every window on the calling thread.  This
+//!   is the only backend virtual mode accepts, and its code path is
+//!   untouched by the threaded runtime, so simulated reports stay
+//!   bit-identical.
+//! * **pooled** ([`CoordinatorBuilder::build_pooled`]) — wall-clock only:
+//!   engines live on [`WorkerPool`] threads, dispatch sends each formed
+//!   batch over an mpsc channel, and completions drain asynchronously, so
+//!   scheduling windows genuinely overlap across multi-worker configs
+//!   (the paper's one-vLLM-per-pod deployment, in-process).
 
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::cluster::pool::{WindowDone, WorkerCmd, WorkerPool};
 use crate::engine::{Engine, SeqSpec, WindowOutcome};
 use crate::metrics::{JobRecord, ServeReport};
 use crate::workload::TraceRequest;
@@ -50,7 +64,7 @@ use super::scheduler::{PriorityShaper, Scheduler};
 pub enum ClockMode {
     /// discrete-event simulation (engine service_ms drives time)
     Virtual,
-    /// real time (arrivals waited for, windows block)
+    /// real time (arrivals waited for)
     Wall,
 }
 
@@ -67,6 +81,12 @@ pub struct ServeConfig {
     pub seed: u64,
     /// hard safety cap on scheduling iterations (0 = none)
     pub max_iterations: u64,
+    /// wall mode: longest idle sleep (ms) before re-checking for work, so
+    /// requests streamed in via [`Coordinator::push_request`] (e.g. the
+    /// HTTP frontend) and pool completions are picked up promptly instead
+    /// of waiting out the full gap to the next known arrival.  Ignored in
+    /// virtual mode (the simulated clock jumps exactly).
+    pub idle_tick_ms: f64,
 }
 
 impl Default for ServeConfig {
@@ -80,6 +100,7 @@ impl Default for ServeConfig {
             clock: ClockMode::Virtual,
             seed: 1,
             max_iterations: 0,
+            idle_tick_ms: 10.0,
         }
     }
 }
@@ -101,8 +122,8 @@ pub struct StepOutcome {
     pub done: bool,
 }
 
-/// A window in flight on a worker (virtual mode: outcome applies at
-/// `done_at` on the simulated timeline).
+/// A window in flight on an inline worker (virtual mode: outcome applies
+/// at `done_at` on the simulated timeline).
 struct PendingWindow {
     done_at: f64,
     outcome: WindowOutcome,
@@ -110,7 +131,37 @@ struct PendingWindow {
 }
 
 struct WorkerSlot {
+    /// virtual mode: executed outcome waiting for its completion time
     pending: Option<PendingWindow>,
+    /// pooled wall mode: a window is running on the worker's thread
+    in_flight: bool,
+}
+
+/// Where the engines live: borrowed and driven inline on the calling
+/// thread, or owned by a [`WorkerPool`] with one OS thread per engine.
+enum Backend<'a> {
+    Inline(&'a mut [Box<dyn Engine>]),
+    Pool(WorkerPool),
+}
+
+impl<'a> Backend<'a> {
+    fn max_batch(&self, worker: usize) -> usize {
+        match self {
+            Backend::Inline(engines) => engines[worker].max_batch(),
+            Backend::Pool(pool) => pool.max_batch(worker),
+        }
+    }
+
+    /// Drop a finished sequence's engine state (best-effort for a pooled
+    /// worker whose thread died — the run is already failing then).
+    fn remove(&mut self, worker: usize, seq_id: u64) {
+        match self {
+            Backend::Inline(engines) => engines[worker].remove(seq_id),
+            Backend::Pool(pool) => {
+                let _ = pool.send(worker, WorkerCmd::Remove(seq_id));
+            }
+        }
+    }
 }
 
 /// Builder for [`Coordinator`]: a [`ServeConfig`] plus observers and an
@@ -187,20 +238,55 @@ impl CoordinatorBuilder {
     }
 
     /// Load `trace` into a job table and wire up the serving state.
-    /// `engines[i]` is worker i's backend; `scheduler` owns the policy and
-    /// the length predictor.
+    /// `engines[i]` is worker i's backend, driven inline on the calling
+    /// thread; `scheduler` owns the policy and the length predictor.  An
+    /// empty trace is allowed: the coordinator starts [`done`] and waits
+    /// for [`Coordinator::push_request`].
+    ///
+    /// [`done`]: Coordinator::is_done
     pub fn build<'a>(self, trace: &[TraceRequest],
                      engines: &'a mut [Box<dyn Engine>],
                      scheduler: &'a mut Scheduler)
                      -> Result<Coordinator<'a>> {
-        let CoordinatorBuilder { cfg, sinks, shaper } = self;
-        if engines.len() != cfg.workers {
-            bail!("expected {} engines, got {}", cfg.workers, engines.len());
+        if engines.len() != self.cfg.workers {
+            bail!("expected {} engines, got {}", self.cfg.workers,
+                  engines.len());
         }
-        if trace.is_empty() {
-            bail!("empty trace");
+        // preemption frequency control (§3.4) is enforced inside the
+        // engines: each may evict at most this many sequences per window
+        for e in engines.iter_mut() {
+            e.set_preemption_cap(self.cfg.preemption.max_per_iteration);
         }
+        self.finish(trace, Backend::Inline(engines), scheduler)
+    }
 
+    /// Like [`build`](Self::build), but the engines are owned by a
+    /// threaded [`WorkerPool`] (one OS thread per engine): dispatch sends
+    /// each formed batch over the worker's channel and
+    /// [`Coordinator::poll_completions`] drains the shared completion
+    /// channel, so windows overlap across workers.  Wall-clock only —
+    /// virtual mode needs synchronous windows for its deterministic
+    /// timeline (and gains nothing from threads).
+    pub fn build_pooled<'a>(self, trace: &[TraceRequest], pool: WorkerPool,
+                            scheduler: &'a mut Scheduler)
+                            -> Result<Coordinator<'a>> {
+        if self.cfg.clock != ClockMode::Wall {
+            bail!("a pooled backend requires ClockMode::Wall \
+                   (virtual mode executes windows inline)");
+        }
+        if pool.workers() != self.cfg.workers {
+            bail!("expected {} pool workers, got {}", self.cfg.workers,
+                  pool.workers());
+        }
+        pool.broadcast(|| {
+            WorkerCmd::SetPreemptionCap(self.cfg.preemption.max_per_iteration)
+        })?;
+        self.finish(trace, Backend::Pool(pool), scheduler)
+    }
+
+    fn finish<'a>(self, trace: &[TraceRequest], backend: Backend<'a>,
+                  scheduler: &'a mut Scheduler) -> Result<Coordinator<'a>> {
+        let CoordinatorBuilder { cfg, sinks, shaper } = self;
         let mut table = JobTable::with_capacity(trace.len());
         let mut arrivals: Vec<(f64, JobId)> = Vec::with_capacity(trace.len());
         for r in trace {
@@ -215,22 +301,16 @@ impl CoordinatorBuilder {
         // stable: equal arrival times keep trace order
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
-        // preemption frequency control (§3.4) is enforced inside the
-        // engines: each may evict at most this many sequences per window
-        for e in engines.iter_mut() {
-            e.set_preemption_cap(cfg.preemption.max_per_iteration);
-        }
-
         let workers_n = cfg.workers;
         Ok(Coordinator {
-            engines,
+            backend,
             scheduler,
             table,
             arrivals,
             next_arrival: 0,
             queued: vec![Vec::new(); workers_n],
             workers: (0..workers_n)
-                .map(|_| WorkerSlot { pending: None })
+                .map(|_| WorkerSlot { pending: None, in_flight: false })
                 .collect(),
             state: GlobalState::new(workers_n),
             lb: LoadBalancer::new(cfg.lb, cfg.seed),
@@ -250,10 +330,11 @@ impl CoordinatorBuilder {
 }
 
 /// The serving frontend: owns jobs, queues, balancer, buffer, and batcher;
-/// borrows the engines and scheduler for the lifetime of the run.
+/// drives an inline (borrowed) or pooled (owned, threaded) engine backend
+/// for the lifetime of the run.
 pub struct Coordinator<'a> {
     cfg: ServeConfig,
-    engines: &'a mut [Box<dyn Engine>],
+    backend: Backend<'a>,
     scheduler: &'a mut Scheduler,
     table: JobTable,
     /// (arrival_ms, id), sorted by arrival time
@@ -286,6 +367,19 @@ impl<'a> Coordinator<'a> {
     /// Current coordinator time (virtual or wall ms).
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// The time to stamp externally-arriving work with
+    /// ([`push_request`](Self::push_request)).  Wall mode reads the live
+    /// wall clock — [`now`](Self::now) only advances inside `step()`, so
+    /// it goes stale while a serving loop idles between steps — and a
+    /// stale stamp would inflate the job's JCT/TTFT and mislead
+    /// deadline policies.  Virtual mode returns the simulated now.
+    pub fn admission_now_ms(&self) -> f64 {
+        match self.cfg.clock {
+            ClockMode::Wall => self.wall_ms(),
+            ClockMode::Virtual => self.now,
+        }
     }
 
     pub fn total_jobs(&self) -> usize {
@@ -380,10 +474,73 @@ impl<'a> Coordinator<'a> {
         id
     }
 
-    /// Apply every pending window outcome due at `now` (virtual mode; wall
-    /// mode applies outcomes inline in [`dispatch`](Self::dispatch)).
-    /// Returns the number of windows applied.
-    pub fn poll_completions(&mut self, now: f64) -> usize {
+    /// Apply every finished window due at `now`: virtual-mode outcomes
+    /// whose simulated completion time has passed, plus (for a pooled
+    /// backend) everything waiting on the worker threads' completion
+    /// channel.  Inline wall mode applies outcomes directly in
+    /// [`dispatch`](Self::dispatch).  Returns the number of windows
+    /// applied; errs if a pooled worker reported an admit/window failure
+    /// (its batch is returned to the queue first — no job is lost).
+    pub fn poll_completions(&mut self, now: f64) -> Result<usize> {
+        let mut applied = 0;
+
+        // pooled backend: drain the shared completion channel
+        let mut threaded: Vec<WindowDone> = Vec::new();
+        if let Backend::Pool(pool) = &mut self.backend {
+            while let Some(done) = pool.try_recv_done() {
+                threaded.push(done);
+            }
+        }
+        // apply every drained reply before surfacing any error — an early
+        // return would discard another worker's already-consumed Ok reply
+        // and strand that worker in_flight forever
+        let mut first_err: Option<anyhow::Error> = None;
+        for done in threaded {
+            self.workers[done.worker].in_flight = false;
+            match done.outcome {
+                Ok(outcome) => {
+                    self.apply_outcome(now, outcome, &done.batch, done.worker);
+                    applied += 1;
+                }
+                Err(err) => {
+                    // as in the inline error paths: restore the batch so
+                    // the coordinator stays consistent for callers that
+                    // outlive the error.  The window's *fresh* admits may
+                    // have partially landed on the engine — wipe exactly
+                    // those (Remove is idempotent) and drop their
+                    // engine_admitted flag so a retry re-admits cleanly.
+                    for &id in &done.batch {
+                        self.table[id].state = JobState::Queued;
+                        self.queued[done.worker].push(id);
+                    }
+                    for &raw in &done.fresh {
+                        let id = JobId::from_raw(raw);
+                        if let Some(j) = self.table.get_mut(id) {
+                            j.engine_admitted = false;
+                        }
+                        self.backend.remove(done.worker, raw);
+                    }
+                    first_err.get_or_insert(err);
+                }
+            }
+        }
+        if let Some(err) = first_err {
+            return Err(err);
+        }
+
+        // a worker thread that died (engine panic) can never answer its
+        // in-flight window; the drain above has already consumed every
+        // reply it managed to send, so fail fast instead of idling forever
+        if let Backend::Pool(pool) = &self.backend {
+            for w in 0..self.workers.len() {
+                if self.workers[w].in_flight && !pool.worker_alive(w) {
+                    bail!("worker thread {w} died with a window in flight \
+                           (engine panic?)");
+                }
+            }
+        }
+
+        // virtual mode: outcomes whose simulated completion time passed
         let mut due: Vec<(usize, PendingWindow)> = Vec::new();
         for w in 0..self.workers.len() {
             if matches!(&self.workers[w].pending, Some(p) if p.done_at <= now)
@@ -397,21 +554,26 @@ impl<'a> Coordinator<'a> {
         due.sort_by(|a, b| {
             a.1.done_at.total_cmp(&b.1.done_at).then(a.0.cmp(&b.0))
         });
-        let applied = due.len();
+        applied += due.len();
         for (w, p) in due {
             self.apply_outcome(p.done_at, p.outcome, &p.batch, w);
         }
-        applied
+        Ok(applied)
     }
 
     /// Run one scheduling iteration on every idle worker with queued jobs
     /// (Algorithm 1 lines 6–20): refresh priorities, rebuild the node's
     /// priority queue, set the preemption-victim order, form the batch,
-    /// and execute one window.  Returns the number of windows dispatched.
+    /// and execute one window — inline on this thread, or by handing the
+    /// batch to the worker's pool thread.  Returns the number of windows
+    /// dispatched.
     pub fn dispatch(&mut self, now: f64) -> Result<usize> {
         let mut dispatched = 0;
         for w in 0..self.cfg.workers {
-            if self.workers[w].pending.is_some() || self.queued[w].is_empty() {
+            if self.workers[w].pending.is_some()
+                || self.workers[w].in_flight
+                || self.queued[w].is_empty()
+            {
                 continue;
             }
             self.iterations += 1;
@@ -460,14 +622,17 @@ impl<'a> Coordinator<'a> {
                 .iter()
                 .map(|id| id.raw())
                 .collect();
-            self.engines[w].set_priority_order(&victims);
+            if let Backend::Inline(engines) = &mut self.backend {
+                engines[w].set_priority_order(&victims);
+            } // pooled: the order ships inside the RunWindow command
 
             // form the batch from the highest-priority prefix
-            let take = self.cfg.max_batch.min(self.engines[w].max_batch());
+            let take = self.cfg.max_batch.min(self.backend.max_batch(w));
             let batch: Vec<JobId> =
                 full_order.iter().take(take).map(|e| e.id).collect();
 
             // admit + (modelled) prompt transfer
+            let mut admits: Vec<SeqSpec> = Vec::new();
             for &id in &batch {
                 let prompt_tokens = self.table[id].prompt.len();
                 if !self.table[id].engine_admitted {
@@ -480,12 +645,21 @@ impl<'a> Coordinator<'a> {
                             topic: j.topic,
                         }
                     };
-                    if let Err(err) = self.engines[w].admit(spec) {
-                        // restore the drained pool so the coordinator stays
-                        // consistent for callers that outlive the error
-                        self.queued[w]
-                            .extend(full_order.iter().map(|e| e.id));
-                        return Err(err);
+                    match &mut self.backend {
+                        Backend::Inline(engines) => {
+                            if let Err(err) = engines[w].admit(spec) {
+                                // restore the drained pool so the
+                                // coordinator stays consistent for callers
+                                // that outlive the error
+                                self.queued[w]
+                                    .extend(full_order.iter().map(|e| e.id));
+                                return Err(err);
+                            }
+                        }
+                        // pooled: admits run on the worker thread as part
+                        // of the RunWindow command; an error comes back
+                        // through poll_completions
+                        Backend::Pool(_) => admits.push(spec),
                     }
                     self.table[id].engine_admitted = true;
                 }
@@ -498,33 +672,62 @@ impl<'a> Coordinator<'a> {
 
             // execute one scheduling window
             let raw_batch: Vec<u64> = batch.iter().map(|id| id.raw()).collect();
-            let outcome = match self.engines[w].run_window(&raw_batch) {
-                Ok(o) => o,
-                Err(err) => {
-                    // as above: no job may be lost on an engine error
+            if matches!(self.backend, Backend::Pool(_)) {
+                // hand the window to the worker's thread; the outcome comes
+                // back through poll_completions
+                let sent = match &mut self.backend {
+                    Backend::Pool(pool) => pool.send(w, WorkerCmd::RunWindow {
+                        admits: std::mem::take(&mut admits),
+                        priority_order: victims,
+                        batch: raw_batch,
+                        echo: batch.clone(),
+                    }),
+                    Backend::Inline(_) => unreachable!(),
+                };
+                if let Err(err) = sent {
                     self.queued[w].extend(full_order.iter().map(|e| e.id));
                     return Err(err);
                 }
-            };
-
-            // the sorted remainder becomes the node's new pool (the
-            // monolith instead re-scanned the old queue with
-            // `batch_ids.contains` per element)
-            self.queued[w].extend(full_order.iter().skip(take).map(|e| e.id));
-            for &id in &batch {
-                self.table[id].state = JobState::Running;
-            }
-
-            match self.cfg.clock {
-                ClockMode::Virtual => {
-                    let done_at = now + outcome.service_ms
-                        + self.cfg.overhead_ms_per_iter;
-                    self.workers[w].pending =
-                        Some(PendingWindow { done_at, outcome, batch });
+                self.queued[w]
+                    .extend(full_order.iter().skip(take).map(|e| e.id));
+                for &id in &batch {
+                    self.table[id].state = JobState::Running;
                 }
-                ClockMode::Wall => {
-                    let t_done = self.wall_ms();
-                    self.apply_outcome(t_done, outcome, &batch, w);
+                self.workers[w].in_flight = true;
+            } else {
+                let run = match &mut self.backend {
+                    Backend::Inline(engines) => engines[w].run_window(&raw_batch),
+                    Backend::Pool(_) => unreachable!(),
+                };
+                let outcome = match run {
+                    Ok(o) => o,
+                    Err(err) => {
+                        // as above: no job may be lost on an engine error
+                        self.queued[w].extend(full_order.iter().map(|e| e.id));
+                        return Err(err);
+                    }
+                };
+
+                // the sorted remainder becomes the node's new pool (the
+                // monolith instead re-scanned the old queue with
+                // `batch_ids.contains` per element)
+                self.queued[w]
+                    .extend(full_order.iter().skip(take).map(|e| e.id));
+                for &id in &batch {
+                    self.table[id].state = JobState::Running;
+                }
+
+                match self.cfg.clock {
+                    ClockMode::Virtual => {
+                        let done_at = now + outcome.service_ms
+                            + self.cfg.overhead_ms_per_iter;
+                        self.workers[w].pending =
+                            Some(PendingWindow { done_at, outcome, batch });
+                    }
+                    ClockMode::Wall => {
+                        let t_done = self.wall_ms();
+                        self.apply_outcome(t_done, outcome, &batch, w);
+                    }
                 }
             }
             dispatched += 1;
@@ -551,7 +754,7 @@ impl<'a> Coordinator<'a> {
         }
         let now = self.now;
         let admitted = self.ingest(now);
-        let completed = self.poll_completions(now);
+        let completed = self.poll_completions(now)?;
         let dispatched = self.dispatch(now)?;
         let mut idled = false;
         if !self.is_done() && dispatched == 0 {
@@ -622,15 +825,34 @@ impl<'a> Coordinator<'a> {
         }
         for out in &outcome.outputs {
             let id = JobId::from_raw(out.id);
-            let j = &mut self.table[id];
-            j.windows += 1;
-            j.service_ms += outcome.service_ms;
-            if !out.new_tokens.is_empty() && j.first_token_ms.is_none() {
-                j.first_token_ms = Some(t_done);
+            {
+                let j = &mut self.table[id];
+                j.windows += 1;
+                j.service_ms += outcome.service_ms;
+                if !out.new_tokens.is_empty() && j.first_token_ms.is_none() {
+                    j.first_token_ms = Some(t_done);
+                }
+                j.generated += out.new_tokens.len();
+                j.response.extend_from_slice(&out.new_tokens);
             }
-            j.generated += out.new_tokens.len();
-            j.response.extend_from_slice(&out.new_tokens);
+            if !out.new_tokens.is_empty() {
+                // live progress: per-job, per-window token production,
+                // fired before a final window's finish event
+                let j = &self.table[id];
+                let meta = JobMeta {
+                    id,
+                    tenant: j.tenant.as_deref(),
+                    arrival_ms: j.arrival_ms,
+                    prompt_len: j.prompt.len(),
+                    total_len: j.total_len,
+                };
+                for s in self.sinks.iter_mut() {
+                    s.on_job_progress(&meta, node, out.new_tokens.len(),
+                                      t_done);
+                }
+            }
             if out.done {
+                let j = &mut self.table[id];
                 j.state = JobState::Finished;
                 j.finish_ms = Some(t_done);
                 let (prompt_len, total_len) = (j.prompt.len(), j.total_len);
@@ -639,7 +861,7 @@ impl<'a> Coordinator<'a> {
                 self.scheduler.observe_completion(prompt_len, total_len);
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
-                self.engines[node].remove(out.id);
+                self.backend.remove(node, out.id);
                 let j = &self.table[id];
                 let meta = JobMeta {
                     id,
@@ -659,7 +881,7 @@ impl<'a> Coordinator<'a> {
                     s.on_job_finished(&meta, node, &stats, t_done);
                 }
             } else {
-                j.state = JobState::Queued;
+                self.table[id].state = JobState::Queued;
                 self.queued[node].push(id);
             }
         }
@@ -679,8 +901,8 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Nothing could run: jump the virtual clock to the next event, or
-    /// sleep until it in wall mode.  Errors on deadlock (unfinished jobs
-    /// but no future event).
+    /// sleep (at most one idle tick) in wall mode.  Errors on deadlock
+    /// (unfinished jobs but no future event and nothing in flight).
     fn advance_clock(&mut self) -> Result<()> {
         let next_completion = self
             .workers
@@ -702,16 +924,25 @@ impl<'a> Coordinator<'a> {
                 self.now = next_t.max(self.now);
             }
             ClockMode::Wall => {
-                if next_t.is_finite() {
-                    let wait_ms = next_t - self.wall_ms();
-                    if wait_ms > 0.0 {
-                        std::thread::sleep(std::time::Duration::from_secs_f64(
-                            wait_ms / 1e3,
-                        ));
-                    }
-                } else {
+                let in_flight = self.workers.iter().any(|s| s.in_flight);
+                if !next_t.is_finite() && !in_flight {
                     bail!("deadlock: no pending work but {} jobs unfinished",
                           self.table.len() - self.finished);
+                }
+                // cap the idle sleep at one tick so streamed admissions
+                // (push_request / HTTP frontend) and pool completions are
+                // picked up promptly instead of waiting out the full gap
+                // to the next known arrival
+                let tick = self.cfg.idle_tick_ms.max(0.1);
+                let wait_ms = if next_t.is_finite() {
+                    (next_t - self.wall_ms()).min(tick)
+                } else {
+                    tick
+                };
+                if wait_ms > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        wait_ms / 1e3,
+                    ));
                 }
             }
         }

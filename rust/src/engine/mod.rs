@@ -80,10 +80,22 @@ pub struct WindowOutcome {
 
 /// The backend execution engine interface (one instance per worker).
 ///
-/// Deliberately *not* `Send`: PJRT handles are thread-affine, so each
-/// worker thread constructs its own engine (mirroring the paper's
-/// one-vLLM-per-pod deployment) instead of moving engines across threads.
-pub trait Engine {
+/// `Send` is required so the cluster runtime
+/// ([`cluster::pool`](crate::cluster::pool)) can move each engine onto its
+/// own worker-pool OS thread, mirroring the paper's one-vLLM-per-pod
+/// deployment.  The usage pattern is strictly thread-confined: an engine
+/// is moved to exactly one thread at spawn and every subsequent call
+/// happens on that thread, so even handle types that must not be *shared*
+/// across threads are safe here — they only need to survive the one-time
+/// move.
+///
+/// Caveat for swapping `vendor/xla` for the real bindings: if those
+/// handle types are `!Send`, either construct the engine *inside* its
+/// worker thread (the shape the planned per-pod network split takes
+/// anyway) or wrap the handles with a justification that matches the
+/// thread-confined usage above — do not weaken this bound, the cluster
+/// runtime depends on it.
+pub trait Engine: Send {
     /// Largest decode batch the engine will accept per window.
     fn max_batch(&self) -> usize;
 

@@ -5,8 +5,10 @@
 //!
 //! * **L3 (this crate)** — the paper's contribution: the ISRTF frontend
 //!   scheduler ([`coordinator`]), response-length predictors
-//!   ([`predictor`]), load balancing, batching, preemption policy, and a
-//!   multi-worker serving loop in virtual or wall clock.
+//!   ([`predictor`]), load balancing, batching, preemption policy, a
+//!   multi-worker serving loop in virtual or wall clock, and the
+//!   [`cluster`] runtime (threaded worker pool + HTTP frontend) that
+//!   serves it as the networked system of paper §5.
 //! * **L2 (python/compile, build-time)** — the served TinyGPT model and the
 //!   BGE-substitute predictor, AOT-lowered to HLO text by `aot.py`.
 //! * **L1 (Pallas)** — the attention kernels inside those HLOs
@@ -14,6 +16,7 @@
 //!
 //! Python never runs on the request path: [`runtime`] loads the AOT
 //! artifacts via PJRT and [`engine`]/[`predictor`] execute them from rust.
+pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod k8s;

@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   info             inspect artifacts and loaded models
-//!   serve            serve a generated trace on the REAL PJRT engine (wall clock)
+//!   serve            wall-clock serving (PJRT or sim engines); with
+//!                    --listen, run as a network service: worker-pool
+//!                    threads + HTTP frontend (/healthz /metrics /v1/generate)
 //!   simulate         run a scheduling experiment on the calibrated sim engine
 //!   trace-fit        reproduce the Fig 4 inter-arrival analysis
 //!   preempt-profile  reproduce the Table 6 preemption profiling
@@ -15,11 +17,12 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use elis::cluster::{ApiBridge, Gateway, HttpServer, WorkerPool};
 use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
-    Scheduler, ServeConfig,
+    PriorityShaper, Scheduler, ServeConfig,
 };
-use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink};
+use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink, WfqPolicy};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::pjrt_engine::PjrtEngine;
@@ -62,15 +65,24 @@ elis — ELIS serving system (ISRTF scheduler + response length predictor)
 USAGE: elis <subcommand> [--flags]
 
   info              artifact + model summary
-  serve             real PJRT serving (wall clock): --n --rps --scheduler
-                    --workers --predictor(hlo|heuristic|oracle)
-                    --lb(minload|rr|random) --tenants --slo-ms
+  serve             wall-clock serving: --n --rps --scheduler --workers
+                    --engine(pjrt|sim) --predictor(hlo|heuristic|oracle)
+                    --lb(minload|rr|random) --tenants --slo-ms --wfq
+                    --listen addr:port   run as a network service: engines
+                    move onto worker-pool threads (windows overlap across
+                    workers) and an HTTP frontend serves GET /healthz,
+                    GET /metrics (Prometheus), POST /v1/generate
+                    (streaming admission).  With --listen: --http-threads
+                    --wait-timeout-s --idle-exit-ms (0 = serve forever)
+                    --idle-tick-ms
   simulate          calibrated simulation: --model --scheduler --rps-mult
                     --batch --workers --n --shuffles --predictor --lb
                     --tenants name[=weight],... (weighted round-robin tags)
                     --slo-ms N (default JCT budget; enables the SLO-aware
                     priority policy + live telemetry; prints a Prometheus
                     snapshot and per-tenant deadline misses)
+                    --wfq (weighted-fair tenant shaper over the live
+                    per-tenant token counters; composes with --slo-ms)
   trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
   preempt-profile   Table 6 reproduction: --model(all|abbrev)
   gen-trace         standalone request generator: --n --rps --out file
@@ -96,34 +108,59 @@ fn parse_tenant_spec(items: &[String]) -> Result<Vec<(String, u32)>> {
         .collect()
 }
 
-/// Shared `--tenants`/`--slo-ms` wiring: tag the trace, and when tenants
-/// or an SLO budget are configured return the telemetry sink plus the
+/// Shared `--tenants`/`--slo-ms`/`--wfq` wiring: tag the trace with the
+/// (already parsed) tenant spec, and when tenants, an SLO budget, or the
+/// fairness shaper are configured return the telemetry sink plus the
 /// budget (ms; 0 = observe only, no SLO policy).
 fn telemetry_for(args: &Args, workers: usize,
-                 trace: &mut [elis::workload::TraceRequest])
+                 trace: &mut [elis::workload::TraceRequest],
+                 tenant_spec: &[(String, u32)])
                  -> Result<Option<(TelemetrySink, f64)>> {
-    let spec = parse_tenant_spec(&args.list("tenants"))?;
-    if !spec.is_empty() {
-        elis::workload::assign_tenants(trace, &spec);
+    if !tenant_spec.is_empty() {
+        elis::workload::assign_tenants(trace, tenant_spec);
     }
     let slo_ms = args.f64("slo-ms", 0.0);
-    if slo_ms <= 0.0 && spec.is_empty() {
+    if slo_ms <= 0.0 && tenant_spec.is_empty() && !args.bool("wfq") {
         return Ok(None);
     }
     let sink = TelemetrySink::with_slo(workers, SloSpec::new(slo_ms));
     Ok(Some((sink, slo_ms)))
 }
 
-/// Register the telemetry sink (and, when a budget is set, the SLO
-/// policy) on a builder — shared by `serve` and `simulate`.
+/// Register the telemetry sink and the configured priority shapers on a
+/// builder — shared by `serve` and `simulate`.  `--slo-ms` enables the
+/// deadline-driven [`SloPolicy`]; `wfq` adds the weighted-fair tenant
+/// shaper on top (fairness penalty over the SLO/base order), with the
+/// `--tenants name=weight` values doubling as the tenants' fair-share
+/// weights.
 fn register_telemetry(mut builder: CoordinatorBuilder,
-                      telemetry: &Option<(TelemetrySink, f64)>)
+                      telemetry: &Option<(TelemetrySink, f64)>, wfq: bool,
+                      tenant_spec: &[(String, u32)])
                       -> CoordinatorBuilder {
     if let Some((sink, slo_ms)) = telemetry {
         builder = builder.sink(Box::new(sink.clone()));
-        if *slo_ms > 0.0 {
-            builder = builder.priority_shaper(Box::new(SloPolicy::new(
-                sink, SloSpec::new(*slo_ms))));
+        let slo: Option<Box<dyn PriorityShaper>> = (*slo_ms > 0.0).then(|| {
+            Box::new(SloPolicy::new(sink, SloSpec::new(*slo_ms)))
+                as Box<dyn PriorityShaper>
+        });
+        let shaper: Option<Box<dyn PriorityShaper>> = if wfq {
+            let mut policy = WfqPolicy::new(sink);
+            // --tenants weights drive both the round-robin tagging ratio
+            // and, here, each tenant's fair-share entitlement
+            for (name, weight) in tenant_spec {
+                if *weight > 0 {
+                    policy = policy.weight(name, *weight as f64);
+                }
+            }
+            if let Some(inner) = slo {
+                policy = policy.over(inner);
+            }
+            Some(Box::new(policy))
+        } else {
+            slo
+        };
+        if let Some(shaper) = shaper {
+            builder = builder.priority_shaper(shaper);
         }
     }
     builder
@@ -197,7 +234,6 @@ fn cmd_info(_args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = default_artifacts_dir();
     let manifest = Manifest::load(&dir)?;
-    let store = WeightStore::load(&manifest)?;
     let corpus = Corpus::load(&dir)?;
 
     let n = args.usize("n", 12);
@@ -205,29 +241,68 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize("workers", 1);
     let policy = args.parse_with("scheduler", "isrtf", Policy::parse)?;
     let lb = args.parse_with("lb", "minload", LbStrategy::parse)?;
-    let predictor_kind = args.str("predictor", "hlo");
+    let engine_kind = args.str("engine", "pjrt");
+    let predictor_kind = args.str(
+        "predictor",
+        if engine_kind == "sim" { "heuristic" } else { "hlo" },
+    );
     let seed = args.u64("seed", 42);
+    let listen = args.opt_str("listen").map(str::to_string);
 
     let mut trace = match args.opt_str("trace") {
         Some(path) => elis::workload::trace_io::load(std::path::Path::new(path))?,
         None => RequestGenerator::fabrix(rps, seed).trace(&corpus, n),
     };
     let n = trace.len();
-    let telemetry = telemetry_for(args, workers, &mut trace)?;
+    let tenant_spec = parse_tenant_spec(&args.list("tenants"))?;
+    let mut telemetry = telemetry_for(args, workers, &mut trace,
+                                      &tenant_spec)?;
+    if listen.is_some() && telemetry.is_none() {
+        // the HTTP frontend always exposes /metrics
+        telemetry = Some((TelemetrySink::new(workers), 0.0));
+    }
     println!("serving {n} requests at {rps} rps over {workers} worker(s), \
               policy {}", policy.name());
 
-    let rt = Runtime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let mut engines: Vec<Box<dyn Engine>> = Vec::new();
-    for _ in 0..workers {
-        engines.push(Box::new(PjrtEngine::load(
-            rt.clone(), &manifest, &store, 1 << 20)?));
-    }
+    // weights are needed for PJRT engines and/or the hlo predictor
+    let store = if engine_kind == "pjrt" || predictor_kind == "hlo" {
+        Some(WeightStore::load(&manifest)?)
+    } else {
+        None
+    };
+    let mut engines: Vec<Box<dyn Engine>> = match engine_kind.as_str() {
+        "pjrt" => {
+            let store = store.as_ref().expect("loaded above for pjrt");
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            (0..workers)
+                .map(|_| {
+                    PjrtEngine::load(rt.clone(), &manifest, store, 1 << 20)
+                        .map(|e| Box::new(e) as Box<dyn Engine>)
+                })
+                .collect::<Result<_>>()?
+        }
+        "sim" => {
+            let profiles = ModelProfile::all(&manifest.served_models);
+            let model = args.str("model", "lam13");
+            let profile = ModelProfile::find(&profiles, &model)
+                .ok_or_else(|| anyhow!("unknown model {model}"))?
+                .clone();
+            let batch = args.usize("batch", 4);
+            (0..workers)
+                .map(|_| {
+                    Box::new(SimEngine::with_profile_budget(
+                        profile.clone(), manifest.window_size, batch))
+                        as Box<dyn Engine>
+                })
+                .collect()
+        }
+        other => bail!("unknown --engine '{other}' (valid: pjrt, sim)"),
+    };
     println!("engine: {}", engines[0].describe());
 
     let mut sched = scheduler_for(policy, &predictor_kind,
-                                  Some((&manifest, &store)))?;
+                                  store.as_ref().map(|s| (&manifest, s)))?;
     let cfg = ServeConfig {
         workers,
         max_batch: args.usize("batch", 4),
@@ -236,12 +311,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
         overhead_ms_per_iter: 0.0,
         clock: ClockMode::Wall,
         seed,
-        max_iterations: 1_000_000,
+        // a network service runs unbounded windows by design; the safety
+        // cap stays on for one-shot trace serving
+        max_iterations: args.u64(
+            "max-iterations",
+            if listen.is_some() { 0 } else { 1_000_000 },
+        ),
+        idle_tick_ms: args.f64("idle-tick-ms", 10.0),
     };
-    let report = register_telemetry(CoordinatorBuilder::from_config(cfg),
-                                    &telemetry)
-        .build(&trace, &mut engines, &mut sched)?
-        .run_to_completion()?;
+    let builder = register_telemetry(CoordinatorBuilder::from_config(cfg),
+                                     &telemetry, args.bool("wfq"),
+                                     &tenant_spec);
+
+    let report = match listen {
+        None => builder
+            .build(&trace, &mut engines, &mut sched)?
+            .run_to_completion()?,
+        Some(addr) => {
+            serve_http(args, &addr, engines, builder, &trace, &mut sched,
+                       &telemetry)?
+        }
+    };
     report.print_summary();
     println!("avg TTFT {:.2}s  TPOT {:.1}ms  tokens/s {:.1}",
              report.avg_ttft_s(), report.avg_tpot_s() * 1e3,
@@ -254,6 +344,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("report written to {path}");
     }
     Ok(())
+}
+
+/// `elis serve --listen <addr>`: the cluster runtime.  Engines move onto
+/// [`WorkerPool`] threads, the HTTP frontend exposes
+/// `/healthz` + `/metrics` + `/v1/generate`, and this loop drives the
+/// coordinator, pumping HTTP admissions between steps.  Exits once the
+/// run is idle for `--idle-exit-ms` (0 = serve until killed).
+fn serve_http(args: &Args, addr: &str, engines: Vec<Box<dyn Engine>>,
+              builder: CoordinatorBuilder,
+              trace: &[elis::workload::TraceRequest],
+              sched: &mut Scheduler,
+              telemetry: &Option<(TelemetrySink, f64)>)
+              -> Result<elis::metrics::ServeReport> {
+    let pool = WorkerPool::new(engines);
+    let (api_tx, mut bridge) = ApiBridge::channel();
+    let mut coord = builder
+        .sink(Box::new(bridge.completion_sink()))
+        .build_pooled(trace, pool, sched)?;
+    let gateway = Gateway {
+        telemetry: telemetry.as_ref().map(|(sink, _)| sink.clone()),
+        api_tx,
+        wait_timeout: std::time::Duration::from_secs(
+            args.u64("wait-timeout-s", 30)),
+    };
+    let mut server = HttpServer::serve(addr, gateway,
+                                       args.usize("http-threads", 4))?;
+    println!("listening on http://{}  \
+              (GET /healthz | GET /metrics | POST /v1/generate)",
+             server.local_addr());
+
+    let idle_exit_ms = args.f64("idle-exit-ms", 0.0);
+    // the drained-idle poll honours the same latency bound as the
+    // coordinator's own wall-clock tick (--idle-tick-ms)
+    let tick = std::time::Duration::from_secs_f64(
+        args.f64("idle-tick-ms", 10.0).max(0.1) / 1e3);
+    let mut last_activity = std::time::Instant::now();
+    loop {
+        let pumped = bridge.pump(&mut coord);
+        let finished_before = coord.finished_jobs();
+        if coord.is_done() {
+            std::thread::sleep(tick); // fully drained: wait for HTTP work
+        } else {
+            coord.step()?;
+        }
+        if pumped > 0 || coord.finished_jobs() != finished_before {
+            last_activity = std::time::Instant::now();
+        }
+        if idle_exit_ms > 0.0
+            && coord.is_done()
+            && last_activity.elapsed().as_secs_f64() * 1e3 >= idle_exit_ms
+        {
+            break;
+        }
+    }
+    server.shutdown();
+    Ok(coord.report())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
@@ -285,11 +431,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     );
 
     let store = WeightStore::load(&manifest)?;
+    let tenant_spec = parse_tenant_spec(&args.list("tenants"))?;
     let mut jcts = Vec::new();
     for s in 0..shuffles {
         let mut gen = RequestGenerator::fabrix(rps, seed + s as u64);
         let mut trace = gen.trace(&corpus, n);
-        let telemetry = telemetry_for(args, workers, &mut trace)?;
+        let telemetry = telemetry_for(args, workers, &mut trace,
+                                      &tenant_spec)?;
         let mut engines: Vec<Box<dyn Engine>> = (0..workers)
             .map(|_| {
                 Box::new(SimEngine::with_profile_budget(
@@ -309,7 +457,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             ..Default::default()
         };
         let report = register_telemetry(CoordinatorBuilder::from_config(cfg),
-                                        &telemetry)
+                                        &telemetry, args.bool("wfq"),
+                                        &tenant_spec)
             .build(&trace, &mut engines, &mut sched)?
             .run_to_completion()?;
         report.print_summary();

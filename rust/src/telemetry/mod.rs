@@ -17,11 +17,20 @@
 //!   work earliest-deadline-first against per-tenant SLO budgets, boosting
 //!   tenants whose *live* p99 (read from the shared sink) is over budget
 //!   and shedding hopelessly-late jobs behind in-budget work.
+//! * [`wfq`] — [`WfqPolicy`], a weighted-fair
+//!   [`PriorityShaper`](crate::coordinator::PriorityShaper) balancing
+//!   per-tenant *token throughput* from the sink's live counters;
+//!   composes over [`SloPolicy`] via [`WfqPolicy::over`].
+//!
+//! The sink is thread-safe, so the HTTP frontend
+//! ([`cluster::http`](crate::cluster::http)) serves `GET /metrics`
+//! straight off a clone while the run is live.
 //!
 //! ```text
-//! coordinator events ──> TelemetrySink ──> Prometheus snapshot
+//! coordinator events ──> TelemetrySink ──> Prometheus snapshot (/metrics)
 //!                              │
-//!                              └──(live sketches)──> SloPolicy ──> dispatch
+//!                              ├──(live sketches)──> SloPolicy ──> dispatch
+//!                              └──(token counters)─> WfqPolicy ──> dispatch
 //! ```
 //!
 //! [`EventSink`]: crate::coordinator::EventSink
@@ -30,9 +39,11 @@ pub mod export;
 pub mod sink;
 pub mod sketch;
 pub mod slo;
+pub mod wfq;
 
 pub use export::render;
 pub use sink::{NodeStats, SloSpec, TelemetrySink, TelemetryState,
                TenantStats, DEFAULT_TENANT};
 pub use sketch::{P2Quantile, QuantileSketch, WindowedRate};
 pub use slo::SloPolicy;
+pub use wfq::WfqPolicy;

@@ -9,10 +9,15 @@
 //! an [`SloPolicy`](super::slo::SloPolicy) that shapes priorities from the
 //! live sketches.  The sink only observes: registering it leaves the
 //! serving schedule (and hence every report) bit-identical.
+//!
+//! The handle is thread-safe (`Arc<Mutex>`), so clones can serve
+//! `GET /metrics` from the HTTP frontend's handler threads
+//! ([`cluster::http`](crate::cluster::http)) while the serving loop keeps
+//! appending events.  Every lock section is a handful of counter/sketch
+//! updates — well off any hot path.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
 use crate::coordinator::job::JobId;
@@ -84,6 +89,8 @@ pub struct TenantStats {
     pub active: u64,
     pub admitted: u64,
     pub finished: u64,
+    /// response tokens, accrued live per window (`on_job_progress`) so
+    /// in-flight long jobs count toward throughput immediately
     pub tokens: u64,
     /// finished jobs whose JCT exceeded the tenant's SLO budget
     pub deadline_misses: u64,
@@ -146,37 +153,40 @@ impl TelemetryState {
     }
 }
 
-/// Clonable handle + [`EventSink`] over shared [`TelemetryState`].
+/// Clonable, thread-safe handle + [`EventSink`] over shared
+/// [`TelemetryState`].
 #[derive(Debug, Clone)]
 pub struct TelemetrySink {
-    state: Rc<RefCell<TelemetryState>>,
+    state: Arc<Mutex<TelemetryState>>,
 }
 
 impl TelemetrySink {
     pub fn new(nodes: usize) -> TelemetrySink {
-        TelemetrySink { state: Rc::new(RefCell::new(TelemetryState::new(nodes, None))) }
+        TelemetrySink { state: Arc::new(Mutex::new(TelemetryState::new(nodes, None))) }
     }
 
     /// A sink that also tracks deadline misses against `slo`.
     pub fn with_slo(nodes: usize, slo: SloSpec) -> TelemetrySink {
         TelemetrySink {
-            state: Rc::new(RefCell::new(TelemetryState::new(nodes, Some(slo)))),
+            state: Arc::new(Mutex::new(TelemetryState::new(nodes, Some(slo)))),
         }
     }
 
     /// Read access to the live state (snapshot between `step()`s).
     pub fn with_state<R>(&self, f: impl FnOnce(&TelemetryState) -> R) -> R {
-        f(&self.state.borrow())
+        f(&self.state.lock().unwrap())
     }
 
     /// Render a Prometheus text-exposition snapshot of the current state.
+    /// Safe to call from any thread (the `/metrics` handlers do).
     pub fn render_prometheus(&self) -> String {
-        super::export::render(&mut self.state.borrow_mut())
+        super::export::render(&mut self.state.lock().unwrap())
     }
 
     pub fn deadline_misses(&self, tenant: &str) -> u64 {
         self.state
-            .borrow()
+            .lock()
+            .unwrap()
             .tenants
             .get(tenant)
             .map(|t| t.deadline_misses)
@@ -184,13 +194,13 @@ impl TelemetrySink {
     }
 
     pub fn total_deadline_misses(&self) -> u64 {
-        self.state.borrow().total_deadline_misses()
+        self.state.lock().unwrap().total_deadline_misses()
     }
 
     /// Live p99 JCT for a tenant, once at least `min_samples` of its jobs
     /// have finished (the SLO policy's feedback signal).
     pub fn tenant_p99_jct_ms(&self, tenant: &str, min_samples: u64) -> Option<f64> {
-        let st = self.state.borrow();
+        let st = self.state.lock().unwrap();
         let t = st.tenants.get(tenant)?;
         if t.jct_ms.count() < min_samples {
             return None;
@@ -201,7 +211,7 @@ impl TelemetrySink {
 
 impl EventSink for TelemetrySink {
     fn on_job_admitted(&mut self, job: &JobMeta<'_>, node: usize, now_ms: f64) {
-        let mut st = self.state.borrow_mut();
+        let mut st = self.state.lock().unwrap();
         st.last_event_ms = st.last_event_ms.max(now_ms);
         let n = st.node_mut(node);
         n.admitted += 1;
@@ -212,14 +222,14 @@ impl EventSink for TelemetrySink {
     }
 
     fn on_batch_formed(&mut self, node: usize, _jobs: &[JobId], now_ms: f64) {
-        let mut st = self.state.borrow_mut();
+        let mut st = self.state.lock().unwrap();
         st.last_event_ms = st.last_event_ms.max(now_ms);
         st.node_mut(node).batches += 1;
     }
 
     fn on_window_done(&mut self, node: usize, _batch: &[JobId], tokens: usize,
                       service_ms: f64, now_ms: f64) {
-        let mut st = self.state.borrow_mut();
+        let mut st = self.state.lock().unwrap();
         st.last_event_ms = st.last_event_ms.max(now_ms);
         let n = st.node_mut(node);
         n.windows += 1;
@@ -228,9 +238,16 @@ impl EventSink for TelemetrySink {
         n.token_rate.add(now_ms, tokens as f64);
     }
 
+    fn on_job_progress(&mut self, job: &JobMeta<'_>, _node: usize,
+                       new_tokens: usize, now_ms: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.last_event_ms = st.last_event_ms.max(now_ms);
+        st.tenant_mut(job.tenant).tokens += new_tokens as u64;
+    }
+
     fn on_job_finished(&mut self, job: &JobMeta<'_>, node: usize,
                        stats: &FinishStats, now_ms: f64) {
-        let mut st = self.state.borrow_mut();
+        let mut st = self.state.lock().unwrap();
         st.last_event_ms = st.last_event_ms.max(now_ms);
         let n = st.node_mut(node);
         n.finished += 1;
@@ -242,7 +259,6 @@ impl EventSink for TelemetrySink {
         let t = st.tenant_mut(job.tenant);
         t.finished += 1;
         t.active = t.active.saturating_sub(1);
-        t.tokens += stats.tokens as u64;
         t.jct_ms.add(stats.jct_ms);
         if let Some(ttft) = stats.ttft_ms {
             t.ttft_ms.add(ttft);
@@ -256,7 +272,7 @@ impl EventSink for TelemetrySink {
     }
 
     fn on_job_preempted(&mut self, _job: JobId, node: usize, now_ms: f64) {
-        let mut st = self.state.borrow_mut();
+        let mut st = self.state.lock().unwrap();
         st.last_event_ms = st.last_event_ms.max(now_ms);
         st.node_mut(node).preempted += 1;
     }
@@ -294,6 +310,7 @@ mod tests {
         handle.on_job_admitted(&meta(1, Some("free"), 1.0), 1, 1.0);
         handle.on_job_admitted(&meta(2, None, 2.0), 0, 2.0);
         handle.on_batch_formed(0, &[JobId::new(0)], 3.0);
+        handle.on_job_progress(&meta(0, Some("paid"), 0.0), 0, 50, 803.0);
         handle.on_window_done(0, &[JobId::new(0)], 50, 800.0, 803.0);
         handle.on_job_finished(&meta(0, Some("paid"), 0.0), 0,
                                &finish(803.0, 50), 803.0);

@@ -1,0 +1,337 @@
+//! Weighted-fair tenant scheduling driven by live telemetry.
+//!
+//! [`WfqPolicy`] implements
+//! [`PriorityShaper`](crate::coordinator::scheduler::PriorityShaper) and
+//! balances *token throughput* across tenants, WFQ/DRF-style: each
+//! tenant's served tokens (read live from the shared [`TelemetrySink`]'s
+//! per-tenant accounting) are normalized by its weight into a virtual
+//! service time, and jobs of tenants running **ahead** of the
+//! least-served backlogged tenant are penalized proportionally to their
+//! lead.  A starved tenant therefore wins ties immediately, without any
+//! deadline configuration — this complements the deadline-driven
+//! [`SloPolicy`](super::slo::SloPolicy), and composes with it (or any
+//! other shaper) via [`WfqPolicy::over`]: the inner shaper runs first and
+//! the fairness penalty is added on top.
+//!
+//! Within a tenant the base scheduler's order (ISRTF, FCFS, …) is
+//! untouched: every job of a tenant gets the same penalty at a given
+//! dispatch round.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::job::Job;
+use crate::coordinator::scheduler::PriorityShaper;
+
+use super::sink::{TelemetrySink, DEFAULT_TENANT};
+
+pub struct WfqPolicy {
+    telemetry: TelemetrySink,
+    weights: BTreeMap<String, f64>,
+    default_weight: f64,
+    /// priority penalty per weighted token of service lead.  Base
+    /// priorities are policy-scale (arrival ms for FCFS, remaining tokens
+    /// for ISRTF), so the default 1e6 makes fairness dominate across
+    /// tenants while the base order still breaks ties within one.
+    pub strength: f64,
+    inner: Option<Box<dyn PriorityShaper>>,
+    /// per-dispatch-round memo: the lead is identical for every job of a
+    /// tenant at one `now_ms`, so compute it once per tenant per round
+    memo: (f64, BTreeMap<String, f64>),
+}
+
+impl WfqPolicy {
+    /// `telemetry` must be (a clone of) the sink registered on the same
+    /// coordinator, so the policy sees the run's own live token counters.
+    pub fn new(telemetry: &TelemetrySink) -> WfqPolicy {
+        WfqPolicy {
+            telemetry: telemetry.clone(),
+            weights: BTreeMap::new(),
+            default_weight: 1.0,
+            strength: 1e6,
+            inner: None,
+            memo: (f64::NEG_INFINITY, BTreeMap::new()),
+        }
+    }
+
+    /// Builder-style: give `tenant` a share weight (default 1; higher =
+    /// entitled to proportionally more token throughput).
+    pub fn weight(mut self, tenant: &str, weight: f64) -> WfqPolicy {
+        assert!(weight > 0.0, "tenant weight must be positive");
+        self.weights.insert(tenant.to_string(), weight);
+        self
+    }
+
+    /// Builder-style: weight applied to tenants without an explicit one.
+    pub fn default_weight(mut self, weight: f64) -> WfqPolicy {
+        assert!(weight > 0.0, "default weight must be positive");
+        self.default_weight = weight;
+        self
+    }
+
+    /// Builder-style: penalty per weighted token of lead.
+    pub fn strength(mut self, strength: f64) -> WfqPolicy {
+        self.strength = strength;
+        self
+    }
+
+    /// Builder-style: compose over another shaper (e.g. [`SloPolicy`]):
+    /// `inner` shapes the base priority first, then the fairness penalty
+    /// is added.
+    ///
+    /// [`SloPolicy`]: super::slo::SloPolicy
+    pub fn over(mut self, inner: Box<dyn PriorityShaper>) -> WfqPolicy {
+        self.inner = Some(inner);
+        self
+    }
+
+    fn weight_for(&self, tenant: &str) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(self.default_weight)
+    }
+
+    /// Weighted-service lead of `tenant` over the least-served tenant
+    /// that still has work queued (≥ 0; 0 = at or behind the fair share).
+    fn lead(&mut self, tenant: &str, now_ms: f64) -> f64 {
+        if self.memo.0 != now_ms {
+            self.rebuild_memo(now_ms);
+        }
+        self.memo.1.get(tenant).copied().unwrap_or(0.0)
+    }
+
+    fn rebuild_memo(&mut self, now_ms: f64) {
+        // (tenant, served tokens, has backlog) — snapshot under one lock
+        let served: Vec<(String, u64, bool)> = self.telemetry.with_state(|st| {
+            st.tenants
+                .iter()
+                .map(|(name, t)| (name.clone(), t.tokens, t.active > 0))
+                .collect()
+        });
+        // virtual service time per tenant: tokens / weight
+        let virt: Vec<(String, f64, bool)> = served
+            .into_iter()
+            .map(|(name, tokens, backlog)| {
+                let v = tokens as f64 / self.weight_for(&name);
+                (name, v, backlog)
+            })
+            .collect();
+        // reference point: the least-served tenant *with backlog* — an
+        // idle tenant must not hold the whole system back forever
+        let floor = virt
+            .iter()
+            .filter(|(_, _, backlog)| *backlog)
+            .map(|(_, v, _)| *v)
+            .fold(f64::INFINITY, f64::min);
+        let floor = if floor.is_finite() { floor } else { 0.0 };
+        self.memo.0 = now_ms;
+        self.memo.1 =
+            virt.into_iter().map(|(name, v, _)| (name, (v - floor).max(0.0))).collect();
+    }
+}
+
+impl PriorityShaper for WfqPolicy {
+    fn shape(&mut self, job: &Job, base_priority: f64, now_ms: f64) -> f64 {
+        let base = match self.inner.as_mut() {
+            Some(inner) => inner.shape(job, base_priority, now_ms),
+            None => base_priority,
+        };
+        let tenant = job.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+        base + self.strength * self.lead(tenant, now_ms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sink::SloSpec;
+    use super::super::slo::SloPolicy;
+    use super::*;
+    // via super::*: WfqPolicy, TelemetrySink, PriorityShaper, Job
+    use crate::coordinator::{
+        CoordinatorBuilder, JobId, Policy, Scheduler, ServeConfig,
+    };
+    use crate::engine::profiles::ModelProfile;
+    use crate::engine::sim_engine::SimEngine;
+    use crate::engine::Engine;
+    use crate::metrics::ServeReport;
+    use crate::predictor::oracle::OraclePredictor;
+    use crate::runtime::manifest::ServedModelMeta;
+    use crate::workload::TraceRequest;
+
+    fn profile() -> ModelProfile {
+        ModelProfile::from_meta(&ServedModelMeta {
+            name: "test".into(),
+            abbrev: "test".into(),
+            params_b: 7.0,
+            avg_latency_ms: 2000.0,
+            kv_bytes_per_token: 1 << 20,
+            preempt_batch: 0,
+            mem_limit_frac: 0.9,
+        })
+    }
+
+    /// Skewed two-tenant trace: tenant "heavy" floods first, "light"
+    /// arrives just behind it, so a plain FCFS base starves "light" of
+    /// token throughput until the heavy backlog drains.
+    fn skewed_trace() -> Vec<TraceRequest> {
+        let mut trace = Vec::new();
+        for i in 0..8u64 {
+            trace.push(TraceRequest {
+                id: i,
+                arrival_ms: i as f64,
+                prompt: vec![7; 16],
+                total_len: 200,
+                topic: 0,
+                tenant: Some("heavy".into()),
+            });
+        }
+        for i in 0..8u64 {
+            trace.push(TraceRequest {
+                id: 100 + i,
+                arrival_ms: 10.0 + i as f64,
+                prompt: vec![7; 16],
+                total_len: 40,
+                topic: 0,
+                tenant: Some("light".into()),
+            });
+        }
+        trace
+    }
+
+    fn run(shape: impl FnOnce(&TelemetrySink) -> Option<Box<dyn PriorityShaper>>)
+           -> (ServeReport, TelemetrySink) {
+        let trace = skewed_trace();
+        let telemetry = TelemetrySink::new(1);
+        let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        let mut engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SimEngine::new(profile(), 50, 4, 8 << 30))];
+        let cfg = ServeConfig { max_iterations: 1_000_000, ..Default::default() };
+        let mut builder = CoordinatorBuilder::from_config(cfg)
+            .sink(Box::new(telemetry.clone()));
+        if let Some(shaper) = shape(&telemetry) {
+            builder = builder.priority_shaper(shaper);
+        }
+        let report = builder
+            .build(&trace, &mut engines, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        (report, telemetry)
+    }
+
+    fn mean_jct_ms(r: &ServeReport, tenant: &str) -> f64 {
+        let xs: Vec<f64> = r
+            .records
+            .iter()
+            .filter(|rec| rec.tenant.as_deref() == Some(tenant))
+            .map(|rec| rec.jct_ms)
+            .collect();
+        assert!(!xs.is_empty());
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    #[test]
+    fn wfq_rebalances_token_throughput_on_a_skewed_trace() {
+        let (fcfs, _) = run(|_| None);
+        let (wfq, _) =
+            run(|sink| Some(Box::new(WfqPolicy::new(sink))));
+        assert_eq!(fcfs.n(), 16);
+        assert_eq!(wfq.n(), 16, "fairness must not lose jobs");
+
+        // FCFS serves the heavy flood first; WFQ interleaves, so the
+        // starved tenant's completion times must improve decisively
+        let light_fcfs = mean_jct_ms(&fcfs, "light");
+        let light_wfq = mean_jct_ms(&wfq, "light");
+        assert!(light_wfq < light_fcfs * 0.8,
+                "light tenant must gain: {light_wfq} vs {light_fcfs}");
+
+        // total work is conserved either way
+        let tokens = |r: &ServeReport| -> usize {
+            r.records.iter().map(|rec| rec.tokens).sum()
+        };
+        assert_eq!(tokens(&fcfs), tokens(&wfq));
+    }
+
+    #[test]
+    fn weights_tilt_the_balance_back() {
+        // same trace, but "heavy" is entitled to 8x the throughput — its
+        // fairness penalty shrinks, so it finishes earlier than under
+        // equal weights
+        let (equal, _) = run(|sink| Some(Box::new(WfqPolicy::new(sink))));
+        let (tilted, _) = run(|sink| {
+            Some(Box::new(WfqPolicy::new(sink).weight("heavy", 8.0)))
+        });
+        assert_eq!(tilted.n(), 16);
+        let heavy_equal = mean_jct_ms(&equal, "heavy");
+        let heavy_tilted = mean_jct_ms(&tilted, "heavy");
+        assert!(heavy_tilted < heavy_equal,
+                "weighted tenant must regain throughput: \
+                 {heavy_tilted} vs {heavy_equal}");
+    }
+
+    #[test]
+    fn composes_over_slo_policy() {
+        // WFQ over an SLO shaper must run end-to-end and keep every job
+        let spec = SloSpec::new(120_000.0);
+        let (report, telemetry) = run(|sink| {
+            Some(Box::new(
+                WfqPolicy::new(sink)
+                    .over(Box::new(SloPolicy::new(sink, spec.clone()))),
+            ))
+        });
+        assert_eq!(report.n(), 16);
+        telemetry.with_state(|st| {
+            let finished: u64 = st.tenants.values().map(|t| t.finished).sum();
+            assert_eq!(finished, 16);
+        });
+    }
+
+    #[test]
+    fn idle_tenants_do_not_pin_the_floor() {
+        // a tenant that finished all its work must not keep every other
+        // tenant penalized: lead is measured against backlogged tenants
+        let sink = TelemetrySink::new(1);
+        let mut policy = WfqPolicy::new(&sink).strength(1.0);
+        // fake state: tenant "done" served 1000 tokens, no active jobs;
+        // tenant "busy" served 500, has backlog
+        {
+            use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+            let mut h = sink.clone();
+            for (i, (tenant, tokens, leave_active)) in
+                [("done", 1000usize, false), ("busy", 500, true)]
+                    .into_iter()
+                    .enumerate()
+            {
+                let meta = JobMeta {
+                    id: JobId::new(i),
+                    tenant: Some(tenant),
+                    arrival_ms: 0.0,
+                    prompt_len: 4,
+                    total_len: tokens,
+                };
+                h.on_job_admitted(&meta, 0, 0.0);
+                if leave_active {
+                    // extra admitted job that never finishes -> backlog
+                    let extra = JobMeta { id: JobId::new(10 + i), ..meta };
+                    h.on_job_admitted(&extra, 0, 0.0);
+                }
+                // tokens accrue live, via the progress event
+                h.on_job_progress(&meta, 0, tokens, 100.0);
+                h.on_job_finished(&meta, 0, &FinishStats {
+                    jct_ms: 100.0,
+                    ttft_ms: Some(10.0),
+                    queue_delay_ms: 0.0,
+                    service_ms: 100.0,
+                    tokens,
+                }, 100.0);
+            }
+        }
+        let mut busy_job = Job::new(JobId::new(50), vec![1], 10, 0, 0.0);
+        busy_job.tenant = Some("busy".into());
+        let mut done_job = Job::new(JobId::new(51), vec![1], 10, 0, 0.0);
+        done_job.tenant = Some("done".into());
+        // floor = busy's 500 (the only backlogged tenant): busy has no
+        // penalty, done carries its 500-token lead
+        let p_busy = policy.shape(&busy_job, 0.0, 1.0);
+        let p_done = policy.shape(&done_job, 0.0, 1.0);
+        assert_eq!(p_busy, 0.0);
+        assert!((p_done - 500.0).abs() < 1e-9, "{p_done}");
+    }
+}

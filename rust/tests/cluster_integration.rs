@@ -1,0 +1,398 @@
+//! Integration tests for the cluster runtime (PR 3): threaded worker
+//! pool, std-only HTTP frontend, and the virtual-clock determinism
+//! guarantee the pool refactor must preserve.  No artifacts required.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use elis::cluster::{ApiBridge, Gateway, HttpServer, WorkerPool};
+use elis::coordinator::{
+    run_serving, ClockMode, CoordinatorBuilder, Policy, Scheduler,
+    ServeConfig,
+};
+use elis::engine::profiles::ModelProfile;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::{Engine, SeqSpec, SeqWindowOut, WindowOutcome};
+use elis::predictor::oracle::OraclePredictor;
+use elis::runtime::manifest::ServedModelMeta;
+use elis::telemetry::TelemetrySink;
+use elis::workload::{Corpus, RequestGenerator, TraceRequest};
+
+fn profile() -> ModelProfile {
+    ModelProfile::from_meta(&ServedModelMeta {
+        name: "test".into(),
+        abbrev: "test".into(),
+        params_b: 7.0,
+        avg_latency_ms: 2000.0,
+        kv_bytes_per_token: 1 << 20,
+        preempt_batch: 0,
+        mem_limit_frac: 0.9,
+    })
+}
+
+fn sim_engines(n: usize) -> Vec<Box<dyn Engine>> {
+    (0..n)
+        .map(|_| {
+            Box::new(SimEngine::new(profile(), 50, 4, 8 << 30))
+                as Box<dyn Engine>
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// virtual-clock determinism: the pool refactor must not perturb simulation
+// ---------------------------------------------------------------------------
+
+/// The threaded-runtime refactor (engine backend enum, Result-returning
+/// poll_completions, idle-tick config) must leave virtual-clock reports
+/// bit-identical: same trace + seed twice, and with wildly different
+/// `idle_tick_ms` (which only wall mode reads).
+#[test]
+fn virtual_reports_are_bit_identical_across_pool_refactor_knobs() {
+    let corpus = Corpus::synthetic(300, 87);
+    let mut gen = RequestGenerator::fabrix(3.0, 87);
+    let trace = gen.trace(&corpus, 50);
+
+    let run = |idle_tick_ms: f64| {
+        let mut sched =
+            Scheduler::new(Policy::Isrtf, Box::new(OraclePredictor));
+        let mut engines = sim_engines(2);
+        let cfg = ServeConfig {
+            workers: 2,
+            max_iterations: 5_000_000,
+            seed: 87,
+            idle_tick_ms,
+            ..Default::default()
+        };
+        run_serving(&cfg, &trace, &mut engines, &mut sched).unwrap()
+    };
+
+    let a = run(10.0);
+    let b = run(10.0);
+    let c = run(1000.0);
+    assert_eq!(a.records, b.records, "same-knob reruns must be identical");
+    assert_eq!(a.records, c.records,
+               "idle_tick_ms must not affect the virtual timeline");
+    assert_eq!(a.makespan_ms, c.makespan_ms);
+    assert_eq!(a.sched_iterations, c.sched_iterations);
+    assert_eq!(a.total_preemptions, c.total_preemptions);
+}
+
+// ---------------------------------------------------------------------------
+// worker-pool overlap: threaded wall-clock must beat sequential wall-clock
+// ---------------------------------------------------------------------------
+
+/// Deterministic-duration engine: every window burns real wall time, so
+/// makespans measure whether windows overlap across workers.
+struct SleepEngine {
+    window_ms: u64,
+    window: usize,
+    max_batch: usize,
+    seqs: BTreeMap<u64, (usize, usize)>, // id -> (target, generated)
+}
+
+impl SleepEngine {
+    fn new(window_ms: u64) -> SleepEngine {
+        SleepEngine { window_ms, window: 50, max_batch: 1,
+                      seqs: BTreeMap::new() }
+    }
+}
+
+impl Engine for SleepEngine {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn admit(&mut self, seq: SeqSpec) -> Result<()> {
+        self.seqs.insert(seq.id, (seq.target_total.max(1), 0));
+        Ok(())
+    }
+
+    fn run_window(&mut self, seq_ids: &[u64]) -> Result<WindowOutcome> {
+        std::thread::sleep(Duration::from_millis(self.window_ms));
+        let mut outputs = Vec::new();
+        for &id in seq_ids {
+            let (target, generated) =
+                *self.seqs.get(&id).expect("unknown seq");
+            let take = (target - generated).min(self.window);
+            let generated = generated + take;
+            self.seqs.insert(id, (target, generated));
+            outputs.push(SeqWindowOut {
+                id,
+                new_tokens: vec![1; take],
+                done: generated >= target,
+            });
+        }
+        Ok(WindowOutcome {
+            outputs,
+            service_ms: self.window_ms as f64,
+            preempted: Vec::new(),
+        })
+    }
+
+    fn set_priority_order(&mut self, _order: &[u64]) {}
+
+    fn remove(&mut self, seq_id: u64) {
+        self.seqs.remove(&seq_id);
+    }
+
+    fn evict(&mut self, _seq_id: u64) {}
+
+    fn generated(&self, seq_id: u64) -> usize {
+        self.seqs.get(&seq_id).map(|s| s.1).unwrap_or(0)
+    }
+
+    fn is_resident(&self, seq_id: u64) -> bool {
+        self.seqs.contains_key(&seq_id)
+    }
+
+    fn kv_utilization(&self) -> f64 {
+        0.0
+    }
+
+    fn describe(&self) -> String {
+        format!("SleepEngine[{} ms/window]", self.window_ms)
+    }
+}
+
+fn burst_trace(n: u64) -> Vec<TraceRequest> {
+    (0..n)
+        .map(|i| TraceRequest {
+            id: i,
+            arrival_ms: 0.0,
+            prompt: vec![5; 8],
+            total_len: 50, // exactly one 50-token window per job
+            topic: 0,
+            tenant: None,
+        })
+        .collect()
+}
+
+/// Acceptance: a 4-worker wall-clock run over a bursty trace overlaps
+/// windows across threads — its makespan lands strictly (and decisively)
+/// below the sequential single-thread makespan on the same trace.
+#[test]
+fn pooled_wall_clock_overlaps_windows_across_workers() {
+    const WINDOW_MS: u64 = 40;
+    const JOBS: u64 = 16;
+    let trace = burst_trace(JOBS);
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 1, // one job per window: 16 windows of 40 ms each
+        clock: ClockMode::Wall,
+        max_iterations: 100_000,
+        ..Default::default()
+    };
+
+    // baseline: the pre-pool path — every window executes inline, so the
+    // 4 "workers" still run sequentially on this one thread
+    let sequential = {
+        let mut engines: Vec<Box<dyn Engine>> = (0..4)
+            .map(|_| Box::new(SleepEngine::new(WINDOW_MS)) as Box<dyn Engine>)
+            .collect();
+        let mut sched =
+            Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        run_serving(&cfg, &trace, &mut engines, &mut sched).unwrap()
+    };
+
+    // threaded: same trace, same engines, one OS thread per engine
+    let pooled = {
+        let engines: Vec<Box<dyn Engine>> = (0..4)
+            .map(|_| Box::new(SleepEngine::new(WINDOW_MS)) as Box<dyn Engine>)
+            .collect();
+        let mut sched =
+            Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        CoordinatorBuilder::from_config(cfg.clone())
+            .build_pooled(&trace, WorkerPool::new(engines), &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap()
+    };
+
+    assert_eq!(sequential.n(), JOBS as usize);
+    assert_eq!(pooled.n(), JOBS as usize);
+    let floor = (JOBS * WINDOW_MS) as f64;
+    assert!(sequential.makespan_ms >= floor * 0.95,
+            "sequential baseline must pay every window inline: {} < {}",
+            sequential.makespan_ms, floor);
+    assert!(pooled.makespan_ms < sequential.makespan_ms,
+            "pooled {} must beat sequential {}",
+            pooled.makespan_ms, sequential.makespan_ms);
+    // 4 workers overlap ~4x; even with channel + idle-tick overhead the
+    // makespan must land well under the sequential floor
+    assert!(pooled.makespan_ms < sequential.makespan_ms * 0.6,
+            "windows did not overlap: pooled {} vs sequential {}",
+            pooled.makespan_ms, sequential.makespan_ms);
+}
+
+/// The pooled backend is wall-clock only; virtual mode must refuse it
+/// loudly instead of silently degrading determinism.
+#[test]
+fn pooled_backend_rejects_virtual_clock() {
+    let trace = burst_trace(2);
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let engines: Vec<Box<dyn Engine>> =
+        vec![Box::new(SleepEngine::new(1)) as Box<dyn Engine>];
+    let err = CoordinatorBuilder::new()
+        .clock(ClockMode::Virtual)
+        .build_pooled(&trace, WorkerPool::new(engines), &mut sched)
+        .err()
+        .expect("virtual + pool must be rejected");
+    assert!(err.to_string().contains("Wall"), "{err:#}");
+}
+
+// ---------------------------------------------------------------------------
+// HTTP frontend end-to-end: POST work in, scrape /metrics, all jobs finish
+// ---------------------------------------------------------------------------
+
+/// One raw HTTP/1.1 round trip over a fresh TcpStream.
+fn http(addr: SocketAddr, request_line: &str, body: &str) -> String {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    write!(stream,
+           "{request_line} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\
+            Connection: close\r\n\r\n{body}", body.len())
+        .expect("write request");
+    let mut out = String::new();
+    stream.read_to_string(&mut out).expect("read response");
+    out
+}
+
+#[test]
+fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
+    // 2 pooled sim workers; 2 seed jobs, the rest arrives over HTTP
+    let trace = {
+        let corpus = Corpus::synthetic(50, 7);
+        let mut gen = RequestGenerator::fabrix(1000.0, 7);
+        gen.trace(&corpus, 2)
+    };
+    let telemetry = TelemetrySink::new(2);
+    let (api_tx, mut bridge) = ApiBridge::channel();
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        workers: 2,
+        clock: ClockMode::Wall,
+        max_iterations: 1_000_000,
+        ..Default::default()
+    };
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(telemetry.clone()))
+        .sink(Box::new(bridge.completion_sink()))
+        .build_pooled(&trace, WorkerPool::new(sim_engines(2)), &mut sched)
+        .unwrap();
+
+    let gateway = Gateway {
+        telemetry: Some(telemetry.clone()),
+        api_tx,
+        wait_timeout: Duration::from_secs(25),
+    };
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 3).unwrap();
+    let addr = server.local_addr();
+
+    // the client lives on its own thread — handlers + serving loop must
+    // cooperate for every call to return
+    let client = std::thread::spawn(move || {
+        let mut responses = Vec::new();
+        responses.push(("healthz", http(addr, "GET /healthz", "")));
+        for _ in 0..3 {
+            responses.push((
+                "generate",
+                http(addr, "POST /v1/generate",
+                     r#"{"total_len": 30, "tenant": "api"}"#),
+            ));
+        }
+        responses.push((
+            "generate-wait",
+            http(addr, "POST /v1/generate",
+                 r#"{"total_len": 20, "tenant": "api", "wait": true}"#),
+        ));
+        responses.push(("metrics", http(addr, "GET /metrics", "")));
+        responses.push(("missing", http(addr, "GET /nope", "")));
+        responses.push(("bad-json", http(addr, "POST /v1/generate", "{oops")));
+        responses
+    });
+
+    // drive the serving loop until the client finished and every admitted
+    // job (seed + HTTP) completed
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        bridge.pump(&mut coord);
+        if coord.is_done() {
+            if client.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        } else {
+            coord.step().unwrap();
+        }
+        assert!(Instant::now() < deadline, "serving loop did not converge");
+    }
+    let responses = client.join().expect("client thread");
+    server.shutdown();
+
+    // 2 seed + 3 async + 1 wait jobs, all finished
+    assert_eq!(coord.total_jobs(), 6);
+    assert_eq!(coord.finished_jobs(), 6);
+
+    for (label, resp) in &responses {
+        match *label {
+            "healthz" => {
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                assert!(resp.contains("ok"), "{resp}");
+            }
+            "generate" => {
+                assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
+                assert!(resp.contains("\"job_id\""), "{resp}");
+                assert!(resp.contains("\"accepted\""), "{resp}");
+            }
+            "generate-wait" => {
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                assert!(resp.contains("\"finished\""), "{resp}");
+                assert!(resp.contains("\"tokens\":20"), "{resp}");
+            }
+            "metrics" => {
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                assert!(resp.contains("text/plain; version=0.0.4"), "{resp}");
+                assert!(resp.contains("# TYPE elis_node_windows_total counter"),
+                        "{resp}");
+                assert!(resp.contains("elis_tenant_jobs_admitted_total\
+                                       {tenant=\"api\"}"),
+                        "{resp}");
+            }
+            "missing" => assert!(resp.starts_with("HTTP/1.1 404"), "{resp}"),
+            "bad-json" => assert!(resp.starts_with("HTTP/1.1 400"), "{resp}"),
+            other => panic!("unknown label {other}"),
+        }
+    }
+
+    // the sink agrees: 4 HTTP jobs under tenant "api"
+    telemetry.with_state(|st| {
+        assert_eq!(st.tenants["api"].finished, 4);
+        let finished: u64 = st.tenants.values().map(|t| t.finished).sum();
+        assert_eq!(finished, 6);
+    });
+}
+
+/// Graceful shutdown joins every server thread even with no traffic.
+#[test]
+fn http_server_shutdown_is_idempotent_and_quiet() {
+    let (api_tx, _bridge) = ApiBridge::channel();
+    let gateway = Gateway {
+        telemetry: None,
+        api_tx,
+        wait_timeout: Duration::from_secs(1),
+    };
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
+    let addr = server.local_addr();
+    // no telemetry -> /metrics is 503, health still fine
+    assert!(http(addr, "GET /metrics", "").starts_with("HTTP/1.1 503"));
+    assert!(http(addr, "GET /healthz", "").starts_with("HTTP/1.1 200"));
+    server.shutdown();
+    server.shutdown(); // second call is a no-op
+}
