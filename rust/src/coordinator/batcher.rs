@@ -53,6 +53,16 @@ impl Batcher {
         Some(Batch { node, jobs: entries.into_iter().map(|e| e.id).collect() })
     }
 
+    /// Top-k partial selection for the incremental dispatch path: pop the
+    /// next window's batch for `node` into `out` (cleared first), capped by
+    /// both the batcher's limit and the engine's `engine_cap`.  O(k log n)
+    /// against a persistent index — the selected prefix leaves the queue,
+    /// everything else stays put and keeps its key.
+    pub fn select_into(&mut self, buffer: &mut PriorityBuffer, node: usize,
+                       engine_cap: usize, out: &mut Vec<Entry>) {
+        buffer.pop_batch_into(node, self.max_batch.min(engine_cap), out);
+    }
+
     /// Record the prompt transfer for a job; returns true if the prompt
     /// actually needs to be sent (first time on this node).
     pub fn mark_prompt_sent(&mut self, node: usize, job_id: JobId,
@@ -96,6 +106,23 @@ mod tests {
         let ids: Vec<u64> = batch.jobs.iter().map(|j| j.raw()).collect();
         assert_eq!(ids, vec![5, 2, 3]);
         assert_eq!(buf.len(0), 2, "unchosen jobs stay queued");
+    }
+
+    #[test]
+    fn select_into_respects_both_caps_and_leaves_remainder() {
+        let mut buf = PriorityBuffer::new(1);
+        for (id, p) in [(1, 30.0), (2, 10.0), (3, 20.0), (4, 40.0), (5, 5.0)] {
+            push(&mut buf, 0, id, p);
+        }
+        let mut b = Batcher::new(1, 3);
+        let mut out = Vec::new();
+        b.select_into(&mut buf, 0, 2, &mut out); // engine tighter than cfg
+        let ids: Vec<u64> = out.iter().map(|e| e.id.raw()).collect();
+        assert_eq!(ids, vec![5, 2]);
+        assert_eq!(buf.len(0), 3, "unchosen jobs stay indexed");
+        b.select_into(&mut buf, 0, 8, &mut out); // cfg tighter than engine
+        let ids: Vec<u64> = out.iter().map(|e| e.id.raw()).collect();
+        assert_eq!(ids, vec![3, 1, 4]);
     }
 
     #[test]

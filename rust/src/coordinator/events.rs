@@ -42,6 +42,35 @@ pub struct FinishStats {
     pub tokens: usize,
 }
 
+/// One job-scoped event inside a finished scheduling window, in causal
+/// order.  Delivered in bulk via [`EventSink::on_window_applied`] so sinks
+/// that guard shared state (e.g. the telemetry sink's `Arc<Mutex>`) can
+/// take their lock once per window instead of once per job per window.
+#[derive(Debug, Clone, Copy)]
+pub enum WindowJobEvent<'a> {
+    /// the job produced `new_tokens` tokens inside the window
+    Progress { job: JobMeta<'a>, new_tokens: usize },
+    /// the job produced its full response
+    Finished { job: JobMeta<'a>, stats: FinishStats },
+    /// the engine evicted the job's KV during the window
+    Preempted { job: JobId },
+}
+
+/// Everything one finished scheduling window did, delivered as a single
+/// [`EventSink::on_window_applied`] call per sink.
+#[derive(Debug, Clone, Copy)]
+pub struct WindowEvents<'a> {
+    pub node: usize,
+    /// the window's batch (jobs in priority order)
+    pub batch: &'a [JobId],
+    /// per-job events in the exact order the per-event hooks would fire
+    pub events: &'a [WindowJobEvent<'a>],
+    /// tokens produced across the batch
+    pub tokens: usize,
+    pub service_ms: f64,
+    pub now_ms: f64,
+}
+
 /// Receiver for coordinator lifecycle events.  All methods default to
 /// no-ops; implement only what you need.  Times are coordinator time
 /// (virtual ms in [`ClockMode::Virtual`](super::ClockMode), wall ms since
@@ -81,6 +110,32 @@ pub trait EventSink {
 
     /// The engine evicted a job's KV during the last window.
     fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
+
+    /// A scheduling window finished and all of its per-job events are
+    /// known.  The default implementation dispatches each event to the
+    /// matching per-event hook (in causal order) and then fires
+    /// [`on_window_done`](Self::on_window_done), so existing sinks see an
+    /// unchanged stream.  Sinks that pay a per-call synchronization cost
+    /// (lock, channel, syscall) should override this and handle the whole
+    /// window in one critical section — the coordinator calls only this
+    /// method for window-scoped events.
+    fn on_window_applied(&mut self, w: &WindowEvents<'_>) {
+        for ev in w.events {
+            match ev {
+                WindowJobEvent::Progress { job, new_tokens } => {
+                    self.on_job_progress(job, w.node, *new_tokens, w.now_ms)
+                }
+                WindowJobEvent::Finished { job, stats } => {
+                    self.on_job_finished(job, w.node, stats, w.now_ms)
+                }
+                WindowJobEvent::Preempted { job } => {
+                    self.on_job_preempted(*job, w.node, w.now_ms)
+                }
+            }
+        }
+        self.on_window_done(w.node, w.batch, w.tokens, w.service_ms,
+                            w.now_ms);
+    }
 }
 
 /// Counts every event kind — handy for tests, sanity checks, and quick
@@ -196,6 +251,29 @@ mod tests {
         c.on_job_preempted(JobId::new(1), 0, 52.0);
         assert_eq!((c.admitted, c.batches, c.windows, c.finished, c.preempted),
                    (2, 1, 1, 1, 1));
+    }
+
+    #[test]
+    fn window_applied_default_dispatches_to_per_event_hooks() {
+        // a sink that only implements the per-event hooks must see the
+        // same stream whether the coordinator fires them one by one or
+        // hands it the whole window at once
+        let mut c = EventCounter::default();
+        c.on_job_admitted(&meta(0), 0, 0.0);
+        let events = [
+            WindowJobEvent::Preempted { job: JobId::new(1) },
+            WindowJobEvent::Progress { job: meta(0), new_tokens: 20 },
+            WindowJobEvent::Finished { job: meta(0), stats: stats() },
+        ];
+        c.on_window_applied(&WindowEvents {
+            node: 0,
+            batch: &[JobId::new(0)],
+            events: &events,
+            tokens: 20,
+            service_ms: 50.0,
+            now_ms: 52.0,
+        });
+        assert_eq!((c.windows, c.finished, c.preempted), (1, 1, 1));
     }
 
     #[test]

@@ -52,6 +52,13 @@ impl fmt::Display for JobId {
     }
 }
 
+/// Lossless cast to the engine-layer sequence id (see [`JobId::raw`]).
+impl From<JobId> for u64 {
+    fn from(id: JobId) -> u64 {
+        id.raw()
+    }
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
     /// waiting in its node's JobPool

@@ -12,9 +12,12 @@
 //!
 //! Components map 1:1 onto Figure 3 / Algorithm 1 of the paper:
 //! * [`job`] — [`JobId`]-keyed dense [`JobTable`] of request records.
-//! * [`scheduler`] — FCFS / SJF / **ISRTF** / SRPT / MLFQ priority policies.
+//! * [`scheduler`] — FCFS / SJF / **ISRTF** / SRPT / MLFQ priority policies
+//!   (aged per-window keys for the rebuild path, time-invariant folded
+//!   keys for the incremental index).
 //! * [`priority_buffer`] — per-node priority queues with a fully
-//!   deterministic (priority, arrival, id) order.
+//!   deterministic (priority, arrival, id) order; persistent across
+//!   windows in the default incremental dispatch mode.
 //! * [`batcher`] — window batching (prompts sent once).
 //! * [`load_balancer`] — min-load greedy assignment over global state `G`.
 //! * [`preemption`] — frequency control + starvation guard (§3.4).
@@ -36,7 +39,7 @@ pub mod scheduler;
 pub mod serving;
 
 pub use events::{EventCounter, EventSink, FinishStats, JobMeta,
-                 SharedCounter};
+                 SharedCounter, WindowEvents, WindowJobEvent};
 pub use frontend::{peak_rps_search, run_serving};
 pub use job::{Job, JobId, JobState, JobTable};
 pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};

@@ -33,6 +33,14 @@ impl PreemptionPolicy {
         PreemptionPolicy { enabled: false, ..Default::default() }
     }
 
+    /// Can engine-side eviction happen at all under this policy?  The
+    /// per-window budget is checked by the engine *before* it consults its
+    /// victim ranking, so with `max_per_iteration == 0` the ranking is
+    /// dead weight — dispatch skips building it entirely.
+    pub fn can_fire(&self) -> bool {
+        self.max_per_iteration > 0
+    }
+
     /// Order the engine's preemption victims: jobs are given lowest-first
     /// eviction preference, and protected jobs (over their preemption
     /// budget) are moved to the front (= evicted last).
@@ -40,22 +48,32 @@ impl PreemptionPolicy {
     /// `ranked` is (job id, preemption count) in priority order, highest
     /// priority first.  Returns the order to hand the engine.
     pub fn victim_order(&self, ranked: &[(JobId, usize)]) -> Vec<JobId> {
+        let mut out = Vec::with_capacity(ranked.len());
+        self.victim_order_into(ranked, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`victim_order`](Self::victim_order) for
+    /// the dispatch hot loop: writes engine-layer sequence ids into `out`
+    /// (cleared first), reusing its capacity across windows.
+    pub fn victim_order_into<T: From<JobId>>(&self,
+                                             ranked: &[(JobId, usize)],
+                                             out: &mut Vec<T>) {
+        out.clear();
         if !self.enabled {
-            // engine treats an empty order as "no preemption candidates";
-            // protect everything by listing all as highest priority
-            return ranked.iter().map(|(id, _)| *id).collect();
+            // disabled: hand the ranking through unchanged (the engine
+            // only reads it when memory pressure forces an eviction)
+            out.extend(ranked.iter().map(|&(id, _)| id.into()));
+            return;
         }
-        let mut protected: Vec<JobId> = Vec::new();
-        let mut normal: Vec<JobId> = Vec::new();
-        for &(id, count) in ranked {
-            if count >= self.max_preemptions_per_job {
-                protected.push(id);
-            } else {
-                normal.push(id);
-            }
-        }
-        protected.extend(normal);
-        protected
+        // protected jobs (over budget) first = evicted last; two stable
+        // passes replace the old pair of temporary Vecs
+        out.extend(ranked.iter()
+            .filter(|&&(_, c)| c >= self.max_preemptions_per_job)
+            .map(|&(id, _)| id.into()));
+        out.extend(ranked.iter()
+            .filter(|&&(_, c)| c < self.max_preemptions_per_job)
+            .map(|&(id, _)| id.into()));
     }
 }
 
@@ -96,5 +114,32 @@ mod tests {
         let p = PreemptionPolicy::default();
         let order = p.victim_order(&ranked(&[(5, 1), (6, 0)]));
         assert_eq!(raw(order), vec![5, 6]);
+    }
+
+    #[test]
+    fn victim_order_into_matches_victim_order() {
+        for policy in [
+            PreemptionPolicy {
+                enabled: true,
+                max_preemptions_per_job: 1,
+                max_per_iteration: usize::MAX,
+            },
+            PreemptionPolicy::disabled(),
+        ] {
+            let r = ranked(&[(1, 0), (2, 3), (3, 1), (4, 0)]);
+            let mut scratch: Vec<u64> = vec![99; 8]; // stale contents
+            policy.victim_order_into(&r, &mut scratch);
+            assert_eq!(scratch, raw(policy.victim_order(&r)));
+        }
+    }
+
+    #[test]
+    fn can_fire_tracks_per_iteration_budget() {
+        assert!(PreemptionPolicy::default().can_fire());
+        let frozen = PreemptionPolicy {
+            max_per_iteration: 0,
+            ..Default::default()
+        };
+        assert!(!frozen.can_fire());
     }
 }

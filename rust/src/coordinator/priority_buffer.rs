@@ -1,13 +1,27 @@
 //! PriorityBuffer: per-node priority queues (paper §4.1: "multiple priority
 //! queues, where each queue stores jobs assigned to a specific node").
 //!
-//! Rebuilt from the node's job pool each scheduling iteration (Algorithm 1
-//! pops every job, assigns its priority, and pushes it here), then the
-//! coordinator takes the highest-priority prefix as the next batch.
+//! Two usage modes, chosen by the coordinator:
+//!
+//! * **persistent order index** (default, no shaper): entries stay in the
+//!   heap across scheduling iterations.  A job's key is re-computed only
+//!   when its priority input actually changed — it ran a window, was newly
+//!   admitted, or was spilled back by an error path — which is exactly the
+//!   set of jobs passing through the node's pending list, so a window
+//!   costs O(k log n) heap traffic for a batch of k instead of an
+//!   O(n log n) full rebuild.  Requires keys that do not drift with time;
+//!   see `Scheduler::refresh_folded` for how anti-starvation aging is
+//!   folded into a time-invariant key.
+//! * **per-window rebuild** (shaper registered, or forced for reference
+//!   runs): Algorithm 1 as written — every job is re-keyed and pushed each
+//!   iteration, then the queue is drained sorted.
 //!
 //! Ordering is **fully deterministic**: priority, then arrival time, then
 //! job id — all via `f64::total_cmp`, so even NaN priorities (a misbehaving
 //! predictor) produce a stable, insertion-order-independent drain order.
+//! Because the order is total (ids are unique), the heap's pop sequence for
+//! a given *set* of entries is unique — the persistent index and a full
+//! re-sort agree exactly.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -92,23 +106,42 @@ impl PriorityBuffer {
     /// Pop up to `k` highest-priority entries from a node's queue.
     pub fn pop_batch(&mut self, node: usize, k: usize) -> Vec<Entry> {
         let mut out = Vec::with_capacity(k);
+        self.pop_batch_into(node, k, &mut out);
+        out
+    }
+
+    /// Like [`pop_batch`](Self::pop_batch), but into a caller-owned scratch
+    /// vector (cleared first) so the dispatch hot loop reuses one
+    /// allocation across windows.  This is the incremental top-k selection:
+    /// k pops against the persistent heap, O(k log n).
+    pub fn pop_batch_into(&mut self, node: usize, k: usize,
+                          out: &mut Vec<Entry>) {
+        out.clear();
         while out.len() < k {
             match self.queues[node].pop() {
                 Some(e) => out.push(e),
                 None => break,
             }
         }
-        out
     }
 
     /// Drain a node's queue in priority order (used to hand the engine its
     /// preemption-victim ordering).
     pub fn drain_sorted(&mut self, node: usize) -> Vec<Entry> {
         let mut out = Vec::with_capacity(self.queues[node].len());
+        self.drain_sorted_into(node, &mut out);
+        out
+    }
+
+    /// Like [`drain_sorted`](Self::drain_sorted), but into a caller-owned
+    /// scratch vector (cleared first) — the rebuild dispatch path's
+    /// per-window full ordering without a fresh allocation per window.
+    pub fn drain_sorted_into(&mut self, node: usize, out: &mut Vec<Entry>) {
+        out.clear();
+        out.reserve(self.queues[node].len());
         while let Some(e) = self.queues[node].pop() {
             out.push(e);
         }
-        out
     }
 }
 
@@ -205,6 +238,52 @@ mod tests {
             b.pop_batch(0, 4).iter().map(|x| x.id.raw()).collect();
         assert_eq!(batch, vec![0, 1, 2, 3]);
         assert_eq!(b.len(0), 6);
+    }
+
+    #[test]
+    fn into_variants_reuse_scratch_and_match() {
+        let entries = [e(30.0, 0.0, 1), e(10.0, 0.0, 2), e(20.0, 0.0, 3)];
+        let mut a = PriorityBuffer::new(1);
+        let mut b = PriorityBuffer::new(1);
+        for en in entries {
+            a.push(0, en);
+            b.push(0, en);
+        }
+        let mut scratch = vec![e(99.0, 99.0, 99)]; // stale contents
+        a.pop_batch_into(0, 2, &mut scratch);
+        assert_eq!(scratch, b.pop_batch(0, 2));
+        a.drain_sorted_into(0, &mut scratch);
+        assert_eq!(scratch, b.drain_sorted(0));
+        assert!(a.is_empty(0));
+    }
+
+    #[test]
+    fn persistent_pops_match_full_resort() {
+        // the incremental index invariant: popping k, re-inserting with new
+        // keys, and popping again must equal sorting the live set
+        let mut heap = PriorityBuffer::new(1);
+        let mut live: Vec<Entry> = Vec::new();
+        let mut rng = crate::stats::rng::Pcg64::new(7);
+        for i in 0..40u64 {
+            let en = e(rng.f64() * 100.0, rng.f64() * 10.0, i);
+            heap.push(0, en);
+            live.push(en);
+        }
+        for round in 0..10 {
+            let k = 4;
+            let popped = heap.pop_batch(0, k);
+            let mut sorted = live.clone();
+            sorted.sort_by(|a, b| a.cmp(b).reverse()); // Entry: reversed Ord
+            assert_eq!(popped, sorted[..k], "round {round}");
+            live.retain(|en| !popped.contains(en));
+            // "re-key" the popped jobs and return them to the pool
+            for en in popped {
+                let rekeyed = e(rng.f64() * 100.0, en.arrival_ms,
+                                en.id.raw());
+                heap.push(0, rekeyed);
+                live.push(rekeyed);
+            }
+        }
     }
 
     #[test]

@@ -14,8 +14,19 @@
 //! Anti-starvation aging (paper §3.4: "policies that ... prevent
 //! starvation") subtracts `aging_per_s × wait` from the priority of
 //! length-based policies so long-waiting jobs eventually win.
-
-use std::collections::BTreeMap;
+//!
+//! Two key flavours feed the coordinator's two dispatch paths:
+//!
+//! * [`Scheduler::refresh`] — the per-window **aged** priority
+//!   `base − a·(now − arrival)/1000`, recomputed for the whole queue each
+//!   iteration (shaper / full-rebuild path).
+//! * [`Scheduler::refresh_folded`] — the **time-invariant folded** key
+//!   `base + a·arrival/1000`.  Algebraically the aged priority equals the
+//!   folded key minus `a·now/1000`, and that second term is the *same
+//!   uniform shift for every queued job at a given instant*, so ordering
+//!   by folded keys is ordering by aged priorities — without ever touching
+//!   the entries that didn't change.  This is what lets the incremental
+//!   index keep stale-but-correct keys across windows.
 
 use crate::predictor::{LengthPredictor, PredictQuery};
 
@@ -91,13 +102,23 @@ pub struct Scheduler {
     pub aging_per_s: f64,
     /// MLFQ quantum thresholds (windows executed -> level)
     mlfq_levels: usize,
-    /// prediction cache: job id -> (generated count at prediction, base
-    /// priority).  The predictor is deterministic in (prompt, generated),
-    /// so a job that has not produced tokens since the last refresh keeps
-    /// its base priority — this is what keeps the per-iteration scheduling
-    /// overhead at the paper's ~11 ms instead of re-running the encoder for
-    /// the whole queue every window.
-    cache: BTreeMap<JobId, (usize, f64)>,
+    /// prediction cache, dense over [`JobId::index`]: (generated count at
+    /// prediction, base priority).  The predictor is deterministic in
+    /// (prompt, generated), so a job that has not produced tokens since the
+    /// last refresh keeps its base priority — this is what keeps the
+    /// per-iteration scheduling overhead at the paper's ~11 ms instead of
+    /// re-running the encoder for the whole queue every window.  Job ids
+    /// are slab indices, so a flat Vec replaces the former
+    /// `BTreeMap<JobId, _>` walks (one pointer-chasing lookup per queued
+    /// job per window).
+    cache: Vec<Option<(usize, f64)>>,
+    /// scratch (reused across refreshes): positions in the refresh slice
+    /// that need a predictor call this iteration
+    needs: Vec<usize>,
+    /// scratch (reused across refreshes): the batched predictor queries.
+    /// Stored with an erased lifetime; it is only ever non-empty inside
+    /// one `refresh_impl` call.
+    queries_buf: Vec<PredictQuery<'static>>,
     /// predictor invocations actually made (profiling)
     pub predictor_queries: u64,
 }
@@ -109,7 +130,9 @@ impl Scheduler {
             predictor,
             aging_per_s: 0.0,
             mlfq_levels: 4,
-            cache: BTreeMap::new(),
+            cache: Vec::new(),
+            needs: Vec::new(),
+            queries_buf: Vec::new(),
             predictor_queries: 0,
         }
     }
@@ -123,54 +146,110 @@ impl Scheduler {
         self.predictor.name()
     }
 
+    fn cache_get(&self, id: JobId) -> Option<(usize, f64)> {
+        self.cache.get(id.index()).copied().flatten()
+    }
+
+    fn cache_set(&mut self, id: JobId, entry: (usize, f64)) {
+        let i = id.index();
+        if self.cache.len() <= i {
+            self.cache.resize(i + 1, None);
+        }
+        self.cache[i] = Some(entry);
+    }
+
     /// Algorithm 1 lines 10–18: assign/refresh the priority of every job.
-    /// `now_ms` is the current (virtual or wall) time for aging.
+    /// `now_ms` is the current (virtual or wall) time for aging.  This is
+    /// the shaper path's key: the *aged* priority, which drifts with
+    /// `now_ms` and therefore must be recomputed each window (shapers want
+    /// a now-relative base).  Shaper-less dispatch — incremental *and*
+    /// forced-rebuild — keys with [`refresh_folded`](Self::refresh_folded)
+    /// instead, so the two shaper-less paths compare the exact same f64s.
     pub fn refresh(&mut self, jobs: &mut [&mut Job], now_ms: f64) {
+        self.refresh_impl(jobs, now_ms, false);
+    }
+
+    /// Like [`refresh`](Self::refresh), but writes the **time-invariant
+    /// folded key** `base + aging_per_s·arrival/1000` instead of the aged
+    /// priority.  The aged priority is this key minus the uniform shift
+    /// `aging_per_s·now/1000`, so comparing folded keys compares aged
+    /// priorities — which is what lets the coordinator's persistent index
+    /// keep untouched entries across windows without re-keying them.
+    /// (The aged form's `max(0)` wait clamp never fires in either path:
+    /// a job is only refreshed after its arrival time has passed.)
+    pub fn refresh_folded(&mut self, jobs: &mut [&mut Job]) {
+        self.refresh_impl(jobs, 0.0, true);
+    }
+
+    fn refresh_impl(&mut self, jobs: &mut [&mut Job], now_ms: f64,
+                    folded: bool) {
         // which jobs need a predictor call this iteration?  A cached base
         // priority is reused unless the job produced tokens since the last
         // prediction (ISRTF re-predicts per *iteration of the job*, and a
         // job's input to the predictor only changes when it runs).
-        let needs: Vec<usize> = jobs
-            .iter()
-            .enumerate()
-            .filter(|(_, j)| {
-                if !self.policy.uses_predictor() {
-                    return false;
-                }
-                match self.cache.get(&j.id) {
+        let mut needs = std::mem::take(&mut self.needs);
+        needs.clear();
+        if self.policy.uses_predictor() {
+            for (i, j) in jobs.iter().enumerate() {
+                let need = match self.cache_get(j.id) {
                     None => true,
-                    Some((gen, _)) => self.policy.iterative() && *gen != j.generated,
-                }
-            })
-            .map(|(i, _)| i)
-            .collect();
-
-        if !needs.is_empty() {
-            let queries: Vec<PredictQuery<'_>> = needs
-                .iter()
-                .map(|&i| {
-                    let j = &jobs[i];
-                    PredictQuery {
-                        job_id: j.id.raw(),
-                        prompt: &j.prompt,
-                        // paper §3.3: partial output feeds back each iteration
-                        gen_suffix: &j.response,
-                        generated: if self.policy == Policy::Sjf {
-                            0
-                        } else {
-                            j.generated
-                        },
-                        true_total: j.total_len,
+                    Some((gen, _)) => {
+                        self.policy.iterative() && gen != j.generated
                     }
-                })
-                .collect();
-            self.predictor_queries += queries.len() as u64;
-            let preds = self.predictor.predict(&queries);
-            for (&i, p) in needs.iter().zip(preds) {
-                self.cache.insert(jobs[i].id, (jobs[i].generated, p));
+                };
+                if need {
+                    needs.push(i);
+                }
             }
         }
 
+        if !needs.is_empty() {
+            // recycle the query buffer's allocation (covariance shortens
+            // the stored 'static lifetime to this call's borrow)
+            let mut queries: Vec<PredictQuery<'_>> =
+                std::mem::take(&mut self.queries_buf);
+            queries.extend(needs.iter().map(|&i| {
+                let j = &jobs[i];
+                PredictQuery {
+                    job_id: j.id.raw(),
+                    prompt: &j.prompt,
+                    // paper §3.3: partial output feeds back each iteration
+                    gen_suffix: &j.response,
+                    generated: if self.policy == Policy::Sjf {
+                        0
+                    } else {
+                        j.generated
+                    },
+                    true_total: j.total_len,
+                }
+            }));
+            self.predictor_queries += queries.len() as u64;
+            let preds = self.predictor.predict(&queries);
+            for (&i, p) in needs.iter().zip(preds) {
+                self.cache_set(jobs[i].id, (jobs[i].generated, p));
+            }
+            queries.clear();
+            // SAFETY: `queries` is empty, so no data with the shorter
+            // borrow survives; the two Vec types differ only in a lifetime
+            // parameter, which has no runtime representation.  This hands
+            // the allocation back to the scratch field for the next call.
+            // (clippy calls a lifetime-only transmute "useless"; it is the
+            // point here — there is no safe way to widen the lifetime.)
+            #[allow(clippy::useless_transmute)]
+            {
+                self.queries_buf = unsafe {
+                    std::mem::transmute::<Vec<PredictQuery<'_>>,
+                                          Vec<PredictQuery<'static>>>(queries)
+                };
+            }
+        }
+        self.needs = needs;
+
+        let aging = if self.policy != Policy::Fcfs {
+            self.aging_per_s.max(0.0)
+        } else {
+            0.0
+        };
         for j in jobs.iter_mut() {
             let base = match self.policy {
                 Policy::Fcfs => j.arrival_ms,
@@ -179,21 +258,26 @@ impl Scheduler {
                     let level = j.windows.min(self.mlfq_levels - 1) as f64;
                     level * 1e9 + j.arrival_ms
                 }
-                _ => self.cache.get(&j.id).map(|(_, p)| *p).unwrap_or(f64::MAX),
+                _ => self.cache_get(j.id).map(|(_, p)| p).unwrap_or(f64::MAX),
             };
-            let aged = if self.aging_per_s > 0.0 && self.policy != Policy::Fcfs {
-                let wait_s = ((now_ms - j.arrival_ms) / 1000.0).max(0.0);
-                base - self.aging_per_s * wait_s
+            let keyed = if aging > 0.0 {
+                if folded {
+                    base + aging * (j.arrival_ms / 1000.0)
+                } else {
+                    base - aging * ((now_ms - j.arrival_ms) / 1000.0).max(0.0)
+                }
             } else {
                 base
             };
-            j.priority = Some(aged);
+            j.priority = Some(keyed);
         }
     }
 
     /// Drop a finished job's cache entry.
     pub fn forget(&mut self, job_id: JobId) {
-        self.cache.remove(&job_id);
+        if let Some(slot) = self.cache.get_mut(job_id.index()) {
+            *slot = None;
+        }
     }
 
     /// Completion feedback for online predictors.
@@ -286,6 +370,87 @@ mod tests {
         let mut jobs = vec![job(1, 100.0, 10, 0)];
         refresh(&mut s, &mut jobs, 50_000.0);
         assert_eq!(jobs[0].priority.unwrap(), 100.0);
+    }
+
+    #[test]
+    fn folded_equals_aged_when_aging_disabled() {
+        // without aging the folded key IS the base priority, bit for bit
+        for policy in [Policy::Fcfs, Policy::Sjf, Policy::Isrtf, Policy::Srpt,
+                       Policy::Mlfq] {
+            let mk = || match policy {
+                Policy::Sjf => Scheduler::new(policy, Box::new(FrozenOracle)),
+                _ => Scheduler::new(policy, Box::new(OraclePredictor)),
+            };
+            let mut jobs = vec![job(1, 120.0, 300, 40), job(2, 40.0, 90, 0)];
+            let mut aged = mk();
+            refresh(&mut aged, &mut jobs, 5_000.0);
+            let a: Vec<f64> = jobs.iter().map(|j| j.priority.unwrap()).collect();
+            let mut folded = mk();
+            let mut refs: Vec<&mut Job> = jobs.iter_mut().collect();
+            folded.refresh_folded(&mut refs);
+            let f: Vec<f64> = jobs.iter().map(|j| j.priority.unwrap()).collect();
+            assert_eq!(a, f, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn folded_keys_order_like_aged_priorities() {
+        // the tentpole's aging algebra: aged = folded − a·now/1000, a
+        // uniform shift, so sorting (key, arrival, id) must agree at any
+        // refresh instant
+        use crate::testing::prop;
+        prop::check("aging-fold-order", 60, |g| {
+            let aging = g.f64_in(0.5, 25.0);
+            let n = g.usize_in(2, 30);
+            let mut jobs: Vec<Job> = (0..n as u64)
+                .map(|i| {
+                    let arrival = g.f64_in(0.0, 50_000.0);
+                    let total = g.usize_in(2, 2_000);
+                    let mut j = job(i, arrival, total, 0);
+                    j.generated = g.usize_in(0, total - 1);
+                    j
+                })
+                .collect();
+            let now = 50_000.0 + g.f64_in(0.0, 100_000.0);
+            let order = |prios: &[f64], jobs: &[Job]| -> Vec<u64> {
+                let mut idx: Vec<usize> = (0..jobs.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    prios[a].total_cmp(&prios[b])
+                        .then(jobs[a].arrival_ms.total_cmp(&jobs[b].arrival_ms))
+                        .then(jobs[a].id.cmp(&jobs[b].id))
+                });
+                idx.iter().map(|&i| jobs[i].id.raw()).collect()
+            };
+            let mut aged_s = Scheduler::new(Policy::Srpt,
+                                            Box::new(OraclePredictor))
+                .with_aging(aging);
+            refresh(&mut aged_s, &mut jobs, now);
+            let aged: Vec<f64> =
+                jobs.iter().map(|j| j.priority.unwrap()).collect();
+            let mut folded_s = Scheduler::new(Policy::Srpt,
+                                              Box::new(OraclePredictor))
+                .with_aging(aging);
+            let mut refs: Vec<&mut Job> = jobs.iter_mut().collect();
+            folded_s.refresh_folded(&mut refs);
+            let folded: Vec<f64> =
+                jobs.iter().map(|j| j.priority.unwrap()).collect();
+            assert_eq!(order(&aged, &jobs), order(&folded, &jobs),
+                       "aged {aged:?} vs folded {folded:?}");
+        });
+    }
+
+    #[test]
+    fn dense_cache_forget_is_safe_out_of_range() {
+        let mut s = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        s.forget(JobId::from_raw(999)); // never predicted: no-op, no panic
+        let mut jobs = vec![job(3, 0.0, 100, 0)];
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predictor_queries, 1);
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predictor_queries, 1, "cache hit, no re-query");
+        s.forget(JobId::from_raw(3));
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predictor_queries, 2, "forgotten entry re-queries");
     }
 
     #[test]

@@ -12,8 +12,19 @@
 //!   (virtual) completion time has passed, and drain finished windows off
 //!   the worker-pool completion channel in threaded wall-clock mode.
 //! * [`Coordinator::dispatch`] — for every idle worker with queued jobs:
-//!   refresh priorities, rebuild the node's priority queue, form a batch,
-//!   and execute one scheduling window (Algorithm 1 lines 6–20).
+//!   fold newly-changed jobs into the node's **persistent order index**,
+//!   select the top-k batch, and execute one scheduling window
+//!   (Algorithm 1 lines 6–20).  Only jobs whose priority input actually
+//!   changed since the last window — ran and got re-predicted, newly
+//!   admitted, or spilled back by an error path — are re-keyed;
+//!   anti-starvation aging is folded into a time-invariant key (see
+//!   [`Scheduler::refresh_folded`]), so the steady-state cost per window
+//!   is O(k log n) for a batch of k against a backlog of n, not the
+//!   O(n log n) full rebuild.  Registering a [`PriorityShaper`] (whose
+//!   output legitimately drifts every round) — or forcing
+//!   [`CoordinatorBuilder::full_rebuild`] — selects the classic
+//!   re-key-everything path instead; both paths produce bit-identical
+//!   virtual-clock reports (regression-tested per policy).
 //! * [`Coordinator::step`] — one full iteration of the above plus clock
 //!   advance when nothing could run; returns a [`StepOutcome`].
 //! * [`Coordinator::run_to_completion`] — step until every job finished,
@@ -43,6 +54,7 @@
 //!   scheduling windows genuinely overlap across multi-worker configs
 //!   (the paper's one-vLLM-per-pod deployment, in-process).
 
+use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -53,7 +65,8 @@ use crate::metrics::{JobRecord, ServeReport};
 use crate::workload::TraceRequest;
 
 use super::batcher::Batcher;
-use super::events::{EventSink, FinishStats, JobMeta};
+use super::events::{EventSink, FinishStats, JobMeta, WindowEvents,
+                    WindowJobEvent};
 use super::job::{Job, JobId, JobState, JobTable};
 use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 use super::preemption::PreemptionPolicy;
@@ -137,6 +150,36 @@ struct WorkerSlot {
     in_flight: bool,
 }
 
+/// What a failed window hand-off must return to the node's pool: the
+/// rebuild path drains the whole queue per window (so everything spills),
+/// the incremental path only ever removes the batch from its index.
+#[derive(Debug, Clone, Copy)]
+enum SpillOnError {
+    FullOrder,
+    BatchOnly,
+}
+
+/// A window's job-scoped event recorded during state mutation and
+/// delivered afterwards (ids only — `JobMeta` borrows are resolved against
+/// the then-immutable table at delivery time).
+#[derive(Debug, Clone, Copy)]
+enum PendingOutcomeEvent {
+    Progress(JobId, usize),
+    Finished(JobId, FinishStats),
+    Preempted(JobId),
+}
+
+fn job_meta(table: &JobTable, id: JobId) -> JobMeta<'_> {
+    let j = &table[id];
+    JobMeta {
+        id,
+        tenant: j.tenant.as_deref(),
+        arrival_ms: j.arrival_ms,
+        prompt_len: j.prompt.len(),
+        total_len: j.total_len,
+    }
+}
+
 /// Where the engines live: borrowed and driven inline on the calling
 /// thread, or owned by a [`WorkerPool`] with one OS thread per engine.
 enum Backend<'a> {
@@ -171,6 +214,7 @@ pub struct CoordinatorBuilder {
     cfg: ServeConfig,
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
+    force_rebuild: bool,
 }
 
 impl CoordinatorBuilder {
@@ -179,7 +223,7 @@ impl CoordinatorBuilder {
     }
 
     pub fn from_config(cfg: ServeConfig) -> CoordinatorBuilder {
-        CoordinatorBuilder { cfg, sinks: Vec::new(), shaper: None }
+        CoordinatorBuilder { cfg, ..CoordinatorBuilder::default() }
     }
 
     pub fn workers(mut self, workers: usize) -> Self {
@@ -232,8 +276,22 @@ impl CoordinatorBuilder {
     /// Register a priority shaper: dispatch passes every queued job's base
     /// priority through it before ordering (the SLO-policy seam).  Without
     /// one, scheduling is bit-identical to the pre-shaper coordinator.
+    ///
+    /// A shaper's output legitimately changes every round (deadlines,
+    /// live-telemetry pressure), so registering one selects the
+    /// re-shape-everything dispatch path: O(n log n) per window instead of
+    /// the incremental index's O(k log n).
     pub fn priority_shaper(mut self, shaper: Box<dyn PriorityShaper>) -> Self {
         self.shaper = Some(shaper);
+        self
+    }
+
+    /// Force the per-window full-rebuild dispatch path even without a
+    /// shaper.  The schedule is bit-identical to the default incremental
+    /// index — this knob exists for differential tests and for the
+    /// dispatch-cost-at-depth benches that measure the gap.
+    pub fn full_rebuild(mut self, on: bool) -> Self {
+        self.force_rebuild = on;
         self
     }
 
@@ -286,7 +344,7 @@ impl CoordinatorBuilder {
 
     fn finish<'a>(self, trace: &[TraceRequest], backend: Backend<'a>,
                   scheduler: &'a mut Scheduler) -> Result<Coordinator<'a>> {
-        let CoordinatorBuilder { cfg, sinks, shaper } = self;
+        let CoordinatorBuilder { cfg, sinks, shaper, force_rebuild } = self;
         let mut table = JobTable::with_capacity(trace.len());
         let mut arrivals: Vec<(f64, JobId)> = Vec::with_capacity(trace.len());
         for r in trace {
@@ -302,6 +360,10 @@ impl CoordinatorBuilder {
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
         let workers_n = cfg.workers;
+        // shaped priorities drift every round, so a shaper needs the
+        // re-key-everything path; otherwise keys are change-driven and the
+        // index persists across windows
+        let incremental = shaper.is_none() && !force_rebuild;
         Ok(Coordinator {
             backend,
             scheduler,
@@ -316,6 +378,14 @@ impl CoordinatorBuilder {
             lb: LoadBalancer::new(cfg.lb, cfg.seed),
             buffer: PriorityBuffer::new(workers_n),
             batcher: Batcher::new(workers_n, cfg.max_batch),
+            incremental,
+            warm: vec![HashSet::new(); workers_n],
+            pending_scratch: Vec::new(),
+            order_scratch: Vec::new(),
+            victim_entries_scratch: Vec::new(),
+            ranked_scratch: Vec::new(),
+            victims_scratch: Vec::new(),
+            events_scratch: Vec::new(),
             sinks,
             shaper,
             now: 0.0,
@@ -340,13 +410,38 @@ pub struct Coordinator<'a> {
     /// (arrival_ms, id), sorted by arrival time
     arrivals: Vec<(f64, JobId)>,
     next_arrival: usize,
-    /// per-node pool of waiting jobs; kept in last drain order
+    /// Per-node list of waiting jobs whose order key is missing or stale.
+    /// In incremental mode this is the *pending/dirty* list — everything
+    /// that changed since the node's last window (new admits, returned
+    /// batch members, error spills) — and the rest of the backlog lives
+    /// keyed inside `buffer`.  In rebuild mode the buffer is drained every
+    /// window, so this list is simply the whole pool.
     queued: Vec<Vec<JobId>>,
     workers: Vec<WorkerSlot>,
     state: GlobalState,
     lb: LoadBalancer,
+    /// per-node order index: persistent across windows in incremental
+    /// mode, rebuilt per window in rebuild mode
     buffer: PriorityBuffer,
     batcher: Batcher,
+    /// false when a shaper is registered (or a reference run forced the
+    /// rebuild path)
+    incremental: bool,
+    /// Per-node ids currently *in the index* that may still be resident
+    /// on the engine (admitted by an earlier batch and not since evicted)
+    /// — a superset of the engine's resident queued jobs and the only
+    /// candidates it could pick as preemption victims besides the batch
+    /// itself, so victim ranking sorts these instead of the whole
+    /// backlog.  Pruned on eviction; re-entered through the pending fold
+    /// when the job is next re-keyed.
+    warm: Vec<HashSet<JobId>>,
+    // -- per-window scratch buffers (allocations reused across windows) --
+    pending_scratch: Vec<JobId>,
+    order_scratch: Vec<Entry>,
+    victim_entries_scratch: Vec<Entry>,
+    ranked_scratch: Vec<(JobId, usize)>,
+    victims_scratch: Vec<u64>,
+    events_scratch: Vec<PendingOutcomeEvent>,
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
     now: f64,
@@ -403,9 +498,17 @@ impl<'a> Coordinator<'a> {
         &self.table
     }
 
-    /// Jobs waiting in `node`'s pool (excludes the running batch).
+    /// Jobs waiting in `node`'s pool (excludes the running batch): the
+    /// keyed entries in the node's order index plus the pending re-keys.
     pub fn queue_len(&self, node: usize) -> usize {
-        self.queued[node].len()
+        self.queued[node].len() + self.buffer.len(node)
+    }
+
+    /// Cumulative scheduling-overhead wall time (ms) across all iterations
+    /// so far — the numerator of `sched_overhead_ms_avg`, exposed for the
+    /// dispatch-cost-at-depth benches that difference it between steps.
+    pub fn sched_overhead_ms_total(&self) -> f64 {
+        self.sched_overhead_ns as f64 / 1e6
     }
 
     /// Per-worker active-job counts maintained by the load balancer.
@@ -436,14 +539,7 @@ impl<'a> Coordinator<'a> {
             let node = self.lb.assign(&mut self.state);
             self.table[id].node = Some(node);
             self.queued[node].push(id);
-            let j = &self.table[id];
-            let meta = JobMeta {
-                id,
-                tenant: j.tenant.as_deref(),
-                arrival_ms: j.arrival_ms,
-                prompt_len: j.prompt.len(),
-                total_len: j.total_len,
-            };
+            let meta = job_meta(&self.table, id);
             for s in self.sinks.iter_mut() {
                 s.on_job_admitted(&meta, node, now);
             }
@@ -562,17 +658,26 @@ impl<'a> Coordinator<'a> {
     }
 
     /// Run one scheduling iteration on every idle worker with queued jobs
-    /// (Algorithm 1 lines 6–20): refresh priorities, rebuild the node's
-    /// priority queue, set the preemption-victim order, form the batch,
-    /// and execute one window — inline on this thread, or by handing the
-    /// batch to the worker's pool thread.  Returns the number of windows
-    /// dispatched.
+    /// (Algorithm 1 lines 6–20): bring the node's order index up to date,
+    /// set the preemption-victim order, form the batch, and execute one
+    /// window — inline on this thread, or by handing the batch to the
+    /// worker's pool thread.  Returns the number of windows dispatched.
+    ///
+    /// Two key paths (chosen at build time, see
+    /// [`CoordinatorBuilder::full_rebuild`]):
+    /// * **incremental** (default): only the node's pending jobs — new
+    ///   admits, batch members returned by the last window, error spills —
+    ///   are re-keyed (time-invariant folded keys) and pushed; the batch
+    ///   is a top-k pop off the persistent heap, O(k log n) per window.
+    /// * **rebuild** (shaper registered / forced): every queued job is
+    ///   re-keyed (aged, optionally shaped) and the whole queue re-sorted,
+    ///   O(n log n) per window.
     pub fn dispatch(&mut self, now: f64) -> Result<usize> {
         let mut dispatched = 0;
         for w in 0..self.cfg.workers {
             if self.workers[w].pending.is_some()
                 || self.workers[w].in_flight
-                || self.queued[w].is_empty()
+                || (self.queued[w].is_empty() && self.buffer.is_empty(w))
             {
                 continue;
             }
@@ -583,156 +688,317 @@ impl<'a> Coordinator<'a> {
                 bail!("iteration cap {} exceeded (livelock?)",
                       self.cfg.max_iterations);
             }
-            let t_sched = Instant::now();
-
-            // refresh priorities of every queued job on this node: disjoint
-            // slab references, no per-iteration map rebuild or cloning
-            let ids: Vec<JobId> = std::mem::take(&mut self.queued[w]);
-            {
-                let (table, scheduler) =
-                    (&mut self.table, &mut *self.scheduler);
-                table.with_mut_refs(&ids, |refs| scheduler.refresh(refs, now));
-            }
-
-            // rebuild this node's priority queue and drain it sorted; an
-            // optional shaper (SLO policy) adjusts each base priority
-            for &id in &ids {
-                let (priority, arrival_ms) = {
-                    let j = &self.table[id];
-                    let base = j.priority.unwrap_or(f64::MAX);
-                    let shaped = match self.shaper.as_mut() {
-                        Some(s) => s.shape(j, base, now),
-                        None => base,
-                    };
-                    (shaped, j.arrival_ms)
-                };
-                self.buffer.push(w, Entry { priority, arrival_ms, id });
-            }
-            let full_order = self.buffer.drain_sorted(w);
-
-            // preemption victim ordering for the engine
-            let ranked: Vec<(JobId, usize)> = full_order
-                .iter()
-                .map(|e| (e.id, self.table[e.id].preemptions))
-                .collect();
-            let victims: Vec<u64> = self
-                .cfg
-                .preemption
-                .victim_order(&ranked)
-                .iter()
-                .map(|id| id.raw())
-                .collect();
-            if let Backend::Inline(engines) = &mut self.backend {
-                engines[w].set_priority_order(&victims);
-            } // pooled: the order ships inside the RunWindow command
-
-            // form the batch from the highest-priority prefix
-            let take = self.cfg.max_batch.min(self.backend.max_batch(w));
-            let batch: Vec<JobId> =
-                full_order.iter().take(take).map(|e| e.id).collect();
-
-            // admit + (modelled) prompt transfer
-            let mut admits: Vec<SeqSpec> = Vec::new();
-            for &id in &batch {
-                let prompt_tokens = self.table[id].prompt.len();
-                if !self.table[id].engine_admitted {
-                    let spec = {
-                        let j = &self.table[id];
-                        SeqSpec {
-                            id: id.raw(),
-                            prompt: j.prompt.clone(),
-                            target_total: j.total_len,
-                            topic: j.topic,
-                        }
-                    };
-                    match &mut self.backend {
-                        Backend::Inline(engines) => {
-                            if let Err(err) = engines[w].admit(spec) {
-                                // restore the drained pool so the
-                                // coordinator stays consistent for callers
-                                // that outlive the error
-                                self.queued[w]
-                                    .extend(full_order.iter().map(|e| e.id));
-                                return Err(err);
-                            }
-                        }
-                        // pooled: admits run on the worker thread as part
-                        // of the RunWindow command; an error comes back
-                        // through poll_completions
-                        Backend::Pool(_) => admits.push(spec),
-                    }
-                    self.table[id].engine_admitted = true;
-                }
-                self.batcher.mark_prompt_sent(w, id, prompt_tokens);
-            }
-            self.sched_overhead_ns += t_sched.elapsed().as_nanos();
-            for s in self.sinks.iter_mut() {
-                s.on_batch_formed(w, &batch, now);
-            }
-
-            // execute one scheduling window
-            let raw_batch: Vec<u64> = batch.iter().map(|id| id.raw()).collect();
-            if matches!(self.backend, Backend::Pool(_)) {
-                // hand the window to the worker's thread; the outcome comes
-                // back through poll_completions
-                let sent = match &mut self.backend {
-                    Backend::Pool(pool) => pool.send(w, WorkerCmd::RunWindow {
-                        admits: std::mem::take(&mut admits),
-                        priority_order: victims,
-                        batch: raw_batch,
-                        echo: batch.clone(),
-                    }),
-                    Backend::Inline(_) => unreachable!(),
-                };
-                if let Err(err) = sent {
-                    self.queued[w].extend(full_order.iter().map(|e| e.id));
-                    return Err(err);
-                }
-                self.queued[w]
-                    .extend(full_order.iter().skip(take).map(|e| e.id));
-                for &id in &batch {
-                    self.table[id].state = JobState::Running;
-                }
-                self.workers[w].in_flight = true;
+            if self.incremental {
+                self.dispatch_window_incremental(w, now)?;
             } else {
-                let run = match &mut self.backend {
-                    Backend::Inline(engines) => engines[w].run_window(&raw_batch),
-                    Backend::Pool(_) => unreachable!(),
-                };
-                let outcome = match run {
-                    Ok(o) => o,
-                    Err(err) => {
-                        // as above: no job may be lost on an engine error
-                        self.queued[w].extend(full_order.iter().map(|e| e.id));
-                        return Err(err);
-                    }
-                };
-
-                // the sorted remainder becomes the node's new pool (the
-                // monolith instead re-scanned the old queue with
-                // `batch_ids.contains` per element)
-                self.queued[w]
-                    .extend(full_order.iter().skip(take).map(|e| e.id));
-                for &id in &batch {
-                    self.table[id].state = JobState::Running;
-                }
-
-                match self.cfg.clock {
-                    ClockMode::Virtual => {
-                        let done_at = now + outcome.service_ms
-                            + self.cfg.overhead_ms_per_iter;
-                        self.workers[w].pending =
-                            Some(PendingWindow { done_at, outcome, batch });
-                    }
-                    ClockMode::Wall => {
-                        let t_done = self.wall_ms();
-                        self.apply_outcome(t_done, outcome, &batch, w);
-                    }
-                }
+                self.dispatch_window_rebuild(w, now)?;
             }
             dispatched += 1;
         }
         Ok(dispatched)
+    }
+
+    /// One window on node `w`, incremental path: re-key only the pending
+    /// jobs, top-k select against the persistent index, rank victims over
+    /// the engine-relevant (warm ∪ batch) set only.
+    fn dispatch_window_incremental(&mut self, w: usize, now: f64)
+                                   -> Result<()> {
+        let t_sched = Instant::now();
+
+        // fold pending (changed) jobs into the index: their folded keys
+        // are recomputed — cache-hitting unless the job actually produced
+        // tokens since its last prediction — and everything already in the
+        // heap keeps its key untouched
+        let mut pending = std::mem::take(&mut self.pending_scratch);
+        pending.clear();
+        pending.append(&mut self.queued[w]);
+        if !pending.is_empty() {
+            let (table, scheduler) = (&mut self.table, &mut *self.scheduler);
+            table.with_mut_refs(&pending,
+                                |refs| scheduler.refresh_folded(refs));
+        }
+        for &id in &pending {
+            let j = &self.table[id];
+            self.buffer.push(w, Entry {
+                priority: j.priority.unwrap_or(f64::MAX),
+                arrival_ms: j.arrival_ms,
+                id,
+            });
+            if j.engine_admitted {
+                self.warm[w].insert(id);
+            }
+        }
+        self.pending_scratch = pending;
+
+        // top-k partial selection: k pops, the rest never moves
+        let engine_cap = self.backend.max_batch(w);
+        let mut batch_entries = std::mem::take(&mut self.order_scratch);
+        self.batcher.select_into(&mut self.buffer, w, engine_cap,
+                                 &mut batch_entries);
+        for e in &batch_entries {
+            self.warm[w].remove(&e.id);
+        }
+        let batch: Vec<JobId> = batch_entries.iter().map(|e| e.id).collect();
+
+        // preemption victim ordering over the engine-relevant set only:
+        // the batch plus queued jobs that still hold engine KV state.
+        // Jobs the engine has never admitted can't be evicted, and the
+        // engine skips unknown ids, so the filtered ranking drives the
+        // exact same eviction choices as the old full-queue ranking.
+        let rank = self.cfg.preemption.can_fire();
+        let mut victims = std::mem::take(&mut self.victims_scratch);
+        victims.clear();
+        if rank {
+            let mut ve = std::mem::take(&mut self.victim_entries_scratch);
+            ve.clear();
+            ve.extend_from_slice(&batch_entries);
+            for &id in &self.warm[w] {
+                let j = &self.table[id];
+                ve.push(Entry {
+                    priority: j.priority.unwrap_or(f64::MAX),
+                    arrival_ms: j.arrival_ms,
+                    id,
+                });
+            }
+            // ascending (priority, arrival, id) — Entry's total order is
+            // reversed for the min-heap, so highest-priority-first is the
+            // reverse of Ord; one comparator shared with the heap keeps
+            // this ranking and the index order in lockstep
+            ve.sort_unstable_by(|a, b| b.cmp(a));
+            let mut ranked = std::mem::take(&mut self.ranked_scratch);
+            ranked.clear();
+            ranked.extend(ve.iter()
+                .map(|e| (e.id, self.table[e.id].preemptions)));
+            self.cfg.preemption.victim_order_into(&ranked, &mut victims);
+            self.ranked_scratch = ranked;
+            self.victim_entries_scratch = ve;
+        }
+        self.victims_scratch = victims;
+        self.order_scratch = batch_entries;
+
+        self.execute_window(w, now, batch, rank, t_sched,
+                            SpillOnError::BatchOnly)
+    }
+
+    /// One window on node `w`, rebuild path (shaper registered or forced):
+    /// re-key and re-sort the entire pool, rank victims over the full
+    /// queue — Algorithm 1 as written, through reusable scratch buffers.
+    ///
+    /// Key choice: a shaper gets the *aged* priority as its base (its
+    /// whole point is now-relative shaping); a forced rebuild without a
+    /// shaper uses the same *folded* keys as the incremental path, so the
+    /// two paths compare bit-for-bit — not merely algebraically — even
+    /// with aging enabled (aged and folded keys order identically in
+    /// exact arithmetic, but could split an f64-rounding near-tie).
+    fn dispatch_window_rebuild(&mut self, w: usize, now: f64) -> Result<()> {
+        let t_sched = Instant::now();
+
+        // refresh priorities of every queued job on this node: disjoint
+        // slab references, no per-iteration map rebuild or cloning
+        let mut pending = std::mem::take(&mut self.pending_scratch);
+        pending.clear();
+        pending.append(&mut self.queued[w]);
+        {
+            let (table, scheduler) = (&mut self.table, &mut *self.scheduler);
+            let shaped = self.shaper.is_some();
+            table.with_mut_refs(&pending, |refs| if shaped {
+                scheduler.refresh(refs, now)
+            } else {
+                scheduler.refresh_folded(refs)
+            });
+        }
+
+        // rebuild this node's priority queue and drain it sorted; an
+        // optional shaper (SLO policy) adjusts each base priority
+        for &id in &pending {
+            let (priority, arrival_ms) = {
+                let j = &self.table[id];
+                let base = j.priority.unwrap_or(f64::MAX);
+                let shaped = match self.shaper.as_mut() {
+                    Some(s) => s.shape(j, base, now),
+                    None => base,
+                };
+                (shaped, j.arrival_ms)
+            };
+            self.buffer.push(w, Entry { priority, arrival_ms, id });
+        }
+        self.pending_scratch = pending;
+        let mut full_order = std::mem::take(&mut self.order_scratch);
+        self.buffer.drain_sorted_into(w, &mut full_order);
+
+        // preemption victim ordering for the engine (skipped when the
+        // per-window eviction budget is zero: the engine checks the budget
+        // before ever consulting the ranking)
+        let rank = self.cfg.preemption.can_fire();
+        let mut victims = std::mem::take(&mut self.victims_scratch);
+        victims.clear();
+        if rank {
+            let mut ranked = std::mem::take(&mut self.ranked_scratch);
+            ranked.clear();
+            ranked.extend(full_order.iter()
+                .map(|e| (e.id, self.table[e.id].preemptions)));
+            self.cfg.preemption.victim_order_into(&ranked, &mut victims);
+            self.ranked_scratch = ranked;
+        }
+        self.victims_scratch = victims;
+
+        // form the batch from the highest-priority prefix; the sorted
+        // remainder becomes the node's new pool
+        let take = self.cfg.max_batch.min(self.backend.max_batch(w));
+        let batch: Vec<JobId> =
+            full_order.iter().take(take).map(|e| e.id).collect();
+        self.order_scratch = full_order;
+
+        self.execute_window(w, now, batch, rank, t_sched,
+                            SpillOnError::FullOrder)
+    }
+
+    /// Shared tail of both dispatch paths: admit fresh batch members,
+    /// account scheduling overhead, notify sinks, and execute the window
+    /// inline or ship it to the worker's pool thread.  `rank` says whether
+    /// a victim ranking was built this window (it lives in
+    /// `victims_scratch`); `spill` says what to return to the node's pool
+    /// if the engine errors so no job is ever lost.
+    fn execute_window(&mut self, w: usize, now: f64, batch: Vec<JobId>,
+                      rank: bool, t_sched: Instant, spill: SpillOnError)
+                      -> Result<()> {
+        if rank {
+            if let Backend::Inline(engines) = &mut self.backend {
+                engines[w].set_priority_order(&self.victims_scratch);
+            } // pooled: the order ships inside the RunWindow command
+        }
+
+        // admit + (modelled) prompt transfer
+        let mut admits: Vec<SeqSpec> = Vec::new();
+        for &id in &batch {
+            let prompt_tokens = self.table[id].prompt.len();
+            if !self.table[id].engine_admitted {
+                let spec = {
+                    let j = &self.table[id];
+                    SeqSpec {
+                        id: id.raw(),
+                        prompt: j.prompt.clone(),
+                        target_total: j.total_len,
+                        topic: j.topic,
+                    }
+                };
+                match &mut self.backend {
+                    Backend::Inline(engines) => {
+                        if let Err(err) = engines[w].admit(spec) {
+                            // restore the pool so the coordinator stays
+                            // consistent for callers that outlive the error
+                            self.spill_window(w, &batch, spill);
+                            return Err(err);
+                        }
+                    }
+                    // pooled: admits run on the worker thread as part of
+                    // the RunWindow command; an error comes back through
+                    // poll_completions
+                    Backend::Pool(_) => admits.push(spec),
+                }
+                self.table[id].engine_admitted = true;
+            }
+            self.batcher.mark_prompt_sent(w, id, prompt_tokens);
+        }
+        self.sched_overhead_ns += t_sched.elapsed().as_nanos();
+        for s in self.sinks.iter_mut() {
+            s.on_batch_formed(w, &batch, now);
+        }
+
+        // execute one scheduling window
+        let raw_batch: Vec<u64> = batch.iter().map(|id| id.raw()).collect();
+        if matches!(self.backend, Backend::Pool(_)) {
+            // hand the window to the worker's thread; the outcome comes
+            // back through poll_completions
+            let sent = match &mut self.backend {
+                Backend::Pool(pool) => pool.send(w, WorkerCmd::RunWindow {
+                    admits: std::mem::take(&mut admits),
+                    // move the ranking into the command (no per-window
+                    // copy); the scratch is rebuilt from scratch next
+                    // window anyway
+                    priority_order: if rank {
+                        std::mem::take(&mut self.victims_scratch)
+                    } else {
+                        Vec::new()
+                    },
+                    batch: raw_batch,
+                    echo: batch.clone(),
+                }),
+                Backend::Inline(_) => unreachable!(),
+            };
+            if let Err(err) = sent {
+                self.spill_window(w, &batch, spill);
+                return Err(err);
+            }
+            self.requeue_rest(w, batch.len(), spill);
+            for &id in &batch {
+                self.table[id].state = JobState::Running;
+            }
+            self.workers[w].in_flight = true;
+        } else {
+            let run = match &mut self.backend {
+                Backend::Inline(engines) => engines[w].run_window(&raw_batch),
+                Backend::Pool(_) => unreachable!(),
+            };
+            let outcome = match run {
+                Ok(o) => o,
+                Err(err) => {
+                    // as above: no job may be lost on an engine error
+                    self.spill_window(w, &batch, spill);
+                    return Err(err);
+                }
+            };
+
+            self.requeue_rest(w, batch.len(), spill);
+            for &id in &batch {
+                self.table[id].state = JobState::Running;
+            }
+
+            match self.cfg.clock {
+                ClockMode::Virtual => {
+                    let done_at = now + outcome.service_ms
+                        + self.cfg.overhead_ms_per_iter;
+                    self.workers[w].pending =
+                        Some(PendingWindow { done_at, outcome, batch });
+                }
+                ClockMode::Wall => {
+                    let t_done = self.wall_ms();
+                    self.apply_outcome(t_done, outcome, &batch, w);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Error recovery: return this window's jobs to the node's pending
+    /// list.  Rebuild mode drained the whole pool into `order_scratch`, so
+    /// everything goes back; incremental mode only popped the batch — the
+    /// remainder never left the index.
+    fn spill_window(&mut self, w: usize, batch: &[JobId], spill: SpillOnError) {
+        match spill {
+            SpillOnError::FullOrder => {
+                let order = std::mem::take(&mut self.order_scratch);
+                self.queued[w].extend(order.iter().map(|e| e.id));
+                self.order_scratch = order;
+            }
+            SpillOnError::BatchOnly => {
+                self.queued[w].extend(batch.iter().copied());
+            }
+        }
+    }
+
+    /// After a successful hand-off: in rebuild mode the sorted remainder
+    /// (everything past the batch prefix) becomes the node's new pool (the
+    /// monolith instead re-scanned the old queue with `batch_ids.contains`
+    /// per element); in incremental mode the remainder is still keyed in
+    /// the index and nothing needs re-queueing.
+    fn requeue_rest(&mut self, w: usize, batch_len: usize,
+                    spill: SpillOnError) {
+        if let SpillOnError::FullOrder = spill {
+            let order = std::mem::take(&mut self.order_scratch);
+            self.queued[w].extend(order.iter().skip(batch_len).map(|e| e.id));
+            self.order_scratch = order;
+        }
     }
 
     /// One full scheduling iteration: ingest → poll completions → dispatch,
@@ -808,20 +1074,30 @@ impl<'a> Coordinator<'a> {
 
     /// Fold a finished window back into coordinator state: count
     /// preemptions, append tokens, retire finished jobs, return the rest
-    /// to their node's pool.
+    /// to their node's pool.  All state mutates first; the window's events
+    /// are recorded along the way and delivered afterwards as **one**
+    /// [`EventSink::on_window_applied`] call per sink (same causal order),
+    /// so lock-guarded sinks pay one critical section per window instead
+    /// of one per job per window.
     fn apply_outcome(&mut self, t_done: f64, outcome: WindowOutcome,
                      batch: &[JobId], node: usize) {
         let window_tokens: usize =
             outcome.outputs.iter().map(|o| o.new_tokens.len()).sum();
+        let mut events = std::mem::take(&mut self.events_scratch);
+        events.clear();
         for &pid_raw in &outcome.preempted {
             let pid = JobId::from_raw(pid_raw);
             if let Some(j) = self.table.get_mut(pid) {
                 j.preemptions += 1;
             }
+            // an evicted job is no longer resident, so it can't be a
+            // victim again until a batch re-stages it (which re-folds it
+            // into `warm` via the pending list) — pruning here keeps the
+            // victim ranking proportional to the *resident* set even in
+            // preemption-heavy regimes
+            self.warm[node].remove(&pid);
             self.total_preemptions += 1;
-            for s in self.sinks.iter_mut() {
-                s.on_job_preempted(pid, node, t_done);
-            }
+            events.push(PendingOutcomeEvent::Preempted(pid));
         }
         for out in &outcome.outputs {
             let id = JobId::from_raw(out.id);
@@ -837,19 +1113,9 @@ impl<'a> Coordinator<'a> {
             }
             if !out.new_tokens.is_empty() {
                 // live progress: per-job, per-window token production,
-                // fired before a final window's finish event
-                let j = &self.table[id];
-                let meta = JobMeta {
-                    id,
-                    tenant: j.tenant.as_deref(),
-                    arrival_ms: j.arrival_ms,
-                    prompt_len: j.prompt.len(),
-                    total_len: j.total_len,
-                };
-                for s in self.sinks.iter_mut() {
-                    s.on_job_progress(&meta, node, out.new_tokens.len(),
-                                      t_done);
-                }
+                // recorded before a final window's finish event
+                events.push(PendingOutcomeEvent::Progress(
+                    id, out.new_tokens.len()));
             }
             if out.done {
                 let j = &mut self.table[id];
@@ -861,15 +1127,9 @@ impl<'a> Coordinator<'a> {
                 self.scheduler.observe_completion(prompt_len, total_len);
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
+                self.warm[node].remove(&id);
                 self.backend.remove(node, out.id);
                 let j = &self.table[id];
-                let meta = JobMeta {
-                    id,
-                    tenant: j.tenant.as_deref(),
-                    arrival_ms: j.arrival_ms,
-                    prompt_len,
-                    total_len,
-                };
                 let stats = FinishStats {
                     jct_ms: t_done - j.arrival_ms,
                     ttft_ms: j.ttft_ms(),
@@ -877,9 +1137,7 @@ impl<'a> Coordinator<'a> {
                     service_ms: j.service_ms,
                     tokens: j.generated,
                 };
-                for s in self.sinks.iter_mut() {
-                    s.on_job_finished(&meta, node, &stats, t_done);
-                }
+                events.push(PendingOutcomeEvent::Finished(id, stats));
             } else {
                 self.table[id].state = JobState::Queued;
                 self.queued[node].push(id);
@@ -893,11 +1151,44 @@ impl<'a> Coordinator<'a> {
                 self.queued[node].push(id);
             }
         }
-        // window-done fires after the window's per-job events
-        for s in self.sinks.iter_mut() {
-            s.on_window_done(node, batch, window_tokens, outcome.service_ms,
-                             t_done);
+        // deliver: resolve metas against the now-quiescent table and hand
+        // each sink the whole window at once (the default trait impl
+        // re-expands into the per-event hooks, in causal order, with
+        // window-done last)
+        {
+            let resolved: Vec<WindowJobEvent<'_>> = events
+                .iter()
+                .map(|ev| match *ev {
+                    PendingOutcomeEvent::Progress(id, n) => {
+                        WindowJobEvent::Progress {
+                            job: job_meta(&self.table, id),
+                            new_tokens: n,
+                        }
+                    }
+                    PendingOutcomeEvent::Finished(id, stats) => {
+                        WindowJobEvent::Finished {
+                            job: job_meta(&self.table, id),
+                            stats,
+                        }
+                    }
+                    PendingOutcomeEvent::Preempted(id) => {
+                        WindowJobEvent::Preempted { job: id }
+                    }
+                })
+                .collect();
+            let window = WindowEvents {
+                node,
+                batch,
+                events: &resolved,
+                tokens: window_tokens,
+                service_ms: outcome.service_ms,
+                now_ms: t_done,
+            };
+            for s in self.sinks.iter_mut() {
+                s.on_window_applied(&window);
+            }
         }
+        self.events_scratch = events;
     }
 
     /// Nothing could run: jump the virtual clock to the next event, or

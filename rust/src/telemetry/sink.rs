@@ -13,13 +13,19 @@
 //! The handle is thread-safe (`Arc<Mutex>`), so clones can serve
 //! `GET /metrics` from the HTTP frontend's handler threads
 //! ([`cluster::http`](crate::cluster::http)) while the serving loop keeps
-//! appending events.  Every lock section is a handful of counter/sketch
+//! appending events.  Window-scoped events (per-job progress, finishes,
+//! preemptions, window-done) arrive batched through
+//! [`EventSink::on_window_applied`], so the serving loop takes the mutex
+//! **once per window** instead of once per job per window — pooled
+//! wall-clock runs and `/metrics` scrapes no longer serialize on per-job
+//! lock traffic.  Every lock section is a handful of counter/sketch
 //! updates — well off any hot path.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
+use crate::coordinator::events::{EventSink, FinishStats, JobMeta,
+                                 WindowEvents, WindowJobEvent};
 use crate::coordinator::job::JobId;
 
 use super::sketch::{QuantileSketch, WindowedRate};
@@ -151,6 +157,54 @@ impl TelemetryState {
     pub fn total_deadline_misses(&self) -> u64 {
         self.tenants.values().map(|t| t.deadline_misses).sum()
     }
+
+    // -- event folding, shared by the per-event hooks (one lock each) and
+    //    the batched per-window path (one lock per window) ---------------
+
+    fn touch(&mut self, now_ms: f64) {
+        self.last_event_ms = self.last_event_ms.max(now_ms);
+    }
+
+    fn apply_progress(&mut self, tenant: Option<&str>, new_tokens: usize) {
+        self.tenant_mut(tenant).tokens += new_tokens as u64;
+    }
+
+    fn apply_finish(&mut self, tenant: Option<&str>, node: usize,
+                    stats: &FinishStats) {
+        let n = self.node_mut(node);
+        n.finished += 1;
+        n.active = n.active.saturating_sub(1);
+        let slo_ms = self
+            .slo
+            .as_ref()
+            .map(|s| s.slo_for(tenant.unwrap_or(DEFAULT_TENANT)));
+        let t = self.tenant_mut(tenant);
+        t.finished += 1;
+        t.active = t.active.saturating_sub(1);
+        t.jct_ms.add(stats.jct_ms);
+        if let Some(ttft) = stats.ttft_ms {
+            t.ttft_ms.add(ttft);
+        }
+        t.queue_delay_ms.add(stats.queue_delay_ms);
+        if let Some(slo_ms) = slo_ms {
+            if slo_ms.is_finite() && slo_ms > 0.0 && stats.jct_ms > slo_ms {
+                t.deadline_misses += 1;
+            }
+        }
+    }
+
+    fn apply_preempt(&mut self, node: usize) {
+        self.node_mut(node).preempted += 1;
+    }
+
+    fn apply_window_done(&mut self, node: usize, tokens: usize,
+                         service_ms: f64, now_ms: f64) {
+        let n = self.node_mut(node);
+        n.windows += 1;
+        n.tokens += tokens as u64;
+        n.service_ms_sum += service_ms;
+        n.token_rate.add(now_ms, tokens as f64);
+    }
 }
 
 /// Clonable, thread-safe handle + [`EventSink`] over shared
@@ -230,51 +284,50 @@ impl EventSink for TelemetrySink {
     fn on_window_done(&mut self, node: usize, _batch: &[JobId], tokens: usize,
                       service_ms: f64, now_ms: f64) {
         let mut st = self.state.lock().unwrap();
-        st.last_event_ms = st.last_event_ms.max(now_ms);
-        let n = st.node_mut(node);
-        n.windows += 1;
-        n.tokens += tokens as u64;
-        n.service_ms_sum += service_ms;
-        n.token_rate.add(now_ms, tokens as f64);
+        st.touch(now_ms);
+        st.apply_window_done(node, tokens, service_ms, now_ms);
     }
 
     fn on_job_progress(&mut self, job: &JobMeta<'_>, _node: usize,
                        new_tokens: usize, now_ms: f64) {
         let mut st = self.state.lock().unwrap();
-        st.last_event_ms = st.last_event_ms.max(now_ms);
-        st.tenant_mut(job.tenant).tokens += new_tokens as u64;
+        st.touch(now_ms);
+        st.apply_progress(job.tenant, new_tokens);
     }
 
     fn on_job_finished(&mut self, job: &JobMeta<'_>, node: usize,
                        stats: &FinishStats, now_ms: f64) {
         let mut st = self.state.lock().unwrap();
-        st.last_event_ms = st.last_event_ms.max(now_ms);
-        let n = st.node_mut(node);
-        n.finished += 1;
-        n.active = n.active.saturating_sub(1);
-        let slo_ms = st
-            .slo
-            .as_ref()
-            .map(|s| s.slo_for(job.tenant.unwrap_or(DEFAULT_TENANT)));
-        let t = st.tenant_mut(job.tenant);
-        t.finished += 1;
-        t.active = t.active.saturating_sub(1);
-        t.jct_ms.add(stats.jct_ms);
-        if let Some(ttft) = stats.ttft_ms {
-            t.ttft_ms.add(ttft);
-        }
-        t.queue_delay_ms.add(stats.queue_delay_ms);
-        if let Some(slo_ms) = slo_ms {
-            if slo_ms.is_finite() && slo_ms > 0.0 && stats.jct_ms > slo_ms {
-                t.deadline_misses += 1;
-            }
-        }
+        st.touch(now_ms);
+        st.apply_finish(job.tenant, node, stats);
     }
 
     fn on_job_preempted(&mut self, _job: JobId, node: usize, now_ms: f64) {
         let mut st = self.state.lock().unwrap();
-        st.last_event_ms = st.last_event_ms.max(now_ms);
-        st.node_mut(node).preempted += 1;
+        st.touch(now_ms);
+        st.apply_preempt(node);
+    }
+
+    /// The whole window under a single mutex acquisition: the serving loop
+    /// delivers every per-job event of a finished window plus the
+    /// window-done rollup without re-taking the lock per job, so a pooled
+    /// wall-clock run contends with `/metrics` scrapes at most once per
+    /// window.
+    fn on_window_applied(&mut self, w: &WindowEvents<'_>) {
+        let mut st = self.state.lock().unwrap();
+        st.touch(w.now_ms);
+        for ev in w.events {
+            match ev {
+                WindowJobEvent::Progress { job, new_tokens } => {
+                    st.apply_progress(job.tenant, *new_tokens)
+                }
+                WindowJobEvent::Finished { job, stats } => {
+                    st.apply_finish(job.tenant, w.node, stats)
+                }
+                WindowJobEvent::Preempted { .. } => st.apply_preempt(w.node),
+            }
+        }
+        st.apply_window_done(w.node, w.tokens, w.service_ms, w.now_ms);
     }
 }
 
@@ -345,6 +398,49 @@ mod tests {
         assert_eq!(sink.deadline_misses("paid"), 1);
         assert_eq!(sink.deadline_misses("free"), 0);
         assert_eq!(sink.total_deadline_misses(), 1);
+    }
+
+    #[test]
+    fn batched_window_delivery_matches_per_event_delivery() {
+        // regression for the lock-coalescing path: one on_window_applied
+        // call must fold exactly the same state as the individual hooks
+        let spec = SloSpec::new(500.0);
+        let run = |batched: bool| {
+            let sink = TelemetrySink::with_slo(1, spec.clone());
+            let mut h = sink.clone();
+            h.on_job_admitted(&meta(0, Some("t"), 0.0), 0, 0.0);
+            h.on_job_admitted(&meta(1, Some("t"), 0.0), 0, 0.0);
+            let m = meta(0, Some("t"), 0.0);
+            let st = finish(803.0, 50);
+            if batched {
+                let events = [
+                    WindowJobEvent::Preempted { job: JobId::new(1) },
+                    WindowJobEvent::Progress { job: m, new_tokens: 50 },
+                    WindowJobEvent::Finished { job: m, stats: st },
+                ];
+                h.on_window_applied(&WindowEvents {
+                    node: 0,
+                    batch: &[JobId::new(0)],
+                    events: &events,
+                    tokens: 50,
+                    service_ms: 800.0,
+                    now_ms: 803.0,
+                });
+            } else {
+                h.on_job_preempted(JobId::new(1), 0, 803.0);
+                h.on_job_progress(&m, 0, 50, 803.0);
+                h.on_job_finished(&m, 0, &st, 803.0);
+                h.on_window_done(0, &[JobId::new(0)], 50, 800.0, 803.0);
+            }
+            sink.with_state(|s| {
+                (s.nodes[0].finished, s.nodes[0].preempted, s.nodes[0].windows,
+                 s.nodes[0].tokens, s.tenants["t"].tokens,
+                 s.tenants["t"].deadline_misses, s.tenants["t"].active,
+                 s.last_event_ms as u64)
+            })
+        };
+        assert_eq!(run(true), run(false));
+        assert_eq!(run(true), (1, 1, 1, 50, 50, 1, 1, 803));
     }
 
     #[test]

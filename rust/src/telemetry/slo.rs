@@ -19,6 +19,12 @@
 //!
 //! Tenants whose budget is 0/∞ are exempt: their jobs keep the base
 //! scheduler priority, offset behind all deadline-carrying work.
+//!
+//! Cost note: slack drifts with `now_ms`, so registering any shaper makes
+//! the coordinator re-shape **every queued job each scheduling iteration**
+//! (the per-window rebuild path) instead of the incremental O(k log n)
+//! index it uses shaper-less.  Keep `shape` cheap — per-round state like
+//! the pressure memo below is the pattern.
 
 use std::collections::BTreeMap;
 

@@ -16,6 +16,11 @@
 //! Within a tenant the base scheduler's order (ISRTF, FCFS, …) is
 //! untouched: every job of a tenant gets the same penalty at a given
 //! dispatch round.
+//!
+//! Cost note: the fairness penalty moves with live token counters, so a
+//! registered shaper puts dispatch on the per-window rebuild path (every
+//! queued job re-shaped each iteration) rather than the shaper-less
+//! incremental index — which is why the lead is memoised per round.
 
 use std::collections::BTreeMap;
 

@@ -606,6 +606,211 @@ fn max_per_iteration_bounds_evictions_per_window() {
             "cap violated: {per_window:?}");
 }
 
+// ---------------------------------------------------------------------------
+// incremental scheduling core (persistent per-node order index, PR 4)
+// ---------------------------------------------------------------------------
+
+fn assert_reports_identical(a: &ServeReport, b: &ServeReport) {
+    assert_eq!(a.records, b.records, "per-job records must be identical");
+    assert_eq!(a.makespan_ms, b.makespan_ms);
+    assert_eq!(a.total_preemptions, b.total_preemptions);
+    assert_eq!(a.sched_iterations, b.sched_iterations);
+}
+
+fn predictor_for(policy: Policy, seed: u64) -> Box<dyn LengthPredictor> {
+    match policy {
+        Policy::Isrtf => Box::new(SurrogatePredictor::calibrated(seed)),
+        Policy::Sjf => Box::new(FrozenOracle),
+        _ => Box::new(OraclePredictor),
+    }
+}
+
+const TINY_KV: usize = 40 * 16 * (1 << 20); // ~40 blocks: heavy preemption
+
+#[test]
+fn incremental_index_matches_full_rebuild_for_all_policies() {
+    // the tentpole acceptance guard: the persistent index and the classic
+    // per-window rebuild must produce bit-identical virtual-clock reports
+    // for every policy — including under engine preemption pressure and
+    // with anti-starvation aging folded into the keys
+    let all = [Policy::Fcfs, Policy::Sjf, Policy::Isrtf, Policy::Srpt,
+               Policy::Mlfq];
+    let mut cases: Vec<(Policy, usize, f64)> =
+        all.iter().map(|&p| (p, 8usize << 30, 0.0)).collect();
+    cases.push((Policy::Srpt, TINY_KV, 0.0));
+    cases.push((Policy::Isrtf, TINY_KV, 0.0));
+    cases.push((Policy::Srpt, 8 << 30, 10.0));
+    cases.push((Policy::Isrtf, 8 << 30, 10.0));
+    for (policy, kv, aging) in cases {
+        let corpus = Corpus::synthetic(300, 71);
+        let mut gen = RequestGenerator::fabrix(4.0, 71);
+        let trace = gen.trace(&corpus, 50);
+        let cfg = ServeConfig {
+            workers: 2,
+            max_iterations: 5_000_000,
+            seed: 71,
+            ..Default::default()
+        };
+        let run = |rebuild: bool| {
+            let mut sched = Scheduler::new(policy, predictor_for(policy, 71))
+                .with_aging(aging);
+            let mut e: Vec<Box<dyn Engine>> = (0..2)
+                .map(|_| Box::new(SimEngine::new(profile(2000.0), 50, 4, kv))
+                     as Box<dyn Engine>)
+                .collect();
+            CoordinatorBuilder::from_config(cfg.clone())
+                .full_rebuild(rebuild)
+                .build(&trace, &mut e, &mut sched)
+                .unwrap()
+                .run_to_completion()
+                .unwrap()
+        };
+        let inc = run(false);
+        let reb = run(true);
+        assert_eq!(inc.n(), 50, "{policy:?} kv={kv} aging={aging}");
+        if kv == TINY_KV {
+            assert!(inc.total_preemptions > 0,
+                    "tiny pool must preempt ({policy:?})");
+        }
+        assert_reports_identical(&inc, &reb);
+    }
+}
+
+/// Records every formed batch (node, job ids in priority order) so two
+/// runs can be compared dispatch-by-dispatch.
+#[derive(Default, Clone)]
+struct BatchLog(Rc<RefCell<Vec<(usize, Vec<u64>)>>>);
+
+impl EventSink for BatchLog {
+    fn on_batch_formed(&mut self, node: usize, jobs: &[JobId], _now_ms: f64) {
+        self.0
+            .borrow_mut()
+            .push((node, jobs.iter().map(|j| j.raw()).collect()));
+    }
+}
+
+#[test]
+fn prop_incremental_matches_rebuild_with_streaming() {
+    // differential property test: random traces, random mid-run streamed
+    // admissions, completions and preemptions driven through both dispatch
+    // paths for all five policies — batch-by-batch dispatch orders and
+    // final reports must be identical
+    use elis::testing::prop;
+    prop::check("incremental-vs-rebuild", 10, |g| {
+        let policy = *g.pick(&[Policy::Fcfs, Policy::Sjf, Policy::Isrtf,
+                               Policy::Srpt, Policy::Mlfq]);
+        let aging = if policy != Policy::Mlfq && g.bool(0.3) {
+            g.f64_in(1.0, 15.0)
+        } else {
+            0.0
+        };
+        let workers = g.usize_in(1, 3);
+        let seed = g.usize_in(1, 10_000) as u64;
+        let n = g.usize_in(10, 30);
+        let rps = g.f64_in(2.0, 8.0);
+        let kv = if g.bool(0.35) { TINY_KV } else { 8 << 30 };
+        let budget = *g.pick(&[2usize, 3, 100]);
+        let corpus = Corpus::synthetic(200, seed);
+        let mut gen = RequestGenerator::fabrix(rps, seed);
+        let trace = gen.trace(&corpus, n);
+        let n_push = g.usize_in(0, 4);
+        let pushes: Vec<(u64, TraceRequest)> = (0..n_push)
+            .map(|k| {
+                (g.usize_in(1, 40) as u64, TraceRequest {
+                    id: 10_000 + k as u64,
+                    arrival_ms: g.f64_in(0.0, 20_000.0),
+                    prompt: vec![5; g.usize_in(4, 24)],
+                    total_len: g.usize_in(5, 300),
+                    topic: 0,
+                    tenant: None,
+                })
+            })
+            .collect();
+        let cfg = ServeConfig {
+            workers,
+            max_batch: g.usize_in(2, 4),
+            preemption: PreemptionPolicy {
+                enabled: true,
+                max_preemptions_per_job: budget,
+                max_per_iteration: usize::MAX,
+            },
+            max_iterations: 2_000_000,
+            seed,
+            ..Default::default()
+        };
+
+        let run = |rebuild: bool| {
+            let mut sched = Scheduler::new(policy,
+                                           predictor_for(policy, seed))
+                .with_aging(aging);
+            let mut e: Vec<Box<dyn Engine>> = (0..workers)
+                .map(|_| Box::new(SimEngine::new(profile(2000.0), 50, 4, kv))
+                     as Box<dyn Engine>)
+                .collect();
+            let log = BatchLog::default();
+            let mut coord = CoordinatorBuilder::from_config(cfg.clone())
+                .full_rebuild(rebuild)
+                .sink(Box::new(log.clone()))
+                .build(&trace, &mut e, &mut sched)
+                .unwrap();
+            let mut next_push = 0usize;
+            let mut steps: u64 = 0;
+            while !coord.is_done() || next_push < pushes.len() {
+                while next_push < pushes.len()
+                    && pushes[next_push].0 <= steps
+                {
+                    coord.push_request(&pushes[next_push].1);
+                    next_push += 1;
+                }
+                coord.step().unwrap();
+                steps += 1;
+                assert!(steps < 1_000_000, "did not converge");
+            }
+            (coord.report(), log.0.borrow().clone())
+        };
+        let (ra, la) = run(false);
+        let (rb, lb) = run(true);
+        assert_eq!(ra.n(), n + n_push, "every job (incl. streamed) finishes");
+        assert_eq!(la, lb,
+                   "dispatch orders must match ({policy:?} aging={aging} \
+                    kv={kv} workers={workers})");
+        assert_reports_identical(&ra, &rb);
+    });
+}
+
+#[test]
+fn zero_preemption_budget_skips_victim_ranking_and_matches() {
+    // max_per_iteration == 0 can never evict (the engine checks the budget
+    // before its ranking), so dispatch skips building the ranking — and on
+    // an uncontended pool the schedule must match an uncapped run exactly
+    let corpus = Corpus::synthetic(200, 83);
+    let mut gen = RequestGenerator::fabrix(3.0, 83);
+    let trace = gen.trace(&corpus, 40);
+    let run = |cap: usize| {
+        let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        let cfg = ServeConfig {
+            preemption: PreemptionPolicy {
+                enabled: true,
+                max_preemptions_per_job: 3,
+                max_per_iteration: cap,
+            },
+            max_iterations: 5_000_000,
+            ..Default::default()
+        };
+        let mut e = engines(1, 8 << 30);
+        run_serving(&cfg, &trace, &mut e, &mut sched).unwrap()
+    };
+    let frozen = run(0);
+    let uncapped = run(usize::MAX);
+    assert_eq!(frozen.n(), 40);
+    assert_eq!(frozen.total_preemptions, 0);
+    if uncapped.total_preemptions == 0 {
+        // same pool, no evictions either way: skipping the ranking must
+        // not perturb the schedule
+        assert_reports_identical(&frozen, &uncapped);
+    }
+}
+
 #[test]
 fn deterministic_given_seed() {
     let a = run(Policy::Isrtf, 2, 3.0, 50, 31);
