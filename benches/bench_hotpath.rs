@@ -450,7 +450,8 @@ fn main() {
         engine.admit(SeqSpec {
             id: next,
             prompt: vec![1, 5, 9, 13, 200],
-            target_total: 60, topic: 0
+            target_total: 60, topic: 0,
+            resume: Vec::new(),
         }).unwrap();
         std::hint::black_box(engine.run_window(&[next]).unwrap());
         engine.remove(next);

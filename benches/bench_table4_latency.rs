@@ -69,7 +69,8 @@ fn main() {
         engine.admit(elis::engine::SeqSpec {
             id: i as u64,
             prompt: e.tokens.clone(),
-            target_total: e.total_len, topic: 0
+            target_total: e.total_len, topic: 0,
+            resume: Vec::new(),
         }).unwrap();
         let mut done = false;
         while !done {

@@ -22,7 +22,8 @@ fn find_preempt_batch(profile: &ModelProfile, window: usize) -> Option<usize> {
             engine.admit(SeqSpec {
                 id,
                 prompt: vec![7; 64],
-                target_total: 400, topic: 0
+                target_total: 400, topic: 0,
+                resume: Vec::new(),
             }).ok()?;
         }
         let ids: Vec<u64> = (0..batch as u64).collect();

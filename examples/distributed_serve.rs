@@ -1,0 +1,91 @@
+//! Distributed serving demo: a coordinator driving two worker "pods"
+//! over real TCP — the paper's §5 frontend-Deployment + backend-
+//! StatefulSet topology, condensed into one process so it runs anywhere.
+//!
+//! Each pod thread is exactly what `elis worker --connect` runs
+//! ([`run_worker`]); the coordinator side is exactly what
+//! `elis serve --worker-listen` runs ([`RemoteWorkerPool::accept`] +
+//! [`CoordinatorBuilder::build_remote`]).  Swap the threads for real
+//! processes on other machines and nothing else changes.
+//!
+//!     cargo run --release --example distributed_serve
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use elis::cluster::{run_worker, RemoteWorkerPool, WorkerTransport};
+use elis::coordinator::{ClockMode, CoordinatorBuilder, Policy, Scheduler,
+                        ServeConfig};
+use elis::engine::profiles::ModelProfile;
+use elis::engine::sim_engine::SimEngine;
+use elis::engine::Engine;
+use elis::predictor::heuristic::HeuristicPredictor;
+use elis::runtime::manifest::ServedModelMeta;
+use elis::workload::{Corpus, RequestGenerator};
+
+fn pod_engine() -> Box<dyn Engine> {
+    let profile = ModelProfile::from_meta(&ServedModelMeta {
+        name: "Demo-7B".into(),
+        abbrev: "demo7".into(),
+        params_b: 7.0,
+        avg_latency_ms: 2000.0,
+        kv_bytes_per_token: 1 << 20,
+        preempt_batch: 0,
+        mem_limit_frac: 0.9,
+    });
+    Box::new(SimEngine::new(profile, 50, 4, 8 << 30))
+}
+
+fn main() -> Result<()> {
+    // 1. coordinator binds the registration port (serve --worker-listen)
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    println!("coordinator: waiting for pods on {addr}");
+
+    // 2. two "pods" dial in and run the elis-worker loop until the
+    //    coordinator hangs up
+    let pods: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || -> Result<()> {
+                let stream = TcpStream::connect(addr)?;
+                println!("pod {i}: connected");
+                run_worker(stream, pod_engine())
+            })
+        })
+        .collect();
+
+    // 3. registration: versioned handshake, capability capture
+    let pool = RemoteWorkerPool::accept(&listener, 2, Duration::from_secs(10))?;
+    for w in 0..2 {
+        println!("registered worker {w}: {} @ {}", pool.describe(w),
+                 pool.peer(w));
+    }
+
+    // 4. serve a bursty trace through the remote pool — same coordinator
+    //    API as the in-process pool, windows overlap across pods
+    let corpus = Corpus::synthetic(200, 11);
+    let trace = RequestGenerator::fabrix(20.0, 11).trace(&corpus, 24);
+    let mut sched = Scheduler::new(Policy::Isrtf,
+                                   Box::new(HeuristicPredictor::new()));
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        clock: ClockMode::Wall,
+        max_iterations: 1_000_000,
+        ..Default::default()
+    };
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .build_remote(&trace, pool, &mut sched)?;
+    let report = coord.run_to_completion()?;
+    drop(coord); // closes the connections -> pods exit their loops
+
+    report.print_summary();
+    println!("tokens/s {:.1}", report.tokens_per_s());
+    for pod in pods {
+        pod.join().expect("pod thread")?;
+    }
+    println!("pods exited cleanly after coordinator hangup");
+    Ok(())
+}

@@ -35,7 +35,8 @@ fn main() -> Result<()> {
         engine.admit(SeqSpec {
             id: i as u64,
             prompt: tok.encode(text),
-            target_total: *len, topic: 0
+            target_total: *len, topic: 0,
+            resume: Vec::new(),
         })?;
     }
 

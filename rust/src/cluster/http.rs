@@ -34,7 +34,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener,
                TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -76,6 +76,10 @@ pub enum GenerateReply {
     Accepted { job_id: u64 },
     /// finished end-to-end (`wait: true`)
     Finished { job_id: u64, tokens: usize, jct_ms: f64 },
+    /// the serving loop is exiting (e.g. `--idle-exit-ms` fired) and will
+    /// not run this job; the handler answers 503 instead of holding the
+    /// connection until its timeout
+    ShuttingDown,
 }
 
 type Waiters = Arc<Mutex<HashMap<u64, Sender<GenerateReply>>>>;
@@ -136,6 +140,28 @@ impl ApiBridge {
             admitted += 1;
         }
         admitted
+    }
+}
+
+impl ApiBridge {
+    /// Shutdown drain: answer every queued admission *and* every still-
+    /// `wait`ing handler with [`GenerateReply::ShuttingDown`], so held
+    /// connections get a terminal 503 instead of hanging out their
+    /// timeout when the serving loop exits (`--idle-exit-ms` racing a
+    /// `wait: true` generate).  Call after the serving loop's last
+    /// `pump`, before `HttpServer::shutdown`; returns how many requests
+    /// were answered.
+    pub fn drain_shutdown(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(req) = self.rx.try_recv() {
+            let _ = req.reply.send(GenerateReply::ShuttingDown);
+            n += 1;
+        }
+        for (_, tx) in self.waiters.lock().unwrap().drain() {
+            let _ = tx.send(GenerateReply::ShuttingDown);
+            n += 1;
+        }
+        n
     }
 }
 
@@ -486,7 +512,15 @@ fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
                 ]),
             )
         }
-        Err(_) => Response::text(504, "timed out waiting for the job\n"),
+        Ok(GenerateReply::ShuttingDown)
+        | Err(RecvTimeoutError::Disconnected) => {
+            // the serving loop exited (idle-exit / teardown): terminal
+            // answer, never a held connection
+            Response::text(503, "server is shutting down\n")
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            Response::text(504, "timed out waiting for the job\n")
+        }
     }
 }
 

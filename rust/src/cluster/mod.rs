@@ -16,21 +16,41 @@
 //!   `POST /v1/generate` for streaming admission into a running
 //!   coordinator (via [`ApiBridge`] + `Coordinator::push_request`).
 //!
-//! Wiring: `elis serve --listen <addr>` runs both; see
-//! `examples/cluster_serve.rs` for the embedded-API shape.
+//! * [`wire`] — the `WorkerCmd` / `WindowDone` protocol on the wire:
+//!   length-prefixed JSON frames over `TcpStream` with a versioned
+//!   hello/handshake carrying engine capabilities.
+//! * [`remote`] — [`RemoteWorkerPool`]: the [`WorkerPool`] surface over
+//!   registered TCP pod connections (per-worker writer threads, one
+//!   shared completion reader, synthesized error replies on disconnect),
+//!   plus [`run_worker`] — the backend-pod loop behind
+//!   `elis worker --connect <addr>`.
+//!
+//! Both pools implement [`WorkerTransport`], so the coordinator's pooled
+//! backend is the same code in-process and across machines.
+//!
+//! Wiring: `elis serve --listen <addr>` runs the frontend; adding
+//! `--worker-listen <addr>` accepts pod registrations so `--workers` can
+//! span machines (each pod runs `elis worker --connect`).  See
+//! `examples/cluster_serve.rs` and `examples/distributed_serve.rs`.
 //!
 //! ```text
 //!   HTTP clients ──> HttpServer (handler threads)
 //!        │  /metrics ◀── TelemetrySink (shared, thread-safe)
 //!        └─ /v1/generate ──> ApiBridge ──> Coordinator (serving loop)
-//!                                              │ dispatch (mpsc)
-//!                                              ▼
-//!                                    WorkerPool threads (one engine each)
+//!                                              │ dispatch (WorkerTransport)
+//!                          ┌───────────────────┴──────────────────┐
+//!                          ▼                                      ▼
+//!              WorkerPool threads                RemoteWorkerPool (TCP)
+//!              (one engine each)             elis worker pods, one engine
+//!                                            each, wire.rs framed JSON
 //! ```
 
 pub mod http;
 pub mod pool;
+pub mod remote;
+pub mod wire;
 
 pub use http::{ApiBridge, ApiRequest, CompletionNotifier, Gateway,
                GenerateReply, HttpServer};
-pub use pool::{WindowDone, WorkerCmd, WorkerPool};
+pub use pool::{WindowDone, WorkerCmd, WorkerPool, WorkerTransport};
+pub use remote::{run_worker, RemoteWorkerPool};

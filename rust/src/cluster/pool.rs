@@ -66,6 +66,47 @@ pub struct WindowDone {
     pub outcome: Result<WindowOutcome>,
 }
 
+/// The coordinator's view of a set of workers — whatever carries the
+/// [`WorkerCmd`] / [`WindowDone`] protocol.  Two transports exist:
+/// [`WorkerPool`] (per-worker OS threads + mpsc, this module) and
+/// [`RemoteWorkerPool`](super::remote::RemoteWorkerPool) (per-pod
+/// `TcpStream`s, the paper's §5 StatefulSet topology).  The coordinator's
+/// pooled backend is written against this trait, so the dispatch and
+/// completion paths are byte-for-byte the same code whichever side of the
+/// network boundary the engines live on.
+pub trait WorkerTransport: Send {
+    fn workers(&self) -> usize;
+
+    /// The engine's `max_batch`, captured at spawn/registration.
+    fn max_batch(&self, worker: usize) -> usize;
+
+    /// The engine's `describe()`, captured at spawn/registration.
+    fn describe(&self, worker: usize) -> &str;
+
+    /// Send a command to one worker.  Errs if the worker is gone.
+    fn send(&self, worker: usize, cmd: WorkerCmd) -> Result<()>;
+
+    /// Non-blocking drain of the next completed window, if any.
+    fn try_recv_done(&self) -> Option<WindowDone>;
+
+    /// Blocking drain with a timeout.
+    fn recv_done_timeout(&self, timeout: Duration) -> Option<WindowDone>;
+
+    /// Whether the worker can still answer commands.
+    fn worker_alive(&self, worker: usize) -> bool;
+
+    /// Whether a lost worker is *guaranteed* to surface as a synthesized
+    /// error [`WindowDone`] for its in-flight window.  A transport that
+    /// answers `true` (the TCP pool: its connection reader synthesizes the
+    /// reply on disconnect) lets the coordinator wait for that reply and
+    /// roll back cleanly; one that answers `false` (this thread pool: a
+    /// panicked worker thread just vanishes) makes the coordinator fail
+    /// fast instead of idling forever.
+    fn synthesizes_disconnects(&self) -> bool {
+        false
+    }
+}
+
 struct WorkerHandle {
     /// `None` once shut down (closing the channel ends the worker loop)
     cmd_tx: Option<Sender<WorkerCmd>>,
@@ -134,14 +175,6 @@ impl WorkerPool {
             .map_err(|_| anyhow!("worker thread {worker} is gone"))
     }
 
-    /// Send one command (built per worker) to every worker.
-    pub fn broadcast(&self, mut make: impl FnMut() -> WorkerCmd) -> Result<()> {
-        for w in 0..self.workers.len() {
-            self.send(w, make())?;
-        }
-        Ok(())
-    }
-
     /// Non-blocking drain of the next completed window, if any.
     pub fn try_recv_done(&self) -> Option<WindowDone> {
         self.done_rx.try_recv().ok()
@@ -165,6 +198,36 @@ impl WorkerPool {
     }
 }
 
+impl WorkerTransport for WorkerPool {
+    fn workers(&self) -> usize {
+        WorkerPool::workers(self)
+    }
+
+    fn max_batch(&self, worker: usize) -> usize {
+        WorkerPool::max_batch(self, worker)
+    }
+
+    fn describe(&self, worker: usize) -> &str {
+        WorkerPool::describe(self, worker)
+    }
+
+    fn send(&self, worker: usize, cmd: WorkerCmd) -> Result<()> {
+        WorkerPool::send(self, worker, cmd)
+    }
+
+    fn try_recv_done(&self) -> Option<WindowDone> {
+        WorkerPool::try_recv_done(self)
+    }
+
+    fn recv_done_timeout(&self, timeout: Duration) -> Option<WindowDone> {
+        WorkerPool::recv_done_timeout(self, timeout)
+    }
+
+    fn worker_alive(&self, worker: usize) -> bool {
+        WorkerPool::worker_alive(self, worker)
+    }
+}
+
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         // close every command channel first so all workers wind down in
@@ -180,6 +243,34 @@ impl Drop for WorkerPool {
     }
 }
 
+/// The worker-side body of one [`WorkerCmd::RunWindow`]: admit the fresh
+/// sequences, install the victim order, execute the window.  Returns the
+/// fresh (attempted-admit) ids alongside the outcome so the reply always
+/// carries what a coordinator needs for partial-admit rollback.  Shared
+/// by the in-process pool threads, the TCP worker loop
+/// ([`run_worker`](super::remote::run_worker)), and test harnesses that
+/// emulate a pod by hand.
+pub fn run_cmd_window(engine: &mut dyn Engine, admits: Vec<SeqSpec>,
+                      priority_order: &[u64], batch: &[u64])
+                      -> (Vec<u64>, Result<WindowOutcome>) {
+    let fresh: Vec<u64> = admits.iter().map(|s| s.id).collect();
+    let mut admit_err = None;
+    for spec in admits {
+        if let Err(e) = engine.admit(spec) {
+            admit_err = Some(e);
+            break;
+        }
+    }
+    let outcome = match admit_err {
+        Some(e) => Err(e),
+        None => {
+            engine.set_priority_order(priority_order);
+            engine.run_window(batch)
+        }
+    };
+    (fresh, outcome)
+}
+
 /// Worker thread body: apply commands in order until the channel closes.
 fn worker_main(idx: usize, mut engine: Box<dyn Engine>,
                cmd_rx: Receiver<WorkerCmd>, done_tx: Sender<WindowDone>) {
@@ -188,21 +279,8 @@ fn worker_main(idx: usize, mut engine: Box<dyn Engine>,
             WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
             WorkerCmd::Remove(id) => engine.remove(id),
             WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
-                let fresh: Vec<u64> = admits.iter().map(|s| s.id).collect();
-                let mut admit_err = None;
-                for spec in admits {
-                    if let Err(e) = engine.admit(spec) {
-                        admit_err = Some(e);
-                        break;
-                    }
-                }
-                let outcome = match admit_err {
-                    Some(e) => Err(e),
-                    None => {
-                        engine.set_priority_order(&priority_order);
-                        engine.run_window(&batch)
-                    }
-                };
+                let (fresh, outcome) = run_cmd_window(engine.as_mut(), admits,
+                                                      &priority_order, &batch);
                 let done =
                     WindowDone { worker: idx, batch: echo, fresh, outcome };
                 if done_tx.send(done).is_err() {
@@ -241,7 +319,8 @@ mod tests {
     }
 
     fn spec(id: u64, total: usize) -> SeqSpec {
-        SeqSpec { id, prompt: vec![3; 8], target_total: total, topic: 0 }
+        SeqSpec { id, prompt: vec![3; 8], target_total: total, topic: 0,
+                  resume: Vec::new() }
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Distributed worker pods: the [`WorkerCmd`] / [`WindowDone`] protocol
+//! over TCP (paper §5 — the frontend scheduler Deployment fronting a
+//! StatefulSet of inference pods), `std`-only.
+//!
+//! Two halves:
+//!
+//! * **Coordinator side** — [`RemoteWorkerPool`]: the same surface as the
+//!   in-process [`WorkerPool`](super::pool::WorkerPool) (both implement
+//!   [`WorkerTransport`]), but each worker is a registered TCP connection
+//!   instead of an OS thread.  [`RemoteWorkerPool::accept`] waits for `n`
+//!   pods to register (versioned [`Hello`] handshake carrying engine
+//!   capabilities).  Per worker, a *writer thread* serializes commands in
+//!   dispatch order, and a *reader thread* feeds replies into the shared
+//!   completion channel the coordinator drains.
+//!
+//! * **Pod side** — [`run_worker`]: the engine loop behind
+//!   `elis worker --connect <addr>`: handshake, then apply command frames
+//!   in order (the same [`run_cmd_window`] body the thread pool runs) and
+//!   reply with one `WindowDone` frame per window.  Returns `Ok` when the
+//!   coordinator closes the connection (orderly shutdown / scale-down).
+//!
+//! **Failure semantics** — the part the in-process pool never needed.  A
+//! pod can vanish mid-window (OOM-kill, node loss, network partition).
+//! The writer and reader threads share one in-flight slot per worker:
+//! whichever side observes the broken connection first takes the slot and
+//! synthesizes an **error [`WindowDone`]** carrying the window's `batch`
+//! and `fresh` (attempted-admit) ids — exactly the reply shape an engine
+//! error produces — so the coordinator's existing rollback path returns
+//! the batch to the queue and wipes the partial admits, and its failover
+//! path re-homes the dead pod's jobs onto survivors.  The slot also
+//! guarantees *exactly one* reply per window: a genuine reply that lost
+//! the race against the synthesized error is dropped, never double-
+//! applied.  `worker_alive` reports the connection state, and
+//! `synthesizes_disconnects` tells the coordinator it may wait for the
+//! synthesized reply instead of failing fast.
+
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::job::JobId;
+use crate::engine::Engine;
+
+use super::pool::{run_cmd_window, WindowDone, WorkerCmd, WorkerTransport};
+use super::wire::{self, Hello, MAX_FRAME, WIRE_VERSION};
+
+/// How long a registering pod gets to complete the hello handshake.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The window currently awaiting a reply: `(echo batch, fresh admits)`.
+type InFlightWindow = Option<(Vec<JobId>, Vec<u64>)>;
+
+/// State shared between one worker's writer and reader threads.
+struct Shared {
+    alive: AtomicBool,
+    /// Taking this slot is the exclusive right to answer the in-flight
+    /// window — either with the pod's genuine reply or with a synthesized
+    /// disconnect error — so exactly one `WindowDone` per `RunWindow`
+    /// reaches the coordinator whatever order the connection dies in.
+    in_flight: Mutex<InFlightWindow>,
+}
+
+struct RemoteWorker {
+    /// `None` once shut down (closing the channel ends the writer loop)
+    cmd_tx: Option<Sender<WorkerCmd>>,
+    shared: Arc<Shared>,
+    /// kept for shutdown: closing both directions unblocks the reader
+    stream: TcpStream,
+    max_batch: usize,
+    describe: String,
+    peer: String,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// Owns the registered pod connections and the shared completion channel
+/// — [`WorkerPool`](super::pool::WorkerPool)'s surface, over TCP.
+pub struct RemoteWorkerPool {
+    workers: Vec<RemoteWorker>,
+    done_rx: Receiver<WindowDone>,
+}
+
+impl RemoteWorkerPool {
+    /// Accept `n` pod registrations off `listener` (hello handshake,
+    /// version check, capability capture), erring if they have not all
+    /// registered within `timeout`.  Registration order assigns worker
+    /// indices.  A connection that fails its handshake is logged and
+    /// dropped without consuming a slot, so a port-scanner's probe cannot
+    /// poison the pool.
+    pub fn accept(listener: &TcpListener, n: usize, timeout: Duration)
+                  -> Result<RemoteWorkerPool> {
+        listener
+            .set_nonblocking(true)
+            .context("setting the worker listener non-blocking")?;
+        let deadline = Instant::now() + timeout;
+        let (done_tx, done_rx) = channel();
+        let mut workers: Vec<RemoteWorker> = Vec::with_capacity(n);
+        while workers.len() < n {
+            match listener.accept() {
+                Ok((stream, peer)) => {
+                    let idx = workers.len();
+                    match register(stream, idx, peer.to_string(),
+                                   done_tx.clone()) {
+                        Ok(w) => workers.push(w),
+                        Err(e) => eprintln!(
+                            "rejected worker registration from {peer}: {e:#}"
+                        ),
+                    }
+                }
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                {
+                    if Instant::now() >= deadline {
+                        bail!("timed out waiting for worker pods: {}/{} \
+                               registered", workers.len(), n);
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    return Err(e).context("accepting a worker registration")
+                }
+            }
+        }
+        listener.set_nonblocking(false).ok();
+        Ok(RemoteWorkerPool { workers, done_rx })
+    }
+
+    /// The registered pod's peer address (logs / `/metrics` labels).
+    pub fn peer(&self, worker: usize) -> &str {
+        &self.workers[worker].peer
+    }
+}
+
+impl WorkerTransport for RemoteWorkerPool {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn max_batch(&self, worker: usize) -> usize {
+        self.workers[worker].max_batch
+    }
+
+    fn describe(&self, worker: usize) -> &str {
+        &self.workers[worker].describe
+    }
+
+    fn send(&self, worker: usize, cmd: WorkerCmd) -> Result<()> {
+        let w = &self.workers[worker];
+        if !w.shared.alive.load(Ordering::SeqCst) {
+            bail!("worker {worker} ({}) connection is gone", w.peer);
+        }
+        w.cmd_tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("worker {worker} already shut down"))?
+            .send(cmd)
+            .map_err(|_| anyhow!("worker {worker} writer is gone"))
+    }
+
+    fn try_recv_done(&self) -> Option<WindowDone> {
+        self.done_rx.try_recv().ok()
+    }
+
+    fn recv_done_timeout(&self, timeout: Duration) -> Option<WindowDone> {
+        self.done_rx.recv_timeout(timeout).ok()
+    }
+
+    fn worker_alive(&self, worker: usize) -> bool {
+        self.workers[worker].shared.alive.load(Ordering::SeqCst)
+    }
+
+    fn synthesizes_disconnects(&self) -> bool {
+        true
+    }
+}
+
+impl Drop for RemoteWorkerPool {
+    fn drop(&mut self) {
+        // close every command channel and socket first so all workers
+        // wind down in parallel, then join
+        for w in &mut self.workers {
+            w.cmd_tx = None;
+            let _ = w.stream.shutdown(Shutdown::Both);
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.writer.take() {
+                let _ = join.join();
+            }
+            if let Some(join) = w.reader.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+/// Handshake one accepted connection and spawn its writer/reader threads.
+fn register(stream: TcpStream, idx: usize, peer: String,
+            done_tx: Sender<WindowDone>) -> Result<RemoteWorker> {
+    // the accepted socket may inherit the listener's non-blocking mode on
+    // some platforms; command I/O wants plain blocking semantics
+    stream.set_nonblocking(false).context("clearing non-blocking")?;
+    stream.set_nodelay(true).ok(); // windows are latency-sensitive
+    stream
+        .set_read_timeout(Some(HANDSHAKE_TIMEOUT))
+        .context("setting the handshake timeout")?;
+    let mut hs = stream.try_clone().context("cloning for handshake")?;
+    let hello = wire::server_handshake(&mut hs, idx)?;
+    stream.set_read_timeout(None).context("clearing the read timeout")?;
+
+    let shared = Arc::new(Shared {
+        alive: AtomicBool::new(true),
+        in_flight: Mutex::new(None),
+    });
+    let (cmd_tx, cmd_rx) = channel::<WorkerCmd>();
+    let write_stream = stream.try_clone().context("cloning for writer")?;
+    let read_stream = stream.try_clone().context("cloning for reader")?;
+    let writer = std::thread::Builder::new()
+        .name(format!("elis-remote-tx-{idx}"))
+        .spawn({
+            let shared = shared.clone();
+            let done_tx = done_tx.clone();
+            move || writer_main(idx, write_stream, cmd_rx, shared, done_tx)
+        })
+        .context("spawning the writer thread")?;
+    let reader = std::thread::Builder::new()
+        .name(format!("elis-remote-rx-{idx}"))
+        .spawn({
+            let shared = shared.clone();
+            move || reader_main(idx, read_stream, shared, done_tx)
+        })
+        .context("spawning the reader thread")?;
+
+    Ok(RemoteWorker {
+        cmd_tx: Some(cmd_tx),
+        shared,
+        stream,
+        max_batch: hello.max_batch.max(1),
+        describe: hello.describe,
+        peer,
+        writer: Some(writer),
+        reader: Some(reader),
+    })
+}
+
+/// Take the worker's in-flight slot and synthesize the disconnect reply,
+/// if the slot was still unanswered.  Called by whichever of the two
+/// connection threads notices the break first; the `Mutex` take makes it
+/// fire at most once per window.
+fn synthesize_disconnect(idx: usize, shared: &Shared,
+                         done_tx: &Sender<WindowDone>, what: &str) {
+    let slot = shared.in_flight.lock().unwrap().take();
+    if let Some((batch, fresh)) = slot {
+        let _ = done_tx.send(WindowDone {
+            worker: idx,
+            batch,
+            fresh,
+            outcome: Err(anyhow!(
+                "worker {idx} connection lost {what} with a window in flight"
+            )),
+        });
+    }
+}
+
+/// Writer thread: serialize commands in dispatch order.  Records every
+/// `RunWindow` in the shared in-flight slot *before* writing, so a
+/// connection cut between "command left the coordinator" and "reply
+/// arrived" is always covered by a synthesized error reply.
+fn writer_main(idx: usize, stream: TcpStream, cmd_rx: Receiver<WorkerCmd>,
+               shared: Arc<Shared>, done_tx: Sender<WindowDone>) {
+    let mut w = BufWriter::new(stream);
+    while let Ok(cmd) = cmd_rx.recv() {
+        if let WorkerCmd::RunWindow { admits, echo, .. } = &cmd {
+            let fresh: Vec<u64> = admits.iter().map(|s| s.id).collect();
+            *shared.in_flight.lock().unwrap() = Some((echo.clone(), fresh));
+        }
+        // Liveness re-check *after* recording the slot: the reader's
+        // exit path (alive=false, then take-and-synthesize) may have run
+        // while this command sat in the channel — and a first write
+        // after peer death often "succeeds" into the socket buffer, so
+        // the write error below cannot be relied on to catch it.  In
+        // every interleaving exactly one side wins the Mutex take: if
+        // the reader stored `false` before our load, we synthesize from
+        // the just-recorded slot; otherwise the reader's take (which
+        // happens after its store) finds the slot and synthesizes.
+        if !shared.alive.load(Ordering::SeqCst) {
+            synthesize_disconnect(idx, &shared, &done_tx, "while sending");
+            return;
+        }
+        let payload = wire::encode_cmd(&cmd).to_string();
+        let sent = wire::write_frame(&mut w, payload.as_bytes())
+            .and_then(|()| w.flush().context("flushing a command frame"));
+        if sent.is_err() {
+            shared.alive.store(false, Ordering::SeqCst);
+            synthesize_disconnect(idx, &shared, &done_tx, "while sending");
+            return;
+        }
+    }
+}
+
+/// Reader thread: decode replies off the connection and forward them on
+/// the shared completion channel.  A reply only forwards if it can claim
+/// the in-flight slot (see [`synthesize_disconnect`] for the race it
+/// guards).  EOF, a cut connection, or a protocol error all end the loop
+/// and synthesize the disconnect reply for any still-open window.
+fn reader_main(idx: usize, stream: TcpStream, shared: Arc<Shared>,
+               done_tx: Sender<WindowDone>) {
+    let mut r = BufReader::new(stream);
+    loop {
+        let payload = match wire::read_frame(&mut r, MAX_FRAME) {
+            Ok(Some(p)) => p,
+            Ok(None) | Err(_) => break,
+        };
+        match wire::decode_done(&payload, idx) {
+            Ok(done) => {
+                let claimed =
+                    shared.in_flight.lock().unwrap().take().is_some();
+                // an unclaimed reply lost the race against a synthesized
+                // disconnect error: the coordinator already rolled the
+                // window back, so applying it too would double-count
+                if claimed && done_tx.send(done).is_err() {
+                    return; // pool dropped
+                }
+            }
+            Err(_) => break, // protocol violation: treat as a disconnect
+        }
+    }
+    shared.alive.store(false, Ordering::SeqCst);
+    synthesize_disconnect(idx, &shared, &done_tx, "before replying");
+}
+
+// ---------------------------------------------------------------------------
+// pod side
+// ---------------------------------------------------------------------------
+
+/// The backend-pod half: run `engine` as a remote worker over `stream`.
+/// Performs the hello handshake (announcing the engine's capabilities),
+/// then applies command frames in order — the same
+/// [`run_cmd_window`] body the in-process pool threads execute — replying
+/// with exactly one `WindowDone` frame per window.  Returns `Ok(())` when
+/// the coordinator closes the connection cleanly; errs on a version
+/// mismatch, a cut connection, or a malformed frame.
+///
+/// This is what `elis worker --connect <addr> --engine sim` runs.
+pub fn run_worker(stream: TcpStream, mut engine: Box<dyn Engine>)
+                  -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let hello = Hello {
+        version: WIRE_VERSION,
+        max_batch: engine.max_batch(),
+        describe: engine.describe(),
+    };
+    let mut hs = stream.try_clone().context("cloning for handshake")?;
+    hs.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
+    let ack = wire::client_handshake(&mut hs, &hello)?;
+    hs.set_read_timeout(None).ok();
+    let worker = ack.worker;
+
+    let mut reader =
+        BufReader::new(stream.try_clone().context("cloning the reader")?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let payload = match wire::read_frame(&mut reader, MAX_FRAME)? {
+            Some(p) => p,
+            None => return Ok(()), // orderly coordinator shutdown
+        };
+        match wire::decode_cmd(&payload)? {
+            WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
+            WorkerCmd::Remove(id) => engine.remove(id),
+            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+                let (fresh, outcome) = run_cmd_window(
+                    engine.as_mut(), admits, &priority_order, &batch);
+                let reply = wire::encode_done(&echo, &fresh, &outcome)
+                    .to_string();
+                wire::write_frame(&mut writer, reply.as_bytes())
+                    .with_context(|| format!(
+                        "worker {worker}: sending a window reply"))?;
+                writer.flush().context("flushing a window reply")?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::profiles::ModelProfile;
+    use crate::engine::sim_engine::SimEngine;
+    use crate::engine::SeqSpec;
+    use crate::runtime::manifest::ServedModelMeta;
+
+    fn sim_engine() -> Box<dyn Engine> {
+        let profile = ModelProfile::from_meta(&ServedModelMeta {
+            name: "test".into(),
+            abbrev: "test".into(),
+            params_b: 7.0,
+            avg_latency_ms: 2000.0,
+            kv_bytes_per_token: 1 << 20,
+            preempt_batch: 0,
+            mem_limit_frac: 0.9,
+        });
+        Box::new(SimEngine::new(profile, 50, 4, 8 << 30))
+    }
+
+    fn spec(id: u64, total: usize) -> SeqSpec {
+        SeqSpec { id, prompt: vec![3; 8], target_total: total, topic: 0,
+                  resume: Vec::new() }
+    }
+
+    #[test]
+    fn remote_pool_runs_windows_over_loopback() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pods: Vec<_> = (0..2)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let stream = TcpStream::connect(addr).unwrap();
+                    run_worker(stream, sim_engine()).unwrap();
+                })
+            })
+            .collect();
+        let pool = RemoteWorkerPool::accept(&listener, 2,
+                                            Duration::from_secs(10))
+            .unwrap();
+        assert_eq!(WorkerTransport::workers(&pool), 2);
+        assert_eq!(WorkerTransport::max_batch(&pool, 0), 4);
+        assert!(WorkerTransport::describe(&pool, 1).contains("SimEngine"),
+                "{}", WorkerTransport::describe(&pool, 1));
+        assert!(pool.worker_alive(0) && pool.worker_alive(1));
+
+        for w in 0..2u64 {
+            pool.send(w as usize, WorkerCmd::RunWindow {
+                admits: vec![spec(w, 30)],
+                priority_order: vec![w],
+                batch: vec![w],
+                echo: vec![JobId::from_raw(w)],
+            }).unwrap();
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..2 {
+            let done = pool
+                .recv_done_timeout(Duration::from_secs(10))
+                .expect("window must complete over the wire");
+            let outcome = done.outcome.expect("window must succeed");
+            assert_eq!(done.batch.len(), 1);
+            assert_eq!(done.batch[0].raw(), done.worker as u64);
+            assert_eq!(outcome.outputs.len(), 1);
+            assert!(!outcome.outputs[0].new_tokens.is_empty());
+            seen.insert(done.worker);
+        }
+        assert_eq!(seen.len(), 2, "both pods must have answered");
+        assert!(pool.try_recv_done().is_none(),
+                "exactly one reply per window");
+
+        drop(pool); // closes the connections -> pods exit cleanly
+        for pod in pods {
+            pod.join().expect("pod thread must exit without error");
+        }
+    }
+
+    #[test]
+    fn mid_window_disconnect_synthesizes_an_error_reply() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // a pod that registers, then drops the connection on its first
+        // RunWindow without ever replying
+        let pod = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let hello = Hello { version: WIRE_VERSION, max_batch: 1,
+                                describe: "Vanishing".into() };
+            wire::client_handshake(&mut stream, &hello).unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            loop {
+                let payload =
+                    wire::read_frame(&mut r, MAX_FRAME).unwrap().unwrap();
+                if let WorkerCmd::RunWindow { .. } =
+                    wire::decode_cmd(&payload).unwrap()
+                {
+                    stream.shutdown(Shutdown::Both).unwrap();
+                    return;
+                }
+            }
+        });
+        let pool = RemoteWorkerPool::accept(&listener, 1,
+                                            Duration::from_secs(10))
+            .unwrap();
+        pool.send(0, WorkerCmd::SetPreemptionCap(2)).unwrap();
+        pool.send(0, WorkerCmd::RunWindow {
+            admits: vec![spec(9, 30)],
+            priority_order: vec![9],
+            batch: vec![9],
+            echo: vec![JobId::from_raw(9)],
+        }).unwrap();
+        let done = pool
+            .recv_done_timeout(Duration::from_secs(10))
+            .expect("the disconnect must synthesize a reply");
+        assert_eq!(done.worker, 0);
+        assert_eq!(done.batch, vec![JobId::from_raw(9)]);
+        assert_eq!(done.fresh, vec![9], "rollback needs the admit list");
+        let err = done.outcome.expect_err("must be an error reply");
+        assert!(err.to_string().contains("connection lost"), "{err:#}");
+        // eventually observed dead; exactly one reply total
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while pool.worker_alive(0) {
+            assert!(Instant::now() < deadline, "worker must read as dead");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(pool.try_recv_done().is_none());
+        assert!(pool.send(0, WorkerCmd::Remove(9)).is_err(),
+                "sends to a dead worker must err");
+        pod.join().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_refused_at_registration() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let pod = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let hello = Hello { version: WIRE_VERSION + 7, max_batch: 1,
+                                describe: "OldPod".into() };
+            // the coordinator acks with its own version, then hangs up;
+            // client_handshake reports the mismatch
+            wire::client_handshake(&mut stream, &hello)
+                .expect_err("mismatch must fail the worker side too")
+        });
+        let err = RemoteWorkerPool::accept(&listener, 1,
+                                           Duration::from_millis(600))
+            .expect_err("a lone bad registration cannot fill the pool");
+        assert!(err.to_string().contains("0/1"), "{err:#}");
+        let worker_err = pod.join().unwrap();
+        assert!(worker_err.to_string().contains("version"), "{worker_err:#}");
+    }
+}

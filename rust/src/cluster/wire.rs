@@ -1,0 +1,671 @@
+//! Wire protocol for distributed worker pods — the `WorkerCmd` /
+//! `WindowDone` channel of [`pool`](super::pool), put on a `TcpStream`.
+//!
+//! The paper deploys the backend engines as a StatefulSet of inference
+//! pods behind the frontend scheduler (§5); this module is the protocol
+//! between them, dependency-free and `std`-only:
+//!
+//! * **Framing** — every message is a 4-byte big-endian length prefix
+//!   followed by that many bytes of UTF-8 JSON ([`write_frame`] /
+//!   [`read_frame`]).  Frames above [`MAX_FRAME`] are rejected *before*
+//!   any allocation, truncated frames surface as errors (never panics),
+//!   and a clean EOF at a frame boundary reads as `None` so worker loops
+//!   can tell an orderly coordinator shutdown from a mid-frame cut.
+//! * **Handshake** — the worker opens with a [`Hello`] carrying the
+//!   protocol [`WIRE_VERSION`] and its engine capabilities (`max_batch`,
+//!   `describe`); the coordinator answers with a [`HelloAck`] assigning
+//!   the worker index.  Version mismatches fail the registration on both
+//!   sides ([`client_handshake`] / [`server_handshake`]).
+//! * **Codec** — [`encode_cmd`]/[`decode_cmd`] for coordinator→worker
+//!   commands ([`WorkerCmd::RunWindow`] bundles with admits, victim
+//!   order, batch, and echo ids) and [`encode_done`]/[`decode_done`] for
+//!   worker→coordinator replies, including error spills: an errored
+//!   window travels as `{"err": "..."}` next to the `fresh` admit list so
+//!   the coordinator can roll back partial admits exactly as it does for
+//!   the in-process pool.
+//!
+//! Serialization is canonical (object keys are sorted by the JSON
+//! writer), so encode→decode→encode is byte-identical — property-tested
+//! below.  Ids ride as JSON numbers; the slab-allocated `JobId`/engine
+//! ids stay far below the 2^53 integer-exactness bound of `f64`.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::job::JobId;
+use crate::engine::{SeqSpec, SeqWindowOut, WindowOutcome};
+use crate::util::json::Json;
+
+use super::pool::{WindowDone, WorkerCmd};
+
+/// Protocol version carried in the hello; bumped on any frame or codec
+/// change so mixed deployments fail registration loudly instead of
+/// mis-parsing windows.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Hard cap on one frame's payload (64 MiB — a full `RunWindow` bundle
+/// with book-length prompts stays well under this).
+pub const MAX_FRAME: usize = 64 << 20;
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+/// Write one length-prefixed frame.  The caller flushes (frames are
+/// usually written through a `BufWriter`).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        bail!("frame of {} bytes exceeds MAX_FRAME {}", payload.len(),
+              MAX_FRAME);
+    }
+    w.write_all(&(payload.len() as u32).to_be_bytes())
+        .context("writing frame length")?;
+    w.write_all(payload).context("writing frame payload")?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame.  Returns `Ok(None)` on a clean EOF at
+/// a frame boundary (the peer closed in an orderly way); errs on a
+/// truncated prefix/payload or a length above `max_frame` — the length is
+/// validated *before* the payload buffer is allocated, so an adversarial
+/// prefix cannot balloon memory.
+pub fn read_frame(r: &mut impl Read, max_frame: usize)
+                  -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    // first byte by hand: a clean EOF here is a normal shutdown, an EOF
+    // anywhere later is a cut connection
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).context("reading frame length"),
+        }
+    }
+    len_buf[0] = first[0];
+    r.read_exact(&mut len_buf[1..]).context("reading frame length")?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > max_frame {
+        bail!("frame of {len} bytes exceeds the {max_frame} byte cap");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------------
+// decode helpers (strict: malformed frames become errors, never panics)
+// ---------------------------------------------------------------------------
+
+fn field<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("missing field '{key}'"))
+}
+
+fn as_u64(j: &Json) -> Result<u64> {
+    match j.as_f64() {
+        Some(f) if f >= 0.0 && f.fract() == 0.0 && f < 9.0e15 => Ok(f as u64),
+        _ => bail!("expected a non-negative integer, got {j}"),
+    }
+}
+
+fn u64_field(j: &Json, key: &str) -> Result<u64> {
+    as_u64(field(j, key)?)
+}
+
+fn u64_vec(j: &Json, key: &str) -> Result<Vec<u64>> {
+    field(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("field '{key}' must be an array"))?
+        .iter()
+        .map(as_u64)
+        .collect()
+}
+
+fn i32_vec(j: &Json, key: &str) -> Result<Vec<i32>> {
+    field(j, key)?
+        .as_i32_vec()
+        .ok_or_else(|| anyhow!("field '{key}' must be an array of numbers"))
+}
+
+fn str_field<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    field(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' must be a string"))
+}
+
+fn msg_type(j: &Json) -> Result<&str> {
+    str_field(j, "type")
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn num_u64(n: u64) -> Json {
+    Json::Num(n as f64)
+}
+
+fn u64_arr(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| num_u64(x)).collect())
+}
+
+fn i32_arr(v: &[i32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+// ---------------------------------------------------------------------------
+// handshake
+// ---------------------------------------------------------------------------
+
+/// First frame on a fresh connection, worker → coordinator: protocol
+/// version plus the engine capabilities the coordinator's batcher needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    pub version: u32,
+    /// the engine's `max_batch()` — bounds the windows the coordinator
+    /// will form for this pod
+    pub max_batch: usize,
+    /// the engine's `describe()` — logs and `/metrics` labels
+    pub describe: String,
+}
+
+/// Coordinator's reply to a [`Hello`]: the version it speaks and the
+/// worker index it assigned this pod.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HelloAck {
+    pub version: u32,
+    pub worker: usize,
+}
+
+pub fn encode_hello(h: &Hello) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("hello".into())),
+        ("version", num(h.version as usize)),
+        ("max_batch", num(h.max_batch)),
+        ("describe", Json::Str(h.describe.clone())),
+    ])
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
+    let j = parse_payload(payload)?;
+    if msg_type(&j)? != "hello" {
+        bail!("expected a hello frame, got '{}'", msg_type(&j)?);
+    }
+    Ok(Hello {
+        version: u64_field(&j, "version")? as u32,
+        max_batch: u64_field(&j, "max_batch")? as usize,
+        describe: str_field(&j, "describe")?.to_string(),
+    })
+}
+
+pub fn encode_hello_ack(a: &HelloAck) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("hello_ack".into())),
+        ("version", num(a.version as usize)),
+        ("worker", num(a.worker)),
+    ])
+}
+
+pub fn decode_hello_ack(payload: &[u8]) -> Result<HelloAck> {
+    let j = parse_payload(payload)?;
+    if msg_type(&j)? != "hello_ack" {
+        bail!("expected a hello_ack frame, got '{}'", msg_type(&j)?);
+    }
+    Ok(HelloAck {
+        version: u64_field(&j, "version")? as u32,
+        worker: u64_field(&j, "worker")? as usize,
+    })
+}
+
+/// Worker side of the handshake: send the hello, await the ack, verify
+/// the version.  Run this immediately after `TcpStream::connect`.
+pub fn client_handshake<S: Read + Write>(stream: &mut S, hello: &Hello)
+                                         -> Result<HelloAck> {
+    write_frame(stream, encode_hello(hello).to_string().as_bytes())?;
+    stream.flush().context("flushing hello")?;
+    let payload = read_frame(stream, MAX_FRAME)?
+        .ok_or_else(|| anyhow!("coordinator closed during handshake"))?;
+    let ack = decode_hello_ack(&payload)?;
+    if ack.version != hello.version {
+        bail!("protocol version mismatch: worker speaks {}, coordinator {}",
+              hello.version, ack.version);
+    }
+    Ok(ack)
+}
+
+/// Coordinator side of the handshake: read the worker's hello, verify
+/// the version, assign it `worker` and ack.  Returns the hello so the
+/// pool can record the pod's capabilities.
+pub fn server_handshake<S: Read + Write>(stream: &mut S, worker: usize)
+                                         -> Result<Hello> {
+    let payload = read_frame(stream, MAX_FRAME)?
+        .ok_or_else(|| anyhow!("worker closed during handshake"))?;
+    let hello = decode_hello(&payload)?;
+    if hello.version != WIRE_VERSION {
+        // answer with our version anyway so the worker reports the
+        // mismatch symmetrically, then refuse the registration
+        let ack = HelloAck { version: WIRE_VERSION, worker };
+        let _ = write_frame(stream, encode_hello_ack(&ack).to_string()
+                            .as_bytes());
+        let _ = stream.flush();
+        bail!("protocol version mismatch: worker speaks {}, this \
+               coordinator {}", hello.version, WIRE_VERSION);
+    }
+    let ack = HelloAck { version: WIRE_VERSION, worker };
+    write_frame(stream, encode_hello_ack(&ack).to_string().as_bytes())?;
+    stream.flush().context("flushing hello ack")?;
+    Ok(hello)
+}
+
+// ---------------------------------------------------------------------------
+// commands (coordinator -> worker)
+// ---------------------------------------------------------------------------
+
+fn encode_seq_spec(s: &SeqSpec) -> Json {
+    Json::obj(vec![
+        ("id", num_u64(s.id)),
+        ("prompt", i32_arr(&s.prompt)),
+        ("target_total", num(s.target_total)),
+        ("topic", num(s.topic)),
+        ("resume", i32_arr(&s.resume)),
+    ])
+}
+
+fn decode_seq_spec(j: &Json) -> Result<SeqSpec> {
+    Ok(SeqSpec {
+        id: u64_field(j, "id")?,
+        prompt: i32_vec(j, "prompt")?,
+        target_total: u64_field(j, "target_total")? as usize,
+        topic: u64_field(j, "topic")? as usize,
+        resume: i32_vec(j, "resume")?,
+    })
+}
+
+pub fn encode_cmd(cmd: &WorkerCmd) -> Json {
+    match cmd {
+        WorkerCmd::SetPreemptionCap(cap) => Json::obj(vec![
+            ("type", Json::Str("set_preemption_cap".into())),
+            ("cap", num(*cap)),
+        ]),
+        WorkerCmd::Remove(id) => Json::obj(vec![
+            ("type", Json::Str("remove".into())),
+            ("id", num_u64(*id)),
+        ]),
+        WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+            Json::obj(vec![
+                ("type", Json::Str("run_window".into())),
+                ("admits",
+                 Json::Arr(admits.iter().map(encode_seq_spec).collect())),
+                ("priority_order", u64_arr(priority_order)),
+                ("batch", u64_arr(batch)),
+                ("echo",
+                 Json::Arr(echo.iter()
+                           .map(|id| num_u64(id.raw()))
+                           .collect())),
+            ])
+        }
+    }
+}
+
+pub fn decode_cmd(payload: &[u8]) -> Result<WorkerCmd> {
+    let j = parse_payload(payload)?;
+    match msg_type(&j)? {
+        "set_preemption_cap" => {
+            Ok(WorkerCmd::SetPreemptionCap(u64_field(&j, "cap")? as usize))
+        }
+        "remove" => Ok(WorkerCmd::Remove(u64_field(&j, "id")?)),
+        "run_window" => {
+            let admits = field(&j, "admits")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("'admits' must be an array"))?
+                .iter()
+                .map(decode_seq_spec)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(WorkerCmd::RunWindow {
+                admits,
+                priority_order: u64_vec(&j, "priority_order")?,
+                batch: u64_vec(&j, "batch")?,
+                echo: u64_vec(&j, "echo")?
+                    .into_iter()
+                    .map(JobId::from_raw)
+                    .collect(),
+            })
+        }
+        other => bail!("unknown command type '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replies (worker -> coordinator)
+// ---------------------------------------------------------------------------
+
+fn encode_outcome(o: &WindowOutcome) -> Json {
+    Json::obj(vec![
+        ("outputs", Json::Arr(o.outputs.iter().map(|out| Json::obj(vec![
+            ("id", num_u64(out.id)),
+            ("new_tokens", i32_arr(&out.new_tokens)),
+            ("done", Json::Bool(out.done)),
+        ])).collect())),
+        ("service_ms", Json::Num(o.service_ms)),
+        ("preempted", u64_arr(&o.preempted)),
+    ])
+}
+
+fn decode_outcome(j: &Json) -> Result<WindowOutcome> {
+    let outputs = field(j, "outputs")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'outputs' must be an array"))?
+        .iter()
+        .map(|out| {
+            Ok(SeqWindowOut {
+                id: u64_field(out, "id")?,
+                new_tokens: i32_vec(out, "new_tokens")?,
+                done: field(out, "done")?
+                    .as_bool()
+                    .ok_or_else(|| anyhow!("'done' must be a bool"))?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let service_ms = field(j, "service_ms")?
+        .as_f64()
+        .ok_or_else(|| anyhow!("'service_ms' must be a number"))?;
+    Ok(WindowOutcome { outputs, service_ms, preempted: u64_vec(j, "preempted")? })
+}
+
+/// Encode one window reply.  An `Err` outcome travels as its rendered
+/// message — the coordinator needs the text for its error, and the
+/// `fresh` list next to it is what drives partial-admit rollback.
+pub fn encode_done(batch: &[JobId], fresh: &[u64],
+                   outcome: &Result<WindowOutcome>) -> Json {
+    let mut pairs = vec![
+        ("type", Json::Str("window_done".into())),
+        ("batch",
+         Json::Arr(batch.iter().map(|id| num_u64(id.raw())).collect())),
+        ("fresh", u64_arr(fresh)),
+    ];
+    match outcome {
+        Ok(o) => pairs.push(("ok", encode_outcome(o))),
+        Err(e) => pairs.push(("err", Json::Str(format!("{e:#}")))),
+    }
+    Json::obj(pairs)
+}
+
+/// Decode one window reply into the pool's [`WindowDone`] shape.
+/// `worker` is the receiving connection's index — it never travels on
+/// the wire (the socket identifies the pod).
+pub fn decode_done(payload: &[u8], worker: usize) -> Result<WindowDone> {
+    let j = parse_payload(payload)?;
+    if msg_type(&j)? != "window_done" {
+        bail!("expected a window_done frame, got '{}'", msg_type(&j)?);
+    }
+    let batch = u64_vec(&j, "batch")?
+        .into_iter()
+        .map(JobId::from_raw)
+        .collect();
+    let fresh = u64_vec(&j, "fresh")?;
+    let outcome = match (j.get("ok"), j.get("err")) {
+        (Some(ok), None) => Ok(decode_outcome(ok)?),
+        (None, Some(err)) => Err(anyhow!(
+            "{}",
+            err.as_str().ok_or_else(|| anyhow!("'err' must be a string"))?
+        )),
+        _ => bail!("window_done needs exactly one of 'ok' / 'err'"),
+    };
+    Ok(WindowDone { worker, batch, fresh, outcome })
+}
+
+fn parse_payload(payload: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(payload).context("frame is not UTF-8")?;
+    Json::parse(text).map_err(|e| anyhow!("frame is not valid JSON: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop;
+
+    // ---- property tests: random values roundtrip byte-identically -------
+
+    fn gen_u64(g: &mut prop::Gen) -> u64 {
+        // keep ids inside f64's exact-integer range (slab ids are tiny in
+        // practice; the codec documents the 2^53 bound)
+        g.rng.next_u64() >> 12
+    }
+
+    fn gen_i32_vec(g: &mut prop::Gen, max_len: usize) -> Vec<i32> {
+        let n = g.usize_in(0, max_len);
+        (0..n).map(|_| g.rng.int_range(-40000, 40000) as i32).collect()
+    }
+
+    fn gen_spec(g: &mut prop::Gen) -> SeqSpec {
+        SeqSpec {
+            id: gen_u64(g),
+            prompt: gen_i32_vec(g, 20),
+            target_total: g.usize_in(0, 5000),
+            topic: g.usize_in(0, 64),
+            resume: gen_i32_vec(g, 20),
+        }
+    }
+
+    fn gen_cmd(g: &mut prop::Gen) -> WorkerCmd {
+        match g.usize_in(0, 2) {
+            0 => WorkerCmd::SetPreemptionCap(g.usize_in(0, 1000)),
+            1 => WorkerCmd::Remove(gen_u64(g)),
+            _ => {
+                let admits =
+                    (0..g.usize_in(0, 5)).map(|_| gen_spec(g)).collect();
+                WorkerCmd::RunWindow {
+                    admits,
+                    priority_order: (0..g.usize_in(0, 8))
+                        .map(|_| gen_u64(g))
+                        .collect(),
+                    batch: (0..g.usize_in(0, 8))
+                        .map(|_| gen_u64(g))
+                        .collect(),
+                    echo: (0..g.usize_in(0, 8))
+                        .map(|_| JobId::from_raw(gen_u64(g)))
+                        .collect(),
+                }
+            }
+        }
+    }
+
+    // unicode-heavy strings for error spills / describe lines (tenant
+    // names and engine descriptions are user-controlled text)
+    fn gen_text(g: &mut prop::Gen) -> String {
+        let pieces = ["tenant-α", "模型", "naïve", "🚀", "a\"b\\c",
+                      "line\nbreak", "tab\tsep", "plain"];
+        let n = g.usize_in(1, 4);
+        (0..n).map(|_| *g.pick(&pieces)).collect::<Vec<_>>().join("/")
+    }
+
+    #[test]
+    fn prop_cmd_roundtrips_byte_identically() {
+        prop::check("wire-cmd-roundtrip", 200, |g| {
+            let cmd = gen_cmd(g);
+            let b1 = encode_cmd(&cmd).to_string();
+            let decoded = decode_cmd(b1.as_bytes()).expect("decode");
+            let b2 = encode_cmd(&decoded).to_string();
+            assert_eq!(b1, b2, "cmd roundtrip changed bytes");
+        });
+    }
+
+    #[test]
+    fn prop_done_roundtrips_byte_identically() {
+        prop::check("wire-done-roundtrip", 200, |g| {
+            let batch: Vec<JobId> = (0..g.usize_in(0, 6))
+                .map(|_| JobId::from_raw(gen_u64(g)))
+                .collect();
+            let fresh: Vec<u64> =
+                (0..g.usize_in(0, 6)).map(|_| gen_u64(g)).collect();
+            // half the cases are error spills (possibly unicode), half
+            // real outcomes (possibly empty batches/outputs)
+            let outcome: Result<WindowOutcome> = if g.bool(0.5) {
+                Err(anyhow!("{}", gen_text(g)))
+            } else {
+                Ok(WindowOutcome {
+                    outputs: (0..g.usize_in(0, 5))
+                        .map(|_| SeqWindowOut {
+                            id: gen_u64(g),
+                            new_tokens: gen_i32_vec(g, 10),
+                            done: g.bool(0.5),
+                        })
+                        .collect(),
+                    service_ms: g.f64_in(0.0, 1e6),
+                    preempted: (0..g.usize_in(0, 4))
+                        .map(|_| gen_u64(g))
+                        .collect(),
+                })
+            };
+            let b1 = encode_done(&batch, &fresh, &outcome).to_string();
+            let decoded = decode_done(b1.as_bytes(), 3).expect("decode");
+            assert_eq!(decoded.worker, 3);
+            let b2 = encode_done(&decoded.batch, &decoded.fresh,
+                                 &decoded.outcome).to_string();
+            assert_eq!(b1, b2, "done roundtrip changed bytes");
+        });
+    }
+
+    #[test]
+    fn prop_hello_roundtrips_with_unicode_describe() {
+        prop::check("wire-hello-roundtrip", 100, |g| {
+            let hello = Hello {
+                version: g.usize_in(0, 1000) as u32,
+                max_batch: g.usize_in(1, 256),
+                describe: gen_text(g),
+            };
+            let b1 = encode_hello(&hello).to_string();
+            let decoded = decode_hello(b1.as_bytes()).expect("decode");
+            assert_eq!(decoded, hello);
+            assert_eq!(encode_hello(&decoded).to_string(), b1);
+        });
+    }
+
+    // ---- framing: truncated / oversized / garbage are errors, not panics
+
+    #[test]
+    fn frame_roundtrip_and_clean_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, MAX_FRAME).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r, MAX_FRAME).unwrap().is_none(),
+                "clean EOF at a frame boundary must read as None");
+    }
+
+    #[test]
+    fn truncated_frames_error_without_panicking() {
+        // truncated length prefix
+        let mut r: &[u8] = &[0, 0, 1];
+        assert!(read_frame(&mut r, MAX_FRAME).is_err());
+        // truncated payload
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"truncate me").unwrap();
+        buf.truncate(buf.len() - 4);
+        let mut r = &buf[..];
+        assert!(read_frame(&mut r, MAX_FRAME).is_err());
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        // a 3 GiB claimed length must be refused by the cap check, not
+        // attempted
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(3u32 << 30).to_be_bytes());
+        buf.extend_from_slice(b"tiny");
+        let mut r = &buf[..];
+        let err = read_frame(&mut r, MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("cap"), "{err:#}");
+        // writer side refuses equally
+        let huge = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut Vec::new(), &huge).is_err());
+    }
+
+    #[test]
+    fn garbage_payloads_error_without_panicking() {
+        for bad in [&b"not json"[..], b"{\"type\":42}",
+                    b"{\"type\":\"nope\"}", b"{}", b"\xff\xfe",
+                    b"{\"type\":\"window_done\"}",
+                    b"{\"type\":\"window_done\",\"batch\":[],\"fresh\":[]}",
+                    b"{\"type\":\"run_window\",\"admits\":3}"] {
+            assert!(decode_cmd(bad).is_err(), "cmd {bad:?}");
+            assert!(decode_done(bad, 0).is_err(), "done {bad:?}");
+            assert!(decode_hello(bad).is_err(), "hello {bad:?}");
+        }
+        // ids outside f64's exact-integer range are refused, not rounded
+        let big = format!("{{\"type\":\"remove\",\"id\":{}}}", 1u64 << 60);
+        assert!(decode_cmd(big.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn handshake_agrees_over_an_in_memory_duplex() {
+        // two half-pipes emulate the socket
+        use std::collections::VecDeque;
+        use std::sync::{Arc, Mutex};
+
+        #[derive(Clone, Default)]
+        struct Pipe(Arc<Mutex<VecDeque<u8>>>);
+        impl Read for Pipe {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                let mut q = self.0.lock().unwrap();
+                let n = buf.len().min(q.len());
+                for b in buf.iter_mut().take(n) {
+                    *b = q.pop_front().unwrap();
+                }
+                Ok(n)
+            }
+        }
+        impl Write for Pipe {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        struct Duplex {
+            rx: Pipe,
+            tx: Pipe,
+        }
+        impl Read for Duplex {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.rx.read(buf)
+            }
+        }
+        impl Write for Duplex {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.tx.write(buf)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                self.tx.flush()
+            }
+        }
+
+        let (a, b) = (Pipe::default(), Pipe::default());
+        let mut worker = Duplex { rx: a.clone(), tx: b.clone() };
+        let mut coord = Duplex { rx: b, tx: a };
+
+        let hello = Hello { version: WIRE_VERSION, max_batch: 8,
+                            describe: "SimEngine[test]".into() };
+        // worker writes hello first; the in-memory pipes let us run the
+        // two halves sequentially
+        write_frame(&mut worker, encode_hello(&hello).to_string().as_bytes())
+            .unwrap();
+        let got = server_handshake(&mut coord, 5).unwrap();
+        assert_eq!(got, hello);
+        let ack_frame = read_frame(&mut worker, MAX_FRAME).unwrap().unwrap();
+        let ack = decode_hello_ack(&ack_frame).unwrap();
+        assert_eq!(ack, HelloAck { version: WIRE_VERSION, worker: 5 });
+
+        // version mismatch is refused server-side
+        let old = Hello { version: WIRE_VERSION + 1, ..hello };
+        write_frame(&mut worker, encode_hello(&old).to_string().as_bytes())
+            .unwrap();
+        assert!(server_handshake(&mut coord, 6).is_err());
+    }
+}

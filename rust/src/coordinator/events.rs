@@ -111,6 +111,14 @@ pub trait EventSink {
     /// The engine evicted a job's KV during the last window.
     fn on_job_preempted(&mut self, _job: JobId, _node: usize, _now_ms: f64) {}
 
+    /// A pooled/remote worker became unreachable: its window (if any) was
+    /// rolled back and `rehomed` of its jobs were re-balanced onto
+    /// surviving workers.  May fire again for the same `node` if late
+    /// spills surface after the first failover pass.
+    fn on_worker_lost(&mut self, _node: usize, _rehomed: usize,
+                      _now_ms: f64) {
+    }
+
     /// A scheduling window finished and all of its per-job events are
     /// known.  The default implementation dispatches each event to the
     /// matching per-event hook (in causal order) and then fires

@@ -85,22 +85,46 @@ impl LoadBalancer {
 
     /// Pick a node for a new job (Algorithm 1 `get_min_load`).
     pub fn assign(&mut self, state: &mut GlobalState) -> usize {
+        self.assign_excluding(state, &[])
+    }
+
+    /// Like [`assign`](Self::assign), but never picks a node marked
+    /// `true` in `dead` (missing entries count as alive) — the cluster
+    /// runtime's worker-loss failover re-homes jobs through this so a
+    /// lost pod stops receiving work.  With no dead nodes the decision —
+    /// including RNG consumption and round-robin state — is exactly
+    /// [`assign`](Self::assign)'s, so single-pool schedules are
+    /// unchanged.  Panics if every node is dead (callers bail before
+    /// that).
+    pub fn assign_excluding(&mut self, state: &mut GlobalState,
+                            dead: &[bool]) -> usize {
         let n = state.nodes();
         assert!(n > 0);
+        let alive = |i: usize| !dead.get(i).copied().unwrap_or(false);
+        assert!((0..n).any(alive), "no surviving node to assign to");
         let node = match self.strategy {
             LbStrategy::MinLoad => state
                 .active_jobs
                 .iter()
                 .enumerate()
+                .filter(|&(i, _)| alive(i))
                 .min_by_key(|(_, &c)| c)
                 .map(|(i, _)| i)
                 .unwrap(),
             LbStrategy::RoundRobin => {
-                let i = self.rr_next % n;
-                self.rr_next = (self.rr_next + 1) % n;
+                let mut i = self.rr_next % n;
+                while !alive(i) {
+                    i = (i + 1) % n;
+                }
+                self.rr_next = (i + 1) % n;
                 i
             }
-            LbStrategy::Random => self.rng.below(n as u64) as usize,
+            LbStrategy::Random => {
+                let alive_nodes: Vec<usize> =
+                    (0..n).filter(|&i| alive(i)).collect();
+                alive_nodes
+                    [self.rng.below(alive_nodes.len() as u64) as usize]
+            }
         };
         state.on_assign(node);
         node
@@ -163,6 +187,49 @@ mod tests {
                 assert!(n < nodes);
             }
         });
+    }
+
+    #[test]
+    fn excluding_skips_dead_nodes_for_every_strategy() {
+        // min-load: node 1 is the least loaded but dead -> next-least wins
+        let mut st = GlobalState::new(3);
+        st.active_jobs = vec![4, 1, 2];
+        let mut lb = LoadBalancer::new(LbStrategy::MinLoad, 1);
+        assert_eq!(lb.assign_excluding(&mut st, &[false, true, false]), 2);
+
+        // round-robin: dead nodes are stepped over, cycle continues after
+        let mut st = GlobalState::new(3);
+        let mut lb = LoadBalancer::new(LbStrategy::RoundRobin, 1);
+        let dead = [false, true, false];
+        let picks: Vec<usize> =
+            (0..4).map(|_| lb.assign_excluding(&mut st, &dead)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+
+        // random: never lands on a dead node
+        let mut st = GlobalState::new(4);
+        let mut lb = LoadBalancer::new(LbStrategy::Random, 9);
+        for _ in 0..100 {
+            let n = lb.assign_excluding(&mut st, &[true, false, true, false]);
+            assert!(n == 1 || n == 3, "picked dead node {n}");
+        }
+    }
+
+    #[test]
+    fn excluding_nothing_matches_assign_exactly() {
+        // the failover path must not perturb single-pool schedules: with
+        // no dead nodes the two entry points make identical decisions
+        // (including RNG draws and round-robin state)
+        for strategy in [LbStrategy::MinLoad, LbStrategy::RoundRobin,
+                         LbStrategy::Random] {
+            let mut st_a = GlobalState::new(5);
+            let mut st_b = GlobalState::new(5);
+            let mut lb_a = LoadBalancer::new(strategy, 33);
+            let mut lb_b = LoadBalancer::new(strategy, 33);
+            for _ in 0..50 {
+                assert_eq!(lb_a.assign(&mut st_a),
+                           lb_b.assign_excluding(&mut st_b, &[]));
+            }
+        }
     }
 
     #[test]

@@ -53,13 +53,23 @@
 //!   batch over an mpsc channel, and completions drain asynchronously, so
 //!   scheduling windows genuinely overlap across multi-worker configs
 //!   (the paper's one-vLLM-per-pod deployment, in-process).
+//! * **remote** ([`CoordinatorBuilder::build_remote`]) — the same pooled
+//!   code path over a [`WorkerTransport`] whose workers are TCP pod
+//!   connections ([`RemoteWorkerPool`], `elis worker --connect`): the
+//!   paper's §5 cross-machine StatefulSet topology.  Worker-loss
+//!   [`failover`](CoordinatorBuilder::failover) defaults on — a pod that
+//!   vanishes mid-window has the window rolled back (partial admits
+//!   wiped) and its jobs re-balanced onto survivors, resuming from the
+//!   tokens the coordinator already holds.
 
 use std::collections::HashSet;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::pool::{WindowDone, WorkerCmd, WorkerPool};
+use crate::cluster::pool::{WindowDone, WorkerCmd, WorkerPool,
+                           WorkerTransport};
+use crate::cluster::remote::RemoteWorkerPool;
 use crate::engine::{Engine, SeqSpec, WindowOutcome};
 use crate::metrics::{JobRecord, ServeReport};
 use crate::workload::TraceRequest;
@@ -181,10 +191,12 @@ fn job_meta(table: &JobTable, id: JobId) -> JobMeta<'_> {
 }
 
 /// Where the engines live: borrowed and driven inline on the calling
-/// thread, or owned by a [`WorkerPool`] with one OS thread per engine.
+/// thread, or behind a [`WorkerTransport`] — the in-process
+/// [`WorkerPool`] (one OS thread per engine) or the
+/// [`RemoteWorkerPool`] (one registered TCP pod connection per worker).
 enum Backend<'a> {
     Inline(&'a mut [Box<dyn Engine>]),
-    Pool(WorkerPool),
+    Pool(Box<dyn WorkerTransport>),
 }
 
 impl<'a> Backend<'a> {
@@ -215,6 +227,9 @@ pub struct CoordinatorBuilder {
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
     force_rebuild: bool,
+    /// worker-loss policy for pooled backends; `None` = the backend's
+    /// default (remote pools fail over, the in-process pool fails fast)
+    failover: Option<bool>,
 }
 
 impl CoordinatorBuilder {
@@ -295,6 +310,23 @@ impl CoordinatorBuilder {
         self
     }
 
+    /// Worker-loss policy for pooled backends.  With failover **on**, a
+    /// worker whose transport reports it gone is marked dead, its window
+    /// rolls back (partial admits wiped via the reply's `fresh` list),
+    /// and every job homed on it is re-balanced onto surviving workers —
+    /// partially-generated jobs resume where they left off (see
+    /// [`SeqSpec::resume`](crate::engine::SeqSpec)).  The run only fails
+    /// once *every* worker is lost.  With failover **off**, a lost worker
+    /// fails the run fast (the in-process pool's historical behaviour: a
+    /// worker thread only dies with the process's own engine panicking).
+    ///
+    /// Defaults per backend: [`build_remote`](Self::build_remote) → on,
+    /// [`build_pooled`](Self::build_pooled) → off.
+    pub fn failover(mut self, on: bool) -> Self {
+        self.failover = Some(on);
+        self
+    }
+
     /// Load `trace` into a job table and wire up the serving state.
     /// `engines[i]` is worker i's backend, driven inline on the calling
     /// thread; `scheduler` owns the policy and the length predictor.  An
@@ -328,6 +360,36 @@ impl CoordinatorBuilder {
     pub fn build_pooled<'a>(self, trace: &[TraceRequest], pool: WorkerPool,
                             scheduler: &'a mut Scheduler)
                             -> Result<Coordinator<'a>> {
+        self.build_transport(trace, Box::new(pool), scheduler, false)
+    }
+
+    /// Like [`build_pooled`](Self::build_pooled), but the workers are
+    /// **remote pods** registered over TCP (`elis worker --connect`): the
+    /// same dispatch/completion code drives them through the
+    /// [`WorkerTransport`] boundary, and worker-loss
+    /// [`failover`](Self::failover) defaults **on** — a pod that
+    /// disconnects mid-window has its window rolled back and its jobs
+    /// re-homed onto the surviving pods.  Wall-clock only, like every
+    /// pooled backend.
+    pub fn build_remote<'a>(self, trace: &[TraceRequest],
+                            pool: RemoteWorkerPool,
+                            scheduler: &'a mut Scheduler)
+                            -> Result<Coordinator<'a>> {
+        self.build_transport(trace, Box::new(pool), scheduler, true)
+    }
+
+    /// The generic pooled constructor behind
+    /// [`build_pooled`](Self::build_pooled) /
+    /// [`build_remote`](Self::build_remote): any [`WorkerTransport`]
+    /// carrying the `WorkerCmd`/`WindowDone` protocol works, which is
+    /// also the seam fault-injection tests plug custom transports into.
+    /// `failover_default` applies when [`failover`](Self::failover) was
+    /// not set explicitly.
+    pub fn build_transport<'a>(mut self, trace: &[TraceRequest],
+                               pool: Box<dyn WorkerTransport>,
+                               scheduler: &'a mut Scheduler,
+                               failover_default: bool)
+                               -> Result<Coordinator<'a>> {
         if self.cfg.clock != ClockMode::Wall {
             bail!("a pooled backend requires ClockMode::Wall \
                    (virtual mode executes windows inline)");
@@ -336,15 +398,20 @@ impl CoordinatorBuilder {
             bail!("expected {} pool workers, got {}", self.cfg.workers,
                   pool.workers());
         }
-        pool.broadcast(|| {
-            WorkerCmd::SetPreemptionCap(self.cfg.preemption.max_per_iteration)
-        })?;
+        for w in 0..pool.workers() {
+            pool.send(w, WorkerCmd::SetPreemptionCap(
+                self.cfg.preemption.max_per_iteration))?;
+        }
+        if self.failover.is_none() {
+            self.failover = Some(failover_default);
+        }
         self.finish(trace, Backend::Pool(pool), scheduler)
     }
 
     fn finish<'a>(self, trace: &[TraceRequest], backend: Backend<'a>,
                   scheduler: &'a mut Scheduler) -> Result<Coordinator<'a>> {
-        let CoordinatorBuilder { cfg, sinks, shaper, force_rebuild } = self;
+        let CoordinatorBuilder { cfg, sinks, shaper, force_rebuild,
+                                 failover } = self;
         let mut table = JobTable::with_capacity(trace.len());
         let mut arrivals: Vec<(f64, JobId)> = Vec::with_capacity(trace.len());
         for r in trace {
@@ -380,6 +447,8 @@ impl CoordinatorBuilder {
             batcher: Batcher::new(workers_n, cfg.max_batch),
             incremental,
             warm: vec![HashSet::new(); workers_n],
+            dead: vec![false; workers_n],
+            failover: failover.unwrap_or(false),
             pending_scratch: Vec::new(),
             order_scratch: Vec::new(),
             victim_entries_scratch: Vec::new(),
@@ -435,6 +504,13 @@ pub struct Coordinator<'a> {
     /// backlog.  Pruned on eviction; re-entered through the pending fold
     /// when the job is next re-keyed.
     warm: Vec<HashSet<JobId>>,
+    /// Workers whose transport connection/thread is gone.  Dead workers
+    /// are skipped by dispatch and excluded from load balancing; set only
+    /// through [`fail_over`](Self::fail_over) (failover-enabled pooled
+    /// backends).
+    dead: Vec<bool>,
+    /// see [`CoordinatorBuilder::failover`]
+    failover: bool,
     // -- per-window scratch buffers (allocations reused across windows) --
     pending_scratch: Vec<JobId>,
     order_scratch: Vec<Entry>,
@@ -536,7 +612,7 @@ impl<'a> Coordinator<'a> {
         {
             let (_, id) = self.arrivals[self.next_arrival];
             self.next_arrival += 1;
-            let node = self.lb.assign(&mut self.state);
+            let node = self.lb.assign_excluding(&mut self.state, &self.dead);
             self.table[id].node = Some(node);
             self.queued[node].push(id);
             let meta = job_meta(&self.table, id);
@@ -616,7 +692,19 @@ impl<'a> Coordinator<'a> {
                         }
                         self.backend.remove(done.worker, raw);
                     }
-                    first_err.get_or_insert(err);
+                    // an error from a *lost* worker (disconnect reply)
+                    // under failover re-homes the rolled-back jobs onto
+                    // survivors instead of failing the run; an engine
+                    // error from a live worker still surfaces
+                    let lost = match &self.backend {
+                        Backend::Pool(p) => !p.worker_alive(done.worker),
+                        Backend::Inline(_) => false,
+                    };
+                    if self.failover && lost {
+                        self.fail_over(done.worker, now)?;
+                    } else {
+                        first_err.get_or_insert(err);
+                    }
                 }
             }
         }
@@ -624,16 +712,32 @@ impl<'a> Coordinator<'a> {
             return Err(err);
         }
 
-        // a worker thread that died (engine panic) can never answer its
-        // in-flight window; the drain above has already consumed every
-        // reply it managed to send, so fail fast instead of idling forever
+        // liveness sweep.  Without failover: a worker thread that died
+        // (engine panic) can never answer its in-flight window — the
+        // drain above has already consumed every reply it managed to
+        // send, so fail fast instead of idling forever.  With failover: a
+        // synthesizing transport (TCP pool) is *guaranteed* to deliver an
+        // error reply for the in-flight window, so wait for it (the error
+        // branch above then rolls back and fails over); a worker lost
+        // while idle is failed over right here.
+        let mut lost_idle: Vec<usize> = Vec::new();
         if let Backend::Pool(pool) = &self.backend {
             for w in 0..self.workers.len() {
-                if self.workers[w].in_flight && !pool.worker_alive(w) {
-                    bail!("worker thread {w} died with a window in flight \
-                           (engine panic?)");
+                if self.dead[w] || pool.worker_alive(w) {
+                    continue;
+                }
+                if self.workers[w].in_flight {
+                    if !(self.failover && pool.synthesizes_disconnects()) {
+                        bail!("worker thread {w} died with a window in \
+                               flight (engine panic?)");
+                    }
+                } else if self.failover {
+                    lost_idle.push(w);
                 }
             }
+        }
+        for w in lost_idle {
+            self.fail_over(w, now)?;
         }
 
         // virtual mode: outcomes whose simulated completion time passed
@@ -675,7 +779,8 @@ impl<'a> Coordinator<'a> {
     pub fn dispatch(&mut self, now: f64) -> Result<usize> {
         let mut dispatched = 0;
         for w in 0..self.cfg.workers {
-            if self.workers[w].pending.is_some()
+            if self.dead[w]
+                || self.workers[w].pending.is_some()
                 || self.workers[w].in_flight
                 || (self.queued[w].is_empty() && self.buffer.is_empty(w))
             {
@@ -688,14 +793,77 @@ impl<'a> Coordinator<'a> {
                 bail!("iteration cap {} exceeded (livelock?)",
                       self.cfg.max_iterations);
             }
-            if self.incremental {
-                self.dispatch_window_incremental(w, now)?;
+            let run = if self.incremental {
+                self.dispatch_window_incremental(w, now)
             } else {
-                self.dispatch_window_rebuild(w, now)?;
+                self.dispatch_window_rebuild(w, now)
+            };
+            match run {
+                Ok(()) => dispatched += 1,
+                Err(err) => {
+                    // the hand-off already spilled the window back into
+                    // `queued[w]`; if the worker died under our feet and
+                    // failover is on, re-home its jobs and keep serving
+                    let lost = match &self.backend {
+                        Backend::Pool(p) => !p.worker_alive(w),
+                        Backend::Inline(_) => false,
+                    };
+                    if self.failover && lost {
+                        self.fail_over(w, now)?;
+                    } else {
+                        return Err(err);
+                    }
+                }
             }
-            dispatched += 1;
         }
         Ok(dispatched)
+    }
+
+    /// Mark worker `w` dead and re-home every job still assigned to it —
+    /// its pending/dirty list, its keyed order index, and any batch the
+    /// error path just spilled back — onto surviving workers via the load
+    /// balancer.  Re-homed jobs are re-admitted fresh on their new engine
+    /// and resume from the tokens the coordinator already holds
+    /// ([`SeqSpec::resume`](crate::engine::SeqSpec)).  Idempotent: late
+    /// spills for an already-dead worker re-home on the next call.  Errs
+    /// only when no worker is left alive for unfinished work.
+    fn fail_over(&mut self, w: usize, now: f64) -> Result<()> {
+        let first = !self.dead[w];
+        self.dead[w] = true;
+        self.workers[w].in_flight = false;
+        self.workers[w].pending = None;
+        if self.dead.iter().all(|&d| d) && self.finished < self.table.len() {
+            bail!("all {} workers are lost with {} jobs unfinished",
+                  self.cfg.workers, self.table.len() - self.finished);
+        }
+
+        let mut moved = std::mem::take(&mut self.pending_scratch);
+        moved.clear();
+        moved.append(&mut self.queued[w]);
+        {
+            let mut order = std::mem::take(&mut self.order_scratch);
+            self.buffer.drain_sorted_into(w, &mut order);
+            moved.extend(order.iter().map(|e| e.id));
+            self.order_scratch = order;
+        }
+        self.warm[w].clear();
+        for &id in &moved {
+            self.table[id].engine_admitted = false;
+            // the prompt must travel again to wherever the job lands
+            self.batcher.forget(w, id);
+            self.state.on_finish(w);
+            let node = self.lb.assign_excluding(&mut self.state, &self.dead);
+            self.table[id].node = Some(node);
+            self.queued[node].push(id);
+        }
+        let rehomed = moved.len();
+        self.pending_scratch = moved;
+        if first || rehomed > 0 {
+            for s in self.sinks.iter_mut() {
+                s.on_worker_lost(w, rehomed, now);
+            }
+        }
+        Ok(())
     }
 
     /// One window on node `w`, incremental path: re-key only the pending
@@ -880,6 +1048,10 @@ impl<'a> Coordinator<'a> {
                         prompt: j.prompt.clone(),
                         target_total: j.total_len,
                         topic: j.topic,
+                        // empty on first admission; after a failover the
+                        // new engine resumes from the coordinator's copy
+                        // of the response so far
+                        resume: j.response.clone(),
                     }
                 };
                 match &mut self.backend {
@@ -1014,6 +1186,15 @@ impl<'a> Coordinator<'a> {
                 idled: false,
                 done: true,
             });
+        }
+        // A fully-failed-over backend can reach here with every worker
+        // dead but nothing unfinished *at the time of the last loss*
+        // (fail_over only errs for unfinished work) — a later
+        // push_request must then fail cleanly before ingest would ask
+        // the load balancer for a surviving node it cannot have.
+        if !self.dead.is_empty() && self.dead.iter().all(|&d| d) {
+            bail!("all {} workers are lost with {} jobs unfinished",
+                  self.cfg.workers, self.table.len() - self.finished);
         }
         if self.cfg.clock == ClockMode::Wall {
             self.now = self.wall_ms();

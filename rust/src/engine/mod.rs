@@ -31,6 +31,14 @@ pub struct SeqSpec {
     pub target_total: usize,
     /// corpus topic (drives the sim engine's content signal)
     pub topic: usize,
+    /// Response tokens already generated in a previous life of this
+    /// sequence — empty for fresh admissions.  Set by the coordinator
+    /// when a job is re-admitted to a *different* engine after its worker
+    /// pod was lost: the new engine continues from `resume.len()` (same
+    /// drop-KV / keep-progress / recompute-on-resume semantics as
+    /// preemption, but across engines), so the job's total output equals
+    /// a run that never failed over.
+    pub resume: Vec<i32>,
 }
 
 // ---------------------------------------------------------------------------

@@ -282,6 +282,21 @@ impl Engine for PjrtEngine {
         }
         let mut prompt = seq.prompt;
         prompt.truncate(self.prompt_max);
+        // Failover re-admission: the already-generated prefix is folded
+        // into the *prompt*, so the prefill writes KV for every position
+        // the decode window will attend to, and the target shrinks by
+        // the tokens already delivered — every token this engine emits
+        // is genuinely new (the coordinator appends `new_tokens` after
+        // its own copy of the prefix).  Seeding `generated` instead
+        // would leave the resume positions without KV and re-emit a
+        // stale token through the fresh-output fixup in `run_window`.
+        let resumed = seq.resume.len();
+        prompt.extend_from_slice(&seq.resume);
+        if prompt.len() > self.prompt_max {
+            // once resuming, the most recent context matters most
+            let cut = prompt.len() - self.prompt_max;
+            prompt.drain(..cut);
+        }
         if prompt.is_empty() {
             prompt.push(1);
         }
@@ -291,7 +306,7 @@ impl Engine for PjrtEngine {
             PjrtSeq {
                 prompt,
                 prompt_len,
-                target_total: seq.target_total.max(1),
+                target_total: seq.target_total.saturating_sub(resumed).max(1),
                 generated: Vec::new(),
                 kv: None,
                 resident: false,

@@ -164,7 +164,10 @@ impl Engine for SimEngine {
                 prompt_len: seq.prompt.len().max(1),
                 target_total: seq.target_total,
                 topic: seq.topic,
-                generated: 0,
+                // a failover re-admission resumes where the lost engine
+                // left off; the deterministic content formula makes the
+                // continuation identical to an uninterrupted run
+                generated: seq.resume.len().min(seq.target_total),
                 resident: false,
                 recomputes: 0,
             },
@@ -343,7 +346,8 @@ mod tests {
     }
 
     fn spec(id: u64, prompt: usize, total: usize) -> SeqSpec {
-        SeqSpec { id, prompt: vec![7; prompt], target_total: total , topic: 0}
+        SeqSpec { id, prompt: vec![7; prompt], target_total: total , topic: 0,
+                  resume: Vec::new() }
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //!   info             inspect artifacts and loaded models
 //!   serve            wall-clock serving (PJRT or sim engines); with
 //!                    --listen, run as a network service: worker-pool
-//!                    threads + HTTP frontend (/healthz /metrics /v1/generate)
+//!                    threads + HTTP frontend (/healthz /metrics /v1/generate);
+//!                    with --worker-listen, accept remote `elis worker` pods
+//!                    over TCP instead of local engines
+//!   worker           backend pod: connect to a coordinator's --worker-listen
+//!                    address and serve scheduling windows over TCP
 //!   simulate         run a scheduling experiment on the calibrated sim engine
 //!   trace-fit        reproduce the Fig 4 inter-arrival analysis
 //!   preempt-profile  reproduce the Table 6 preemption profiling
@@ -13,11 +17,14 @@
 //! Examples:
 //!   elis simulate --model lam13 --scheduler isrtf --rps-mult 5 --n 200
 //!   elis serve --n 12 --rps 0.5 --scheduler isrtf --workers 2
+//!   elis serve --worker-listen 0.0.0.0:7000 --listen 0.0.0.0:8080 --workers 2
+//!   elis worker --connect coordinator:7000 --engine sim
 //!   elis trace-fit --n 200000
 
 use anyhow::{anyhow, bail, Result};
 
-use elis::cluster::{ApiBridge, Gateway, HttpServer, WorkerPool};
+use elis::cluster::{run_worker, ApiBridge, Gateway, HttpServer,
+                    RemoteWorkerPool, WorkerPool, WorkerTransport};
 use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
     PriorityShaper, Scheduler, ServeConfig,
@@ -43,6 +50,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
+        Some("worker") => cmd_worker(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("trace-fit") => cmd_trace_fit(&args),
         Some("preempt-profile") => cmd_preempt_profile(&args),
@@ -75,6 +83,18 @@ USAGE: elis <subcommand> [--flags]
                     (streaming admission).  With --listen: --http-threads
                     --wait-timeout-s --idle-exit-ms (0 = serve forever)
                     --idle-tick-ms
+                    --worker-listen addr:port   accept --workers remote
+                    `elis worker` pod registrations over TCP instead of
+                    building local engines, so workers span machines; a
+                    pod lost mid-run fails over to the survivors.  With
+                    --worker-listen: --accept-timeout-s (default 120)
+  worker            backend pod for a distributed coordinator:
+                    --connect host:port (required, the coordinator's
+                    --worker-listen address)  --engine sim|pjrt
+                    --model --batch --connect-timeout-s (default 10).
+                    Runs until the coordinator closes the connection.
+                    Without artifacts, --engine sim falls back to a
+                    built-in 7B profile
   simulate          calibrated simulation: --model --scheduler --rps-mult
                     --batch --workers --n --shuffles --predictor --lb
                     --tenants name[=weight],... (weighted round-robin tags)
@@ -231,27 +251,43 @@ fn cmd_info(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Where `elis serve`'s engines come from: constructed locally (inline
+/// run or in-process worker-pool threads), or registered remotely over
+/// `--worker-listen` (one `elis worker` pod per worker).
+enum ServeBackend {
+    Local(Vec<Box<dyn Engine>>),
+    Remote(RemoteWorkerPool),
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = default_artifacts_dir();
-    let manifest = Manifest::load(&dir)?;
-    let corpus = Corpus::load(&dir)?;
 
     let n = args.usize("n", 12);
     let rps = args.f64("rps", 0.5);
     let workers = args.usize("workers", 1);
     let policy = args.parse_with("scheduler", "isrtf", Policy::parse)?;
     let lb = args.parse_with("lb", "minload", LbStrategy::parse)?;
+    let worker_listen = args.opt_str("worker-listen").map(str::to_string);
     let engine_kind = args.str("engine", "pjrt");
+    // remote pods bring their own engines, so the coordinator side only
+    // needs artifacts when the predictor does
     let predictor_kind = args.str(
         "predictor",
-        if engine_kind == "sim" { "heuristic" } else { "hlo" },
+        if engine_kind == "sim" || worker_listen.is_some() {
+            "heuristic"
+        } else {
+            "hlo"
+        },
     );
     let seed = args.u64("seed", 42);
     let listen = args.opt_str("listen").map(str::to_string);
 
     let mut trace = match args.opt_str("trace") {
         Some(path) => elis::workload::trace_io::load(std::path::Path::new(path))?,
-        None => RequestGenerator::fabrix(rps, seed).trace(&corpus, n),
+        None => {
+            let corpus = Corpus::load(&dir)?;
+            RequestGenerator::fabrix(rps, seed).trace(&corpus, n)
+        }
     };
     let n = trace.len();
     let tenant_spec = parse_tenant_spec(&args.list("tenants"))?;
@@ -264,45 +300,87 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("serving {n} requests at {rps} rps over {workers} worker(s), \
               policy {}", policy.name());
 
-    // weights are needed for PJRT engines and/or the hlo predictor
-    let store = if engine_kind == "pjrt" || predictor_kind == "hlo" {
-        Some(WeightStore::load(&manifest)?)
+    // weights are needed for local PJRT engines and/or the hlo predictor
+    let need_local_engines = worker_listen.is_none();
+    let manifest = if (need_local_engines
+                       && matches!(engine_kind.as_str(), "pjrt" | "sim"))
+        || predictor_kind == "hlo"
+    {
+        Some(Manifest::load(&dir)?)
     } else {
         None
     };
-    let mut engines: Vec<Box<dyn Engine>> = match engine_kind.as_str() {
-        "pjrt" => {
-            let store = store.as_ref().expect("loaded above for pjrt");
-            let rt = Runtime::cpu()?;
-            println!("PJRT platform: {}", rt.platform());
-            (0..workers)
-                .map(|_| {
-                    PjrtEngine::load(rt.clone(), &manifest, store, 1 << 20)
-                        .map(|e| Box::new(e) as Box<dyn Engine>)
-                })
-                .collect::<Result<_>>()?
-        }
-        "sim" => {
-            let profiles = ModelProfile::all(&manifest.served_models);
-            let model = args.str("model", "lam13");
-            let profile = ModelProfile::find(&profiles, &model)
-                .ok_or_else(|| anyhow!("unknown model {model}"))?
-                .clone();
-            let batch = args.usize("batch", 4);
-            (0..workers)
-                .map(|_| {
-                    Box::new(SimEngine::with_profile_budget(
-                        profile.clone(), manifest.window_size, batch))
-                        as Box<dyn Engine>
-                })
-                .collect()
-        }
-        other => bail!("unknown --engine '{other}' (valid: pjrt, sim)"),
+    let store = if (need_local_engines && engine_kind == "pjrt")
+        || predictor_kind == "hlo"
+    {
+        Some(WeightStore::load(manifest.as_ref().expect("loaded above"))?)
+    } else {
+        None
     };
-    println!("engine: {}", engines[0].describe());
 
-    let mut sched = scheduler_for(policy, &predictor_kind,
-                                  store.as_ref().map(|s| (&manifest, s)))?;
+    let backend = match &worker_listen {
+        Some(addr) => {
+            // distributed mode: wait for the pods to register over TCP
+            let listener = std::net::TcpListener::bind(addr.as_str())
+                .map_err(|e| anyhow!("binding --worker-listen {addr}: {e}"))?;
+            println!("workers: listening on {} for {workers} pod \
+                      registration(s)  (start them with `elis worker \
+                      --connect <this address>`)", listener.local_addr()?);
+            std::io::Write::flush(&mut std::io::stdout()).ok();
+            let pool = RemoteWorkerPool::accept(
+                &listener, workers,
+                std::time::Duration::from_secs(
+                    args.u64("accept-timeout-s", 120)))?;
+            for w in 0..workers {
+                println!("worker {w}: {} @ {}", pool.describe(w),
+                         pool.peer(w));
+            }
+            ServeBackend::Remote(pool)
+        }
+        None => {
+            let engines: Vec<Box<dyn Engine>> = match engine_kind.as_str() {
+                "pjrt" => {
+                    let manifest = manifest.as_ref().expect("loaded above");
+                    let store = store.as_ref().expect("loaded above for pjrt");
+                    let rt = Runtime::cpu()?;
+                    println!("PJRT platform: {}", rt.platform());
+                    (0..workers)
+                        .map(|_| {
+                            PjrtEngine::load(rt.clone(), manifest, store,
+                                             1 << 20)
+                                .map(|e| Box::new(e) as Box<dyn Engine>)
+                        })
+                        .collect::<Result<_>>()?
+                }
+                "sim" => {
+                    let manifest = manifest.as_ref().expect("loaded above");
+                    let profiles = ModelProfile::all(&manifest.served_models);
+                    let model = args.str("model", "lam13");
+                    let profile = ModelProfile::find(&profiles, &model)
+                        .ok_or_else(|| anyhow!("unknown model {model}"))?
+                        .clone();
+                    let batch = args.usize("batch", 4);
+                    (0..workers)
+                        .map(|_| {
+                            Box::new(SimEngine::with_profile_budget(
+                                profile.clone(), manifest.window_size, batch))
+                                as Box<dyn Engine>
+                        })
+                        .collect()
+                }
+                other => bail!("unknown --engine '{other}' (valid: pjrt, sim)"),
+            };
+            println!("engine: {}", engines[0].describe());
+            ServeBackend::Local(engines)
+        }
+    };
+
+    let mut sched = scheduler_for(
+        policy, &predictor_kind,
+        match (&manifest, &store) {
+            (Some(m), Some(s)) => Some((m, s)),
+            _ => None,
+        })?;
     let cfg = ServeConfig {
         workers,
         max_batch: args.usize("batch", 4),
@@ -323,12 +401,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
                                      &telemetry, args.bool("wfq"),
                                      &tenant_spec);
 
-    let report = match listen {
-        None => builder
-            .build(&trace, &mut engines, &mut sched)?
-            .run_to_completion()?,
-        Some(addr) => {
-            serve_http(args, &addr, engines, builder, &trace, &mut sched,
+    let report = match (listen, backend) {
+        (None, ServeBackend::Local(mut engines)) => {
+            let mut coord = builder.build(&trace, &mut engines, &mut sched)?;
+            coord.run_to_completion()?
+        }
+        (None, ServeBackend::Remote(pool)) => {
+            let mut coord = builder.build_remote(&trace, pool, &mut sched)?;
+            coord.run_to_completion()?
+        }
+        (Some(addr), backend) => {
+            serve_http(args, &addr, backend, builder, &trace, &mut sched,
                        &telemetry)?
         }
     };
@@ -346,22 +429,101 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `elis worker`: the backend-pod half of the distributed deployment.
+/// Connects to a coordinator's `--worker-listen` address (retrying until
+/// `--connect-timeout-s`, since pods usually start before the frontend),
+/// announces the engine over the hello handshake, then serves scheduling
+/// windows until the coordinator closes the connection.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args.require_str("connect")?.to_string();
+    let engine_kind = args.str("engine", "sim");
+    let batch = args.usize("batch", 4);
+    let dir = default_artifacts_dir();
+
+    let engine: Box<dyn Engine> = match engine_kind.as_str() {
+        "sim" => {
+            // artifacts are optional for the sim engine: a pod on a bare
+            // node falls back to a built-in 7B profile
+            let (profile, window) = match Manifest::load(&dir) {
+                Ok(manifest) => {
+                    let profiles = ModelProfile::all(&manifest.served_models);
+                    let model = args.str("model", "lam13");
+                    let profile = ModelProfile::find(&profiles, &model)
+                        .ok_or_else(|| anyhow!("unknown model {model}"))?
+                        .clone();
+                    (profile, manifest.window_size)
+                }
+                Err(_) => {
+                    eprintln!("no artifacts found; using the built-in \
+                               fallback sim profile");
+                    let meta = elis::runtime::manifest::ServedModelMeta {
+                        name: "Fallback-7B".into(),
+                        abbrev: "sim7".into(),
+                        params_b: 7.0,
+                        avg_latency_ms: 2000.0,
+                        kv_bytes_per_token: 1 << 20,
+                        preempt_batch: 0,
+                        mem_limit_frac: 0.9,
+                    };
+                    (ModelProfile::from_meta(&meta), 50)
+                }
+            };
+            Box::new(SimEngine::with_profile_budget(profile, window, batch))
+        }
+        "pjrt" => {
+            let manifest = Manifest::load(&dir)?;
+            let store = WeightStore::load(&manifest)?;
+            let rt = Runtime::cpu()?;
+            println!("PJRT platform: {}", rt.platform());
+            Box::new(PjrtEngine::load(rt, &manifest, &store, 1 << 20)?)
+        }
+        other => bail!("unknown --engine '{other}' (valid: sim, pjrt)"),
+    };
+
+    // retry the connect: in a rollout the pods race the coordinator
+    let timeout = std::time::Duration::from_secs(
+        args.u64("connect-timeout-s", 10));
+    let deadline = std::time::Instant::now() + timeout;
+    let stream = loop {
+        match std::net::TcpStream::connect(&addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if std::time::Instant::now() >= deadline {
+                    bail!("could not connect to coordinator {addr}: {e}");
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            }
+        }
+    };
+    println!("worker connected to {addr}: {}", engine.describe());
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    run_worker(stream, engine)?;
+    println!("coordinator closed the connection; worker exiting");
+    Ok(())
+}
+
 /// `elis serve --listen <addr>`: the cluster runtime.  Engines move onto
-/// [`WorkerPool`] threads, the HTTP frontend exposes
-/// `/healthz` + `/metrics` + `/v1/generate`, and this loop drives the
-/// coordinator, pumping HTTP admissions between steps.  Exits once the
-/// run is idle for `--idle-exit-ms` (0 = serve until killed).
-fn serve_http(args: &Args, addr: &str, engines: Vec<Box<dyn Engine>>,
+/// [`WorkerPool`] threads (or are already remote `elis worker` pods), the
+/// HTTP frontend exposes `/healthz` + `/metrics` + `/v1/generate`, and
+/// this loop drives the coordinator, pumping HTTP admissions between
+/// steps.  Exits once the run is idle for `--idle-exit-ms` (0 = serve
+/// until killed); held `wait: true` connections racing that exit get a
+/// terminal 503 via the shutdown drain.
+fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
               builder: CoordinatorBuilder,
               trace: &[elis::workload::TraceRequest],
               sched: &mut Scheduler,
               telemetry: &Option<(TelemetrySink, f64)>)
               -> Result<elis::metrics::ServeReport> {
-    let pool = WorkerPool::new(engines);
     let (api_tx, mut bridge) = ApiBridge::channel();
-    let mut coord = builder
-        .sink(Box::new(bridge.completion_sink()))
-        .build_pooled(trace, pool, sched)?;
+    let builder = builder.sink(Box::new(bridge.completion_sink()));
+    let mut coord = match backend {
+        ServeBackend::Local(engines) => {
+            builder.build_pooled(trace, WorkerPool::new(engines), sched)?
+        }
+        ServeBackend::Remote(pool) => builder.build_remote(trace, pool,
+                                                           sched)?,
+    };
     let gateway = Gateway {
         telemetry: telemetry.as_ref().map(|(sink, _)| sink.clone()),
         api_tx,
@@ -373,6 +535,7 @@ fn serve_http(args: &Args, addr: &str, engines: Vec<Box<dyn Engine>>,
     println!("listening on http://{}  \
               (GET /healthz | GET /metrics | POST /v1/generate)",
              server.local_addr());
+    std::io::Write::flush(&mut std::io::stdout()).ok();
 
     let idle_exit_ms = args.f64("idle-exit-ms", 0.0);
     // the drained-idle poll honours the same latency bound as the
@@ -398,6 +561,11 @@ fn serve_http(args: &Args, addr: &str, engines: Vec<Box<dyn Engine>>,
             break;
         }
     }
+    // the loop is exiting: answer every queued or still-waiting generate
+    // with a terminal 503, then close the channel so a request racing the
+    // drain fails fast in its handler instead of hanging out its timeout
+    bridge.drain_shutdown();
+    drop(bridge);
     server.shutdown();
     Ok(coord.report())
 }
@@ -509,7 +677,8 @@ pub fn find_preempt_batch(profile: &ModelProfile, window: usize) -> Option<usize
                 .admit(elis::engine::SeqSpec {
                     id,
                     prompt: vec![7; 64],
-                    target_total: 400, topic: 0
+                    target_total: 400, topic: 0,
+                    resume: Vec::new(),
                 })
                 .ok()?;
         }

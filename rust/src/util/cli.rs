@@ -55,6 +55,15 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// A flag that must be present (no sensible default exists, e.g. the
+    /// coordinator address a worker pod connects to).  The error names
+    /// the flag so the CLI surfaces `--connect is required`-style
+    /// messages instead of a panic or silent fallback.
+    pub fn require_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.opt_str(key)
+            .ok_or_else(|| anyhow::anyhow!("--{key} <value> is required"))
+    }
+
     pub fn f64(&self, key: &str, default: f64) -> f64 {
         self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -156,6 +165,14 @@ mod tests {
             })
             .unwrap();
         assert_eq!(dflt, 2);
+    }
+
+    #[test]
+    fn require_str_names_the_missing_flag() {
+        let a = parse("worker --connect 10.0.0.5:7000");
+        assert_eq!(a.require_str("connect").unwrap(), "10.0.0.5:7000");
+        let err = format!("{:#}", a.require_str("engine").unwrap_err());
+        assert!(err.contains("--engine"), "{err}");
     }
 
     #[test]

@@ -1,17 +1,22 @@
-//! Integration tests for the cluster runtime (PR 3): threaded worker
-//! pool, std-only HTTP frontend, and the virtual-clock determinism
-//! guarantee the pool refactor must preserve.  No artifacts required.
+//! Integration tests for the cluster runtime: threaded worker pool,
+//! std-only HTTP frontend, the virtual-clock determinism guarantee the
+//! pool refactor must preserve, and (PR 5) the distributed worker pods —
+//! wire protocol, fault-injection failover, and a true multi-process
+//! end-to-end run over `elis worker` children.  No artifacts required.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpStream};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use elis::cluster::{ApiBridge, Gateway, HttpServer, WorkerPool};
+use elis::cluster::pool::run_cmd_window;
+use elis::cluster::{wire, ApiBridge, Gateway, HttpServer, RemoteWorkerPool,
+                    WorkerCmd, WorkerPool};
 use elis::coordinator::{
-    run_serving, ClockMode, CoordinatorBuilder, Policy, Scheduler,
+    run_serving, ClockMode, CoordinatorBuilder, EventSink, Policy, Scheduler,
     ServeConfig,
 };
 use elis::engine::profiles::ModelProfile;
@@ -108,7 +113,10 @@ impl Engine for SleepEngine {
     }
 
     fn admit(&mut self, seq: SeqSpec) -> Result<()> {
-        self.seqs.insert(seq.id, (seq.target_total.max(1), 0));
+        // failover re-admissions resume from the coordinator's copy of
+        // the response so far, like the real engines
+        self.seqs
+            .insert(seq.id, (seq.target_total.max(1), seq.resume.len()));
         Ok(())
     }
 
@@ -159,17 +167,21 @@ impl Engine for SleepEngine {
     }
 }
 
-fn burst_trace(n: u64) -> Vec<TraceRequest> {
+fn burst_trace_total(n: u64, total_len: usize) -> Vec<TraceRequest> {
     (0..n)
         .map(|i| TraceRequest {
             id: i,
             arrival_ms: 0.0,
             prompt: vec![5; 8],
-            total_len: 50, // exactly one 50-token window per job
+            total_len,
             topic: 0,
             tenant: None,
         })
         .collect()
+}
+
+fn burst_trace(n: u64) -> Vec<TraceRequest> {
+    burst_trace_total(n, 50) // exactly one 50-token window per job
 }
 
 /// Acceptance: a 4-worker wall-clock run over a bursty trace overlaps
@@ -377,6 +389,350 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         let finished: u64 = st.tenants.values().map(|t| t.finished).sum();
         assert_eq!(finished, 6);
     });
+}
+
+// ---------------------------------------------------------------------------
+// distributed workers: fault injection over real TCP (PR 5 tentpole)
+// ---------------------------------------------------------------------------
+
+/// Records `on_worker_lost` events so tests can assert the failover path
+/// actually fired (and how many jobs it re-homed).
+#[derive(Clone, Default)]
+struct LostEvents(Arc<Mutex<Vec<(usize, usize)>>>);
+
+impl EventSink for LostEvents {
+    fn on_worker_lost(&mut self, node: usize, rehomed: usize,
+                      _now_ms: f64) {
+        self.0.lock().unwrap().push((node, rehomed));
+    }
+}
+
+/// A hand-rolled worker pod speaking the public wire API, with a kill
+/// switch: after `kill_after` completed windows it drops the connection
+/// *on receipt of the next window* — mid-window from the coordinator's
+/// point of view, since the `RunWindow` is in flight and will never be
+/// answered.  `kill_after: usize::MAX` behaves like a healthy pod.
+fn killable_pod(addr: SocketAddr, kill_after: usize, window_ms: u64) {
+    let mut stream = TcpStream::connect(addr).expect("pod connect");
+    let hello = wire::Hello {
+        version: wire::WIRE_VERSION,
+        max_batch: 1,
+        describe: format!("KillableSleepEngine[{window_ms} ms]"),
+    };
+    wire::client_handshake(&mut stream, &hello).expect("pod handshake");
+    let mut engine = SleepEngine::new(window_ms);
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut completed = 0usize;
+    loop {
+        let payload = match wire::read_frame(&mut reader, wire::MAX_FRAME) {
+            Ok(Some(p)) => p,
+            _ => return, // coordinator hung up
+        };
+        match wire::decode_cmd(&payload).expect("pod decode") {
+            WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
+            WorkerCmd::Remove(id) => engine.remove(id),
+            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+                if completed == kill_after {
+                    // the fault: vanish with this window unanswered
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+                let (fresh, outcome) = run_cmd_window(
+                    &mut engine, admits, &priority_order, &batch);
+                let reply =
+                    wire::encode_done(&echo, &fresh, &outcome).to_string();
+                wire::write_frame(&mut stream, reply.as_bytes())
+                    .expect("pod reply");
+                stream.flush().expect("pod flush");
+                completed += 1;
+            }
+        }
+    }
+}
+
+/// Fault injection (ISSUE 5 acceptance): one of two TCP workers is
+/// killed mid-window.  The coordinator must roll back the partial
+/// admits, re-dispatch the dead pod's jobs to the survivor, and finish
+/// the whole trace with a report equal (same jobs, same token totals) to
+/// a single-worker run that never failed — including jobs that had
+/// already generated tokens on the dead pod and resume on the survivor.
+#[test]
+fn killed_remote_worker_fails_over_and_report_matches_reference() {
+    const JOBS: u64 = 10;
+    const TOTAL_LEN: usize = 100; // 2 windows per job -> mid-job progress
+
+    // reference: one in-process worker, same engine timing, no faults
+    let reference = {
+        let trace = burst_trace_total(JOBS, TOTAL_LEN);
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 1,
+            clock: ClockMode::Wall,
+            max_iterations: 100_000,
+            ..Default::default()
+        };
+        let mut engines: Vec<Box<dyn Engine>> =
+            vec![Box::new(SleepEngine::new(5))];
+        let mut sched =
+            Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        run_serving(&cfg, &trace, &mut engines, &mut sched).unwrap()
+    };
+
+    // distributed: two pods over loopback TCP; pod B dies on its 2nd
+    // window — its first job has 50 of 100 tokens at that point, so the
+    // survivor must *resume* it mid-response, not restart it
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let healthy = std::thread::spawn(move || {
+        killable_pod(addr, usize::MAX, 5)
+    });
+    let doomed = std::thread::spawn(move || killable_pod(addr, 1, 5));
+    let pool =
+        RemoteWorkerPool::accept(&listener, 2, Duration::from_secs(10))
+            .unwrap();
+
+    let trace = burst_trace_total(JOBS, TOTAL_LEN);
+    let lost = LostEvents::default();
+    let cfg = ServeConfig {
+        workers: 2,
+        max_batch: 1,
+        clock: ClockMode::Wall,
+        max_iterations: 100_000,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(lost.clone()))
+        .build_remote(&trace, pool, &mut sched)
+        .unwrap();
+    let report = coord.run_to_completion().unwrap();
+    drop(coord); // hang up on the survivor so its thread exits
+
+    // the trace completed despite the mid-run kill...
+    assert_eq!(report.n(), JOBS as usize);
+    let events = lost.0.lock().unwrap().clone();
+    assert!(!events.is_empty(), "failover must have fired");
+    assert!(events.iter().map(|&(_, n)| n).sum::<usize>() >= 1,
+            "the dead pod's jobs must have been re-homed: {events:?}");
+
+    // ...and job-for-job the output equals the fault-free reference
+    let tokens = |r: &elis::metrics::ServeReport| -> Vec<(u64, usize)> {
+        let mut v: Vec<(u64, usize)> =
+            r.records.iter().map(|j| (j.id, j.tokens)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(tokens(&report), tokens(&reference),
+               "failover must not lose or duplicate tokens");
+    for rec in &report.records {
+        assert_eq!(rec.tokens, TOTAL_LEN, "job {} under-generated", rec.id);
+    }
+
+    healthy.join().unwrap();
+    doomed.join().unwrap();
+}
+
+/// Losing *every* worker cannot hang the run: once the last pod is gone
+/// the coordinator errs out instead of idling forever.
+#[test]
+fn losing_all_remote_workers_fails_the_run_loudly() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let pod = std::thread::spawn(move || killable_pod(addr, 1, 2));
+    let pool =
+        RemoteWorkerPool::accept(&listener, 1, Duration::from_secs(10))
+            .unwrap();
+    let trace = burst_trace_total(4, 50);
+    let cfg = ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        clock: ClockMode::Wall,
+        max_iterations: 100_000,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let err = CoordinatorBuilder::from_config(cfg)
+        .build_remote(&trace, pool, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .expect_err("no surviving worker must fail the run");
+    assert!(err.to_string().contains("workers are lost"), "{err:#}");
+    pod.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// distributed workers: multi-process end-to-end over elis binaries
+// ---------------------------------------------------------------------------
+
+/// Kills the child on drop so a failed assertion cannot leak processes.
+struct ChildGuard(std::process::Child);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+/// Read the serve child's stdout until a line containing `prefix`
+/// appears; returns the whitespace-delimited token right after it.
+fn read_addr_line(lines: &mut impl BufRead, prefix: &str) -> String {
+    loop {
+        let mut line = String::new();
+        let n = lines.read_line(&mut line).expect("reading serve stdout");
+        assert!(n > 0, "serve exited before printing '{prefix}'");
+        if let Some(rest) = line.split(prefix).nth(1) {
+            return rest.split_whitespace().next()
+                .unwrap_or_default().to_string();
+        }
+    }
+}
+
+fn node_finished_sum(metrics: &str) -> u64 {
+    metrics
+        .lines()
+        .filter(|l| l.starts_with("elis_node_jobs_finished_total{"))
+        .filter_map(|l| l.rsplit(' ').next()?.trim().parse::<u64>().ok())
+        .sum()
+}
+
+/// The full §5 topology as real processes: `elis serve --worker-listen`
+/// in one child, two `elis worker --connect` pods in two more, a bursty
+/// trace replayed from disk, one extra job over HTTP, and `/metrics`
+/// per-node counters summing to the total.  Everything exits cleanly on
+/// `--idle-exit-ms`.
+#[test]
+fn distributed_multi_process_end_to_end() {
+    const TRACE_JOBS: u64 = 8;
+    let bin = env!("CARGO_BIN_EXE_elis");
+    let dir = std::env::temp_dir()
+        .join(format!("elis-dist-e2e-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.json");
+    elis::workload::trace_io::save(&burst_trace(TRACE_JOBS), &trace_path)
+        .unwrap();
+
+    let mut serve = std::process::Command::new(bin)
+        .args(["serve",
+               "--worker-listen", "127.0.0.1:0",
+               "--listen", "127.0.0.1:0",
+               "--workers", "2",
+               "--trace", trace_path.to_str().unwrap(),
+               "--scheduler", "fcfs",
+               "--predictor", "oracle",
+               "--batch", "2",
+               "--idle-exit-ms", "3000"])
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::inherit())
+        .spawn()
+        .expect("spawning elis serve");
+    let stdout = serve.stdout.take().unwrap();
+    let serve = ChildGuard(serve);
+    let mut lines = BufReader::new(stdout);
+
+    // serve prints the bound registration address, then blocks until
+    // both pods register
+    let worker_addr = read_addr_line(&mut lines, "workers: listening on ");
+    let pods: Vec<ChildGuard> = (0..2)
+        .map(|_| {
+            ChildGuard(
+                std::process::Command::new(bin)
+                    .args(["worker", "--connect", &worker_addr,
+                           "--engine", "sim", "--batch", "2"])
+                    .stdout(std::process::Stdio::null())
+                    .stderr(std::process::Stdio::inherit())
+                    .spawn()
+                    .expect("spawning elis worker"),
+            )
+        })
+        .collect();
+
+    // registration done -> the HTTP frontend comes up
+    let http_addr: SocketAddr =
+        read_addr_line(&mut lines, "listening on http://")
+            .parse()
+            .expect("parsing the HTTP address");
+
+    // one extra job through the HTTP frontend, held to completion — the
+    // generate path crosses process AND machine boundaries here
+    let resp = http(http_addr, "POST /v1/generate",
+                    r#"{"total_len": 30, "tenant": "api", "wait": true}"#);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"finished\""), "{resp}");
+
+    // scrape /metrics until the per-node finished counters account for
+    // every job (trace + HTTP), i.e. the pods really did the work
+    let expect = TRACE_JOBS + 1;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let metrics = http(http_addr, "GET /metrics", "");
+        if node_finished_sum(&metrics) == expect {
+            break;
+        }
+        assert!(Instant::now() < deadline,
+                "per-node counters never reached {expect}:\n{metrics}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+
+    // idle-exit drains everything: serve exits 0, pods see the hangup
+    // and exit 0
+    let mut serve = serve;
+    let status = serve.0.wait().expect("waiting for serve");
+    assert!(status.success(), "serve exited with {status:?}");
+    let mut rest = String::new();
+    lines.read_to_string(&mut rest).unwrap();
+    for mut pod in pods {
+        let status = pod.0.wait().expect("waiting for a worker pod");
+        assert!(status.success(), "worker exited with {status:?}\n{rest}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// wait-generate racing shutdown (ISSUE 5 test-gap satellite)
+// ---------------------------------------------------------------------------
+
+/// A `wait: true` generate that lands exactly as the serving loop exits
+/// (`--idle-exit-ms` fired) must get a *terminal* response promptly —
+/// the shutdown drain answers 503 — never a connection held until the
+/// wait timeout.
+#[test]
+fn wait_generate_racing_shutdown_gets_terminal_response() {
+    let (api_tx, mut bridge) = ApiBridge::channel();
+    let gateway = Gateway {
+        telemetry: None,
+        api_tx,
+        // deliberately huge: if the drain failed, the test would hang
+        // far past its own deadline instead of passing by accident
+        wait_timeout: Duration::from_secs(60),
+    };
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
+    let addr = server.local_addr();
+    let t0 = Instant::now();
+
+    // the serving loop has already decided to exit; this request races it
+    let client = std::thread::spawn(move || {
+        http(addr, "POST /v1/generate",
+             r#"{"total_len": 10, "wait": true}"#)
+    });
+
+    // serve_http's exit sequence: drain (answers everything queued or
+    // waiting with 503), close the channel, shut the server down.  Loop
+    // the drain until the racing request has surfaced.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while bridge.drain_shutdown() == 0 {
+        assert!(Instant::now() < deadline,
+                "the racing request never reached the bridge");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    drop(bridge);
+    server.shutdown();
+
+    let resp = client.join().expect("client thread");
+    assert!(resp.starts_with("HTTP/1.1 503"), "{resp}");
+    assert!(resp.contains("shutting down"), "{resp}");
+    assert!(t0.elapsed() < Duration::from_secs(30),
+            "the held connection must resolve well before wait_timeout");
 }
 
 /// Graceful shutdown joins every server thread even with no traffic.

@@ -56,7 +56,8 @@ fn golden_tokens_match_python_exactly() {
 
     let (_, mut engine) = load_engine(&dir);
     engine
-        .admit(SeqSpec { id: 1, prompt, target_total: expect.len() , topic: 0})
+        .admit(SeqSpec { id: 1, prompt, target_total: expect.len() , topic: 0,
+                         resume: Vec::new() })
         .unwrap();
     let mut got: Vec<i32> = Vec::new();
     while got.len() < expect.len() {
@@ -79,7 +80,8 @@ fn decode_is_deterministic_across_batch_sizes() {
     let (_, mut e2) = load_engine(&dir);
     let prompt = vec![1, 50, 900, 333, 1200];
 
-    e1.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0}).unwrap();
+    e1.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0,
+                       resume: Vec::new() }).unwrap();
     let mut a = Vec::new();
     loop {
         let w = e1.run_window(&[1]).unwrap();
@@ -90,8 +92,10 @@ fn decode_is_deterministic_across_batch_sizes() {
     }
 
     // same job batched with a second sequence: identical token stream
-    e2.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0}).unwrap();
-    e2.admit(SeqSpec { id: 2, prompt: vec![1, 7, 8, 9], target_total: 60 , topic: 0}).unwrap();
+    e2.admit(SeqSpec { id: 1, prompt: prompt.clone(), target_total: 60 , topic: 0,
+                       resume: Vec::new() }).unwrap();
+    e2.admit(SeqSpec { id: 2, prompt: vec![1, 7, 8, 9], target_total: 60 , topic: 0,
+                       resume: Vec::new() }).unwrap();
     let mut b = Vec::new();
     loop {
         let w = e2.run_window(&[1, 2]).unwrap();

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_hotpath.json against the committed baseline.
+
+Guards the incremental-dispatch core: CI fails when the steady-state
+dispatch cost per window at the acceptance depth regresses by more than
+--max-ratio over the committed BENCH_baseline.json (default 1.5x).  The
+check targets the *incremental* variant — the one the ROADMAP's O(k log n)
+claim rests on; a silent fall-back to rebuild-like costs trips it
+immediately — and also re-asserts the recorded rebuild/incremental
+speedups still clear the bench's own >=5x floor.
+
+Usage:
+    tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json [--max-ratio 1.5]
+
+Refreshing the baseline: copy the BENCH_hotpath.json artifact from a green
+CI run over the committed BENCH_baseline.json (drop the "provisional"
+flag) and commit it.  A baseline marked provisional still gates, but says
+so in the output.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def cost(doc, depth, policy, variant):
+    for row in doc.get("rows", []):
+        if (row.get("depth") == depth and row.get("policy") == policy
+                and row.get("variant") == variant):
+            return row.get("ms_per_window")
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when fresh/baseline exceeds this (default 1.5)")
+    args = ap.parse_args()
+
+    base = load(args.baseline)
+    new = load(args.fresh)
+    depth = int(new.get("accept_depth", base.get("accept_depth", 50000)))
+    if base.get("provisional"):
+        print("note: baseline is provisional (recorded outside CI); "
+              "refresh it from a green run's BENCH_hotpath.json")
+
+    failures = []
+    for policy in ("FCFS", "ISRTF"):
+        b = cost(base, depth, policy, "incremental")
+        n = cost(new, depth, policy, "incremental")
+        if b is None or n is None or b <= 0:
+            failures.append(f"{policy}: missing incremental row at depth "
+                            f"{depth} (baseline={b}, fresh={n})")
+            continue
+        ratio = n / b
+        verdict = "OK" if ratio <= args.max_ratio else "REGRESSION"
+        print(f"{policy} incremental @ {depth}: baseline {b:.4f} ms, "
+              f"fresh {n:.4f} ms -> {ratio:.2f}x ({verdict}, "
+              f"limit {args.max_ratio}x)")
+        if ratio > args.max_ratio:
+            failures.append(
+                f"{policy}: dispatch_cost_at_depth {depth} regressed "
+                f"{ratio:.2f}x (> {args.max_ratio}x) — "
+                f"{b:.4f} ms -> {n:.4f} ms per window")
+
+    target = float(new.get("target_speedup", 5.0))
+    for name, speedup in sorted(new.get("acceptance", {}).items()):
+        verdict = "OK" if speedup >= target else "BELOW TARGET"
+        print(f"{name}: {speedup:.1f}x ({verdict}, target >={target}x)")
+        if speedup < target:
+            failures.append(f"{name}: speedup {speedup:.1f}x fell below the "
+                            f"{target}x acceptance floor")
+
+    if failures:
+        print("\nbench trajectory check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench trajectory check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
