@@ -5,10 +5,11 @@
 //! client thread exercises the service while the main thread drives the
 //! serving loop:
 //!
-//!   1. `GET /healthz`                        — liveness
-//!   2. `POST /v1/generate` (fire-and-forget) — 202 + job id
-//!   3. `POST /v1/generate` (`"wait": true`)  — 200 once finished
-//!   4. `GET /metrics`                        — live Prometheus snapshot
+//!   1. `GET /healthz`                         — liveness
+//!   2. `POST /v1/generate` (fire-and-forget)  — 202 + job id
+//!   3. `POST /v1/generate` (`"wait": true`)   — 200 once finished
+//!   4. `POST /v1/generate` (`"stream": true`) — SSE token chunks
+//!   5. `GET /metrics`                         — live Prometheus snapshot
 //!
 //! No artifacts needed; everything runs on synthetic prompts.
 //!
@@ -20,7 +21,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use elis::cluster::{ApiBridge, Gateway, HttpServer, WorkerPool};
+use elis::cluster::{Admission, ApiBridge, Gateway, HttpServer, SseDecoder,
+                    WorkerPool};
 use elis::coordinator::{ClockMode, CoordinatorBuilder, Policy, Scheduler,
                         ServeConfig};
 use elis::engine::profiles::ModelProfile;
@@ -54,6 +56,33 @@ fn http(addr: SocketAddr, request_line: &str, body: &str) -> Result<String> {
     let mut out = String::new();
     stream.read_to_string(&mut out)?;
     Ok(out)
+}
+
+/// A `stream: true` generate: decode the SSE events off the chunked
+/// response, counting chunks and tokens as they arrive.
+fn stream_generate(addr: SocketAddr, body: &str) -> Result<(usize, usize)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    write!(stream,
+           "POST /v1/generate HTTP/1.1\r\nHost: demo\r\nContent-Length: {}\
+            \r\nConnection: close\r\n\r\n{body}", body.len())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let Some(split) = raw.windows(4).position(|w| w == b"\r\n\r\n") else {
+        bail!("no response head in the stream reply");
+    };
+    let mut dec = SseDecoder::default();
+    let (mut chunks, mut tokens) = (0usize, 0usize);
+    for ev in dec.push(&raw[split + 4..]) {
+        if ev.name.is_none() {
+            chunks += 1;
+            tokens += elis::util::json::Json::parse(&ev.data)
+                .ok()
+                .and_then(|j| j.get("tokens")?.as_i32_vec())
+                .map_or(0, |t| t.len());
+        }
+    }
+    Ok((chunks, tokens))
 }
 
 fn first_line(resp: &str) -> &str {
@@ -103,8 +132,10 @@ fn main() -> Result<()> {
         telemetry: Some(telemetry.clone()),
         api_tx,
         wait_timeout: Duration::from_secs(20),
+        admission: Admission::unlimited(),
+        stats: bridge.frontend_stats(),
     };
-    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2)?;
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4)?;
     let addr = server.local_addr();
     println!("listening on http://{addr}\n");
 
@@ -122,6 +153,10 @@ fn main() -> Result<()> {
         push("POST /v1/generate (wait)",
              http(addr, "POST /v1/generate",
                   r#"{"total_len": 40, "tenant": "api", "wait": true}"#)?);
+        let (chunks, toks) = stream_generate(
+            addr, r#"{"total_len": 120, "tenant": "api", "stream": true}"#)?;
+        log.push(("POST /v1/generate (stream)".to_string(),
+                  format!("{chunks} SSE chunks | {toks} tokens streamed")));
         let metrics = http(addr, "GET /metrics", "")?;
         let sample = metrics
             .lines()

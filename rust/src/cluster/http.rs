@@ -1,10 +1,12 @@
-//! Minimal HTTP/1.1 frontend on `std::net` — no dependencies.
+//! HTTP/1.1 frontend on `std::net` — no dependencies.
 //!
 //! The paper deploys the frontend scheduler as a Kubernetes Deployment
 //! with an HTTP port (§5); this module is that service surface for the
 //! in-process cluster runtime:
 //!
-//! * `GET /healthz` — liveness probe (the k8s manifests' port 8080).
+//! * `GET /healthz` — liveness probe (the k8s manifests' port 8080);
+//!   the body also reports the dead-worker count so probes see a
+//!   degraded fleet before it empties.
 //! * `GET /metrics` — Prometheus text exposition, snapshotted live from
 //!   the shared [`TelemetrySink`] (thread-safe — handler threads render
 //!   while the serving loop appends events).
@@ -13,37 +15,46 @@
 //!   optional): `prompt` (array of token ids) or `prompt_len`,
 //!   `total_len`, `topic`, `tenant`, `arrival_ms` (defaults to "now";
 //!   trusted only within the trailing [`MAX_BACKDATE_MS`], anything else
-//!   is re-stamped), and `wait` (block until the job finishes and report
-//!   its stats).
+//!   is re-stamped), `wait` (block until the job finishes and report
+//!   its stats), and `stream` (hold the connection open and forward
+//!   token chunks as server-sent events the moment each scheduling
+//!   window applies — the paper's interactive serving path).
 //!
-//! Connections are handled by a small thread pool; [`HttpServer::shutdown`]
-//! stops accepting, drains the handler threads, and joins everything
-//! (also run on drop).
+//! Connections are handled by one thread each (streams pin a thread for
+//! their whole lifetime, so a fixed pool would cap concurrent streams);
+//! an accept-side `max_conns` bound sheds excess load with 503.
+//! Connections are keep-alive by default, so one client socket can carry
+//! many `/v1/generate` calls back to back.
+//!
+//! The front door applies admission control *before* anything reaches
+//! the serving loop: a per-tenant token bucket ([`Admission`]) plus a
+//! bounded pending-admission queue, both shedding with
+//! `429 Retry-After` so overload never wedges the coordinator.
 //!
 //! The serving loop stays single-threaded and lock-free: handlers never
 //! touch the [`Coordinator`].  They enqueue [`ApiRequest`]s on an mpsc
 //! channel; the loop driving the coordinator calls [`ApiBridge::pump`]
-//! between steps to admit them, and a [`CompletionNotifier`] sink resolves
-//! `wait`ing handlers when their job finishes.
+//! between steps to admit them, and a [`StreamNotifier`] sink resolves
+//! `wait`ing handlers and feeds `stream`ing ones.
 //!
 //! [`Coordinator`]: crate::coordinator::Coordinator
 //! [`Coordinator::push_request`]: crate::coordinator::Coordinator::push_request
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener,
                TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
 use crate::coordinator::Coordinator;
-use crate::telemetry::TelemetrySink;
+use crate::telemetry::{FrontendStats, TelemetrySink};
 use crate::util::json::Json;
 use crate::workload::TraceRequest;
 
@@ -56,7 +67,7 @@ const MAX_HEADER: usize = 16 << 10;
 pub const MAX_BACKDATE_MS: f64 = 60_000.0;
 
 // ---------------------------------------------------------------------------
-// serving-loop side: admission bridge + completion notifier
+// serving-loop side: admission bridge + stream notifier
 // ---------------------------------------------------------------------------
 
 /// One `POST /v1/generate`, en route from a handler thread to the loop
@@ -65,6 +76,8 @@ pub struct ApiRequest {
     pub request: TraceRequest,
     /// hold the HTTP response until the job finishes
     pub wait: bool,
+    /// forward per-window token chunks as they are generated
+    pub stream: bool,
     /// where the handler thread blocks for its reply
     pub reply: Sender<GenerateReply>,
 }
@@ -72,23 +85,37 @@ pub struct ApiRequest {
 /// Reply to one [`ApiRequest`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum GenerateReply {
-    /// admitted; the job runs asynchronously (`wait: false`)
+    /// admitted; the job runs asynchronously (`wait: false`), or the
+    /// stream head for a `stream: true` request
     Accepted { job_id: u64 },
-    /// finished end-to-end (`wait: true`)
-    Finished { job_id: u64, tokens: usize, jct_ms: f64 },
+    /// one scheduling window's worth of tokens (`stream: true` only)
+    Chunk { job_id: u64, tokens: Vec<i32> },
+    /// finished end-to-end (`wait: true` or `stream: true` terminal)
+    Finished { job_id: u64, tokens: usize, jct_ms: f64,
+               token_ids: Vec<i32> },
     /// the serving loop is exiting (e.g. `--idle-exit-ms` fired) and will
     /// not run this job; the handler answers 503 instead of holding the
     /// connection until its timeout
     ShuttingDown,
 }
 
-type Waiters = Arc<Mutex<HashMap<u64, Sender<GenerateReply>>>>;
+/// One registered handler awaiting job events.
+struct Waiter {
+    tx: Sender<GenerateReply>,
+    /// streaming handlers get per-window [`GenerateReply::Chunk`]s;
+    /// waiting handlers accumulate tokens into `acc` for the final reply
+    streaming: bool,
+    acc: Vec<i32>,
+}
+
+type Waiters = Arc<Mutex<HashMap<u64, Waiter>>>;
 
 /// The serving loop's end of the admission channel.  Call
 /// [`pump`](Self::pump) between coordinator steps.
 pub struct ApiBridge {
     rx: Receiver<ApiRequest>,
     waiters: Waiters,
+    stats: Arc<FrontendStats>,
 }
 
 impl ApiBridge {
@@ -96,14 +123,25 @@ impl ApiBridge {
     /// (handler threads), the bridge stays with the serving loop.
     pub fn channel() -> (Sender<ApiRequest>, ApiBridge) {
         let (tx, rx) = channel();
-        let bridge = ApiBridge { rx, waiters: Waiters::default() };
+        let bridge = ApiBridge {
+            rx,
+            waiters: Waiters::default(),
+            stats: Arc::new(FrontendStats::default()),
+        };
         (tx, bridge)
     }
 
-    /// The [`EventSink`] that resolves `wait`ing handlers; register it on
-    /// the same coordinator this bridge pumps into.
-    pub fn completion_sink(&self) -> CompletionNotifier {
-        CompletionNotifier { waiters: self.waiters.clone() }
+    /// Shared front-door counters; hand a clone to the [`Gateway`] and
+    /// attach one to the telemetry sink for `/metrics` exposition.
+    pub fn frontend_stats(&self) -> Arc<FrontendStats> {
+        self.stats.clone()
+    }
+
+    /// The [`EventSink`] that resolves `wait`ing handlers and feeds
+    /// `stream`ing ones; register it on the same coordinator this bridge
+    /// pumps into.
+    pub fn completion_sink(&self) -> StreamNotifier {
+        StreamNotifier { waiters: self.waiters.clone() }
     }
 
     /// Drain every pending API admission into the coordinator (non-
@@ -118,6 +156,15 @@ impl ApiBridge {
     pub fn pump(&mut self, coord: &mut Coordinator<'_>) -> usize {
         let mut admitted = 0;
         while let Ok(mut req) = self.rx.try_recv() {
+            // the handler incremented the depth when it queued; tests
+            // that inject ApiRequests directly never did, hence the
+            // saturating decrement
+            let _ = self
+                .stats
+                .queue_depth
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    v.checked_sub(1)
+                });
             let now = coord.admission_now_ms();
             let a = req.request.arrival_ms;
             if !a.is_finite() || a < 0.0 || a > now
@@ -126,11 +173,22 @@ impl ApiBridge {
                 req.request.arrival_ms = now;
             }
             let id = coord.push_request(&req.request);
-            if req.wait {
-                self.waiters
-                    .lock()
-                    .unwrap()
-                    .insert(id.raw(), req.reply);
+            if req.wait || req.stream {
+                if req.stream {
+                    // ack the stream so the handler can write the
+                    // response head before the first chunk lands
+                    let _ = req.reply.send(GenerateReply::Accepted {
+                        job_id: id.raw(),
+                    });
+                }
+                self.waiters.lock().unwrap().insert(
+                    id.raw(),
+                    Waiter {
+                        tx: req.reply,
+                        streaming: req.stream,
+                        acc: Vec::new(),
+                    },
+                );
             } else {
                 // a dropped receiver just means the handler timed out
                 let _ = req.reply.send(GenerateReply::Accepted {
@@ -141,44 +199,164 @@ impl ApiBridge {
         }
         admitted
     }
-}
 
-impl ApiBridge {
     /// Shutdown drain: answer every queued admission *and* every still-
-    /// `wait`ing handler with [`GenerateReply::ShuttingDown`], so held
-    /// connections get a terminal 503 instead of hanging out their
-    /// timeout when the serving loop exits (`--idle-exit-ms` racing a
-    /// `wait: true` generate).  Call after the serving loop's last
-    /// `pump`, before `HttpServer::shutdown`; returns how many requests
-    /// were answered.
+    /// registered handler with [`GenerateReply::ShuttingDown`], so held
+    /// connections (waiters and streams alike) get a terminal answer
+    /// instead of hanging out their timeout when the serving loop exits
+    /// (`--idle-exit-ms` racing a `wait: true` generate).  Call after
+    /// the serving loop's last `pump`, before `HttpServer::shutdown`;
+    /// returns how many requests were answered.
     pub fn drain_shutdown(&mut self) -> usize {
         let mut n = 0;
         while let Ok(req) = self.rx.try_recv() {
+            let _ = self
+                .stats
+                .queue_depth
+                .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    v.checked_sub(1)
+                });
             let _ = req.reply.send(GenerateReply::ShuttingDown);
             n += 1;
         }
-        for (_, tx) in self.waiters.lock().unwrap().drain() {
-            let _ = tx.send(GenerateReply::ShuttingDown);
+        for (_, w) in self.waiters.lock().unwrap().drain() {
+            let _ = w.tx.send(GenerateReply::ShuttingDown);
             n += 1;
         }
         n
     }
 }
 
-/// [`EventSink`] resolving `wait: true` generate calls on job finish.
-pub struct CompletionNotifier {
+/// [`EventSink`] bridging coordinator job events into HTTP replies:
+/// resolves `wait: true` generate calls on finish and forwards each
+/// window's token payload to `stream: true` handlers as it applies.
+pub struct StreamNotifier {
     waiters: Waiters,
 }
 
-impl EventSink for CompletionNotifier {
+/// Backwards-compatible name from before streaming existed.
+pub type CompletionNotifier = StreamNotifier;
+
+impl EventSink for StreamNotifier {
+    fn on_job_tokens(&mut self, job: &JobMeta<'_>, _node: usize,
+                     tokens: &[i32], _now_ms: f64) {
+        let mut w = self.waiters.lock().unwrap();
+        if let Some(waiter) = w.get_mut(&job.id.raw()) {
+            if waiter.streaming {
+                let _ = waiter.tx.send(GenerateReply::Chunk {
+                    job_id: job.id.raw(),
+                    tokens: tokens.to_vec(),
+                });
+            } else {
+                waiter.acc.extend_from_slice(tokens);
+            }
+        }
+    }
+
     fn on_job_finished(&mut self, job: &JobMeta<'_>, _node: usize,
                        stats: &FinishStats, _now_ms: f64) {
-        if let Some(tx) = self.waiters.lock().unwrap().remove(&job.id.raw()) {
-            let _ = tx.send(GenerateReply::Finished {
+        if let Some(w) = self.waiters.lock().unwrap().remove(&job.id.raw()) {
+            let _ = w.tx.send(GenerateReply::Finished {
                 job_id: job.id.raw(),
                 tokens: stats.tokens,
                 jct_ms: stats.jct_ms,
+                token_ids: w.acc,
             });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// front-door admission control
+// ---------------------------------------------------------------------------
+
+/// Knobs for the front-door shedder.  `Default` disables everything
+/// (unlimited rate, unbounded queue).
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionConfig {
+    /// sustained requests/second across all tenants; `0.0` = unlimited
+    pub rps: f64,
+    /// token-bucket burst size (requests admitted back-to-back)
+    pub burst: f64,
+    /// pending-admission queue bound; `0` = unbounded
+    pub queue_cap: usize,
+    /// per-tenant weights (the `--tenants` spec): each tenant's rate is
+    /// `rps * weight / total_weight`; unknown tenants get weight 1
+    pub tenant_weights: Vec<(String, u32)>,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-tenant token-bucket rate limiter (cheap to clone; buckets are
+/// shared).  Pure front-door: runs entirely on handler threads.
+#[derive(Clone)]
+pub struct Admission {
+    cfg: Arc<AdmissionConfig>,
+    buckets: Arc<Mutex<HashMap<String, Bucket>>>,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission {
+            cfg: Arc::new(cfg),
+            buckets: Arc::new(Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// No rate limit, no queue bound.
+    pub fn unlimited() -> Admission {
+        Admission::new(AdmissionConfig::default())
+    }
+
+    /// Pending-admission queue bound (`0` = unbounded).
+    pub fn queue_cap(&self) -> usize {
+        self.cfg.queue_cap
+    }
+
+    /// This tenant's sustained rate in requests/second.
+    fn rate_for(&self, tenant: &str) -> f64 {
+        if self.cfg.tenant_weights.is_empty() {
+            return self.cfg.rps;
+        }
+        let total: u64 = self
+            .cfg
+            .tenant_weights
+            .iter()
+            .map(|(_, w)| u64::from(*w))
+            .sum();
+        let weight = self
+            .cfg
+            .tenant_weights
+            .iter()
+            .find(|(t, _)| t == tenant)
+            .map_or(1, |(_, w)| u64::from(*w));
+        self.cfg.rps * weight as f64 / total.max(1) as f64
+    }
+
+    /// Try to take one token from `tenant`'s bucket.  `Ok(())` admits;
+    /// `Err(after_s)` sheds with a suggested retry delay in seconds.
+    pub fn try_admit(&self, tenant: &str) -> std::result::Result<(), f64> {
+        if self.cfg.rps <= 0.0 {
+            return Ok(());
+        }
+        let rate = self.rate_for(tenant).max(1e-9);
+        let burst = self.cfg.burst.max(1.0);
+        let now = Instant::now();
+        let mut buckets = self.buckets.lock().unwrap();
+        let b = buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| Bucket { tokens: burst, last: now });
+        let dt = now.duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + dt * rate).min(burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err((1.0 - b.tokens) / rate)
         }
     }
 }
@@ -196,64 +374,90 @@ pub struct Gateway {
     pub api_tx: Sender<ApiRequest>,
     /// how long a `wait: true` generate may block before 504
     pub wait_timeout: Duration,
+    /// front-door rate limiter + queue bound
+    pub admission: Admission,
+    /// shed / queue-depth / stream gauges (share with [`ApiBridge`])
+    pub stats: Arc<FrontendStats>,
 }
 
-/// The listening server: an accept thread feeding a handler thread pool.
+/// Decrements the active-connection counter when a handler exits, even
+/// on panic.
+struct ConnSlot(Arc<AtomicUsize>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The listening server: an accept thread spawning one handler thread
+/// per connection (streaming responses pin a thread for their whole
+/// lifetime), bounded by `max_conns`.
 pub struct HttpServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
-    handlers: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
-    /// start `handler_threads` connection handlers.
-    pub fn serve(addr: &str, gateway: Gateway, handler_threads: usize)
+    /// serve with at most `max_conns` concurrent connections; excess
+    /// connections are answered 503 and closed.
+    pub fn serve(addr: &str, gateway: Gateway, max_conns: usize)
                  -> Result<HttpServer> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding HTTP frontend to {addr}"))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-
-        let (conn_tx, conn_rx) = channel::<TcpStream>();
-        let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let handlers = (0..handler_threads.max(1))
-            .map(|i| {
-                let rx = conn_rx.clone();
-                let gw = gateway.clone();
-                std::thread::Builder::new()
-                    .name(format!("elis-http-{i}"))
-                    .spawn(move || loop {
-                        // hold the lock only while dequeuing
-                        let conn = rx.lock().unwrap().recv();
-                        match conn {
-                            Ok(stream) => handle_connection(stream, &gw),
-                            Err(_) => return, // accept loop gone
-                        }
-                    })
-                    .expect("spawning HTTP handler thread")
-            })
-            .collect();
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let active = Arc::new(AtomicUsize::new(0));
+        let max_conns = max_conns.max(1);
 
         let stop_flag = stop.clone();
+        let conn_reg = conns.clone();
         let accept = std::thread::Builder::new()
             .name("elis-http-accept".to_string())
             .spawn(move || {
                 for conn in listener.incoming() {
                     if stop_flag.load(Ordering::SeqCst) {
-                        return; // drops conn_tx -> handlers drain and exit
+                        return;
                     }
-                    if let Ok(stream) = conn {
-                        if conn_tx.send(stream).is_err() {
-                            return;
+                    let Ok(mut stream) = conn else { continue };
+                    if active.load(Ordering::SeqCst) >= max_conns {
+                        // reap finished handlers before giving up
+                        conn_reg.lock().unwrap().retain(|j| !j.is_finished());
+                        if active.load(Ordering::SeqCst) >= max_conns {
+                            let _ = Response::text(
+                                503,
+                                "connection limit reached\n",
+                            )
+                            .write_to(&mut stream, false);
+                            continue;
                         }
+                    }
+                    active.fetch_add(1, Ordering::SeqCst);
+                    let slot = ConnSlot(active.clone());
+                    let gw = gateway.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("elis-http-conn".to_string())
+                        .spawn(move || {
+                            let _slot = slot;
+                            handle_connection(stream, &gw);
+                        });
+                    match spawned {
+                        Ok(join) => {
+                            let mut reg = conn_reg.lock().unwrap();
+                            reg.retain(|j| !j.is_finished());
+                            reg.push(join);
+                        }
+                        Err(_) => { /* slot dropped by move; shed */ }
                     }
                 }
             })
             .expect("spawning HTTP accept thread");
 
-        Ok(HttpServer { addr, stop, accept: Some(accept), handlers })
+        Ok(HttpServer { addr, stop, accept: Some(accept), conns })
     }
 
     /// The actually-bound address (resolves port 0).
@@ -261,8 +465,8 @@ impl HttpServer {
         self.addr
     }
 
-    /// Graceful shutdown: stop accepting, finish queued connections, join
-    /// every thread.  Idempotent; also runs on drop.
+    /// Graceful shutdown: stop accepting, join every live handler.
+    /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
@@ -288,9 +492,8 @@ impl HttpServer {
         if let Some(join) = self.accept.take() {
             let _ = join.join();
         }
-        // the accept thread has dropped conn_tx, so the handlers drain
-        // their queue and exit
-        for join in self.handlers.drain(..) {
+        let drained: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for join in drained {
             let _ = join.join();
         }
     }
@@ -310,42 +513,65 @@ struct Request {
     method: String,
     path: String,
     body: Vec<u8>,
+    /// client asked to close after this response (HTTP/1.0 default, or
+    /// `Connection: close`)
+    close: bool,
 }
 
 struct Response {
     status: u16,
     content_type: &'static str,
     body: String,
+    extra: Vec<(&'static str, String)>,
 }
 
 impl Response {
     fn text(status: u16, body: &str) -> Response {
         Response { status, content_type: "text/plain; charset=utf-8",
-                   body: body.to_string() }
+                   body: body.to_string(), extra: Vec::new() }
     }
 
     fn json(status: u16, body: Json) -> Response {
         Response { status, content_type: "application/json",
-                   body: format!("{body}\n") }
+                   body: format!("{body}\n"), extra: Vec::new() }
     }
 
-    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+    fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.extra.push((name, value));
+        self
+    }
+
+    fn write_to(&self, stream: &mut TcpStream, keep_alive: bool)
+                -> std::io::Result<()> {
         let reason = match self.status {
             200 => "OK",
             202 => "Accepted",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
             503 => "Service Unavailable",
             504 => "Gateway Timeout",
             _ => "Unknown",
         };
-        write!(
-            stream,
-            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\n\
-             Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-            self.status, reason, self.content_type, self.body.len(), self.body
-        )?;
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+            self.status, reason, self.content_type, self.body.len()
+        );
+        for (name, value) in &self.extra {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str(if keep_alive {
+            "Connection: keep-alive\r\n\r\n"
+        } else {
+            "Connection: close\r\n\r\n"
+        });
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(self.body.as_bytes())?;
         stream.flush()
     }
 }
@@ -353,15 +579,34 @@ impl Response {
 /// Parse one HTTP/1.1 request (request line, headers, Content-Length
 /// body) off a reader.  Generic for testability.
 ///
+/// Returns `Ok(None)` on a clean end-of-stream before any request byte
+/// (the keep-alive peer closed, or idled past the read timeout) —
+/// callers close quietly instead of answering 400.
+///
 /// The reader is hard-capped at `MAX_HEADER + MAX_BODY` + slack *before*
 /// any line parsing: `read_line` buffers until a newline, so without the
 /// cap a single newline-free request line could grow memory without
 /// bound regardless of the per-line checks below.
-fn read_request(reader: impl Read) -> Result<Request> {
+fn read_request(reader: impl Read) -> Result<Option<Request>> {
     let mut reader =
         BufReader::new(reader.take((MAX_HEADER + MAX_BODY + 1024) as u64));
     let mut line = String::new();
-    reader.read_line(&mut line).context("reading request line")?;
+    match reader.read_line(&mut line) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) if matches!(
+            e.kind(),
+            ErrorKind::WouldBlock
+                | ErrorKind::TimedOut
+                | ErrorKind::ConnectionReset
+                | ErrorKind::ConnectionAborted
+                | ErrorKind::UnexpectedEof
+        ) => return Ok(None),
+        Err(e) => return Err(e).context("reading request line"),
+    }
+    if line.trim().is_empty() {
+        bail!("empty request line");
+    }
     if line.len() > MAX_HEADER {
         bail!("request line exceeds {} bytes", MAX_HEADER);
     }
@@ -375,6 +620,8 @@ fn read_request(reader: impl Read) -> Result<Request> {
         .next()
         .ok_or_else(|| anyhow!("request line has no path"))?
         .to_string();
+    // HTTP/1.0 closes by default; 1.1 keeps alive by default
+    let mut close = parts.next() == Some("HTTP/1.0");
 
     let mut content_length = 0usize;
     let mut header_bytes = line.len();
@@ -392,11 +639,19 @@ fn read_request(reader: impl Read) -> Result<Request> {
             break;
         }
         if let Some((name, value)) = trimmed.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
                 content_length = value
                     .trim()
                     .parse()
                     .map_err(|_| anyhow!("bad content-length"))?;
+            } else if name.eq_ignore_ascii_case("connection") {
+                let v = value.trim().to_ascii_lowercase();
+                if v.contains("close") {
+                    close = true;
+                } else if v.contains("keep-alive") {
+                    close = false;
+                }
             }
         }
     }
@@ -405,32 +660,57 @@ fn read_request(reader: impl Read) -> Result<Request> {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body).context("reading body")?;
-    Ok(Request { method, path, body })
+    Ok(Some(Request { method, path, body, close }))
 }
 
 fn handle_connection(mut stream: TcpStream, gw: &Gateway) {
+    let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
-    let response = match read_request(&mut stream) {
-        Ok(request) => route(&request, gw),
-        Err(e) => Response::text(400, &format!("bad request: {e:#}\n")),
-    };
-    let _ = response.write_to(&mut stream);
+    loop {
+        let request = match read_request(&mut stream) {
+            Ok(Some(r)) => r,
+            Ok(None) => return, // clean close / idle keep-alive timeout
+            Err(e) => {
+                let resp =
+                    Response::text(400, &format!("bad request: {e:#}\n"));
+                let _ = resp.write_to(&mut stream, false);
+                return;
+            }
+        };
+        let keep = !request.close;
+        let ok = if request.method == "POST"
+            && request.path == "/v1/generate"
+        {
+            handle_generate(&request.body, gw, &mut stream, keep)
+        } else {
+            route(&request, gw).write_to(&mut stream, keep).is_ok()
+        };
+        if !keep || !ok {
+            return;
+        }
+    }
 }
 
 fn route(req: &Request, gw: &Gateway) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::text(200, "ok\n"),
+        ("GET", "/healthz") => {
+            let dead = gw
+                .telemetry
+                .as_ref()
+                .map_or(0, TelemetrySink::workers_dead);
+            Response::text(200, &format!("ok\nworkers_dead {dead}\n"))
+        }
         ("GET", "/metrics") => match &gw.telemetry {
             Some(sink) => Response {
                 status: 200,
                 // Prometheus text exposition format version
                 content_type: "text/plain; version=0.0.4",
                 body: sink.render_prometheus(),
+                extra: Vec::new(),
             },
             None => Response::text(503, "no telemetry sink configured\n"),
         },
-        ("POST", "/v1/generate") => handle_generate(&req.body, gw),
         ("GET" | "POST" | "HEAD" | "DELETE" | "PUT", _) => {
             Response::text(404, "not found\n")
         }
@@ -470,30 +750,81 @@ pub fn trace_request_from_json(j: &Json) -> Result<TraceRequest> {
     Ok(TraceRequest { id: 0, arrival_ms, prompt, total_len, topic, tenant })
 }
 
-fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
+/// Handle one `POST /v1/generate`; returns whether the connection is
+/// still usable for the next keep-alive request.
+fn handle_generate(body: &[u8], gw: &Gateway, stream: &mut TcpStream,
+                   keep: bool) -> bool {
+    let fail = |resp: Response, stream: &mut TcpStream, keep: bool| {
+        resp.write_to(stream, keep).is_ok()
+    };
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return Response::text(400, "body is not utf-8\n"),
+        Err(_) => {
+            return fail(Response::text(400, "body is not utf-8\n"),
+                        stream, keep)
+        }
     };
-    let parsed = match Json::parse(if text.trim().is_empty() { "{}" } else { text }) {
-        Ok(j) => j,
-        Err(e) => return Response::text(400, &format!("bad json: {e}\n")),
-    };
+    let parsed =
+        match Json::parse(if text.trim().is_empty() { "{}" } else { text }) {
+            Ok(j) => j,
+            Err(e) => {
+                return fail(Response::text(400, &format!("bad json: {e}\n")),
+                            stream, keep)
+            }
+        };
     let request = match trace_request_from_json(&parsed) {
         Ok(r) => r,
-        Err(e) => return Response::text(400, &format!("bad request: {e}\n")),
+        Err(e) => {
+            return fail(Response::text(400, &format!("bad request: {e}\n")),
+                        stream, keep)
+        }
     };
     let wait = parsed.get("wait").and_then(Json::as_bool).unwrap_or(false);
+    let streaming =
+        parsed.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    let tenant = request
+        .tenant
+        .clone()
+        .unwrap_or_else(|| crate::telemetry::DEFAULT_TENANT.to_string());
+
+    // reserve a pending-admission queue slot *before* spending a rate
+    // token, so shed requests never burn bucket capacity
+    let cap = gw.admission.queue_cap();
+    let depth = gw.stats.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+    if cap > 0 && depth as usize > cap {
+        gw.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        gw.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+        let resp = Response::text(429, "admission queue is full\n")
+            .with_header("Retry-After", "1".to_string());
+        return fail(resp, stream, keep);
+    }
+    if let Err(after) = gw.admission.try_admit(&tenant) {
+        gw.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        gw.stats.rejected_total.fetch_add(1, Ordering::Relaxed);
+        let secs = (after.ceil() as u64).max(1);
+        let resp = Response::text(429, "rate limit exceeded\n")
+            .with_header("Retry-After", secs.to_string());
+        return fail(resp, stream, keep);
+    }
 
     let (reply_tx, reply_rx) = channel();
-    let api = ApiRequest { request, wait, reply: reply_tx };
+    let api = ApiRequest { request, wait, stream: streaming,
+                           reply: reply_tx };
     if gw.api_tx.send(api).is_err() {
-        return Response::text(503, "serving loop is not running\n");
+        gw.stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        return fail(Response::text(503, "serving loop is not running\n"),
+                    stream, keep);
     }
+
+    if streaming {
+        return stream_reply(gw, &reply_rx, stream, keep);
+    }
+
     // non-wait admissions are acked by the next pump(); give them a
     // generous bound anyway so a stalled loop surfaces as 504, not a hang
-    let timeout = if wait { gw.wait_timeout } else { Duration::from_secs(10) };
-    match reply_rx.recv_timeout(timeout) {
+    let timeout =
+        if wait { gw.wait_timeout } else { Duration::from_secs(10) };
+    let resp = match recv_terminal(&reply_rx, timeout) {
         Ok(GenerateReply::Accepted { job_id }) => Response::json(
             202,
             Json::obj(vec![
@@ -501,7 +832,7 @@ fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
                 ("status", Json::Str("accepted".into())),
             ]),
         ),
-        Ok(GenerateReply::Finished { job_id, tokens, jct_ms }) => {
+        Ok(GenerateReply::Finished { job_id, tokens, jct_ms, token_ids }) => {
             Response::json(
                 200,
                 Json::obj(vec![
@@ -509,8 +840,13 @@ fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
                     ("status", Json::Str("finished".into())),
                     ("tokens", Json::Num(tokens as f64)),
                     ("jct_ms", Json::Num(jct_ms)),
+                    ("token_ids", token_array(&token_ids)),
                 ]),
             )
+        }
+        Ok(GenerateReply::Chunk { .. }) => {
+            // unreachable: chunks only flow to streaming waiters
+            Response::text(500, "unexpected chunk on non-stream request\n")
         }
         Ok(GenerateReply::ShuttingDown)
         | Err(RecvTimeoutError::Disconnected) => {
@@ -521,7 +857,244 @@ fn handle_generate(body: &[u8], gw: &Gateway) -> Response {
         Err(RecvTimeoutError::Timeout) => {
             Response::text(504, "timed out waiting for the job\n")
         }
+    };
+    fail(resp, stream, keep)
+}
+
+/// Like `recv_timeout` but skips any stray `Chunk`s (a request that
+/// raced from streaming registration to a plain reply path).
+fn recv_terminal(rx: &Receiver<GenerateReply>, timeout: Duration)
+                 -> std::result::Result<GenerateReply, RecvTimeoutError> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        let got = rx.recv_timeout(left)?;
+        if !matches!(got, GenerateReply::Chunk { .. }) {
+            return Ok(got);
+        }
     }
+}
+
+fn token_array(tokens: &[i32]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect())
+}
+
+/// Drive a `stream: true` response: wait for the admission ack, write
+/// the SSE head, then forward chunks until the finish event.  Streaming
+/// responses always close the connection (`Transfer-Encoding: chunked`
+/// is terminated explicitly, but clients treat event streams as
+/// one-shot); returns whether the connection may be reused.
+fn stream_reply(gw: &Gateway, rx: &Receiver<GenerateReply>,
+                stream: &mut TcpStream, keep: bool) -> bool {
+    let head = match rx.recv_timeout(Duration::from_secs(10)) {
+        Ok(GenerateReply::Accepted { job_id }) => job_id,
+        Ok(GenerateReply::ShuttingDown)
+        | Err(RecvTimeoutError::Disconnected) => {
+            return Response::text(503, "server is shutting down\n")
+                .write_to(stream, keep)
+                .is_ok();
+        }
+        Err(RecvTimeoutError::Timeout) => {
+            return Response::text(504, "timed out awaiting admission\n")
+                .write_to(stream, keep)
+                .is_ok();
+        }
+        Ok(_) => {
+            return Response::text(500, "unexpected reply ordering\n")
+                .write_to(stream, keep)
+                .is_ok();
+        }
+    };
+    gw.stats.streams_active.fetch_add(1, Ordering::Relaxed);
+    let ok = stream_events(rx, stream, gw.wait_timeout, head, keep);
+    gw.stats.streams_active.fetch_sub(1, Ordering::Relaxed);
+    ok && keep
+}
+
+/// Write the chunked SSE body for one admitted job.  Returns false if
+/// the connection must close (write failure or abnormal termination).
+fn stream_events(rx: &Receiver<GenerateReply>, stream: &mut TcpStream,
+                 timeout: Duration, job_id: u64, keep: bool) -> bool {
+    let conn = if keep { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+         Cache-Control: no-cache\r\nTransfer-Encoding: chunked\r\n\
+         Connection: {conn}\r\n\r\n"
+    );
+    if stream.write_all(head.as_bytes()).is_err() {
+        return false;
+    }
+    let accepted = Json::obj(vec![("job_id", Json::Num(job_id as f64))]);
+    if write_chunk(stream, &sse_event(Some("accepted"), &accepted.to_string()))
+        .is_err()
+    {
+        return false;
+    }
+    loop {
+        match rx.recv_timeout(timeout) {
+            Ok(GenerateReply::Chunk { job_id, tokens }) => {
+                let data = Json::obj(vec![
+                    ("job_id", Json::Num(job_id as f64)),
+                    ("tokens", token_array(&tokens)),
+                ]);
+                if write_chunk(stream, &sse_event(None, &data.to_string()))
+                    .is_err()
+                {
+                    return false;
+                }
+            }
+            Ok(GenerateReply::Finished { job_id, tokens, jct_ms, .. }) => {
+                let data = Json::obj(vec![
+                    ("job_id", Json::Num(job_id as f64)),
+                    ("status", Json::Str("finished".into())),
+                    ("tokens", Json::Num(tokens as f64)),
+                    ("jct_ms", Json::Num(jct_ms)),
+                ]);
+                let ok = write_chunk(
+                    stream,
+                    &sse_event(Some("done"), &data.to_string()),
+                )
+                .and_then(|()| stream.write_all(b"0\r\n\r\n"))
+                .and_then(|()| stream.flush());
+                return ok.is_ok();
+            }
+            Ok(GenerateReply::Accepted { .. }) => {
+                // duplicate ack: ignore
+            }
+            Ok(GenerateReply::ShuttingDown)
+            | Err(RecvTimeoutError::Disconnected) => {
+                let _ = write_chunk(
+                    stream,
+                    &sse_event(
+                        Some("error"),
+                        r#"{"error":"server is shutting down"}"#,
+                    ),
+                );
+                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ = stream.flush();
+                return false;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let _ = write_chunk(
+                    stream,
+                    &sse_event(Some("error"), r#"{"error":"timed out"}"#),
+                );
+                let _ = stream.write_all(b"0\r\n\r\n");
+                let _ = stream.flush();
+                return false;
+            }
+        }
+    }
+}
+
+/// One HTTP chunk (`Transfer-Encoding: chunked` framing).
+fn write_chunk(stream: &mut TcpStream, payload: &str)
+               -> std::io::Result<()> {
+    write!(stream, "{:x}\r\n{}\r\n", payload.len(), payload)?;
+    stream.flush()
+}
+
+/// One server-sent event (`event:` line optional, then `data:`).
+fn sse_event(name: Option<&str>, data: &str) -> String {
+    match name {
+        Some(n) => format!("event: {n}\ndata: {data}\n\n"),
+        None => format!("data: {data}\n\n"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// client-side SSE/chunked decoder (loadgen + tests)
+// ---------------------------------------------------------------------------
+
+/// One decoded server-sent event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SseEvent {
+    /// the `event:` field, if present
+    pub name: Option<String>,
+    /// the `data:` payload (multiple data lines joined with `\n`)
+    pub data: String,
+}
+
+/// Incremental decoder for a chunked-transfer SSE body.  Feed raw bytes
+/// as they arrive off the socket (any split — mid chunk header, mid
+/// payload); complete events come back out.  Used by `elis loadgen` and
+/// the integration tests.
+#[derive(Debug, Default)]
+pub struct SseDecoder {
+    /// undecoded chunked-framing bytes
+    raw: Vec<u8>,
+    /// de-chunked event-stream body
+    body: String,
+    done: bool,
+}
+
+impl SseDecoder {
+    /// Feed bytes; returns every event completed by this read.
+    pub fn push(&mut self, bytes: &[u8]) -> Vec<SseEvent> {
+        self.raw.extend_from_slice(bytes);
+        loop {
+            if self.done {
+                break;
+            }
+            // chunk-size line: hex length, optional ;extensions, CRLF
+            let Some(eol) = find_crlf(&self.raw) else { break };
+            let size_line =
+                String::from_utf8_lossy(&self.raw[..eol]).into_owned();
+            let hex = size_line
+                .split(';')
+                .next()
+                .unwrap_or("")
+                .trim()
+                .to_string();
+            let Ok(size) = usize::from_str_radix(&hex, 16) else {
+                // unparseable framing: stop consuming
+                break;
+            };
+            if size == 0 {
+                self.done = true;
+                break;
+            }
+            // need the full payload + trailing CRLF before consuming
+            let need = eol + 2 + size + 2;
+            if self.raw.len() < need {
+                break;
+            }
+            let payload = &self.raw[eol + 2..eol + 2 + size];
+            self.body.push_str(&String::from_utf8_lossy(payload));
+            self.raw.drain(..need);
+        }
+        self.take_events()
+    }
+
+    /// The terminating zero-length chunk has been seen.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Split completed (`\n\n`-terminated) events off the body.
+    fn take_events(&mut self) -> Vec<SseEvent> {
+        let mut out = Vec::new();
+        while let Some(end) = self.body.find("\n\n") {
+            let block: String = self.body.drain(..end + 2).collect();
+            let mut name = None;
+            let mut data = Vec::new();
+            for line in block.lines() {
+                if let Some(v) = line.strip_prefix("event:") {
+                    name = Some(v.trim().to_string());
+                } else if let Some(v) = line.strip_prefix("data:") {
+                    data.push(v.trim_start().to_string());
+                }
+            }
+            if name.is_some() || !data.is_empty() {
+                out.push(SseEvent { name, data: data.join("\n") });
+            }
+        }
+        out
+    }
+}
+
+fn find_crlf(buf: &[u8]) -> Option<usize> {
+    buf.windows(2).position(|w| w == b"\r\n")
 }
 
 #[cfg(test)]
@@ -532,23 +1105,47 @@ mod tests {
     fn parses_request_line_headers_and_body() {
         let raw = "POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
                    Content-Length: 11\r\n\r\nhello world";
-        let req = read_request(raw.as_bytes()).unwrap();
+        let req = read_request(raw.as_bytes()).unwrap().unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/generate");
         assert_eq!(req.body, b"hello world");
+        assert!(!req.close, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
     fn tolerates_missing_body_and_rejects_garbage() {
         let req = read_request("GET /healthz HTTP/1.1\r\n\r\n".as_bytes())
+            .unwrap()
             .unwrap();
         assert_eq!(req.method, "GET");
         assert!(req.body.is_empty());
+        assert!(read_request("".as_bytes()).unwrap().is_none(),
+                "clean EOF is not an error");
         assert!(read_request("\r\n".as_bytes()).is_err());
         assert!(read_request("GET\r\n\r\n".as_bytes()).is_err());
         let huge = format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
                            MAX_BODY + 1);
         assert!(read_request(huge.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn connection_close_and_http10_are_detected() {
+        let req = read_request(
+            "GET / HTTP/1.1\r\nConnection: close\r\n\r\n".as_bytes(),
+        )
+        .unwrap()
+        .unwrap();
+        assert!(req.close);
+        let req = read_request("GET / HTTP/1.0\r\n\r\n".as_bytes())
+            .unwrap()
+            .unwrap();
+        assert!(req.close, "HTTP/1.0 defaults to close");
+        let req = read_request(
+            "GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n".as_bytes(),
+        )
+        .unwrap()
+        .unwrap();
+        assert!(!req.close, "explicit keep-alive overrides 1.0 default");
     }
 
     #[test]
@@ -588,12 +1185,15 @@ mod tests {
         });
         let (mut server_side, _) = listener.accept().unwrap();
         Response::json(202, Json::obj(vec![("job_id", Json::Num(7.0))]))
-            .write_to(&mut server_side)
+            .with_header("Retry-After", "2".to_string())
+            .write_to(&mut server_side, false)
             .unwrap();
         drop(server_side);
         let got = client.join().unwrap();
         assert!(got.starts_with("HTTP/1.1 202 Accepted\r\n"), "{got}");
         assert!(got.contains("Content-Type: application/json"), "{got}");
+        assert!(got.contains("Retry-After: 2\r\n"), "{got}");
+        assert!(got.contains("Connection: close\r\n"), "{got}");
         assert!(got.contains("\"job_id\":7"), "{got}");
         let len_line = got
             .lines()
@@ -602,5 +1202,79 @@ mod tests {
         let n: usize = len_line["Content-Length: ".len()..].parse().unwrap();
         let body = got.split("\r\n\r\n").nth(1).unwrap();
         assert_eq!(n, body.len());
+    }
+
+    #[test]
+    fn admission_bucket_sheds_and_refills_per_tenant() {
+        // burst of 2: two immediate admits, third shed with a retry hint
+        let adm = Admission::new(AdmissionConfig {
+            rps: 10.0,
+            burst: 2.0,
+            queue_cap: 0,
+            tenant_weights: Vec::new(),
+        });
+        assert!(adm.try_admit("a").is_ok());
+        assert!(adm.try_admit("a").is_ok());
+        let after = adm.try_admit("a").unwrap_err();
+        assert!(after > 0.0 && after <= 0.11, "retry hint ~0.1s: {after}");
+        // a different tenant has its own bucket
+        assert!(adm.try_admit("b").is_ok());
+
+        // rps = 0 disables the limiter entirely
+        let open = Admission::unlimited();
+        for _ in 0..1000 {
+            assert!(open.try_admit("x").is_ok());
+        }
+
+        // weighted split: paid gets 3/4 of the rate, free 1/4, unknown
+        // tenants weight 1 (here 1/4)
+        let weighted = Admission::new(AdmissionConfig {
+            rps: 8.0,
+            burst: 1.0,
+            queue_cap: 0,
+            tenant_weights: vec![("paid".into(), 3), ("free".into(), 1)],
+        });
+        assert!((weighted.rate_for("paid") - 6.0).abs() < 1e-9);
+        assert!((weighted.rate_for("free") - 2.0).abs() < 1e-9);
+        assert!((weighted.rate_for("mystery") - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sse_decoder_reassembles_split_chunked_reads() {
+        // two events across three chunks, fed one byte at a time
+        let e1 = sse_event(Some("accepted"), r#"{"job_id":1}"#);
+        let e2 = sse_event(None, r#"{"tokens":[1,2,3]}"#);
+        let mut wire = Vec::new();
+        for part in [&e1[..7], &e1[7..], &e2[..]] {
+            wire.extend_from_slice(
+                format!("{:x}\r\n{}\r\n", part.len(), part).as_bytes(),
+            );
+        }
+        wire.extend_from_slice(b"0\r\n\r\n");
+
+        let mut dec = SseDecoder::default();
+        let mut events = Vec::new();
+        for b in &wire {
+            events.extend(dec.push(std::slice::from_ref(b)));
+        }
+        assert!(dec.is_done());
+        assert_eq!(events.len(), 2, "{events:?}");
+        assert_eq!(events[0].name.as_deref(), Some("accepted"));
+        assert_eq!(events[0].data, r#"{"job_id":1}"#);
+        assert!(events[1].name.is_none());
+        assert_eq!(events[1].data, r#"{"tokens":[1,2,3]}"#);
+
+        // the same wire in one gulp decodes identically
+        let mut dec2 = SseDecoder::default();
+        let all = dec2.push(&wire);
+        assert!(dec2.is_done());
+        assert_eq!(all, events);
+    }
+
+    #[test]
+    fn sse_event_formats_with_and_without_name() {
+        assert_eq!(sse_event(Some("done"), "{}"),
+                   "event: done\ndata: {}\n\n");
+        assert_eq!(sse_event(None, "x"), "data: x\n\n");
     }
 }

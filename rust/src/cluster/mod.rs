@@ -10,11 +10,17 @@
 //!   thread).  Virtual-clock runs keep the inline path and stay
 //!   bit-identical.
 //! * [`http`] — [`HttpServer`]: a minimal HTTP/1.1 frontend on
-//!   `std::net::TcpListener` with a connection-handling thread pool and
-//!   graceful shutdown.  `GET /healthz` for probes, `GET /metrics` for a
-//!   live Prometheus scrape of the telemetry sink, and
-//!   `POST /v1/generate` for streaming admission into a running
-//!   coordinator (via [`ApiBridge`] + `Coordinator::push_request`).
+//!   `std::net::TcpListener` with keep-alive, one handler thread per
+//!   connection (bounded by `max_conns`), and graceful shutdown.
+//!   `GET /healthz` for probes (body carries the dead-worker count),
+//!   `GET /metrics` for a live Prometheus scrape of the telemetry sink,
+//!   and `POST /v1/generate` for admission into a running coordinator
+//!   (via [`ApiBridge`] + `Coordinator::push_request`) — with
+//!   `"stream": true` the response is a chunked server-sent-event
+//!   stream of per-window token payloads fed by [`StreamNotifier`].
+//!   The front door sheds overload before it reaches the serving loop:
+//!   [`Admission`] is a per-tenant token bucket plus a bounded
+//!   pending-admission queue, both answering `429 Retry-After`.
 //!
 //! * [`wire`] — the `WorkerCmd` / `WindowDone` protocol on the wire:
 //!   length-prefixed JSON frames over `TcpStream` with a versioned
@@ -50,7 +56,8 @@ pub mod pool;
 pub mod remote;
 pub mod wire;
 
-pub use http::{ApiBridge, ApiRequest, CompletionNotifier, Gateway,
-               GenerateReply, HttpServer};
+pub use http::{Admission, AdmissionConfig, ApiBridge, ApiRequest,
+               CompletionNotifier, Gateway, GenerateReply, HttpServer,
+               SseDecoder, SseEvent, StreamNotifier};
 pub use pool::{WindowDone, WorkerCmd, WorkerPool, WorkerTransport};
 pub use remote::{run_worker, RemoteWorkerPool};

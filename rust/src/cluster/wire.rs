@@ -586,6 +586,32 @@ mod tests {
     }
 
     #[test]
+    fn frame_cap_boundary_is_exact() {
+        // exactly MAX_FRAME roundtrips...
+        let payload = vec![0x5au8; MAX_FRAME];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).unwrap();
+        let mut r = &buf[..];
+        let got = read_frame(&mut r, MAX_FRAME).unwrap().unwrap();
+        assert_eq!(got.len(), MAX_FRAME);
+        assert!(got == payload, "64 MiB payload must roundtrip unchanged");
+
+        // ...MAX_FRAME + 1 is refused by the writer...
+        let over = vec![0u8; MAX_FRAME + 1];
+        assert!(write_frame(&mut Vec::new(), &over).is_err());
+
+        // ...and by the reader *before* allocation: hand it only the
+        // 4-byte prefix claiming MAX_FRAME + 1 bytes — if the cap check
+        // ran after allocation, read_exact would error on the missing
+        // payload instead of the cap message
+        let prefix = (MAX_FRAME as u32 + 1).to_be_bytes();
+        let mut r: &[u8] = &prefix;
+        let err = read_frame(&mut r, MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("cap"),
+                "expected the cap error, got: {err:#}");
+    }
+
+    #[test]
     fn garbage_payloads_error_without_panicking() {
         for bad in [&b"not json"[..], b"{\"type\":42}",
                     b"{\"type\":\"nope\"}", b"{}", b"\xff\xfe",

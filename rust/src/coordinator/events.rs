@@ -48,8 +48,10 @@ pub struct FinishStats {
 /// take their lock once per window instead of once per job per window.
 #[derive(Debug, Clone, Copy)]
 pub enum WindowJobEvent<'a> {
-    /// the job produced `new_tokens` tokens inside the window
-    Progress { job: JobMeta<'a>, new_tokens: usize },
+    /// the job produced `tokens` inside the window (the actual token ids,
+    /// borrowed from the job's response tail — this is what end-to-end
+    /// streaming forwards to clients)
+    Progress { job: JobMeta<'a>, tokens: &'a [i32] },
     /// the job produced its full response
     Finished { job: JobMeta<'a>, stats: FinishStats },
     /// the engine evicted the job's KV during the window
@@ -103,6 +105,16 @@ pub trait EventSink {
                        _new_tokens: usize, _now_ms: f64) {
     }
 
+    /// Same per-job per-window event as
+    /// [`on_job_progress`](Self::on_job_progress), but carrying the actual
+    /// token ids produced in the window (a view into the job's response
+    /// tail).  Fires immediately before the count-based hook — sinks that
+    /// forward content (token streaming) implement this one; sinks that
+    /// only account throughput keep the cheaper count.
+    fn on_job_tokens(&mut self, _job: &JobMeta<'_>, _node: usize,
+                     _tokens: &[i32], _now_ms: f64) {
+    }
+
     /// A job produced its full response.
     fn on_job_finished(&mut self, _job: &JobMeta<'_>, _node: usize,
                        _stats: &FinishStats, _now_ms: f64) {
@@ -130,8 +142,9 @@ pub trait EventSink {
     fn on_window_applied(&mut self, w: &WindowEvents<'_>) {
         for ev in w.events {
             match ev {
-                WindowJobEvent::Progress { job, new_tokens } => {
-                    self.on_job_progress(job, w.node, *new_tokens, w.now_ms)
+                WindowJobEvent::Progress { job, tokens } => {
+                    self.on_job_tokens(job, w.node, tokens, w.now_ms);
+                    self.on_job_progress(job, w.node, tokens.len(), w.now_ms)
                 }
                 WindowJobEvent::Finished { job, stats } => {
                     self.on_job_finished(job, w.node, stats, w.now_ms)
@@ -268,9 +281,10 @@ mod tests {
         // hands it the whole window at once
         let mut c = EventCounter::default();
         c.on_job_admitted(&meta(0), 0, 0.0);
+        let toks = [7i32; 20];
         let events = [
             WindowJobEvent::Preempted { job: JobId::new(1) },
-            WindowJobEvent::Progress { job: meta(0), new_tokens: 20 },
+            WindowJobEvent::Progress { job: meta(0), tokens: &toks },
             WindowJobEvent::Finished { job: meta(0), stats: stats() },
         ];
         c.on_window_applied(&WindowEvents {
@@ -282,6 +296,40 @@ mod tests {
             now_ms: 52.0,
         });
         assert_eq!((c.windows, c.finished, c.preempted), (1, 1, 1));
+    }
+
+    #[test]
+    fn window_applied_forwards_token_payloads() {
+        // the token-carrying hook fires before the count-based one and
+        // sees the exact ids the window produced
+        struct Grab {
+            toks: Vec<i32>,
+            count: usize,
+        }
+        impl EventSink for Grab {
+            fn on_job_tokens(&mut self, _job: &JobMeta<'_>, _node: usize,
+                             tokens: &[i32], _now_ms: f64) {
+                assert_eq!(self.count, 0, "tokens must precede the count");
+                self.toks.extend_from_slice(tokens);
+            }
+            fn on_job_progress(&mut self, _job: &JobMeta<'_>, _node: usize,
+                               new_tokens: usize, _now_ms: f64) {
+                self.count += new_tokens;
+            }
+        }
+        let toks = [3i32, 5, 7];
+        let events = [WindowJobEvent::Progress { job: meta(0), tokens: &toks }];
+        let mut g = Grab { toks: Vec::new(), count: 0 };
+        g.on_window_applied(&WindowEvents {
+            node: 0,
+            batch: &[JobId::new(0)],
+            events: &events,
+            tokens: 3,
+            service_ms: 1.0,
+            now_ms: 2.0,
+        });
+        assert_eq!(g.toks, vec![3, 5, 7]);
+        assert_eq!(g.count, 3);
     }
 
     #[test]

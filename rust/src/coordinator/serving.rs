@@ -592,6 +592,12 @@ impl<'a> Coordinator<'a> {
         &self.state
     }
 
+    /// Workers marked dead by failover — surfaced by the HTTP frontend's
+    /// `/healthz` body so probes see a degraded fleet before it empties.
+    pub fn dead_workers(&self) -> usize {
+        self.dead.iter().filter(|&&d| d).count()
+    }
+
     pub fn transfer_stats(&self) -> &super::batcher::TransferStats {
         &self.batcher.stats
     }
@@ -1341,9 +1347,12 @@ impl<'a> Coordinator<'a> {
                 .iter()
                 .map(|ev| match *ev {
                     PendingOutcomeEvent::Progress(id, n) => {
+                        // each job appears at most once per window, so the
+                        // response tail is exactly this window's tokens
+                        let resp = &self.table[id].response;
                         WindowJobEvent::Progress {
                             job: job_meta(&self.table, id),
-                            new_tokens: n,
+                            tokens: &resp[resp.len() - n..],
                         }
                     }
                     PendingOutcomeEvent::Finished(id, stats) => {

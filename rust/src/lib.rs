@@ -20,6 +20,7 @@ pub mod cluster;
 pub mod coordinator;
 pub mod engine;
 pub mod k8s;
+pub mod loadgen;
 pub mod metrics;
 pub mod predictor;
 pub mod runtime;

@@ -1,0 +1,687 @@
+//! `elis loadgen` — a dependency-free load harness for `elis serve`.
+//!
+//! The paper's industrial claim is interactive serving at scale; this
+//! module measures it from the *client* side of the wire: it drives many
+//! concurrent `POST /v1/generate` connections against a live frontend
+//! and reports TTFT / TPOT / JCT percentiles as users would see them
+//! (socket to socket, including admission queueing and HTTP overhead),
+//! not as the coordinator accounts them internally.
+//!
+//! Two drive modes:
+//!
+//! * **closed-loop** (`rps == 0.0`, the default): `streams` worker
+//!   threads each hold one keep-alive connection and issue streaming
+//!   requests back to back until the deadline.  Concurrency is exact —
+//!   `--streams 1000` *is* 1000 concurrent streams — which is what the
+//!   CI smoke asserts.
+//! * **open-loop** (`rps > 0.0`): a spawner thread draws exponential
+//!   interarrival gaps (Poisson process) and launches one thread per
+//!   request, shedding client-side beyond `max_in_flight` — arrival
+//!   pressure independent of server latency, the honest way to measure
+//!   an overloaded server.
+//!
+//! Every sample is measured with `Instant` on the request thread; the
+//! sketches are P² estimators ([`QuantileSketch`]), so memory stays O(1)
+//! per metric no matter how long the run is.
+//!
+//! [`run`] is callable from tests; the `elis loadgen` subcommand wraps
+//! it and writes the report as `BENCH_serve.json`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::SseDecoder;
+use crate::telemetry::QuantileSketch;
+use crate::util::json::Json;
+
+/// Everything `elis loadgen` can be told from the CLI.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// frontend address, `host:port`
+    pub target: String,
+    /// how long to drive load
+    pub duration: Duration,
+    /// closed-loop: concurrent streaming connections
+    pub streams: usize,
+    /// open-loop arrival rate in requests/second; `0.0` = closed-loop
+    pub rps: f64,
+    /// open-loop: shed client-side beyond this many in-flight requests
+    /// (`0` = unbounded)
+    pub max_in_flight: usize,
+    /// `total_len` sent with every request (the response length: the
+    /// sim engine generates exactly this many tokens)
+    pub total_len: usize,
+    /// `prompt_len` sent with every request
+    pub prompt_len: usize,
+    /// round-robin tenant labels; empty = no tenant field
+    pub tenants: Vec<String>,
+    /// `stream: true` requests (SSE) vs `wait: true` (single JSON reply)
+    pub stream: bool,
+    /// RNG seed for open-loop interarrival draws
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            target: "127.0.0.1:8080".to_string(),
+            duration: Duration::from_secs(10),
+            streams: 8,
+            rps: 0.0,
+            max_in_flight: 0,
+            total_len: 120,
+            prompt_len: 16,
+            tenants: Vec::new(),
+            stream: true,
+            seed: 1,
+        }
+    }
+}
+
+/// Client-side measurements for one finished run.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// requests put on the wire
+    pub sent: u64,
+    /// requests that reached a terminal success (done event / 200 JSON)
+    pub ok: u64,
+    /// transport or protocol failures
+    pub errors: u64,
+    /// `429` responses from front-door admission control
+    pub rejected: u64,
+    /// open-loop requests never sent because `max_in_flight` was hit
+    pub shed: u64,
+    /// token ids received across all streams
+    pub tokens_streamed: u64,
+    /// time to first token chunk, ms (streaming mode only)
+    pub ttft_ms: QuantileSketch,
+    /// time per output token after the first chunk, ms
+    pub tpot_ms: QuantileSketch,
+    /// request completion time, ms
+    pub jct_ms: QuantileSketch,
+    /// wall time the run actually took
+    pub elapsed_s: f64,
+    /// peak concurrent in-flight requests observed
+    pub peak_in_flight: u64,
+}
+
+impl LoadReport {
+    /// The `BENCH_serve.json` document.
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        let sketch = |s: &QuantileSketch| {
+            Json::obj(vec![
+                ("count", Json::Num(s.count() as f64)),
+                ("mean", Json::Num(if s.count() > 0 { s.mean() } else { 0.0 })),
+                ("p50", Json::Num(if s.count() > 0 { s.p50() } else { 0.0 })),
+                ("p90", Json::Num(if s.count() > 0 { s.p90() } else { 0.0 })),
+                ("p99", Json::Num(if s.count() > 0 { s.p99() } else { 0.0 })),
+            ])
+        };
+        Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("mode", Json::Str(
+                if cfg.rps > 0.0 { "open-loop" } else { "closed-loop" }
+                    .into(),
+            )),
+            ("target", Json::Str(cfg.target.clone())),
+            ("streams", Json::Num(cfg.streams as f64)),
+            ("rps", Json::Num(cfg.rps)),
+            ("streaming", Json::Bool(cfg.stream)),
+            ("total_len", Json::Num(cfg.total_len as f64)),
+            ("duration_s", Json::Num(cfg.duration.as_secs_f64())),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("sent", Json::Num(self.sent as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("tokens_streamed", Json::Num(self.tokens_streamed as f64)),
+            ("peak_in_flight", Json::Num(self.peak_in_flight as f64)),
+            ("ttft_ms", sketch(&self.ttft_ms)),
+            ("tpot_ms", sketch(&self.tpot_ms)),
+            ("jct_ms", sketch(&self.jct_ms)),
+        ])
+    }
+}
+
+/// One finished request's client-side timings.
+struct Sample {
+    ttft_ms: f64,
+    jct_ms: f64,
+    tokens: u64,
+}
+
+/// Shared counters the request threads bump as they go.
+#[derive(Default)]
+struct Counters {
+    sent: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    rejected: AtomicU64,
+    shed: AtomicU64,
+    tokens: AtomicU64,
+    in_flight: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl Counters {
+    fn enter(&self) -> usize {
+        let now = self.in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+        now
+    }
+
+    fn exit(&self) {
+        self.in_flight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Drive the configured load and gather the report.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.rps <= 0.0 && cfg.streams == 0 {
+        bail!("closed-loop mode needs --streams >= 1");
+    }
+    let counters = Arc::new(Counters::default());
+    let (sample_tx, sample_rx) = channel::<Sample>();
+    let start = Instant::now();
+    let deadline = start + cfg.duration;
+
+    let handles: Vec<JoinHandle<()>> = if cfg.rps > 0.0 {
+        spawn_open_loop(cfg, &counters, &sample_tx, deadline)
+    } else {
+        spawn_closed_loop(cfg, &counters, &sample_tx, deadline)
+    };
+    drop(sample_tx); // the receiver drains until the last clone is gone
+
+    let mut ttft = QuantileSketch::new();
+    let mut tpot = QuantileSketch::new();
+    let mut jct = QuantileSketch::new();
+    for s in sample_rx.iter() {
+        if s.ttft_ms.is_finite() {
+            ttft.add(s.ttft_ms);
+            if s.tokens > 1 {
+                tpot.add((s.jct_ms - s.ttft_ms) / (s.tokens - 1) as f64);
+            }
+        }
+        jct.add(s.jct_ms);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+
+    Ok(LoadReport {
+        sent: counters.sent.load(Ordering::Relaxed),
+        ok: counters.ok.load(Ordering::Relaxed),
+        errors: counters.errors.load(Ordering::Relaxed),
+        rejected: counters.rejected.load(Ordering::Relaxed),
+        shed: counters.shed.load(Ordering::Relaxed),
+        tokens_streamed: counters.tokens.load(Ordering::Relaxed),
+        ttft_ms: ttft,
+        tpot_ms: tpot,
+        jct_ms: jct,
+        elapsed_s: start.elapsed().as_secs_f64(),
+        peak_in_flight: counters.peak.load(Ordering::Relaxed) as u64,
+    })
+}
+
+/// Closed-loop: `streams` threads, each looping requests on one
+/// keep-alive connection until the deadline.
+fn spawn_closed_loop(cfg: &LoadgenConfig, counters: &Arc<Counters>,
+                     sample_tx: &Sender<Sample>, deadline: Instant)
+                     -> Vec<JoinHandle<()>> {
+    (0..cfg.streams.max(1))
+        .map(|i| {
+            let cfg = cfg.clone();
+            let counters = counters.clone();
+            let tx = sample_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("elis-loadgen-{i}"))
+                .spawn(move || {
+                    let mut conn: Option<TcpStream> = None;
+                    let mut seq = 0u64;
+                    while Instant::now() < deadline {
+                        let stream = match conn.take() {
+                            Some(s) => s,
+                            None => match connect(&cfg.target) {
+                                Ok(s) => s,
+                                Err(_) => {
+                                    counters
+                                        .errors
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    std::thread::sleep(
+                                        Duration::from_millis(50),
+                                    );
+                                    continue;
+                                }
+                            },
+                        };
+                        counters.enter();
+                        let kept = one_request(
+                            stream, &cfg, i as u64, seq, &counters, &tx,
+                            deadline,
+                        );
+                        counters.exit();
+                        conn = kept;
+                        seq += 1;
+                    }
+                })
+                .expect("spawning loadgen thread")
+        })
+        .collect()
+}
+
+/// Open-loop: a Poisson spawner launching one thread per request.
+fn spawn_open_loop(cfg: &LoadgenConfig, counters: &Arc<Counters>,
+                   sample_tx: &Sender<Sample>, deadline: Instant)
+                   -> Vec<JoinHandle<()>> {
+    let cfg = cfg.clone();
+    let counters = counters.clone();
+    let tx = sample_tx.clone();
+    let spawner = std::thread::Builder::new()
+        .name("elis-loadgen-spawn".to_string())
+        .spawn(move || {
+            let mut rng = Xorshift64::new(cfg.seed);
+            let mut workers: Vec<JoinHandle<()>> = Vec::new();
+            let mut seq = 0u64;
+            while Instant::now() < deadline {
+                // exponential interarrival gap for a Poisson process
+                let gap_s = -rng.uniform().ln() / cfg.rps;
+                let wake = Instant::now()
+                    + Duration::from_secs_f64(gap_s.clamp(0.0, 10.0));
+                while Instant::now() < wake {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                if Instant::now() >= deadline {
+                    break;
+                }
+                if cfg.max_in_flight > 0
+                    && counters.in_flight.load(Ordering::Relaxed)
+                        >= cfg.max_in_flight
+                {
+                    counters.shed.fetch_add(1, Ordering::Relaxed);
+                    seq += 1;
+                    continue;
+                }
+                let cfg2 = cfg.clone();
+                let counters2 = counters.clone();
+                let tx2 = tx.clone();
+                let n = seq;
+                seq += 1;
+                if workers.len() % 64 == 0 {
+                    workers.retain(|w| !w.is_finished());
+                }
+                let spawned = std::thread::Builder::new()
+                    .name("elis-loadgen-req".to_string())
+                    .spawn(move || {
+                        counters2.enter();
+                        match connect(&cfg2.target) {
+                            Ok(s) => {
+                                one_request(s, &cfg2, n, 0, &counters2,
+                                            &tx2, deadline);
+                            }
+                            Err(_) => {
+                                counters2
+                                    .errors
+                                    .fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        counters2.exit();
+                    });
+                match spawned {
+                    Ok(h) => workers.push(h),
+                    Err(_) => {
+                        counters.shed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            for w in workers {
+                let _ = w.join();
+            }
+        })
+        .expect("spawning loadgen spawner thread");
+    vec![spawner]
+}
+
+fn connect(target: &str) -> std::io::Result<TcpStream> {
+    let stream = TcpStream::connect(target)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+    Ok(stream)
+}
+
+/// Issue one `/v1/generate` on `stream`, record its sample, and return
+/// the connection if it is still reusable (keep-alive).
+fn one_request(mut stream: TcpStream, cfg: &LoadgenConfig, worker: u64,
+               seq: u64, counters: &Counters, tx: &Sender<Sample>,
+               deadline: Instant) -> Option<TcpStream> {
+    let tenant = if cfg.tenants.is_empty() {
+        String::new()
+    } else {
+        let t = &cfg.tenants[(worker as usize + seq as usize)
+            % cfg.tenants.len()];
+        format!(r#","tenant":"{t}""#)
+    };
+    let mode = if cfg.stream { r#""stream":true"# } else { r#""wait":true"# };
+    let body = format!(
+        r#"{{{mode},"total_len":{},"prompt_len":{},"topic":{}{tenant}}}"#,
+        cfg.total_len,
+        cfg.prompt_len,
+        (worker + seq) % 8,
+    );
+    let request = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: {}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{}",
+        cfg.target,
+        body.len(),
+        body
+    );
+    let t0 = Instant::now();
+    if stream.write_all(request.as_bytes()).is_err() {
+        counters.errors.fetch_add(1, Ordering::Relaxed);
+        return None;
+    }
+    counters.sent.fetch_add(1, Ordering::Relaxed);
+
+    let head = match read_head(&mut stream) {
+        Ok(h) => h,
+        Err(_) => {
+            counters.errors.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+    };
+    if head.status == 429 {
+        counters.rejected.fetch_add(1, Ordering::Relaxed);
+        // consume the (small) body so the connection can be reused
+        return drain_body(stream, &head);
+    }
+    if head.status != 200 {
+        counters.errors.fetch_add(1, Ordering::Relaxed);
+        return drain_body(stream, &head);
+    }
+    if head.chunked {
+        read_sse(stream, &head, t0, counters, tx, deadline)
+    } else {
+        read_json_reply(stream, &head, t0, counters, tx)
+    }
+}
+
+/// Drain one chunked SSE response, timing TTFT (first token chunk) and
+/// JCT (`done` event).
+fn read_sse(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
+            counters: &Counters, tx: &Sender<Sample>, deadline: Instant)
+            -> Option<TcpStream> {
+    let mut dec = SseDecoder::default();
+    let mut events = dec.push(&head.leftover);
+    let mut buf = [0u8; 4096];
+    let mut ttft = f64::NAN;
+    let mut tokens = 0u64;
+    let hard_stop = deadline + Duration::from_secs(30);
+    loop {
+        for ev in events.drain(..) {
+            match ev.name.as_deref() {
+                None => {
+                    // token chunk: count ids in the "tokens" array
+                    let n = Json::parse(&ev.data)
+                        .ok()
+                        .and_then(|j| {
+                            j.get("tokens").and_then(Json::as_i32_vec)
+                        })
+                        .map_or(0, |v| v.len() as u64);
+                    if n > 0 && !ttft.is_finite() {
+                        ttft = t0.elapsed().as_secs_f64() * 1e3;
+                    }
+                    tokens += n;
+                    counters.tokens.fetch_add(n, Ordering::Relaxed);
+                }
+                Some("done") => {
+                    counters.ok.fetch_add(1, Ordering::Relaxed);
+                    let _ = tx.send(Sample {
+                        ttft_ms: ttft,
+                        jct_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        tokens,
+                    });
+                    // the server leaves the connection reusable after
+                    // the terminating chunk
+                    return Some(stream);
+                }
+                Some(_) => { /* accepted / error markers */ }
+            }
+        }
+        if dec.is_done() {
+            // stream ended without a done event (server-side error)
+            counters.errors.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        if Instant::now() > hard_stop {
+            counters.errors.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Ok(n) => events = dec.push(&buf[..n]),
+            Err(_) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+    }
+}
+
+/// Read one fixed-length JSON reply (`wait: true` mode).
+fn read_json_reply(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
+                   counters: &Counters, tx: &Sender<Sample>)
+                   -> Option<TcpStream> {
+    let want = head.content_length.unwrap_or(0);
+    let mut body = head.leftover.clone();
+    let mut buf = [0u8; 4096];
+    while body.len() < want {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => body.extend_from_slice(&buf[..n]),
+            Err(_) => {
+                counters.errors.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+    }
+    let jct = t0.elapsed().as_secs_f64() * 1e3;
+    let tokens = std::str::from_utf8(&body)
+        .ok()
+        .and_then(|t| Json::parse(t).ok())
+        .and_then(|j| j.get("tokens").and_then(Json::as_usize))
+        .unwrap_or(0) as u64;
+    counters.ok.fetch_add(1, Ordering::Relaxed);
+    counters.tokens.fetch_add(tokens, Ordering::Relaxed);
+    let _ = tx.send(Sample { ttft_ms: f64::NAN, jct_ms: jct, tokens });
+    if head.keep_alive { Some(stream) } else { None }
+}
+
+/// Parsed response head plus whatever body bytes rode in with it.
+struct HeadInfo {
+    status: u16,
+    content_length: Option<usize>,
+    chunked: bool,
+    keep_alive: bool,
+    leftover: Vec<u8>,
+}
+
+/// Read until the end of the response headers; body bytes already read
+/// come back in `leftover`.
+fn read_head(stream: &mut TcpStream) -> Result<HeadInfo> {
+    let mut buf = Vec::with_capacity(512);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(pos) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            break pos;
+        }
+        if buf.len() > 64 << 10 {
+            bail!("response head exceeds 64 KiB");
+        }
+        let n = stream.read(&mut chunk).context("reading response head")?;
+        if n == 0 {
+            bail!("connection closed before response head completed");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let leftover = buf[head_end + 4..].to_vec();
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .context("unparseable status line")?;
+    let mut content_length = None;
+    let mut chunked = false;
+    let mut keep_alive = true;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else { continue };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim().to_ascii_lowercase();
+        match name.as_str() {
+            "content-length" => content_length = value.parse().ok(),
+            "transfer-encoding" => chunked = value.contains("chunked"),
+            "connection" => keep_alive = !value.contains("close"),
+            _ => {}
+        }
+    }
+    Ok(HeadInfo { status, content_length, chunked, keep_alive, leftover })
+}
+
+/// Consume a fixed-length body so the connection stays framed; returns
+/// the connection if reusable.
+fn drain_body(mut stream: TcpStream, head: &HeadInfo)
+              -> Option<TcpStream> {
+    let want = head.content_length.unwrap_or(0);
+    let mut got = head.leftover.len();
+    let mut buf = [0u8; 1024];
+    while got < want {
+        match stream.read(&mut buf) {
+            Ok(0) => return None,
+            Ok(n) => got += n,
+            Err(_) => return None,
+        }
+    }
+    if head.keep_alive { Some(stream) } else { None }
+}
+
+/// Tiny xorshift64 PRNG — deterministic interarrival draws without any
+/// external crate.
+struct Xorshift64 {
+    state: u64,
+}
+
+impl Xorshift64 {
+    fn new(seed: u64) -> Xorshift64 {
+        Xorshift64 { state: seed.max(1) }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x
+    }
+
+    /// Uniform in (0, 1] — never exactly 0, so `ln()` stays finite.
+    fn uniform(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64 + 1.0) / (1u64 << 53) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xorshift_uniform_is_in_unit_interval_and_deterministic() {
+        let mut a = Xorshift64::new(42);
+        let mut b = Xorshift64::new(42);
+        for _ in 0..10_000 {
+            let u = a.uniform();
+            assert!(u > 0.0 && u <= 1.0, "{u}");
+            assert!((u - b.uniform()).abs() < 1e-18);
+        }
+        let mut c = Xorshift64::new(7);
+        assert!((a.uniform() - c.uniform()).abs() > 0.0,
+                "different seeds should diverge");
+    }
+
+    #[test]
+    fn head_parser_splits_status_headers_and_leftover() {
+        // parse off a real socket so the signature stays TcpStream
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(
+                b"HTTP/1.1 429 Too Many Requests\r\n\
+                  Retry-After: 2\r\nContent-Length: 5\r\n\
+                  Connection: close\r\n\r\nnope\n",
+            )
+            .unwrap();
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        let head = read_head(&mut client).unwrap();
+        writer.join().unwrap();
+        assert_eq!(head.status, 429);
+        assert_eq!(head.content_length, Some(5));
+        assert!(!head.chunked);
+        assert!(!head.keep_alive);
+        assert_eq!(head.leftover, b"nope\n");
+    }
+
+    #[test]
+    fn report_json_has_the_bench_serve_schema() {
+        let cfg = LoadgenConfig::default();
+        let mut report = LoadReport {
+            sent: 10,
+            ok: 9,
+            errors: 1,
+            rejected: 3,
+            shed: 0,
+            tokens_streamed: 900,
+            ttft_ms: QuantileSketch::new(),
+            tpot_ms: QuantileSketch::new(),
+            jct_ms: QuantileSketch::new(),
+            elapsed_s: 5.0,
+            peak_in_flight: 8,
+        };
+        for i in 0..100 {
+            report.ttft_ms.add(10.0 + i as f64);
+            report.jct_ms.add(100.0 + i as f64);
+        }
+        let j = report.to_json(&cfg);
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("serve"));
+        assert_eq!(j.get("tokens_streamed").and_then(Json::as_usize),
+                   Some(900));
+        let ttft = j.get("ttft_ms").expect("ttft object");
+        assert_eq!(ttft.get("count").and_then(Json::as_usize), Some(100));
+        let p99 = ttft.get("p99").and_then(Json::as_f64).unwrap();
+        assert!(p99 > 90.0 && p99 <= 110.0, "{p99}");
+        // empty sketches render zeros, not NaN (JSON has no NaN)
+        let tpot = j.get("tpot_ms").expect("tpot object");
+        assert_eq!(tpot.get("p50").and_then(Json::as_f64), Some(0.0));
+        // and the whole document round-trips through the parser
+        let text = j.to_string();
+        assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+}

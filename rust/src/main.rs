@@ -9,6 +9,9 @@
 //!                    over TCP instead of local engines
 //!   worker           backend pod: connect to a coordinator's --worker-listen
 //!                    address and serve scheduling windows over TCP
+//!   loadgen          client-side load harness: drive concurrent streaming
+//!                    /v1/generate connections against a live `elis serve`
+//!                    and report TTFT/TPOT/JCT percentiles
 //!   simulate         run a scheduling experiment on the calibrated sim engine
 //!   trace-fit        reproduce the Fig 4 inter-arrival analysis
 //!   preempt-profile  reproduce the Table 6 preemption profiling
@@ -23,8 +26,9 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use elis::cluster::{run_worker, ApiBridge, Gateway, HttpServer,
-                    RemoteWorkerPool, WorkerPool, WorkerTransport};
+use elis::cluster::{run_worker, Admission, AdmissionConfig, ApiBridge,
+                    Gateway, HttpServer, RemoteWorkerPool, WorkerPool,
+                    WorkerTransport};
 use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
     PriorityShaper, Scheduler, ServeConfig,
@@ -51,6 +55,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         Some("serve") => cmd_serve(&args),
         Some("worker") => cmd_worker(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("trace-fit") => cmd_trace_fit(&args),
         Some("preempt-profile") => cmd_preempt_profile(&args),
@@ -80,9 +85,16 @@ USAGE: elis <subcommand> [--flags]
                     move onto worker-pool threads (windows overlap across
                     workers) and an HTTP frontend serves GET /healthz,
                     GET /metrics (Prometheus), POST /v1/generate
-                    (streaming admission).  With --listen: --http-threads
+                    (JSON reply, or chunked SSE token streaming with
+                    \"stream\": true).  With --listen: --http-conns
+                    (max concurrent connections, default 4096)
                     --wait-timeout-s --idle-exit-ms (0 = serve forever)
                     --idle-tick-ms
+                    --admission-rps N (front-door token-bucket rate, 0 =
+                    off) --admission-burst N --admission-queue N (bounded
+                    pending-admission queue, 0 = unbounded); overload is
+                    shed with 429 + Retry-After, per-tenant rates split
+                    by the --tenants weights
                     --worker-listen addr:port   accept --workers remote
                     `elis worker` pod registrations over TCP instead of
                     building local engines, so workers span machines; a
@@ -95,6 +107,15 @@ USAGE: elis <subcommand> [--flags]
                     Runs until the coordinator closes the connection.
                     Without artifacts, --engine sim falls back to a
                     built-in 7B profile
+  loadgen           drive a live `elis serve --listen` frontend and
+                    measure client-side latency: --target host:port
+                    --duration-s (default 10) --streams N (closed-loop
+                    concurrent streaming connections, default 8)
+                    --rps R (open-loop Poisson arrivals instead;
+                    --max-in-flight caps client-side) --total-len
+                    --prompt-len --tenants a,b --no-stream (use
+                    \"wait\": true instead of SSE) --seed
+                    --json-out BENCH_serve.json
   simulate          calibrated simulation: --model --scheduler --rps-mult
                     --batch --workers --n --shuffles --predictor --lb
                     --tenants name[=weight],... (weighted round-robin tags)
@@ -524,14 +545,27 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
         ServeBackend::Remote(pool) => builder.build_remote(trace, pool,
                                                            sched)?,
     };
+    let adm_rps = args.f64("admission-rps", 0.0);
+    let admission = Admission::new(AdmissionConfig {
+        rps: adm_rps,
+        burst: args.f64("admission-burst", adm_rps.max(1.0)),
+        queue_cap: args.usize("admission-queue", 0),
+        tenant_weights: parse_tenant_spec(&args.list("tenants"))?,
+    });
+    let stats = bridge.frontend_stats();
+    if let Some((sink, _)) = telemetry {
+        // surface the front-door gauges on /metrics
+        sink.attach_frontend(stats.clone());
+    }
     let gateway = Gateway {
         telemetry: telemetry.as_ref().map(|(sink, _)| sink.clone()),
         api_tx,
-        wait_timeout: std::time::Duration::from_secs(
-            args.u64("wait-timeout-s", 30)),
+        wait_timeout: args.duration_s("wait-timeout-s", 30.0),
+        admission,
+        stats,
     };
     let mut server = HttpServer::serve(addr, gateway,
-                                       args.usize("http-threads", 4))?;
+                                       args.usize("http-conns", 4096))?;
     println!("listening on http://{}  \
               (GET /healthz | GET /metrics | POST /v1/generate)",
              server.local_addr());
@@ -568,6 +602,68 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
     drop(bridge);
     server.shutdown();
     Ok(coord.report())
+}
+
+/// `elis loadgen`: the client half of the streaming serving path.
+/// Measures what users see — TTFT to the first SSE token chunk, TPOT,
+/// and JCT, socket to socket — against a live `elis serve --listen`.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let cfg = elis::loadgen::LoadgenConfig {
+        target: args.str("target", "127.0.0.1:8080"),
+        duration: args.duration_s("duration-s", 10.0),
+        streams: args.usize("streams", 8),
+        rps: args.f64("rps", 0.0),
+        max_in_flight: args.usize("max-in-flight", 0),
+        total_len: args.usize("total-len", 120),
+        prompt_len: args.usize("prompt-len", 16),
+        // accept the same name=weight spec as --tenants elsewhere; only
+        // the names matter client-side
+        tenants: parse_tenant_spec(&args.list("tenants"))?
+            .into_iter()
+            .map(|(name, _)| name)
+            .collect(),
+        stream: !args.bool("no-stream"),
+        seed: args.u64("seed", 1),
+    };
+    if cfg.rps > 0.0 {
+        println!("loadgen: open-loop {} rps against {} for {:.1}s \
+                  (max in flight: {})",
+                 cfg.rps, cfg.target, cfg.duration.as_secs_f64(),
+                 cfg.max_in_flight);
+    } else {
+        println!("loadgen: closed-loop {} concurrent {} connections \
+                  against {} for {:.1}s",
+                 cfg.streams,
+                 if cfg.stream { "streaming" } else { "waiting" },
+                 cfg.target, cfg.duration.as_secs_f64());
+    }
+    let report = elis::loadgen::run(&cfg)?;
+    println!(
+        "sent {}  ok {}  errors {}  rejected(429) {}  shed {}  \
+         tokens {}  peak in-flight {}",
+        report.sent, report.ok, report.errors, report.rejected,
+        report.shed, report.tokens_streamed, report.peak_in_flight
+    );
+    if report.ttft_ms.count() > 0 {
+        println!("TTFT ms  p50 {:.1}  p90 {:.1}  p99 {:.1}",
+                 report.ttft_ms.p50(), report.ttft_ms.p90(),
+                 report.ttft_ms.p99());
+    }
+    if report.tpot_ms.count() > 0 {
+        println!("TPOT ms  p50 {:.2}  p90 {:.2}  p99 {:.2}",
+                 report.tpot_ms.p50(), report.tpot_ms.p90(),
+                 report.tpot_ms.p99());
+    }
+    if report.jct_ms.count() > 0 {
+        println!("JCT ms   p50 {:.0}  p90 {:.0}  p99 {:.0}",
+                 report.jct_ms.p50(), report.jct_ms.p90(),
+                 report.jct_ms.p99());
+    }
+    if let Some(path) = args.opt_str("json-out") {
+        std::fs::write(path, format!("{}\n", report.to_json(&cfg)))?;
+        println!("report written to {path}");
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -161,6 +161,26 @@ pub fn render(state: &mut TelemetryState) -> String {
                    "Queueing delay (ms), streaming P2 quantiles.",
                    &tenants, pick_queue_delay);
 
+    // ---- serving front door (failover + admission + streaming) ----------
+    header(&mut out, "elis_workers_dead",
+           "Workers marked dead by coordinator failover.", "gauge");
+    sample(&mut out, "elis_workers_dead", &[],
+           state.workers_dead() as f64);
+    if let Some(f) = &state.frontend {
+        header(&mut out, "elis_http_requests_rejected_total",
+               "Requests shed by admission control (429s).", "counter");
+        sample(&mut out, "elis_http_requests_rejected_total", &[],
+               f.rejected() as f64);
+        header(&mut out, "elis_admission_queue_depth",
+               "Accepted requests waiting to enter the coordinator.",
+               "gauge");
+        sample(&mut out, "elis_admission_queue_depth", &[],
+               f.depth() as f64);
+        header(&mut out, "elis_streams_active",
+               "Streaming responses currently open.", "gauge");
+        sample(&mut out, "elis_streams_active", &[], f.streams() as f64);
+    }
+
     out
 }
 
@@ -269,6 +289,36 @@ mod tests {
                 "missing per-tenant quantile sample:\n{text}");
         assert!(text.contains("elis_node_jobs_admitted_total{node=\"0\"}"));
         assert!(text.contains("elis_tenant_deadline_misses_total"));
+    }
+
+    #[test]
+    fn frontend_gauges_and_dead_workers_render() {
+        use std::sync::atomic::Ordering;
+        use std::sync::Arc;
+
+        use super::super::sink::FrontendStats;
+
+        let sink = populated_sink();
+        let mut h = sink.clone();
+        h.on_worker_lost(1, 2, 9_000.0);
+        let stats = Arc::new(FrontendStats::default());
+        stats.rejected_total.fetch_add(7, Ordering::Relaxed);
+        stats.queue_depth.fetch_add(3, Ordering::Relaxed);
+        stats.streams_active.fetch_add(2, Ordering::Relaxed);
+        sink.attach_frontend(stats);
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_workers_dead 1"), "{text}");
+        assert!(text.contains("elis_http_requests_rejected_total 7"),
+                "{text}");
+        assert!(text.contains("elis_admission_queue_depth 3"), "{text}");
+        assert!(text.contains("elis_streams_active 2"), "{text}");
+        // without an attached frontend the families stay silent but the
+        // dead-worker gauge always renders
+        let bare = TelemetrySink::new(1).render_prometheus();
+        validate(&bare);
+        assert!(bare.contains("elis_workers_dead 0"), "{bare}");
+        assert!(!bare.contains("elis_streams_active"), "{bare}");
     }
 
     #[test]

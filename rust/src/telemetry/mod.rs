@@ -42,8 +42,8 @@ pub mod slo;
 pub mod wfq;
 
 pub use export::render;
-pub use sink::{NodeStats, SloSpec, TelemetrySink, TelemetryState,
-               TenantStats, DEFAULT_TENANT};
+pub use sink::{FrontendStats, NodeStats, SloSpec, TelemetrySink,
+               TelemetryState, TenantStats, DEFAULT_TENANT};
 pub use sketch::{P2Quantile, QuantileSketch, WindowedRate};
 pub use slo::SloPolicy;
 pub use wfq::WfqPolicy;

@@ -22,6 +22,7 @@
 //! updates — well off any hot path.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::coordinator::events::{EventSink, FinishStats, JobMeta,
@@ -32,6 +33,35 @@ use super::sketch::{QuantileSketch, WindowedRate};
 
 /// Tenant label applied to requests that carry no tenant tag.
 pub const DEFAULT_TENANT: &str = "default";
+
+/// Front-door gauges maintained by the HTTP layer (admission control and
+/// token streaming) outside the coordinator's event stream.  Handler
+/// threads poke the atomics lock-free; `/metrics` renders a snapshot when
+/// the owning [`TelemetryState`] carries an attached copy
+/// ([`TelemetrySink::attach_frontend`]).
+#[derive(Debug, Default)]
+pub struct FrontendStats {
+    /// requests shed by admission control (429s)
+    pub rejected_total: AtomicU64,
+    /// requests accepted but not yet pumped into the coordinator
+    pub queue_depth: AtomicU64,
+    /// streaming responses currently open
+    pub streams_active: AtomicU64,
+}
+
+impl FrontendStats {
+    pub fn rejected(&self) -> u64 {
+        self.rejected_total.load(Ordering::Relaxed)
+    }
+
+    pub fn depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+
+    pub fn streams(&self) -> u64 {
+        self.streams_active.load(Ordering::Relaxed)
+    }
+}
 
 /// Per-tenant SLO budgets for deadline accounting and the SLO policy.
 /// A budget of 0 (or a non-finite value) disables the deadline for that
@@ -71,6 +101,8 @@ pub struct NodeStats {
     pub tokens: u64,
     pub service_ms_sum: f64,
     pub token_rate: WindowedRate,
+    /// worker marked dead by coordinator failover (`on_worker_lost`)
+    pub lost: bool,
 }
 
 impl NodeStats {
@@ -85,6 +117,7 @@ impl NodeStats {
             tokens: 0,
             service_ms_sum: 0.0,
             token_rate: WindowedRate::default_window(),
+            lost: false,
         }
     }
 }
@@ -129,6 +162,8 @@ pub struct TelemetryState {
     pub slo: Option<SloSpec>,
     /// coordinator time of the most recent event (drives rate windows)
     pub last_event_ms: f64,
+    /// HTTP front-door gauges, when serving (see [`FrontendStats`])
+    pub frontend: Option<Arc<FrontendStats>>,
 }
 
 impl TelemetryState {
@@ -138,6 +173,7 @@ impl TelemetryState {
             tenants: BTreeMap::new(),
             slo,
             last_event_ms: 0.0,
+            frontend: None,
         }
     }
 
@@ -156,6 +192,11 @@ impl TelemetryState {
 
     pub fn total_deadline_misses(&self) -> u64 {
         self.tenants.values().map(|t| t.deadline_misses).sum()
+    }
+
+    /// Workers the coordinator marked dead via failover.
+    pub fn workers_dead(&self) -> usize {
+        self.nodes.iter().filter(|n| n.lost).count()
     }
 
     // -- event folding, shared by the per-event hooks (one lock each) and
@@ -261,6 +302,19 @@ impl TelemetrySink {
         }
         Some(t.jct_ms.p99())
     }
+
+    /// Attach the HTTP front-door gauges so `/metrics` renders them (the
+    /// serving binary shares one [`FrontendStats`] between the gateway's
+    /// handler threads and this sink).
+    pub fn attach_frontend(&self, stats: Arc<FrontendStats>) {
+        self.state.lock().unwrap().frontend = Some(stats);
+    }
+
+    /// Workers the coordinator marked dead via failover (surfaced in the
+    /// `/healthz` body).
+    pub fn workers_dead(&self) -> usize {
+        self.state.lock().unwrap().workers_dead()
+    }
 }
 
 impl EventSink for TelemetrySink {
@@ -308,6 +362,12 @@ impl EventSink for TelemetrySink {
         st.apply_preempt(node);
     }
 
+    fn on_worker_lost(&mut self, node: usize, _rehomed: usize, now_ms: f64) {
+        let mut st = self.state.lock().unwrap();
+        st.touch(now_ms);
+        st.node_mut(node).lost = true;
+    }
+
     /// The whole window under a single mutex acquisition: the serving loop
     /// delivers every per-job event of a finished window plus the
     /// window-done rollup without re-taking the lock per job, so a pooled
@@ -318,8 +378,8 @@ impl EventSink for TelemetrySink {
         st.touch(w.now_ms);
         for ev in w.events {
             match ev {
-                WindowJobEvent::Progress { job, new_tokens } => {
-                    st.apply_progress(job.tenant, *new_tokens)
+                WindowJobEvent::Progress { job, tokens } => {
+                    st.apply_progress(job.tenant, tokens.len())
                 }
                 WindowJobEvent::Finished { job, stats } => {
                     st.apply_finish(job.tenant, w.node, stats)
@@ -413,9 +473,10 @@ mod tests {
             let m = meta(0, Some("t"), 0.0);
             let st = finish(803.0, 50);
             if batched {
+                let toks = [9i32; 50];
                 let events = [
                     WindowJobEvent::Preempted { job: JobId::new(1) },
-                    WindowJobEvent::Progress { job: m, new_tokens: 50 },
+                    WindowJobEvent::Progress { job: m, tokens: &toks },
                     WindowJobEvent::Finished { job: m, stats: st },
                 ];
                 h.on_window_applied(&WindowEvents {
@@ -441,6 +502,26 @@ mod tests {
         };
         assert_eq!(run(true), run(false));
         assert_eq!(run(true), (1, 1, 1, 50, 50, 1, 1, 803));
+    }
+
+    #[test]
+    fn worker_loss_and_frontend_gauges_surface() {
+        let sink = TelemetrySink::new(2);
+        let mut handle = sink.clone();
+        assert_eq!(sink.workers_dead(), 0);
+        handle.on_worker_lost(1, 3, 500.0);
+        handle.on_worker_lost(1, 0, 600.0); // repeat loss counts once
+        assert_eq!(sink.workers_dead(), 1);
+
+        let stats = Arc::new(FrontendStats::default());
+        stats.rejected_total.fetch_add(4, Ordering::Relaxed);
+        stats.queue_depth.fetch_add(2, Ordering::Relaxed);
+        stats.streams_active.fetch_add(1, Ordering::Relaxed);
+        sink.attach_frontend(stats.clone());
+        sink.with_state(|st| {
+            let f = st.frontend.as_ref().unwrap();
+            assert_eq!((f.rejected(), f.depth(), f.streams()), (4, 2, 1));
+        });
     }
 
     #[test]

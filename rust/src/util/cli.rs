@@ -91,6 +91,15 @@ impl Args {
         parse(&raw).map_err(|e| anyhow::anyhow!("--{key}: {e}"))
     }
 
+    /// A duration flag given in (possibly fractional) seconds, e.g.
+    /// `--duration-s 2.5`.  Negative and unparseable values fall back to
+    /// the default; `Duration::from_secs_f64` would panic on them.
+    pub fn duration_s(&self, key: &str, default_s: f64) -> std::time::Duration {
+        let s = self.f64(key, default_s);
+        let s = if s.is_finite() && s >= 0.0 { s } else { default_s };
+        std::time::Duration::from_secs_f64(s.max(0.0))
+    }
+
     /// Comma-separated list flag, e.g. `--models opt13,lam13`.
     pub fn list(&self, key: &str) -> Vec<String> {
         self.flags
@@ -173,6 +182,20 @@ mod tests {
         assert_eq!(a.require_str("connect").unwrap(), "10.0.0.5:7000");
         let err = format!("{:#}", a.require_str("engine").unwrap_err());
         assert!(err.contains("--engine"), "{err}");
+    }
+
+    #[test]
+    fn duration_seconds_flag() {
+        let a = parse("x --duration-s 2.5 --bad -1 --nan oops");
+        assert_eq!(a.duration_s("duration-s", 1.0),
+                   std::time::Duration::from_millis(2500));
+        assert_eq!(a.duration_s("missing", 3.0),
+                   std::time::Duration::from_secs(3));
+        // negative and unparseable values fall back without panicking
+        assert_eq!(a.duration_s("bad", 4.0),
+                   std::time::Duration::from_secs(4));
+        assert_eq!(a.duration_s("nan", 5.0),
+                   std::time::Duration::from_secs(5));
     }
 
     #[test]

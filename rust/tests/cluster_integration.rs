@@ -13,8 +13,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use elis::cluster::pool::run_cmd_window;
-use elis::cluster::{wire, ApiBridge, Gateway, HttpServer, RemoteWorkerPool,
-                    WorkerCmd, WorkerPool};
+use elis::cluster::{wire, Admission, AdmissionConfig, ApiBridge, Gateway,
+                    HttpServer, RemoteWorkerPool, SseDecoder, WorkerCmd,
+                    WorkerPool};
 use elis::coordinator::{
     run_serving, ClockMode, CoordinatorBuilder, EventSink, Policy, Scheduler,
     ServeConfig,
@@ -25,6 +26,7 @@ use elis::engine::{Engine, SeqSpec, SeqWindowOut, WindowOutcome};
 use elis::predictor::oracle::OraclePredictor;
 use elis::runtime::manifest::ServedModelMeta;
 use elis::telemetry::TelemetrySink;
+use elis::util::json::Json;
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
 fn profile() -> ModelProfile {
@@ -276,6 +278,81 @@ fn http(addr: SocketAddr, request_line: &str, body: &str) -> String {
     out
 }
 
+/// Open one keep-alive connection, decode a `stream: true` generate via
+/// [`SseDecoder`], then run a `wait: true` generate for the *same*
+/// `(total_len, topic)` over the same socket (proving HTTP keep-alive
+/// along the way).  Returns the streamed per-window token chunks and the
+/// wait reply's `token_ids` — the sim engine is deterministic in
+/// `(total_len, topic)`, so callers assert they match byte for byte.
+fn stream_then_wait(addr: SocketAddr, total_len: usize, topic: usize)
+                    -> (Vec<Vec<i32>>, Vec<i32>) {
+    let mut conn = TcpStream::connect(addr).expect("connect");
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let body = format!(
+        r#"{{"stream": true, "total_len": {total_len}, "topic": {topic}}}"#);
+    write!(conn,
+           "POST /v1/generate HTTP/1.1\r\nHost: test\r\n\
+            Content-Length: {}\r\n\r\n{body}", body.len())
+        .expect("write stream request");
+
+    // response head: a chunked SSE stream on a keep-alive connection
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        conn.read_exact(&mut byte).expect("reading response head");
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8_lossy(&head).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert!(head.contains("text/event-stream"), "{head}");
+    assert!(head.contains("Transfer-Encoding: chunked"), "{head}");
+    assert!(head.contains("Connection: keep-alive"), "{head}");
+
+    let mut dec = SseDecoder::default();
+    let mut chunks: Vec<Vec<i32>> = Vec::new();
+    let mut saw_done = false;
+    let mut buf = [0u8; 4096];
+    while !(saw_done && dec.is_done()) {
+        let n = conn.read(&mut buf).expect("reading the event stream");
+        assert!(n > 0, "server closed mid-stream");
+        for ev in dec.push(&buf[..n]) {
+            match ev.name.as_deref() {
+                Some("accepted") => {}
+                None => {
+                    assert!(!saw_done, "token chunk after the done event");
+                    let j = Json::parse(&ev.data).expect("chunk json");
+                    chunks.push(j.get("tokens")
+                        .and_then(Json::as_i32_vec)
+                        .expect("chunk tokens"));
+                }
+                Some("done") => saw_done = true,
+                Some(other) => {
+                    panic!("unexpected SSE event {other}: {}", ev.data)
+                }
+            }
+        }
+    }
+
+    // keep-alive: the very same socket serves a plain wait generate
+    let body = format!(
+        r#"{{"wait": true, "total_len": {total_len}, "topic": {topic}}}"#);
+    write!(conn,
+           "POST /v1/generate HTTP/1.1\r\nHost: test\r\n\
+            Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+           body.len())
+        .expect("write wait request");
+    let mut out = String::new();
+    conn.read_to_string(&mut out).expect("read wait response");
+    assert!(out.starts_with("HTTP/1.1 200"), "{out}");
+    let json_body = out.split("\r\n\r\n").nth(1).expect("wait body");
+    let ids = Json::parse(json_body)
+        .expect("wait json")
+        .get("token_ids")
+        .and_then(Json::as_i32_vec)
+        .expect("token_ids");
+    (chunks, ids)
+}
+
 #[test]
 fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
     // 2 pooled sim workers; 2 seed jobs, the rest arrives over HTTP
@@ -303,8 +380,10 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         telemetry: Some(telemetry.clone()),
         api_tx,
         wait_timeout: Duration::from_secs(25),
+        admission: Admission::unlimited(),
+        stats: bridge.frontend_stats(),
     };
-    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 3).unwrap();
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();
     let addr = server.local_addr();
 
     // the client lives on its own thread — handlers + serving loop must
@@ -660,9 +739,18 @@ fn distributed_multi_process_end_to_end() {
     assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
     assert!(resp.contains("\"finished\""), "{resp}");
 
+    // streaming crosses the same process boundaries: SSE chunks computed
+    // on a worker pod, then a wait generate over the same keep-alive
+    // socket must assemble to the identical token sequence
+    let (chunks, ids) = stream_then_wait(http_addr, 150, 3);
+    assert!(chunks.len() >= 2,
+            "want >=2 streamed chunks before done, got {}", chunks.len());
+    assert_eq!(chunks.concat(), ids,
+               "distributed streamed tokens must match the wait reply");
+
     // scrape /metrics until the per-node finished counters account for
     // every job (trace + HTTP), i.e. the pods really did the work
-    let expect = TRACE_JOBS + 1;
+    let expect = TRACE_JOBS + 3;
     let deadline = Instant::now() + Duration::from_secs(30);
     loop {
         let metrics = http(http_addr, "GET /metrics", "");
@@ -705,6 +793,8 @@ fn wait_generate_racing_shutdown_gets_terminal_response() {
         // deliberately huge: if the drain failed, the test would hang
         // far past its own deadline instead of passing by accident
         wait_timeout: Duration::from_secs(60),
+        admission: Admission::unlimited(),
+        stats: bridge.frontend_stats(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
     let addr = server.local_addr();
@@ -743,6 +833,8 @@ fn http_server_shutdown_is_idempotent_and_quiet() {
         telemetry: None,
         api_tx,
         wait_timeout: Duration::from_secs(1),
+        admission: Admission::unlimited(),
+        stats: _bridge.frontend_stats(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
     let addr = server.local_addr();
@@ -751,4 +843,176 @@ fn http_server_shutdown_is_idempotent_and_quiet() {
     assert!(http(addr, "GET /healthz", "").starts_with("HTTP/1.1 200"));
     server.shutdown();
     server.shutdown(); // second call is a no-op
+}
+
+// ---------------------------------------------------------------------------
+// token streaming (ISSUE 6): SSE chunks == wait reply, byte for byte
+// ---------------------------------------------------------------------------
+
+/// In-process streaming end-to-end: a `stream: true` generate over the
+/// pooled sim workers must deliver at least two per-window token chunks
+/// before the done event, and the assembled stream must equal the
+/// `token_ids` of an identical `wait: true` generate issued over the
+/// *same* keep-alive connection.
+#[test]
+fn streaming_generate_matches_wait_reply_over_one_keep_alive_conn() {
+    let (api_tx, mut bridge) = ApiBridge::channel();
+    let stats = bridge.frontend_stats();
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        workers: 2,
+        clock: ClockMode::Wall,
+        max_iterations: 1_000_000,
+        ..Default::default()
+    };
+    let trace: Vec<TraceRequest> = Vec::new();
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(bridge.completion_sink()))
+        .build_pooled(&trace, WorkerPool::new(sim_engines(2)), &mut sched)
+        .unwrap();
+
+    let gateway = Gateway {
+        telemetry: None,
+        api_tx,
+        wait_timeout: Duration::from_secs(25),
+        admission: Admission::unlimited(),
+        stats: stats.clone(),
+    };
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4).unwrap();
+    let addr = server.local_addr();
+
+    // total_len 150 with window size 50 -> three streamed chunks
+    let client = std::thread::spawn(move || stream_then_wait(addr, 150, 3));
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        bridge.pump(&mut coord);
+        if coord.is_done() {
+            if client.is_finished() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        } else {
+            coord.step().unwrap();
+        }
+        assert!(Instant::now() < deadline, "serving loop did not converge");
+    }
+    let (chunks, ids) = client.join().expect("client thread");
+    server.shutdown();
+
+    assert!(chunks.len() >= 2,
+            "want >=2 streamed chunks before done, got {}", chunks.len());
+    assert!(chunks.iter().all(|c| !c.is_empty()));
+    assert_eq!(chunks.concat(), ids,
+               "streamed tokens must equal the wait reply byte-for-byte");
+    assert_eq!(coord.finished_jobs(), 2);
+    assert_eq!(stats.streams(), 0, "the streams gauge must return to 0");
+}
+
+// ---------------------------------------------------------------------------
+// front-door overload: bounded queue sheds 429, drain answers held streams
+// ---------------------------------------------------------------------------
+
+/// With `queue_cap: 2` and no serving loop pumping yet, two held
+/// wait-generates fill the pending-admission queue and the third is shed
+/// with `429` + `Retry-After` immediately.  Once the loop starts, both
+/// admitted requests still finish (the coordinator keeps draining), and
+/// a stream held open across shutdown is answered with a terminal SSE
+/// error event and a clean chunked terminator, never a silent hang.
+#[test]
+fn overload_sheds_429_and_drain_answers_held_streams() {
+    let (api_tx, mut bridge) = ApiBridge::channel();
+    let stats = bridge.frontend_stats();
+    let gateway = Gateway {
+        telemetry: None,
+        api_tx,
+        wait_timeout: Duration::from_secs(60),
+        admission: Admission::new(AdmissionConfig {
+            queue_cap: 2,
+            ..Default::default()
+        }),
+        stats: stats.clone(),
+    };
+    let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();
+    let addr = server.local_addr();
+
+    let held: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(move || {
+                http(addr, "POST /v1/generate",
+                     r#"{"total_len": 30, "wait": true}"#)
+            })
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.depth() < 2 {
+        assert!(Instant::now() < deadline, "held requests never queued");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let resp = http(addr, "POST /v1/generate", r#"{"total_len": 30}"#);
+    assert!(resp.starts_with("HTTP/1.1 429"), "{resp}");
+    assert!(resp.contains("Retry-After:"), "{resp}");
+    assert_eq!(stats.rejected(), 1);
+
+    // the serving loop comes up late; the held pair must still finish
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let cfg = ServeConfig {
+        workers: 1,
+        clock: ClockMode::Wall,
+        max_iterations: 1_000_000,
+        ..Default::default()
+    };
+    let trace: Vec<TraceRequest> = Vec::new();
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(bridge.completion_sink()))
+        .build_pooled(&trace, WorkerPool::new(sim_engines(1)), &mut sched)
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !held.iter().all(|h| h.is_finished()) {
+        bridge.pump(&mut coord);
+        if !coord.is_done() {
+            coord.step().unwrap();
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(Instant::now() < deadline, "held requests never finished");
+    }
+    for h in held {
+        let resp = h.join().expect("held client");
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        assert!(resp.contains("\"finished\""), "{resp}");
+    }
+    assert_eq!(stats.depth(), 0);
+
+    // a stream admitted but never finished (the loop stops stepping)
+    // must be answered by the shutdown drain
+    let streamer = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let body = r#"{"stream": true, "total_len": 100000}"#;
+        write!(conn,
+               "POST /v1/generate HTTP/1.1\r\nHost: test\r\n\
+                Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+               body.len())
+            .unwrap();
+        let mut raw = Vec::new();
+        conn.read_to_end(&mut raw).unwrap();
+        String::from_utf8_lossy(&raw).to_string()
+    });
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while stats.streams() == 0 {
+        bridge.pump(&mut coord);
+        assert!(Instant::now() < deadline, "the stream never registered");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let drained = bridge.drain_shutdown();
+    assert!(drained >= 1, "the held stream must be answered by the drain");
+    let raw = streamer.join().expect("stream client");
+    assert!(raw.contains("event: accepted"), "{raw}");
+    assert!(raw.contains("event: error"), "{raw}");
+    assert!(raw.contains("shutting down"), "{raw}");
+    assert!(raw.ends_with("0\r\n\r\n"), "{raw}");
+    drop(bridge);
+    server.shutdown();
 }

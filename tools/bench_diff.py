@@ -1,21 +1,27 @@
 #!/usr/bin/env python3
-"""Diff a fresh BENCH_hotpath.json against the committed baseline.
+"""Diff fresh bench artifacts against committed baselines.
 
-Guards the incremental-dispatch core: CI fails when the steady-state
-dispatch cost per window at the acceptance depth regresses by more than
---max-ratio over the committed BENCH_baseline.json (default 1.5x).  The
-check targets the *incremental* variant — the one the ROADMAP's O(k log n)
-claim rests on; a silent fall-back to rebuild-like costs trips it
-immediately — and also re-asserts the recorded rebuild/incremental
-speedups still clear the bench's own >=5x floor.
+Hotpath mode guards the incremental-dispatch core: CI fails when the
+steady-state dispatch cost per window at the acceptance depth regresses
+by more than --max-ratio over the committed BENCH_baseline.json (default
+1.5x).  The check targets the *incremental* variant — the one the
+ROADMAP's O(k log n) claim rests on; a silent fall-back to rebuild-like
+costs trips it immediately — and also re-asserts the recorded
+rebuild/incremental speedups still clear the bench's own >=5x floor.
+
+Serve mode guards the streaming serving path (`elis loadgen` output):
+--serve-fresh BENCH_serve.json asserts the run actually streamed tokens
+(>= --serve-min-tokens) and completed requests; with --serve-baseline it
+also fails when TTFT/JCT p99 regress by more than --serve-max-ratio.
 
 Usage:
     tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json [--max-ratio 1.5]
+    tools/bench_diff.py --serve-fresh BENCH_serve.json \
+        [--serve-baseline BENCH_serve_baseline.json] [--serve-max-ratio 2.0]
 
-Refreshing the baseline: copy the BENCH_hotpath.json artifact from a green
-CI run over the committed BENCH_baseline.json (drop the "provisional"
-flag) and commit it.  A baseline marked provisional still gates, but says
-so in the output.
+Refreshing a baseline: copy the matching artifact from a green CI run
+over the committed baseline (drop the "provisional" flag) and commit it.
+A baseline marked provisional still gates, but says so in the output.
 """
 
 import argparse
@@ -36,14 +42,7 @@ def cost(doc, depth, policy, variant):
     return None
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
-    ap.add_argument("--max-ratio", type=float, default=1.5,
-                    help="fail when fresh/baseline exceeds this (default 1.5)")
-    args = ap.parse_args()
-
+def check_hotpath(args, failures):
     base = load(args.baseline)
     new = load(args.fresh)
     depth = int(new.get("accept_depth", base.get("accept_depth", 50000)))
@@ -51,7 +50,6 @@ def main():
         print("note: baseline is provisional (recorded outside CI); "
               "refresh it from a green run's BENCH_hotpath.json")
 
-    failures = []
     for policy in ("FCFS", "ISRTF"):
         b = cost(base, depth, policy, "incremental")
         n = cost(new, depth, policy, "incremental")
@@ -77,6 +75,87 @@ def main():
         if speedup < target:
             failures.append(f"{name}: speedup {speedup:.1f}x fell below the "
                             f"{target}x acceptance floor")
+
+
+def serve_p99(doc, key):
+    sk = doc.get(key) or {}
+    if not sk.get("count"):
+        return None
+    return sk.get("p99")
+
+
+def check_serve(args, failures):
+    new = load(args.serve_fresh)
+    ok = int(new.get("ok", 0))
+    toks = int(new.get("tokens_streamed", 0))
+    print(f"serve: sent {new.get('sent')}  ok {ok}  "
+          f"errors {new.get('errors')}  rejected {new.get('rejected')}  "
+          f"tokens_streamed {toks}")
+    for key in ("ttft_ms", "tpot_ms", "jct_ms"):
+        sk = new.get(key) or {}
+        if sk.get("count"):
+            print(f"serve {key}: p50 {sk.get('p50'):.2f}  "
+                  f"p90 {sk.get('p90'):.2f}  p99 {sk.get('p99'):.2f} "
+                  f"(n={int(sk.get('count'))})")
+    if ok <= 0:
+        failures.append("serve: no request completed successfully")
+    if toks < args.serve_min_tokens:
+        failures.append(f"serve: tokens_streamed {toks} below the "
+                        f"{args.serve_min_tokens} floor — the streaming "
+                        f"path moved no tokens")
+
+    if not args.serve_baseline:
+        return
+    base = load(args.serve_baseline)
+    if base.get("provisional"):
+        print("note: serve baseline is provisional; refresh it from a "
+              "green run's BENCH_serve.json")
+    for key in ("ttft_ms", "jct_ms"):
+        b = serve_p99(base, key)
+        n = serve_p99(new, key)
+        if b is None or n is None or b <= 0:
+            print(f"serve {key}: p99 not comparable "
+                  f"(baseline={b}, fresh={n}); skipping")
+            continue
+        ratio = n / b
+        verdict = "OK" if ratio <= args.serve_max_ratio else "REGRESSION"
+        print(f"serve {key} p99: baseline {b:.2f} ms, fresh {n:.2f} ms "
+              f"-> {ratio:.2f}x ({verdict}, limit {args.serve_max_ratio}x)")
+        if ratio > args.serve_max_ratio:
+            failures.append(f"serve: {key} p99 regressed {ratio:.2f}x "
+                            f"(> {args.serve_max_ratio}x)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", nargs="?",
+                    help="committed BENCH_baseline.json (hotpath mode)")
+    ap.add_argument("fresh", nargs="?",
+                    help="fresh BENCH_hotpath.json (hotpath mode)")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="fail when fresh/baseline exceeds this (default 1.5)")
+    ap.add_argument("--serve-fresh",
+                    help="fresh BENCH_serve.json from elis loadgen")
+    ap.add_argument("--serve-baseline",
+                    help="committed serve baseline to diff p99s against")
+    ap.add_argument("--serve-max-ratio", type=float, default=2.0,
+                    help="fail when serve p99 fresh/baseline exceeds this "
+                         "(default 2.0)")
+    ap.add_argument("--serve-min-tokens", type=int, default=1,
+                    help="minimum tokens_streamed for a healthy serve run "
+                         "(default 1)")
+    args = ap.parse_args()
+
+    if bool(args.baseline) != bool(args.fresh):
+        ap.error("hotpath mode needs both BASELINE and FRESH")
+    if not args.baseline and not args.serve_fresh:
+        ap.error("nothing to check: pass BASELINE FRESH and/or --serve-fresh")
+
+    failures = []
+    if args.baseline:
+        check_hotpath(args, failures)
+    if args.serve_fresh:
+        check_serve(args, failures)
 
     if failures:
         print("\nbench trajectory check FAILED:", file=sys.stderr)
