@@ -10,6 +10,7 @@
 //!   3. `POST /v1/generate` (`"wait": true`)   — 200 once finished
 //!   4. `POST /v1/generate` (`"stream": true`) — SSE token chunks
 //!   5. `GET /metrics`                         — live Prometheus snapshot
+//!   6. `GET /debug/trace`                     — Chrome trace-event JSON
 //!
 //! No artifacts needed; everything runs on synthetic prompts.
 //!
@@ -30,7 +31,7 @@ use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
 use elis::predictor::oracle::OraclePredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::telemetry::TelemetrySink;
+use elis::telemetry::{FlightRecorder, TelemetrySink};
 use elis::util::cli::Args;
 use elis::workload::{Corpus, RequestGenerator};
 
@@ -123,8 +124,10 @@ fn main() -> Result<()> {
         max_iterations: 1_000_000,
         ..Default::default()
     };
+    let recorder = FlightRecorder::default();
     let mut coord = CoordinatorBuilder::from_config(cfg)
         .sink(Box::new(telemetry.clone()))
+        .sink(Box::new(recorder.clone()))
         .sink(Box::new(bridge.completion_sink()))
         .build_pooled(&trace, pool, &mut sched)?;
 
@@ -134,6 +137,8 @@ fn main() -> Result<()> {
         wait_timeout: Duration::from_secs(20),
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
+        trace: Some(recorder.clone()),
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4)?;
     let addr = server.local_addr();
@@ -166,6 +171,14 @@ fn main() -> Result<()> {
             .join("; ");
         log.push(("GET /metrics".to_string(),
                   format!("{} | {}", first_line(&metrics), sample)));
+        let trace = http(addr, "GET /debug/trace", "")?;
+        let n_events = elis::util::json::Json::parse(body_of(&trace))
+            .ok()
+            .and_then(|j| Some(j.get("traceEvents")?.as_arr()?.len()))
+            .unwrap_or(0);
+        log.push(("GET /debug/trace".to_string(),
+                  format!("{} | {n_events} trace events (load the body in \
+                           Perfetto)", first_line(&trace))));
         Ok(log)
     });
 

@@ -54,7 +54,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
 use crate::coordinator::Coordinator;
-use crate::telemetry::{FrontendStats, TelemetrySink};
+use crate::telemetry::{FlightRecorder, FrontendStats, TelemetrySink};
 use crate::util::json::Json;
 use crate::workload::TraceRequest;
 
@@ -378,6 +378,10 @@ pub struct Gateway {
     pub admission: Admission,
     /// shed / queue-depth / stream gauges (share with [`ApiBridge`])
     pub stats: Arc<FrontendStats>,
+    /// flight recorder behind `GET /debug/trace`; `None` renders 503
+    pub trace: Option<FlightRecorder>,
+    /// server start, for the `/healthz` uptime field
+    pub started: Instant,
 }
 
 /// Decrements the active-connection counter when a handler exits, even
@@ -693,14 +697,15 @@ fn handle_connection(mut stream: TcpStream, gw: &Gateway) {
 }
 
 fn route(req: &Request, gw: &Gateway) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
-            let dead = gw
-                .telemetry
-                .as_ref()
-                .map_or(0, TelemetrySink::workers_dead);
-            Response::text(200, &format!("ok\nworkers_dead {dead}\n"))
+    // /debug/trace carries its filter in the query string, so it routes
+    // by prefix rather than through the exact-path match below
+    if req.method == "GET" {
+        if let Some(query) = match_path(&req.path, "/debug/trace") {
+            return debug_trace(query, gw);
         }
+    }
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(gw),
         ("GET", "/metrics") => match &gw.telemetry {
             Some(sink) => Response {
                 status: 200,
@@ -716,6 +721,71 @@ fn route(req: &Request, gw: &Gateway) -> Response {
         }
         _ => Response::text(405, "method not allowed\n"),
     }
+}
+
+/// Match `path` against `route`, allowing a trailing `?query`.  Returns
+/// the query string (without the `?`) on a match, `Some(None)` for the
+/// bare route, `None` for no match.
+fn match_path<'a>(path: &'a str, route: &str) -> Option<Option<&'a str>> {
+    let rest = path.strip_prefix(route)?;
+    if rest.is_empty() {
+        Some(None)
+    } else {
+        rest.strip_prefix('?').map(Some)
+    }
+}
+
+/// `GET /healthz`: structured probe body.  200 while any worker can make
+/// progress (`degraded` once failover has marked some dead), 503 only
+/// when every worker is gone — so k8s restarts the frontend exactly when
+/// it can no longer serve, not on the first pod loss.
+fn healthz(gw: &Gateway) -> Response {
+    let (dead, in_flight, nodes) = match &gw.telemetry {
+        Some(t) => t.with_state(|st| {
+            (st.workers_dead(),
+             st.nodes.iter().map(|n| n.active).sum::<u64>(),
+             st.nodes.len())
+        }),
+        None => (0, 0, 0),
+    };
+    let all_dead = nodes > 0 && dead == nodes;
+    let status = if all_dead {
+        "dead"
+    } else if dead > 0 {
+        "degraded"
+    } else {
+        "ok"
+    };
+    Response::json(
+        if all_dead { 503 } else { 200 },
+        Json::obj(vec![
+            ("status", Json::Str(status.into())),
+            ("workers_dead", Json::Num(dead as f64)),
+            ("jobs_in_flight", Json::Num(in_flight as f64)),
+            ("uptime_s", Json::Num(gw.started.elapsed().as_secs_f64())),
+        ]),
+    )
+}
+
+/// `GET /debug/trace[?job=<id>]`: the flight recorder's timeline as
+/// Chrome trace-event JSON (load in Perfetto / `chrome://tracing`).
+fn debug_trace(query: Option<&str>, gw: &Gateway) -> Response {
+    let Some(rec) = &gw.trace else {
+        return Response::text(503, "tracing is not enabled\n");
+    };
+    let mut job = None;
+    for pair in query.unwrap_or("").split('&') {
+        if let Some(v) = pair.strip_prefix("job=") {
+            match v.parse::<u64>() {
+                Ok(id) => job = Some(id),
+                Err(_) => {
+                    return Response::text(
+                        400, "job must be a numeric trace id\n");
+                }
+            }
+        }
+    }
+    Response::json(200, rec.render_chrome(job))
 }
 
 /// Build the [`TraceRequest`] a `POST /v1/generate` body describes.
@@ -830,6 +900,9 @@ fn handle_generate(body: &[u8], gw: &Gateway, stream: &mut TcpStream,
             Json::obj(vec![
                 ("job_id", Json::Num(job_id as f64)),
                 ("status", Json::Str("accepted".into())),
+                // the job id doubles as the trace id: feed it to
+                // /debug/trace?job=<id> for the span timeline
+                ("trace_id", Json::Num(job_id as f64)),
             ]),
         ),
         Ok(GenerateReply::Finished { job_id, tokens, jct_ms, token_ids }) => {
@@ -841,6 +914,7 @@ fn handle_generate(body: &[u8], gw: &Gateway, stream: &mut TcpStream,
                     ("tokens", Json::Num(tokens as f64)),
                     ("jct_ms", Json::Num(jct_ms)),
                     ("token_ids", token_array(&token_ids)),
+                    ("trace_id", Json::Num(job_id as f64)),
                 ]),
             )
         }
@@ -924,7 +998,10 @@ fn stream_events(rx: &Receiver<GenerateReply>, stream: &mut TcpStream,
     if stream.write_all(head.as_bytes()).is_err() {
         return false;
     }
-    let accepted = Json::obj(vec![("job_id", Json::Num(job_id as f64))]);
+    let accepted = Json::obj(vec![
+        ("job_id", Json::Num(job_id as f64)),
+        ("trace_id", Json::Num(job_id as f64)),
+    ]);
     if write_chunk(stream, &sse_event(Some("accepted"), &accepted.to_string()))
         .is_err()
     {
@@ -1269,6 +1346,74 @@ mod tests {
         let all = dec2.push(&wire);
         assert!(dec2.is_done());
         assert_eq!(all, events);
+    }
+
+    #[test]
+    fn match_path_splits_route_and_query() {
+        assert_eq!(match_path("/debug/trace", "/debug/trace"), Some(None));
+        assert_eq!(match_path("/debug/trace?job=3", "/debug/trace"),
+                   Some(Some("job=3")));
+        assert_eq!(match_path("/debug/tracex", "/debug/trace"), None);
+        assert_eq!(match_path("/metrics", "/debug/trace"), None);
+    }
+
+    fn test_gateway() -> Gateway {
+        let (tx, _bridge) = ApiBridge::channel();
+        Gateway {
+            telemetry: Some(TelemetrySink::new(2)),
+            api_tx: tx,
+            wait_timeout: Duration::from_secs(1),
+            admission: Admission::unlimited(),
+            stats: Arc::new(FrontendStats::default()),
+            trace: Some(FlightRecorder::default()),
+            started: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn healthz_reports_structure_and_degrades_to_503() {
+        let gw = test_gateway();
+        let resp = healthz(&gw);
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(&resp.body).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(j.get("workers_dead").and_then(Json::as_usize), Some(0));
+        assert_eq!(j.get("jobs_in_flight").and_then(Json::as_usize),
+                   Some(0));
+        assert!(j.get("uptime_s").and_then(Json::as_f64).unwrap() >= 0.0);
+
+        // one of two workers dead: degraded but still 200
+        let mut sink = gw.telemetry.clone().unwrap();
+        sink.on_worker_lost(0, 1, 10.0);
+        let resp = healthz(&gw);
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(&resp.body).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("degraded"));
+
+        // every worker dead: the probe must fail
+        sink.on_worker_lost(1, 0, 11.0);
+        let resp = healthz(&gw);
+        assert_eq!(resp.status, 503);
+        let j = Json::parse(&resp.body).unwrap();
+        assert_eq!(j.get("status").and_then(Json::as_str), Some("dead"));
+        assert_eq!(j.get("workers_dead").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn debug_trace_routes_render_and_validate() {
+        let gw = test_gateway();
+        let resp = debug_trace(None, &gw);
+        assert_eq!(resp.status, 200);
+        let j = Json::parse(&resp.body).unwrap();
+        assert!(j.get("traceEvents").is_some(), "{}", resp.body);
+
+        let resp = debug_trace(Some("job=17"), &gw);
+        assert_eq!(resp.status, 200);
+        assert_eq!(debug_trace(Some("job=frog"), &gw).status, 400);
+
+        let mut bare = test_gateway();
+        bare.trace = None;
+        assert_eq!(debug_trace(None, &bare).status, 503);
     }
 
     #[test]

@@ -29,6 +29,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::job::JobId;
+use crate::coordinator::PodExec;
 use crate::engine::{Engine, SeqSpec, WindowOutcome};
 
 /// A command for one worker thread, sent in dispatch order.
@@ -45,6 +46,11 @@ pub enum WorkerCmd {
         batch: Vec<u64>,
         /// coordinator-side ids echoed back with the outcome
         echo: Vec<JobId>,
+        /// window span id for request-scoped tracing; when present the
+        /// worker measures its own execute wall time and echoes it (plus
+        /// its pid) back via [`WindowDone::trace`].  `None` when the
+        /// worker didn't negotiate tracing (old pods keep working).
+        trace: Option<u64>,
     },
     /// `PreemptionPolicy::max_per_iteration` (paper §3.4).
     SetPreemptionCap(usize),
@@ -64,6 +70,9 @@ pub struct WindowDone {
     pub fresh: Vec<u64>,
     /// the window outcome, or the admit/window error that aborted it
     pub outcome: Result<WindowOutcome>,
+    /// the worker's own execute-span measurement, echoed only when the
+    /// command carried a trace id (see [`WorkerCmd::RunWindow`])
+    pub trace: Option<PodExec>,
 }
 
 /// The coordinator's view of a set of workers — whatever carries the
@@ -104,6 +113,14 @@ pub trait WorkerTransport: Send {
     /// fast instead of idling forever.
     fn synthesizes_disconnects(&self) -> bool {
         false
+    }
+
+    /// Whether the worker understands trace fields on
+    /// [`WorkerCmd::RunWindow`] and will echo a [`PodExec`] measurement.
+    /// In-process workers always do; the TCP pool overrides this with the
+    /// capability the pod declared in its `Hello` (old pods: `false`).
+    fn trace_capable(&self, _worker: usize) -> bool {
+        true
     }
 }
 
@@ -278,11 +295,26 @@ fn worker_main(idx: usize, mut engine: Box<dyn Engine>,
         match cmd {
             WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
             WorkerCmd::Remove(id) => engine.remove(id),
-            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+            WorkerCmd::RunWindow { admits, priority_order, batch, echo,
+                                   trace } => {
+                let t0 = std::time::Instant::now();
                 let (fresh, outcome) = run_cmd_window(engine.as_mut(), admits,
                                                       &priority_order, &batch);
-                let done =
-                    WindowDone { worker: idx, batch: echo, fresh, outcome };
+                // echo the execute span only when asked; same-process
+                // workers report the shared pid, which is still the
+                // honest answer to "which process ran this window"
+                let trace = trace.map(|window| PodExec {
+                    window,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    pid: std::process::id(),
+                });
+                let done = WindowDone {
+                    worker: idx,
+                    batch: echo,
+                    fresh,
+                    outcome,
+                    trace,
+                };
                 if done_tx.send(done).is_err() {
                     return; // pool dropped mid-window
                 }
@@ -336,6 +368,7 @@ mod tests {
                 priority_order: vec![w],
                 batch: vec![w],
                 echo: vec![JobId::from_raw(w)],
+                trace: Some(w),
             }).unwrap();
         }
         let mut seen = BTreeSet::new();
@@ -348,6 +381,10 @@ mod tests {
             assert_eq!(done.batch[0].raw(), done.worker as u64);
             assert_eq!(outcome.outputs.len(), 1);
             assert!(!outcome.outputs[0].new_tokens.is_empty());
+            let pod = done.trace.expect("trace was requested");
+            assert_eq!(pod.window, done.worker as u64);
+            assert_eq!(pod.pid, std::process::id());
+            assert!(pod.exec_ms >= 0.0);
             seen.insert(done.worker);
         }
         assert_eq!(seen.len(), 2, "both workers must have answered");
@@ -364,11 +401,13 @@ mod tests {
             priority_order: vec![7],
             batch: vec![7],
             echo: vec![JobId::from_raw(7)],
+            trace: None,
         }).unwrap();
         let done = pool
             .recv_done_timeout(Duration::from_secs(10))
             .expect("an errored window still answers");
         assert!(done.outcome.is_err());
+        assert!(done.trace.is_none(), "no trace requested, none echoed");
     }
 
     #[test]

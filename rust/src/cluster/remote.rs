@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::job::JobId;
+use crate::coordinator::PodExec;
 use crate::engine::Engine;
 
 use super::pool::{run_cmd_window, WindowDone, WorkerCmd, WorkerTransport};
@@ -74,6 +75,8 @@ struct RemoteWorker {
     stream: TcpStream,
     max_batch: usize,
     describe: String,
+    /// the pod declared trace support in its hello (old pods: false)
+    trace_capable: bool,
     peer: String,
     writer: Option<JoinHandle<()>>,
     reader: Option<JoinHandle<()>>,
@@ -174,6 +177,10 @@ impl WorkerTransport for RemoteWorkerPool {
         self.workers[worker].shared.alive.load(Ordering::SeqCst)
     }
 
+    fn trace_capable(&self, worker: usize) -> bool {
+        self.workers[worker].trace_capable
+    }
+
     fn synthesizes_disconnects(&self) -> bool {
         true
     }
@@ -240,6 +247,7 @@ fn register(stream: TcpStream, idx: usize, peer: String,
         shared,
         stream,
         max_batch: hello.max_batch.max(1),
+        trace_capable: hello.trace,
         describe: hello.describe,
         peer,
         writer: Some(writer),
@@ -262,6 +270,7 @@ fn synthesize_disconnect(idx: usize, shared: &Shared,
             outcome: Err(anyhow!(
                 "worker {idx} connection lost {what} with a window in flight"
             )),
+            trace: None,
         });
     }
 }
@@ -353,6 +362,7 @@ pub fn run_worker(stream: TcpStream, mut engine: Box<dyn Engine>)
         version: WIRE_VERSION,
         max_batch: engine.max_batch(),
         describe: engine.describe(),
+        trace: true,
     };
     let mut hs = stream.try_clone().context("cloning for handshake")?;
     hs.set_read_timeout(Some(HANDSHAKE_TIMEOUT)).ok();
@@ -371,10 +381,18 @@ pub fn run_worker(stream: TcpStream, mut engine: Box<dyn Engine>)
         match wire::decode_cmd(&payload)? {
             WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
             WorkerCmd::Remove(id) => engine.remove(id),
-            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+            WorkerCmd::RunWindow {
+                admits, priority_order, batch, echo, trace,
+            } => {
+                let t0 = Instant::now();
                 let (fresh, outcome) = run_cmd_window(
                     engine.as_mut(), admits, &priority_order, &batch);
-                let reply = wire::encode_done(&echo, &fresh, &outcome)
+                let trace = trace.map(|window| PodExec {
+                    window,
+                    exec_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    pid: std::process::id(),
+                });
+                let reply = wire::encode_done(&echo, &fresh, &outcome, &trace)
                     .to_string();
                 wire::write_frame(&mut writer, reply.as_bytes())
                     .with_context(|| format!(
@@ -431,6 +449,8 @@ mod tests {
         assert!(WorkerTransport::describe(&pool, 1).contains("SimEngine"),
                 "{}", WorkerTransport::describe(&pool, 1));
         assert!(pool.worker_alive(0) && pool.worker_alive(1));
+        assert!(pool.trace_capable(0) && pool.trace_capable(1),
+                "run_worker pods always announce trace support");
 
         for w in 0..2u64 {
             pool.send(w as usize, WorkerCmd::RunWindow {
@@ -438,6 +458,7 @@ mod tests {
                 priority_order: vec![w],
                 batch: vec![w],
                 echo: vec![JobId::from_raw(w)],
+                trace: Some(w),
             }).unwrap();
         }
         let mut seen = std::collections::BTreeSet::new();
@@ -450,6 +471,12 @@ mod tests {
             assert_eq!(done.batch[0].raw(), done.worker as u64);
             assert_eq!(outcome.outputs.len(), 1);
             assert!(!outcome.outputs[0].new_tokens.is_empty());
+            let pod = done.trace
+                .expect("trace-capable pods must echo a PodExec");
+            assert_eq!(pod.window, done.worker as u64);
+            assert_eq!(pod.pid, std::process::id(),
+                       "loopback pods share our pid");
+            assert!(pod.exec_ms >= 0.0);
             seen.insert(done.worker);
         }
         assert_eq!(seen.len(), 2, "both pods must have answered");
@@ -471,7 +498,7 @@ mod tests {
         let pod = std::thread::spawn(move || {
             let mut stream = TcpStream::connect(addr).unwrap();
             let hello = Hello { version: WIRE_VERSION, max_batch: 1,
-                                describe: "Vanishing".into() };
+                                describe: "Vanishing".into(), trace: false };
             wire::client_handshake(&mut stream, &hello).unwrap();
             let mut r = BufReader::new(stream.try_clone().unwrap());
             loop {
@@ -489,11 +516,14 @@ mod tests {
                                             Duration::from_secs(10))
             .unwrap();
         pool.send(0, WorkerCmd::SetPreemptionCap(2)).unwrap();
+        assert!(!pool.trace_capable(0),
+                "a hello without the trace capability must read as such");
         pool.send(0, WorkerCmd::RunWindow {
             admits: vec![spec(9, 30)],
             priority_order: vec![9],
             batch: vec![9],
             echo: vec![JobId::from_raw(9)],
+            trace: None,
         }).unwrap();
         let done = pool
             .recv_done_timeout(Duration::from_secs(10))
@@ -501,6 +531,8 @@ mod tests {
         assert_eq!(done.worker, 0);
         assert_eq!(done.batch, vec![JobId::from_raw(9)]);
         assert_eq!(done.fresh, vec![9], "rollback needs the admit list");
+        assert!(done.trace.is_none(),
+                "synthesized replies carry no pod-side timing");
         let err = done.outcome.expect_err("must be an error reply");
         assert!(err.to_string().contains("connection lost"), "{err:#}");
         // eventually observed dead; exactly one reply total
@@ -522,7 +554,7 @@ mod tests {
         let pod = std::thread::spawn(move || {
             let mut stream = TcpStream::connect(addr).unwrap();
             let hello = Hello { version: WIRE_VERSION + 7, max_batch: 1,
-                                describe: "OldPod".into() };
+                                describe: "OldPod".into(), trace: false };
             // the coordinator acks with its own version, then hangs up;
             // client_handshake reports the mismatch
             wire::client_handshake(&mut stream, &hello)

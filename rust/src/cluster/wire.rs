@@ -34,6 +34,7 @@ use std::io::{Read, Write};
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::job::JobId;
+use crate::coordinator::PodExec;
 use crate::engine::{SeqSpec, SeqWindowOut, WindowOutcome};
 use crate::util::json::Json;
 
@@ -169,6 +170,13 @@ pub struct Hello {
     pub max_batch: usize,
     /// the engine's `describe()` — logs and `/metrics` labels
     pub describe: String,
+    /// capability flag: the pod understands the optional trace fields on
+    /// `run_window` and echoes an execute-span measurement on
+    /// `window_done`.  Encoded only when set and decoded with a `false`
+    /// default, so it rides *inside* [`WIRE_VERSION`] 1 — an old pod
+    /// (no flag) still handshakes and simply never sees trace fields,
+    /// and an old coordinator ignores the unknown key.
+    pub trace: bool,
 }
 
 /// Coordinator's reply to a [`Hello`]: the version it speaks and the
@@ -180,12 +188,18 @@ pub struct HelloAck {
 }
 
 pub fn encode_hello(h: &Hello) -> Json {
-    Json::obj(vec![
+    let mut pairs = vec![
         ("type", Json::Str("hello".into())),
         ("version", num(h.version as usize)),
         ("max_batch", num(h.max_batch)),
         ("describe", Json::Str(h.describe.clone())),
-    ])
+    ];
+    // omitted when unset: a trace-less hello is byte-identical to what a
+    // pre-trace pod sends, which is exactly the compatibility claim
+    if h.trace {
+        pairs.push(("trace", Json::Bool(true)));
+    }
+    Json::obj(pairs)
 }
 
 pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
@@ -197,6 +211,7 @@ pub fn decode_hello(payload: &[u8]) -> Result<Hello> {
         version: u64_field(&j, "version")? as u32,
         max_batch: u64_field(&j, "max_batch")? as usize,
         describe: str_field(&j, "describe")?.to_string(),
+        trace: j.get("trace").and_then(|t| t.as_bool()).unwrap_or(false),
     })
 }
 
@@ -293,8 +308,9 @@ pub fn encode_cmd(cmd: &WorkerCmd) -> Json {
             ("type", Json::Str("remove".into())),
             ("id", num_u64(*id)),
         ]),
-        WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
-            Json::obj(vec![
+        WorkerCmd::RunWindow { admits, priority_order, batch, echo,
+                               trace } => {
+            let mut pairs = vec![
                 ("type", Json::Str("run_window".into())),
                 ("admits",
                  Json::Arr(admits.iter().map(encode_seq_spec).collect())),
@@ -304,7 +320,13 @@ pub fn encode_cmd(cmd: &WorkerCmd) -> Json {
                  Json::Arr(echo.iter()
                            .map(|id| num_u64(id.raw()))
                            .collect())),
-            ])
+            ];
+            // omitted when absent, so untraced commands stay byte-
+            // identical to the pre-trace wire format
+            if let Some(t) = trace {
+                pairs.push(("trace", num_u64(*t)));
+            }
+            Json::obj(pairs)
         }
     }
 }
@@ -331,6 +353,7 @@ pub fn decode_cmd(payload: &[u8]) -> Result<WorkerCmd> {
                     .into_iter()
                     .map(JobId::from_raw)
                     .collect(),
+                trace: j.get("trace").map(as_u64).transpose()?,
             })
         }
         other => bail!("unknown command type '{other}'"),
@@ -377,8 +400,12 @@ fn decode_outcome(j: &Json) -> Result<WindowOutcome> {
 /// Encode one window reply.  An `Err` outcome travels as its rendered
 /// message — the coordinator needs the text for its error, and the
 /// `fresh` list next to it is what drives partial-admit rollback.
+/// `trace` is the pod's execute-span measurement, present only when the
+/// command asked for it (omitted-when-`None` keeps untraced replies
+/// byte-identical to the pre-trace format).
 pub fn encode_done(batch: &[JobId], fresh: &[u64],
-                   outcome: &Result<WindowOutcome>) -> Json {
+                   outcome: &Result<WindowOutcome>,
+                   trace: &Option<PodExec>) -> Json {
     let mut pairs = vec![
         ("type", Json::Str("window_done".into())),
         ("batch",
@@ -388,6 +415,13 @@ pub fn encode_done(batch: &[JobId], fresh: &[u64],
     match outcome {
         Ok(o) => pairs.push(("ok", encode_outcome(o))),
         Err(e) => pairs.push(("err", Json::Str(format!("{e:#}")))),
+    }
+    if let Some(t) = trace {
+        pairs.push(("trace", Json::obj(vec![
+            ("window", num_u64(t.window)),
+            ("exec_ms", Json::Num(t.exec_ms)),
+            ("pid", num_u64(t.pid as u64)),
+        ])));
     }
     Json::obj(pairs)
 }
@@ -413,7 +447,17 @@ pub fn decode_done(payload: &[u8], worker: usize) -> Result<WindowDone> {
         )),
         _ => bail!("window_done needs exactly one of 'ok' / 'err'"),
     };
-    Ok(WindowDone { worker, batch, fresh, outcome })
+    let trace = match j.get("trace") {
+        None => None,
+        Some(t) => Some(PodExec {
+            window: u64_field(t, "window")?,
+            exec_ms: field(t, "exec_ms")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("'exec_ms' must be a number"))?,
+            pid: u64_field(t, "pid")? as u32,
+        }),
+    };
+    Ok(WindowDone { worker, batch, fresh, outcome, trace })
 }
 
 fn parse_payload(payload: &[u8]) -> Result<Json> {
@@ -467,6 +511,7 @@ mod tests {
                     echo: (0..g.usize_in(0, 8))
                         .map(|_| JobId::from_raw(gen_u64(g)))
                         .collect(),
+                    trace: if g.bool(0.5) { Some(gen_u64(g)) } else { None },
                 }
             }
         }
@@ -519,11 +564,22 @@ mod tests {
                         .collect(),
                 })
             };
-            let b1 = encode_done(&batch, &fresh, &outcome).to_string();
+            let trace = if g.bool(0.5) {
+                Some(PodExec {
+                    window: gen_u64(g),
+                    exec_ms: g.f64_in(0.0, 1e5),
+                    pid: g.usize_in(0, 1 << 22) as u32,
+                })
+            } else {
+                None
+            };
+            let b1 = encode_done(&batch, &fresh, &outcome, &trace).to_string();
             let decoded = decode_done(b1.as_bytes(), 3).expect("decode");
             assert_eq!(decoded.worker, 3);
+            assert_eq!(decoded.trace, trace);
             let b2 = encode_done(&decoded.batch, &decoded.fresh,
-                                 &decoded.outcome).to_string();
+                                 &decoded.outcome, &decoded.trace)
+                .to_string();
             assert_eq!(b1, b2, "done roundtrip changed bytes");
         });
     }
@@ -535,12 +591,35 @@ mod tests {
                 version: g.usize_in(0, 1000) as u32,
                 max_batch: g.usize_in(1, 256),
                 describe: gen_text(g),
+                trace: g.bool(0.5),
             };
             let b1 = encode_hello(&hello).to_string();
             let decoded = decode_hello(b1.as_bytes()).expect("decode");
             assert_eq!(decoded, hello);
             assert_eq!(encode_hello(&decoded).to_string(), b1);
         });
+    }
+
+    #[test]
+    fn pre_trace_frames_still_decode() {
+        // frames exactly as a pre-trace peer writes them — no `trace`
+        // keys anywhere — must decode with the trace fields defaulted off
+        let hello = decode_hello(
+            br#"{"describe":"SimEngine","max_batch":4,"type":"hello","version":1}"#,
+        ).unwrap();
+        assert!(!hello.trace, "missing capability flag means no tracing");
+        let cmd = decode_cmd(
+            br#"{"admits":[],"batch":[1],"echo":[1],"priority_order":[],"type":"run_window"}"#,
+        ).unwrap();
+        match cmd {
+            WorkerCmd::RunWindow { trace, .. } => assert!(trace.is_none()),
+            _ => panic!("expected RunWindow"),
+        }
+        let done = decode_done(
+            br#"{"batch":[1],"fresh":[],"ok":{"outputs":[],"preempted":[],"service_ms":1.5},"type":"window_done"}"#,
+            0,
+        ).unwrap();
+        assert!(done.trace.is_none());
     }
 
     // ---- framing: truncated / oversized / garbage are errors, not panics
@@ -677,7 +756,7 @@ mod tests {
         let mut coord = Duplex { rx: b, tx: a };
 
         let hello = Hello { version: WIRE_VERSION, max_batch: 8,
-                            describe: "SimEngine[test]".into() };
+                            describe: "SimEngine[test]".into(), trace: true };
         // worker writes hello first; the in-memory pipes let us run the
         // two halves sequentially
         write_frame(&mut worker, encode_hello(&hello).to_string().as_bytes())

@@ -40,6 +40,27 @@ pub struct FinishStats {
     pub service_ms: f64,
     /// response tokens generated
     pub tokens: usize,
+    /// the scheduler's last predicted *total* response length for this
+    /// job, captured before the prediction cache forgets it — `None`
+    /// under policies that never consult the predictor (FCFS, MLFQ).
+    /// Compared against `tokens`, this is the live predictor-accuracy
+    /// signal the recalibration path consumes.
+    pub predicted_total: Option<f64>,
+}
+
+/// A worker pod's own measurement of one executed window, stitched back
+/// into the coordinator timeline over the wire ([`WindowDone`]'s optional
+/// trace reply).  Proves which process actually ran the window.
+///
+/// [`WindowDone`]: crate::cluster::pool::WindowDone
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PodExec {
+    /// the coordinator's window sequence number, echoed from the command
+    pub window: u64,
+    /// wall time the pod spent executing the window, ms
+    pub exec_ms: f64,
+    /// the executing process id (the pod's, not the coordinator's)
+    pub pid: u32,
 }
 
 /// One job-scoped event inside a finished scheduling window, in causal
@@ -71,6 +92,36 @@ pub struct WindowEvents<'a> {
     pub tokens: usize,
     pub service_ms: f64,
     pub now_ms: f64,
+    /// the executing pod's own span measurement, when the window ran on a
+    /// remote worker that echoed trace fields (`None` on the in-process
+    /// and virtual-clock paths)
+    pub pod: Option<PodExec>,
+}
+
+/// One per-window scheduler decision, fired at dispatch time (before the
+/// window executes) via [`EventSink::on_window_decision`].  This is the
+/// flight-recorder record that answers "why did job X wait": what the
+/// queue looked like, who was picked, who was marked for eviction, and
+/// what the decision itself cost.
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionRecord<'a> {
+    pub node: usize,
+    /// the coordinator's window sequence number
+    pub window: u64,
+    pub now_ms: f64,
+    /// jobs queued on the node before this batch was selected
+    pub queue_depth: usize,
+    /// the selected batch, in priority order
+    pub batch: &'a [JobId],
+    /// preemption victim candidates (raw job ids, the engine's eviction
+    /// order), best victim first
+    pub victims: &'a [u64],
+    /// smallest folded priority key in the batch (NaN if unkeyed)
+    pub key_min: f64,
+    /// largest folded priority key in the batch (NaN if unkeyed)
+    pub key_max: f64,
+    /// wall time this scheduling decision took
+    pub sched_overhead_ms: f64,
 }
 
 /// Receiver for coordinator lifecycle events.  All methods default to
@@ -130,6 +181,14 @@ pub trait EventSink {
     fn on_worker_lost(&mut self, _node: usize, _rehomed: usize,
                       _now_ms: f64) {
     }
+
+    /// A scheduling decision was made for `node`: the batch is formed and
+    /// about to dispatch.  Fires once per dispatched window, *at dispatch
+    /// time* (the matching [`on_window_applied`](Self::on_window_applied)
+    /// lands when the window's results come back).  Carries the queue
+    /// depth, selected batch, victim ranking, folded-key range, and the
+    /// decision's own measured cost — the scheduler flight-recorder feed.
+    fn on_window_decision(&mut self, _d: &DecisionRecord<'_>) {}
 
     /// A scheduling window finished and all of its per-job events are
     /// known.  The default implementation dispatches each event to the
@@ -258,6 +317,7 @@ mod tests {
             queue_delay_ms: 2.0,
             service_ms: 50.0,
             tokens: 20,
+            predicted_total: Some(22.0),
         }
     }
 
@@ -294,6 +354,7 @@ mod tests {
             tokens: 20,
             service_ms: 50.0,
             now_ms: 52.0,
+            pod: None,
         });
         assert_eq!((c.windows, c.finished, c.preempted), (1, 1, 1));
     }
@@ -327,6 +388,7 @@ mod tests {
             tokens: 3,
             service_ms: 1.0,
             now_ms: 2.0,
+            pod: None,
         });
         assert_eq!(g.toks, vec![3, 5, 7]);
         assert_eq!(g.count, 3);

@@ -38,8 +38,9 @@ pub mod priority_buffer;
 pub mod scheduler;
 pub mod serving;
 
-pub use events::{EventCounter, EventSink, FinishStats, JobMeta,
-                 SharedCounter, WindowEvents, WindowJobEvent};
+pub use events::{DecisionRecord, EventCounter, EventSink, FinishStats,
+                 JobMeta, PodExec, SharedCounter, WindowEvents,
+                 WindowJobEvent};
 pub use frontend::{peak_rps_search, run_serving};
 pub use job::{Job, JobId, JobState, JobTable};
 pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};

@@ -273,6 +273,26 @@ impl Scheduler {
         }
     }
 
+    /// The scheduler's current predicted **total** length for a job, in
+    /// tokens, from the prediction cache — the number the accuracy
+    /// telemetry compares against the realized total at finish.  `None`
+    /// when the policy never consults the predictor (FCFS / MLFQ) or the
+    /// job was never refreshed.  Must be read *before* [`forget`]
+    /// (Self::forget) drops the entry.
+    ///
+    /// SJF queries with `generated: 0`, so its cached value already *is*
+    /// the predicted total; the remaining-token policies cache predicted
+    /// remaining, so total = generated-at-prediction + remaining.
+    pub fn predicted_total(&self, id: JobId) -> Option<f64> {
+        if !self.policy.uses_predictor() {
+            return None;
+        }
+        self.cache_get(id).map(|(gen, p)| match self.policy {
+            Policy::Sjf => p,
+            _ => gen as f64 + p.max(0.0),
+        })
+    }
+
     /// Drop a finished job's cache entry.
     pub fn forget(&mut self, job_id: JobId) {
         if let Some(slot) = self.cache.get_mut(job_id.index()) {
@@ -451,6 +471,29 @@ mod tests {
         s.forget(JobId::from_raw(3));
         refresh(&mut s, &mut jobs, 0.0);
         assert_eq!(s.predictor_queries, 2, "forgotten entry re-queries");
+    }
+
+    #[test]
+    fn predicted_total_reconstructs_total_from_cache() {
+        // SRPT caches remaining at prediction time; total folds the
+        // generated count back in
+        let mut s = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        let mut jobs = vec![job(1, 0.0, 400, 350)];
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predicted_total(JobId::from_raw(1)), Some(400.0));
+        // SJF queries with generated: 0, so the cache already holds totals
+        let mut s = Scheduler::new(Policy::Sjf, Box::new(OraclePredictor));
+        let mut jobs = vec![job(2, 0.0, 200, 50)];
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predicted_total(JobId::from_raw(2)), Some(200.0));
+        // FCFS never consults the predictor
+        let mut s = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+        let mut jobs = vec![job(3, 0.0, 100, 0)];
+        refresh(&mut s, &mut jobs, 0.0);
+        assert_eq!(s.predicted_total(JobId::from_raw(3)), None);
+        // never-refreshed id: no cache entry
+        let s = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+        assert_eq!(s.predicted_total(JobId::from_raw(9)), None);
     }
 
     #[test]

@@ -75,8 +75,8 @@ use crate::metrics::{JobRecord, ServeReport};
 use crate::workload::TraceRequest;
 
 use super::batcher::Batcher;
-use super::events::{EventSink, FinishStats, JobMeta, WindowEvents,
-                    WindowJobEvent};
+use super::events::{DecisionRecord, EventSink, FinishStats, JobMeta,
+                    PodExec, WindowEvents, WindowJobEvent};
 use super::job::{Job, JobId, JobState, JobTable};
 use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 use super::preemption::PreemptionPolicy;
@@ -455,6 +455,7 @@ impl CoordinatorBuilder {
             ranked_scratch: Vec::new(),
             victims_scratch: Vec::new(),
             events_scratch: Vec::new(),
+            decision_depth: 0,
             sinks,
             shaper,
             now: 0.0,
@@ -518,6 +519,10 @@ pub struct Coordinator<'a> {
     ranked_scratch: Vec<(JobId, usize)>,
     victims_scratch: Vec<u64>,
     events_scratch: Vec<PendingOutcomeEvent>,
+    /// queue depth observed at the current window's dispatch entry, for
+    /// the [`DecisionRecord`] fired by [`execute_window`](Self) — written
+    /// by both dispatch paths before they start draining the pool
+    decision_depth: usize,
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
     now: f64,
@@ -677,7 +682,8 @@ impl<'a> Coordinator<'a> {
             self.workers[done.worker].in_flight = false;
             match done.outcome {
                 Ok(outcome) => {
-                    self.apply_outcome(now, outcome, &done.batch, done.worker);
+                    self.apply_outcome(now, outcome, &done.batch, done.worker,
+                                       done.trace);
                     applied += 1;
                 }
                 Err(err) => {
@@ -762,7 +768,7 @@ impl<'a> Coordinator<'a> {
         });
         applied += due.len();
         for (w, p) in due {
-            self.apply_outcome(p.done_at, p.outcome, &p.batch, w);
+            self.apply_outcome(p.done_at, p.outcome, &p.batch, w, None);
         }
         Ok(applied)
     }
@@ -878,6 +884,7 @@ impl<'a> Coordinator<'a> {
     fn dispatch_window_incremental(&mut self, w: usize, now: f64)
                                    -> Result<()> {
         let t_sched = Instant::now();
+        self.decision_depth = self.queued[w].len() + self.buffer.len(w);
 
         // fold pending (changed) jobs into the index: their folded keys
         // are recomputed — cache-hitting unless the job actually produced
@@ -966,6 +973,7 @@ impl<'a> Coordinator<'a> {
     /// exact arithmetic, but could split an f64-rounding near-tie).
     fn dispatch_window_rebuild(&mut self, w: usize, now: f64) -> Result<()> {
         let t_sched = Instant::now();
+        self.decision_depth = self.queued[w].len() + self.buffer.len(w);
 
         // refresh priorities of every queued job on this node: disjoint
         // slab references, no per-iteration map rebuild or cloning
@@ -1078,7 +1086,39 @@ impl<'a> Coordinator<'a> {
             }
             self.batcher.mark_prompt_sent(w, id, prompt_tokens);
         }
-        self.sched_overhead_ns += t_sched.elapsed().as_nanos();
+        let sched_ns = t_sched.elapsed().as_nanos();
+        self.sched_overhead_ns += sched_ns;
+
+        // flight-recorder decision record: what the queue looked like, who
+        // was picked (with the folded-key range actually compared), who
+        // would be evicted first, and what the decision cost.  Fired
+        // before the victims move into a pooled RunWindow command below.
+        {
+            let mut key_min = f64::NAN;
+            let mut key_max = f64::NAN;
+            for e in self.order_scratch.iter().take(batch.len()) {
+                if !(e.priority >= key_min) {
+                    key_min = e.priority;
+                }
+                if !(e.priority <= key_max) {
+                    key_max = e.priority;
+                }
+            }
+            let d = DecisionRecord {
+                node: w,
+                window: self.iterations,
+                now_ms: now,
+                queue_depth: self.decision_depth,
+                batch: &batch,
+                victims: &self.victims_scratch,
+                key_min,
+                key_max,
+                sched_overhead_ms: sched_ns as f64 / 1e6,
+            };
+            for s in self.sinks.iter_mut() {
+                s.on_window_decision(&d);
+            }
+        }
         for s in self.sinks.iter_mut() {
             s.on_batch_formed(w, &batch, now);
         }
@@ -1101,6 +1141,14 @@ impl<'a> Coordinator<'a> {
                     },
                     batch: raw_batch,
                     echo: batch.clone(),
+                    // window span id: the pod echoes it back with its own
+                    // execute measurement so the timelines stitch; omitted
+                    // for workers that didn't negotiate tracing
+                    trace: if pool.trace_capable(w) {
+                        Some(self.iterations)
+                    } else {
+                        None
+                    },
                 }),
                 Backend::Inline(_) => unreachable!(),
             };
@@ -1141,7 +1189,7 @@ impl<'a> Coordinator<'a> {
                 }
                 ClockMode::Wall => {
                     let t_done = self.wall_ms();
-                    self.apply_outcome(t_done, outcome, &batch, w);
+                    self.apply_outcome(t_done, outcome, &batch, w, None);
                 }
             }
         }
@@ -1267,7 +1315,7 @@ impl<'a> Coordinator<'a> {
     /// so lock-guarded sinks pay one critical section per window instead
     /// of one per job per window.
     fn apply_outcome(&mut self, t_done: f64, outcome: WindowOutcome,
-                     batch: &[JobId], node: usize) {
+                     batch: &[JobId], node: usize, pod: Option<PodExec>) {
         let window_tokens: usize =
             outcome.outputs.iter().map(|o| o.new_tokens.len()).sum();
         let mut events = std::mem::take(&mut self.events_scratch);
@@ -1311,6 +1359,9 @@ impl<'a> Coordinator<'a> {
                 let (prompt_len, total_len) = (j.prompt.len(), j.total_len);
                 self.finished += 1;
                 self.state.on_finish(node);
+                // the accuracy signal must be read before `forget` drops
+                // the prediction-cache entry
+                let predicted_total = self.scheduler.predicted_total(id);
                 self.scheduler.observe_completion(prompt_len, total_len);
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
@@ -1323,6 +1374,7 @@ impl<'a> Coordinator<'a> {
                     queue_delay_ms: j.queue_delay_ms().unwrap_or(0.0),
                     service_ms: j.service_ms,
                     tokens: j.generated,
+                    predicted_total,
                 };
                 events.push(PendingOutcomeEvent::Finished(id, stats));
             } else {
@@ -1373,6 +1425,7 @@ impl<'a> Coordinator<'a> {
                 tokens: window_tokens,
                 service_ms: outcome.service_ms,
                 now_ms: t_done,
+                pod,
             };
             for s in self.sinks.iter_mut() {
                 s.on_window_applied(&window);

@@ -58,6 +58,14 @@ spec:
               value: elis-backend-headless.{ns}.svc.cluster.local
           ports:
             - containerPort: 8080
+          livenessProbe:
+            httpGet: {{ path: /healthz, port: 8080 }}
+            initialDelaySeconds: 5
+            periodSeconds: 10
+          readinessProbe:
+            httpGet: {{ path: /healthz, port: 8080 }}
+            initialDelaySeconds: 2
+            periodSeconds: 5
 ---
 apiVersion: v1
 kind: Service
@@ -150,6 +158,19 @@ mod tests {
         assert!(y.contains("clusterIP: None"), "headless service required");
         assert!(y.contains("elis-backend-headless"));
         assert!(y.contains("--scheduler"));
+    }
+
+    #[test]
+    fn frontend_probes_hit_healthz() {
+        let y = frontend_manifest(&K8sConfig::default());
+        assert!(y.contains("livenessProbe:"), "{y}");
+        assert!(y.contains("readinessProbe:"), "{y}");
+        // /healthz answers 503 only once every worker is dead, so the
+        // probes restart the frontend exactly when it cannot serve
+        assert_eq!(
+            y.matches("httpGet: { path: /healthz, port: 8080 }").count(),
+            2, "{y}"
+        );
     }
 
     #[test]

@@ -110,6 +110,10 @@ pub struct LoadReport {
     pub elapsed_s: f64,
     /// peak concurrent in-flight requests observed
     pub peak_in_flight: u64,
+    /// `(jct_ms, trace_id)` of the slowest requests, slowest first —
+    /// feed the ids to the server's `/debug/trace?job=<id>` to see where
+    /// the tail latency went
+    pub trace_sample: Vec<(f64, u64)>,
 }
 
 impl LoadReport {
@@ -147,15 +151,31 @@ impl LoadReport {
             ("ttft_ms", sketch(&self.ttft_ms)),
             ("tpot_ms", sketch(&self.tpot_ms)),
             ("jct_ms", sketch(&self.jct_ms)),
+            ("trace_sample", Json::Arr(
+                self.trace_sample
+                    .iter()
+                    .map(|&(jct_ms, trace_id)| Json::obj(vec![
+                        ("jct_ms", Json::Num(jct_ms)),
+                        ("trace_id", Json::Num(trace_id as f64)),
+                    ]))
+                    .collect(),
+            )),
         ])
     }
 }
+
+/// How many of the slowest requests' trace ids the report keeps — enough
+/// to paste into `/debug/trace?job=<id>` after a run, small enough to
+/// stay out of the way in `BENCH_serve.json`.
+const TRACE_SAMPLE: usize = 5;
 
 /// One finished request's client-side timings.
 struct Sample {
     ttft_ms: f64,
     jct_ms: f64,
     tokens: u64,
+    /// server-assigned trace id (the job id), when the reply carried one
+    trace_id: Option<u64>,
 }
 
 /// Shared counters the request threads bump as they go.
@@ -203,6 +223,11 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let mut ttft = QuantileSketch::new();
     let mut tpot = QuantileSketch::new();
     let mut jct = QuantileSketch::new();
+    let mut slowest: Vec<(f64, u64)> = Vec::new();
+    let prune = |v: &mut Vec<(f64, u64)>| {
+        v.sort_by(|a, b| b.0.total_cmp(&a.0));
+        v.truncate(TRACE_SAMPLE);
+    };
     for s in sample_rx.iter() {
         if s.ttft_ms.is_finite() {
             ttft.add(s.ttft_ms);
@@ -211,7 +236,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             }
         }
         jct.add(s.jct_ms);
+        if let Some(id) = s.trace_id {
+            slowest.push((s.jct_ms, id));
+            if slowest.len() > 256 {
+                prune(&mut slowest);
+            }
+        }
     }
+    prune(&mut slowest);
     for h in handles {
         let _ = h.join();
     }
@@ -228,6 +260,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         jct_ms: jct,
         elapsed_s: start.elapsed().as_secs_f64(),
         peak_in_flight: counters.peak.load(Ordering::Relaxed) as u64,
+        trace_sample: slowest,
     })
 }
 
@@ -426,6 +459,7 @@ fn read_sse(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
     let mut buf = [0u8; 4096];
     let mut ttft = f64::NAN;
     let mut tokens = 0u64;
+    let mut trace_id = None;
     let hard_stop = deadline + Duration::from_secs(30);
     loop {
         for ev in events.drain(..) {
@@ -450,12 +484,21 @@ fn read_sse(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
                         ttft_ms: ttft,
                         jct_ms: t0.elapsed().as_secs_f64() * 1e3,
                         tokens,
+                        trace_id,
                     });
                     // the server leaves the connection reusable after
                     // the terminating chunk
                     return Some(stream);
                 }
-                Some(_) => { /* accepted / error markers */ }
+                Some("accepted") => {
+                    trace_id = Json::parse(&ev.data)
+                        .ok()
+                        .and_then(|j| {
+                            j.get("trace_id").and_then(Json::as_usize)
+                        })
+                        .map(|id| id as u64);
+                }
+                Some(_) => { /* error markers */ }
             }
         }
         if dec.is_done() {
@@ -499,14 +542,21 @@ fn read_json_reply(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
         }
     }
     let jct = t0.elapsed().as_secs_f64() * 1e3;
-    let tokens = std::str::from_utf8(&body)
+    let parsed = std::str::from_utf8(&body)
         .ok()
-        .and_then(|t| Json::parse(t).ok())
+        .and_then(|t| Json::parse(t).ok());
+    let tokens = parsed
+        .as_ref()
         .and_then(|j| j.get("tokens").and_then(Json::as_usize))
         .unwrap_or(0) as u64;
+    let trace_id = parsed
+        .as_ref()
+        .and_then(|j| j.get("trace_id").and_then(Json::as_usize))
+        .map(|id| id as u64);
     counters.ok.fetch_add(1, Ordering::Relaxed);
     counters.tokens.fetch_add(tokens, Ordering::Relaxed);
-    let _ = tx.send(Sample { ttft_ms: f64::NAN, jct_ms: jct, tokens });
+    let _ = tx.send(Sample { ttft_ms: f64::NAN, jct_ms: jct, tokens,
+                             trace_id });
     if head.keep_alive { Some(stream) } else { None }
 }
 
@@ -664,6 +714,7 @@ mod tests {
             jct_ms: QuantileSketch::new(),
             elapsed_s: 5.0,
             peak_in_flight: 8,
+            trace_sample: vec![(912.0, 4), (555.0, 9)],
         };
         for i in 0..100 {
             report.ttft_ms.add(10.0 + i as f64);
@@ -680,6 +731,15 @@ mod tests {
         // empty sketches render zeros, not NaN (JSON has no NaN)
         let tpot = j.get("tpot_ms").expect("tpot object");
         assert_eq!(tpot.get("p50").and_then(Json::as_f64), Some(0.0));
+        // the slowest-request sample rides along, slowest first
+        let Some(Json::Arr(sample)) = j.get("trace_sample") else {
+            panic!("trace_sample must be an array");
+        };
+        assert_eq!(sample.len(), 2);
+        assert_eq!(sample[0].get("trace_id").and_then(Json::as_usize),
+                   Some(4));
+        assert_eq!(sample[0].get("jct_ms").and_then(Json::as_f64),
+                   Some(912.0));
         // and the whole document round-trips through the parser
         let text = j.to_string();
         assert!(Json::parse(&text).is_ok(), "{text}");

@@ -33,7 +33,8 @@ use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
     PriorityShaper, Scheduler, ServeConfig,
 };
-use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink, WfqPolicy};
+use elis::telemetry::{FlightRecorder, SloPolicy, SloSpec, TelemetrySink,
+                      WfqPolicy};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::pjrt_engine::PjrtEngine;
@@ -83,13 +84,17 @@ USAGE: elis <subcommand> [--flags]
                     --lb(minload|rr|random) --tenants --slo-ms --wfq
                     --listen addr:port   run as a network service: engines
                     move onto worker-pool threads (windows overlap across
-                    workers) and an HTTP frontend serves GET /healthz,
-                    GET /metrics (Prometheus), POST /v1/generate
-                    (JSON reply, or chunked SSE token streaming with
-                    \"stream\": true).  With --listen: --http-conns
+                    workers) and an HTTP frontend serves GET /healthz
+                    (structured probe JSON), GET /metrics (Prometheus),
+                    GET /debug/trace[?job=ID] (Chrome trace-event JSON
+                    from the flight recorder; load in Perfetto),
+                    POST /v1/generate (JSON reply carrying trace_id, or
+                    chunked SSE token streaming with \"stream\": true).
+                    With --listen: --http-conns
                     (max concurrent connections, default 4096)
                     --wait-timeout-s --idle-exit-ms (0 = serve forever)
-                    --idle-tick-ms
+                    --idle-tick-ms --trace-dump path (flush the flight
+                    recorder as Chrome trace JSON on shutdown)
                     --admission-rps N (front-door token-bucket rate, 0 =
                     off) --admission-burst N --admission-queue N (bounded
                     pending-admission queue, 0 = unbounded); overload is
@@ -115,7 +120,9 @@ USAGE: elis <subcommand> [--flags]
                     --max-in-flight caps client-side) --total-len
                     --prompt-len --tenants a,b --no-stream (use
                     \"wait\": true instead of SSE) --seed
-                    --json-out BENCH_serve.json
+                    --json-out BENCH_serve.json (includes error/429
+                    counts and a trace_sample of the slowest requests'
+                    trace ids for /debug/trace?job=ID)
   simulate          calibrated simulation: --model --scheduler --rps-mult
                     --batch --workers --n --shuffles --predictor --lb
                     --tenants name[=weight],... (weighted round-robin tags)
@@ -537,7 +544,12 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
               telemetry: &Option<(TelemetrySink, f64)>)
               -> Result<elis::metrics::ServeReport> {
     let (api_tx, mut bridge) = ApiBridge::channel();
-    let builder = builder.sink(Box::new(bridge.completion_sink()));
+    // request-scoped tracing: one bounded flight recorder shared between
+    // the serving loop (as an event sink) and /debug/trace handlers
+    let recorder = FlightRecorder::default();
+    let builder = builder
+        .sink(Box::new(bridge.completion_sink()))
+        .sink(Box::new(recorder.clone()));
     let mut coord = match backend {
         ServeBackend::Local(engines) => {
             builder.build_pooled(trace, WorkerPool::new(engines), sched)?
@@ -563,11 +575,14 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
         wait_timeout: args.duration_s("wait-timeout-s", 30.0),
         admission,
         stats,
+        trace: Some(recorder.clone()),
+        started: std::time::Instant::now(),
     };
     let mut server = HttpServer::serve(addr, gateway,
                                        args.usize("http-conns", 4096))?;
     println!("listening on http://{}  \
-              (GET /healthz | GET /metrics | POST /v1/generate)",
+              (GET /healthz | GET /metrics | GET /debug/trace | \
+              POST /v1/generate)",
              server.local_addr());
     std::io::Write::flush(&mut std::io::stdout()).ok();
 
@@ -601,6 +616,10 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
     bridge.drain_shutdown();
     drop(bridge);
     server.shutdown();
+    if let Some(path) = args.opt_str("trace-dump") {
+        std::fs::write(path, format!("{}\n", recorder.render_chrome(None)))?;
+        println!("trace written to {path}");
+    }
     Ok(coord.report())
 }
 

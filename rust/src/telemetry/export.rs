@@ -124,6 +124,17 @@ pub fn render(state: &mut TelemetryState) -> String {
         sample(&mut out, "elis_node_token_rate_per_s",
                &[("node", &i.to_string())], rate);
     }
+    header(&mut out, "elis_node_queue_depth",
+           "Jobs eligible at the node's last scheduling decision.", "gauge");
+    for (i, n) in state.nodes.iter().enumerate() {
+        sample(&mut out, "elis_node_queue_depth",
+               &[("node", &i.to_string())], n.queue_depth as f64);
+    }
+    header(&mut out, "elis_sched_overhead_ms_total",
+           "Scheduling-decision time accrued across all windows (ms).",
+           "counter");
+    sample(&mut out, "elis_sched_overhead_ms_total", &[],
+           state.sched_overhead_ms_total);
 
     // ---- per-tenant counters, gauges, and latency summaries -------------
     let tenants: Vec<(&str, &TenantStats)> =
@@ -160,6 +171,36 @@ pub fn render(state: &mut TelemetryState) -> String {
     summary_family(&mut out, "elis_tenant_queue_delay_ms",
                    "Queueing delay (ms), streaming P2 quantiles.",
                    &tenants, pick_queue_delay);
+
+    // ---- predictor accuracy (predicted vs realized length) --------------
+    // Unlabeled summaries: the predictor is one model shared across
+    // tenants, and only predictor-driven policies feed it.  The Kendall-τ
+    // gauge always renders (NaN until two comparable pairs) so scrapers
+    // and the CI gate can rely on the family existing.
+    for (name, help, sketch) in [
+        ("elis_predictor_abs_err_tokens",
+         "Absolute predicted-vs-realized response length error (tokens).",
+         &state.predictor.abs_err),
+        ("elis_predictor_signed_err_tokens",
+         "Signed predicted-minus-realized response length error (tokens).",
+         &state.predictor.signed_err),
+    ] {
+        header(&mut out, name, help, "summary");
+        if sketch.count() > 0 {
+            for (q, v) in [("0.5", sketch.p50()), ("0.9", sketch.p90()),
+                           ("0.99", sketch.p99())] {
+                sample(&mut out, name, &[("quantile", q)], v);
+            }
+        }
+        sample(&mut out, &format!("{name}_sum"), &[], sketch.sum());
+        sample(&mut out, &format!("{name}_count"), &[],
+               sketch.count() as f64);
+    }
+    header(&mut out, "elis_predictor_kendall_tau",
+           "Windowed Kendall rank correlation of predicted vs realized \
+            lengths (NaN until two comparable pairs).", "gauge");
+    sample(&mut out, "elis_predictor_kendall_tau", &[],
+           state.predictor.kendall.tau());
 
     // ---- serving front door (failover + admission + streaming) ----------
     header(&mut out, "elis_workers_dead",
@@ -217,7 +258,8 @@ mod tests {
                 ttft_ms: Some(80.0 + i as f64),
                 queue_delay_ms: jct * 0.4,
                 service_ms: jct * 0.6,
-                tokens: 40,
+                tokens: 30 + i as usize,
+                predicted_total: Some(28.0 + i as f64),
             }, m.arrival_ms + jct);
         }
         sink
@@ -319,6 +361,53 @@ mod tests {
         validate(&bare);
         assert!(bare.contains("elis_workers_dead 0"), "{bare}");
         assert!(!bare.contains("elis_streams_active"), "{bare}");
+    }
+
+    #[test]
+    fn predictor_and_scheduler_families_render() {
+        use crate::coordinator::events::DecisionRecord;
+
+        let sink = populated_sink();
+        let mut h = sink.clone();
+        let batch = [JobId::new(0)];
+        h.on_window_decision(&DecisionRecord {
+            node: 1,
+            window: 3,
+            now_ms: 700.0,
+            queue_depth: 5,
+            batch: &batch,
+            victims: &[],
+            key_min: 10.0,
+            key_max: 40.0,
+            sched_overhead_ms: 0.125,
+        });
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_node_queue_depth{node=\"1\"} 5"),
+                "{text}");
+        assert!(text.contains("elis_sched_overhead_ms_total 0.125"),
+                "{text}");
+        // populated_sink's predictions rank exactly like its realized
+        // lengths, so the windowed tau is a clean +1
+        assert!(text.contains("elis_predictor_kendall_tau 1"), "{text}");
+        assert!(text.contains("elis_predictor_abs_err_tokens_count 20"),
+                "{text}");
+        assert!(text.contains(
+                    "elis_predictor_abs_err_tokens{quantile=\"0.5\"}"),
+                "{text}");
+        assert!(text.contains("elis_predictor_signed_err_tokens_sum"),
+                "{text}");
+    }
+
+    #[test]
+    fn kendall_gauge_renders_nan_before_any_prediction() {
+        // the CI gate greps for the family name after a sim run; an empty
+        // window must still render (NaN is valid exposition syntax)
+        let text = TelemetrySink::new(1).render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_predictor_kendall_tau NaN"), "{text}");
+        assert!(text.contains("elis_predictor_abs_err_tokens_count 0"),
+                "{text}");
     }
 
     #[test]

@@ -17,6 +17,9 @@
 //!   work earliest-deadline-first against per-tenant SLO budgets, boosting
 //!   tenants whose *live* p99 (read from the shared sink) is over budget
 //!   and shedding hopelessly-late jobs behind in-budget work.
+//! * [`trace`] — [`FlightRecorder`], a bounded ring of request-scoped
+//!   span timelines and per-window scheduler decision records, exported
+//!   as Chrome trace-event JSON (`GET /debug/trace`, Perfetto-loadable).
 //! * [`wfq`] — [`WfqPolicy`], a weighted-fair
 //!   [`PriorityShaper`](crate::coordinator::PriorityShaper) balancing
 //!   per-tenant *token throughput* from the sink's live counters;
@@ -39,11 +42,13 @@ pub mod export;
 pub mod sink;
 pub mod sketch;
 pub mod slo;
+pub mod trace;
 pub mod wfq;
 
 pub use export::render;
 pub use sink::{FrontendStats, NodeStats, SloSpec, TelemetrySink,
                TelemetryState, TenantStats, DEFAULT_TENANT};
-pub use sketch::{P2Quantile, QuantileSketch, WindowedRate};
+pub use sketch::{KendallWindow, P2Quantile, QuantileSketch, WindowedRate};
+pub use trace::FlightRecorder;
 pub use slo::SloPolicy;
 pub use wfq::WfqPolicy;

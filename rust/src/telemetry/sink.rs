@@ -25,14 +25,55 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::events::{EventSink, FinishStats, JobMeta,
-                                 WindowEvents, WindowJobEvent};
+use crate::coordinator::events::{DecisionRecord, EventSink, FinishStats,
+                                 JobMeta, WindowEvents, WindowJobEvent};
 use crate::coordinator::job::JobId;
 
-use super::sketch::{QuantileSketch, WindowedRate};
+use super::sketch::{KendallWindow, QuantileSketch, WindowedRate};
 
 /// Tenant label applied to requests that carry no tenant tag.
 pub const DEFAULT_TENANT: &str = "default";
+
+/// Pairs the online Kendall-τ keeps (paper §4.3 reports rank correlation;
+/// a sliding window makes the gauge track predictor drift, not lifetime
+/// average).  τ is O(N²) on demand, so the window stays modest.
+const KENDALL_WINDOW: usize = 512;
+
+/// Predictor-accuracy telemetry: predicted-vs-realized response length,
+/// folded at each finish (ELIS's scheduling quality rests entirely on this
+/// ranking signal — §4.3 of the paper evaluates the predictor by exactly
+/// these two lenses: error magnitude and rank correlation).
+///
+/// Only jobs scheduled by a predictor-driven policy contribute —
+/// [`FinishStats::predicted_total`] is `None` under FCFS.
+#[derive(Debug, Clone)]
+pub struct PredictorStats {
+    /// |predicted − realized| response tokens
+    pub abs_err: QuantileSketch,
+    /// predicted − realized (sign shows over/under-prediction bias)
+    pub signed_err: QuantileSketch,
+    /// windowed rank correlation between predictions and realized lengths
+    pub kendall: KendallWindow,
+}
+
+impl PredictorStats {
+    fn new() -> PredictorStats {
+        PredictorStats {
+            abs_err: QuantileSketch::new(),
+            signed_err: QuantileSketch::new(),
+            kendall: KendallWindow::new(KENDALL_WINDOW),
+        }
+    }
+
+    fn add(&mut self, predicted: f64, realized: f64) {
+        if !predicted.is_finite() || !realized.is_finite() {
+            return;
+        }
+        self.abs_err.add((predicted - realized).abs());
+        self.signed_err.add(predicted - realized);
+        self.kendall.add(predicted, realized);
+    }
+}
 
 /// Front-door gauges maintained by the HTTP layer (admission control and
 /// token streaming) outside the coordinator's event stream.  Handler
@@ -101,6 +142,10 @@ pub struct NodeStats {
     pub tokens: u64,
     pub service_ms_sum: f64,
     pub token_rate: WindowedRate,
+    /// jobs eligible at the node's last scheduling decision (runnable on
+    /// the node + spillable from the shared buffer) — a gauge, overwritten
+    /// per window from [`DecisionRecord::queue_depth`]
+    pub queue_depth: u64,
     /// worker marked dead by coordinator failover (`on_worker_lost`)
     pub lost: bool,
 }
@@ -117,6 +162,7 @@ impl NodeStats {
             tokens: 0,
             service_ms_sum: 0.0,
             token_rate: WindowedRate::default_window(),
+            queue_depth: 0,
             lost: false,
         }
     }
@@ -160,6 +206,11 @@ pub struct TelemetryState {
     pub tenants: BTreeMap<String, TenantStats>,
     /// SLO budgets; when set, finishes are checked for deadline misses
     pub slo: Option<SloSpec>,
+    /// predicted-vs-realized length accuracy (predictor-driven runs only)
+    pub predictor: PredictorStats,
+    /// scheduling-decision time accrued across every window (ms) — the
+    /// coordinator's own overhead, distinct from engine service time
+    pub sched_overhead_ms_total: f64,
     /// coordinator time of the most recent event (drives rate windows)
     pub last_event_ms: f64,
     /// HTTP front-door gauges, when serving (see [`FrontendStats`])
@@ -172,6 +223,8 @@ impl TelemetryState {
             nodes: (0..nodes).map(|_| NodeStats::new()).collect(),
             tenants: BTreeMap::new(),
             slo,
+            predictor: PredictorStats::new(),
+            sched_overhead_ms_total: 0.0,
             last_event_ms: 0.0,
             frontend: None,
         }
@@ -212,6 +265,9 @@ impl TelemetryState {
 
     fn apply_finish(&mut self, tenant: Option<&str>, node: usize,
                     stats: &FinishStats) {
+        if let Some(predicted) = stats.predicted_total {
+            self.predictor.add(predicted, stats.tokens as f64);
+        }
         let n = self.node_mut(node);
         n.finished += 1;
         n.active = n.active.saturating_sub(1);
@@ -368,6 +424,13 @@ impl EventSink for TelemetrySink {
         st.node_mut(node).lost = true;
     }
 
+    fn on_window_decision(&mut self, d: &DecisionRecord<'_>) {
+        let mut st = self.state.lock().unwrap();
+        st.touch(d.now_ms);
+        st.sched_overhead_ms_total += d.sched_overhead_ms;
+        st.node_mut(d.node).queue_depth = d.queue_depth as u64;
+    }
+
     /// The whole window under a single mutex acquisition: the serving loop
     /// delivers every per-job event of a finished window plus the
     /// window-done rollup without re-taking the lock per job, so a pooled
@@ -412,6 +475,7 @@ mod tests {
             queue_delay_ms: jct * 0.5,
             service_ms: jct * 0.5,
             tokens,
+            predicted_total: None,
         }
     }
 
@@ -486,6 +550,7 @@ mod tests {
                     tokens: 50,
                     service_ms: 800.0,
                     now_ms: 803.0,
+                    pod: None,
                 });
             } else {
                 h.on_job_preempted(JobId::new(1), 0, 803.0);
@@ -521,6 +586,64 @@ mod tests {
         sink.with_state(|st| {
             let f = st.frontend.as_ref().unwrap();
             assert_eq!((f.rejected(), f.depth(), f.streams()), (4, 2, 1));
+        });
+    }
+
+    #[test]
+    fn predictor_accuracy_folds_only_predicted_finishes() {
+        let sink = TelemetrySink::new(1);
+        let mut handle = sink.clone();
+        // predictions in the same order as realized lengths: τ = 1
+        for (id, predicted, tokens) in
+            [(0, 95.0, 100usize), (1, 210.0, 200), (2, 310.0, 300)]
+        {
+            handle.on_job_admitted(&meta(id, None, 0.0), 0, 0.0);
+            let mut st = finish(100.0, tokens);
+            st.predicted_total = Some(predicted);
+            handle.on_job_finished(&meta(id, None, 0.0), 0, &st, 100.0);
+        }
+        // an unpredicted (FCFS-style) finish must not contribute
+        handle.on_job_admitted(&meta(3, None, 0.0), 0, 0.0);
+        handle.on_job_finished(&meta(3, None, 0.0), 0, &finish(100.0, 7),
+                               100.0);
+        sink.with_state(|st| {
+            assert_eq!(st.predictor.abs_err.count(), 3);
+            assert_eq!(st.predictor.signed_err.count(), 3);
+            assert_eq!(st.predictor.kendall.len(), 3);
+            assert!((st.predictor.kendall.tau() - 1.0).abs() < 1e-9);
+            // |95−100| + |210−200| + |310−300| = 25
+            assert!((st.predictor.abs_err.sum() - 25.0).abs() < 1e-9);
+            // (−5) + 10 + 10 = 15
+            assert!((st.predictor.signed_err.sum() - 15.0).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn decisions_accrue_overhead_and_overwrite_queue_depth() {
+        let sink = TelemetrySink::new(2);
+        let mut handle = sink.clone();
+        let batch = [JobId::new(0)];
+        let mut d = DecisionRecord {
+            node: 1,
+            window: 0,
+            now_ms: 10.0,
+            queue_depth: 7,
+            batch: &batch,
+            victims: &[],
+            key_min: 1.0,
+            key_max: 2.0,
+            sched_overhead_ms: 0.25,
+        };
+        handle.on_window_decision(&d);
+        d.window = 1;
+        d.now_ms = 20.0;
+        d.queue_depth = 3; // gauge: later decision replaces, not adds
+        handle.on_window_decision(&d);
+        sink.with_state(|st| {
+            assert!((st.sched_overhead_ms_total - 0.5).abs() < 1e-9);
+            assert_eq!(st.nodes[1].queue_depth, 3);
+            assert_eq!(st.nodes[0].queue_depth, 0);
+            assert!((st.last_event_ms - 20.0).abs() < 1e-9);
         });
     }
 

@@ -279,6 +279,107 @@ impl WindowedRate {
     }
 }
 
+/// Windowed online Kendall-τ: pairwise rank concordance between a
+/// predicted and a realized value over a sliding buffer of the last N
+/// completions.  ISRTF consumes an *ordering*, not absolute lengths, so
+/// rank correlation — not absolute error — is the accuracy signal that
+/// predicts scheduling quality ("Efficient LLM Scheduling by Learning to
+/// Rank").  τ is computed on demand in O(N²) over the buffer, which is
+/// fine for the default N=256 (a scrape-rate cost, not a per-event one);
+/// `add` is O(1).
+#[derive(Debug, Clone)]
+pub struct KendallWindow {
+    cap: usize,
+    /// (predicted, actual) pairs, oldest first
+    pairs: std::collections::VecDeque<(f64, f64)>,
+    total: u64,
+}
+
+impl Default for KendallWindow {
+    fn default() -> Self {
+        KendallWindow::new(256)
+    }
+}
+
+impl KendallWindow {
+    pub fn new(cap: usize) -> KendallWindow {
+        assert!(cap >= 2, "a rank window needs at least two pairs");
+        KendallWindow {
+            cap,
+            pairs: std::collections::VecDeque::with_capacity(cap),
+            total: 0,
+        }
+    }
+
+    /// Record one completion's (predicted, actual) pair, evicting the
+    /// oldest beyond the window capacity.
+    pub fn add(&mut self, predicted: f64, actual: f64) {
+        if !predicted.is_finite() || !actual.is_finite() {
+            return;
+        }
+        if self.pairs.len() == self.cap {
+            self.pairs.pop_front();
+        }
+        self.pairs.push_back((predicted, actual));
+        self.total += 1;
+    }
+
+    /// Pairs currently in the window.
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    /// Lifetime number of recorded pairs (a monotone counter).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Kendall τ-b over the window: (concordant − discordant) pairs
+    /// normalized with tie corrections, in [-1, 1].  NaN below two pairs
+    /// or when either margin is entirely tied.
+    pub fn tau(&self) -> f64 {
+        let n = self.pairs.len();
+        if n < 2 {
+            return f64::NAN;
+        }
+        let (mut concordant, mut discordant) = (0i64, 0i64);
+        let (mut ties_pred, mut ties_actual) = (0i64, 0i64);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let (pi, ai) = self.pairs[i];
+                let (pj, aj) = self.pairs[j];
+                let dp = (pi - pj).signum();
+                let da = (ai - aj).signum();
+                if dp == 0.0 {
+                    ties_pred += 1;
+                }
+                if da == 0.0 {
+                    ties_actual += 1;
+                }
+                if dp == 0.0 || da == 0.0 {
+                    continue;
+                }
+                if dp == da {
+                    concordant += 1;
+                } else {
+                    discordant += 1;
+                }
+            }
+        }
+        let n0 = (n * (n - 1) / 2) as i64;
+        let denom =
+            (((n0 - ties_pred) as f64) * ((n0 - ties_actual) as f64)).sqrt();
+        if denom == 0.0 {
+            return f64::NAN;
+        }
+        (concordant - discordant) as f64 / denom
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,5 +507,70 @@ mod tests {
         r.add(400.0, 1.0); // late event lands in the current bucket
         assert_eq!(r.total(), 2.0);
         assert!(r.rate_per_s(500.0) > 0.0);
+    }
+
+    #[test]
+    fn kendall_tau_is_one_on_perfectly_ranked_predictions() {
+        let mut k = KendallWindow::new(64);
+        assert!(k.tau().is_nan(), "no pairs -> undefined");
+        for i in 0..32 {
+            // monotone but nonlinear: rank agreement, not value agreement
+            k.add(i as f64, (i as f64).powi(2) + 10.0);
+        }
+        assert!((k.tau() - 1.0).abs() < 1e-12, "tau {}", k.tau());
+        assert_eq!(k.len(), 32);
+        assert_eq!(k.total(), 32);
+    }
+
+    #[test]
+    fn kendall_tau_is_minus_one_on_inverted_order() {
+        let mut k = KendallWindow::new(64);
+        for i in 0..32 {
+            k.add(i as f64, -(i as f64));
+        }
+        assert!((k.tau() + 1.0).abs() < 1e-12, "tau {}", k.tau());
+    }
+
+    #[test]
+    fn kendall_tau_partial_order_lands_strictly_between() {
+        // half the pairs follow the prediction, half invert it
+        let mut k = KendallWindow::new(64);
+        for i in 0..16 {
+            let actual = if i % 2 == 0 { i as f64 } else { 32.0 - i as f64 };
+            k.add(i as f64, actual);
+        }
+        let tau = k.tau();
+        assert!(tau > -1.0 && tau < 1.0, "partial order tau {tau}");
+        // and an uncorrelated alternating pattern sits near zero
+        let mut z = KendallWindow::new(64);
+        for i in 0..32 {
+            z.add(i as f64, if i % 2 == 0 { 1.0 } else { 0.0 });
+        }
+        assert!(z.tau().abs() < 0.2, "alternating tau {}", z.tau());
+    }
+
+    #[test]
+    fn kendall_window_slides_and_ignores_non_finite() {
+        let mut k = KendallWindow::new(4);
+        // an anti-correlated prefix that must age out entirely
+        for i in 0..8 {
+            k.add(i as f64, -(i as f64));
+        }
+        assert_eq!(k.len(), 4, "window must stay bounded");
+        // four concordant pairs push the discordant history out
+        for i in 0..4 {
+            k.add(100.0 + i as f64, 100.0 + i as f64);
+        }
+        assert!((k.tau() - 1.0).abs() < 1e-12,
+                "old pairs must have been evicted: tau {}", k.tau());
+        assert_eq!(k.total(), 12);
+        k.add(f64::NAN, 1.0);
+        k.add(1.0, f64::INFINITY);
+        assert_eq!(k.total(), 12, "non-finite pairs are dropped");
+        // all-tied predictions make the denominator vanish -> NaN
+        let mut t = KendallWindow::new(8);
+        t.add(5.0, 1.0);
+        t.add(5.0, 2.0);
+        assert!(t.tau().is_nan());
     }
 }

@@ -192,6 +192,7 @@ mod tests {
                     queue_delay_ms: 10.0,
                     service_ms: jct,
                     tokens: 50,
+                    predicted_total: None,
                 }, jct);
             }
         }

@@ -325,6 +325,7 @@ mod tests {
                     queue_delay_ms: 0.0,
                     service_ms: 100.0,
                     tokens,
+                    predicted_total: None,
                 }, 100.0);
             }
         }

@@ -25,7 +25,7 @@ use elis::engine::sim_engine::SimEngine;
 use elis::engine::{Engine, SeqSpec, SeqWindowOut, WindowOutcome};
 use elis::predictor::oracle::OraclePredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::telemetry::TelemetrySink;
+use elis::telemetry::{FlightRecorder, TelemetrySink};
 use elis::util::json::Json;
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
@@ -362,6 +362,7 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         gen.trace(&corpus, 2)
     };
     let telemetry = TelemetrySink::new(2);
+    let recorder = FlightRecorder::default();
     let (api_tx, mut bridge) = ApiBridge::channel();
     let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
     let cfg = ServeConfig {
@@ -372,6 +373,7 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
     };
     let mut coord = CoordinatorBuilder::from_config(cfg)
         .sink(Box::new(telemetry.clone()))
+        .sink(Box::new(recorder.clone()))
         .sink(Box::new(bridge.completion_sink()))
         .build_pooled(&trace, WorkerPool::new(sim_engines(2)), &mut sched)
         .unwrap();
@@ -382,6 +384,8 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         wait_timeout: Duration::from_secs(25),
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
+        trace: Some(recorder.clone()),
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();
     let addr = server.local_addr();
@@ -404,6 +408,8 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
                  r#"{"total_len": 20, "tenant": "api", "wait": true}"#),
         ));
         responses.push(("metrics", http(addr, "GET /metrics", "")));
+        // the wait generate above finished, so execute spans exist by now
+        responses.push(("trace", http(addr, "GET /debug/trace", "")));
         responses.push(("missing", http(addr, "GET /nope", "")));
         responses.push(("bad-json", http(addr, "POST /v1/generate", "{oops")));
         responses
@@ -435,11 +441,14 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         match *label {
             "healthz" => {
                 assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
-                assert!(resp.contains("ok"), "{resp}");
+                assert!(resp.contains("\"status\":\"ok\""), "{resp}");
+                assert!(resp.contains("\"workers_dead\":0"), "{resp}");
+                assert!(resp.contains("\"uptime_s\""), "{resp}");
             }
             "generate" => {
                 assert!(resp.starts_with("HTTP/1.1 202"), "{resp}");
                 assert!(resp.contains("\"job_id\""), "{resp}");
+                assert!(resp.contains("\"trace_id\""), "{resp}");
                 assert!(resp.contains("\"accepted\""), "{resp}");
             }
             "generate-wait" => {
@@ -455,6 +464,17 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
                 assert!(resp.contains("elis_tenant_jobs_admitted_total\
                                        {tenant=\"api\"}"),
                         "{resp}");
+            }
+            "trace" => {
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                let body = resp.split("\r\n\r\n").nth(1).expect("trace body");
+                let j = Json::parse(body).expect("chrome trace JSON");
+                let n_exec = j.get("traceEvents").unwrap().as_arr().unwrap()
+                    .iter()
+                    .filter(|e| e.get("name").and_then(Json::as_str)
+                                == Some("execute"))
+                    .count();
+                assert!(n_exec >= 1, "no execute spans recorded:\n{body}");
             }
             "missing" => assert!(resp.starts_with("HTTP/1.1 404"), "{resp}"),
             "bad-json" => assert!(resp.starts_with("HTTP/1.1 400"), "{resp}"),
@@ -496,6 +516,7 @@ fn killable_pod(addr: SocketAddr, kill_after: usize, window_ms: u64) {
     let hello = wire::Hello {
         version: wire::WIRE_VERSION,
         max_batch: 1,
+        trace: false, // a pre-trace pod: the coordinator must not send ids
         describe: format!("KillableSleepEngine[{window_ms} ms]"),
     };
     wire::client_handshake(&mut stream, &hello).expect("pod handshake");
@@ -510,7 +531,12 @@ fn killable_pod(addr: SocketAddr, kill_after: usize, window_ms: u64) {
         match wire::decode_cmd(&payload).expect("pod decode") {
             WorkerCmd::SetPreemptionCap(cap) => engine.set_preemption_cap(cap),
             WorkerCmd::Remove(id) => engine.remove(id),
-            WorkerCmd::RunWindow { admits, priority_order, batch, echo } => {
+            WorkerCmd::RunWindow {
+                admits, priority_order, batch, echo, trace,
+            } => {
+                assert!(trace.is_none(),
+                        "hello declared no trace support; the coordinator \
+                         must not ask this pod for trace echoes");
                 if completed == kill_after {
                     // the fault: vanish with this window unanswered
                     let _ = stream.shutdown(Shutdown::Both);
@@ -519,7 +545,8 @@ fn killable_pod(addr: SocketAddr, kill_after: usize, window_ms: u64) {
                 let (fresh, outcome) = run_cmd_window(
                     &mut engine, admits, &priority_order, &batch);
                 let reply =
-                    wire::encode_done(&echo, &fresh, &outcome).to_string();
+                    wire::encode_done(&echo, &fresh, &outcome, &None)
+                        .to_string();
                 wire::write_frame(&mut stream, reply.as_bytes())
                     .expect("pod reply");
                 stream.flush().expect("pod flush");
@@ -697,7 +724,9 @@ fn distributed_multi_process_end_to_end() {
                "--listen", "127.0.0.1:0",
                "--workers", "2",
                "--trace", trace_path.to_str().unwrap(),
-               "--scheduler", "fcfs",
+               // isrtf consults the predictor, so the run also feeds the
+               // elis_predictor_* accuracy metrics asserted below
+               "--scheduler", "isrtf",
                "--predictor", "oracle",
                "--batch", "2",
                "--idle-exit-ms", "3000"])
@@ -762,6 +791,47 @@ fn distributed_multi_process_end_to_end() {
         std::thread::sleep(Duration::from_millis(25));
     }
 
+    // every job finished under isrtf+oracle, so predictor accuracy and
+    // scheduler-overhead telemetry must be live on /metrics
+    let metrics = http(http_addr, "GET /metrics", "");
+    let abs_count = metrics
+        .lines()
+        .find(|l| l.starts_with("elis_predictor_abs_err_tokens_count"))
+        .and_then(|l| l.rsplit(' ').next()?.trim().parse::<f64>().ok())
+        .unwrap_or(-1.0);
+    assert_eq!(abs_count, expect as f64,
+               "every finish must fold into the predictor sketch:\n{metrics}");
+    assert!(metrics.contains("elis_predictor_kendall_tau"), "{metrics}");
+    assert!(metrics.contains("elis_sched_overhead_ms_total"), "{metrics}");
+    assert!(metrics.contains("elis_node_queue_depth{node=\"0\"}"),
+            "{metrics}");
+
+    // structured health while both pods are alive
+    let hz = http(http_addr, "GET /healthz", "");
+    assert!(hz.starts_with("HTTP/1.1 200"), "{hz}");
+    assert!(hz.contains("\"status\":\"ok\""), "{hz}");
+    assert!(hz.contains("\"workers_dead\":0"), "{hz}");
+
+    // the acceptance bar: /debug/trace is valid Chrome trace JSON and its
+    // pod-side execute spans carry the *worker children's* pids — the
+    // timeline demonstrably crosses the process boundary
+    let resp = http(http_addr, "GET /debug/trace", "");
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    let body = resp.split("\r\n\r\n").nth(1).expect("trace body");
+    let j = Json::parse(body).expect("chrome trace JSON");
+    let pod_pids: Vec<f64> =
+        pods.iter().map(|p| p.0.id() as f64).collect();
+    let seen: Vec<f64> = j.get("traceEvents").unwrap().as_arr().unwrap()
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("pod exec"))
+        .filter_map(|e| e.get("args")?.get("pod_pid")?.as_f64())
+        .collect();
+    assert!(!seen.is_empty(), "no pod-side spans in the trace:\n{body}");
+    let own = std::process::id() as f64;
+    assert!(seen.iter().all(|p| pod_pids.contains(p) && *p != own),
+            "pod spans {seen:?} must carry worker pids {pod_pids:?}, \
+             never the test's own {own}");
+
     // idle-exit drains everything: serve exits 0, pods see the hangup
     // and exit 0
     let mut serve = serve;
@@ -795,6 +865,8 @@ fn wait_generate_racing_shutdown_gets_terminal_response() {
         wait_timeout: Duration::from_secs(60),
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
+        trace: None,
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
     let addr = server.local_addr();
@@ -835,6 +907,8 @@ fn http_server_shutdown_is_idempotent_and_quiet() {
         wait_timeout: Duration::from_secs(1),
         admission: Admission::unlimited(),
         stats: _bridge.frontend_stats(),
+        trace: None,
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
     let addr = server.local_addr();
@@ -877,6 +951,8 @@ fn streaming_generate_matches_wait_reply_over_one_keep_alive_conn() {
         wait_timeout: Duration::from_secs(25),
         admission: Admission::unlimited(),
         stats: stats.clone(),
+        trace: None,
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4).unwrap();
     let addr = server.local_addr();
@@ -932,6 +1008,8 @@ fn overload_sheds_429_and_drain_answers_held_streams() {
             ..Default::default()
         }),
         stats: stats.clone(),
+        trace: None,
+        started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();
     let addr = server.local_addr();
