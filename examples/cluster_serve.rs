@@ -11,6 +11,7 @@
 //!   4. `POST /v1/generate` (`"stream": true`) — SSE token chunks
 //!   5. `GET /metrics`                         — live Prometheus snapshot
 //!   6. `GET /debug/trace`                     — Chrome trace-event JSON
+//!   7. `GET /debug/explain?job=`              — per-job JCT breakdown
 //!
 //! No artifacts needed; everything runs on synthetic prompts.
 //!
@@ -31,7 +32,7 @@ use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
 use elis::predictor::oracle::OraclePredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::telemetry::{FlightRecorder, TelemetrySink};
+use elis::telemetry::{AttributionSink, FlightRecorder, TelemetrySink};
 use elis::util::cli::Args;
 use elis::workload::{Corpus, RequestGenerator};
 
@@ -125,9 +126,13 @@ fn main() -> Result<()> {
         ..Default::default()
     };
     let recorder = FlightRecorder::default();
+    let explain = AttributionSink::default();
+    // the attribution sink registers ahead of the completion notifier so
+    // the breakdown exists by the time a `wait: true` handler wakes
     let mut coord = CoordinatorBuilder::from_config(cfg)
         .sink(Box::new(telemetry.clone()))
         .sink(Box::new(recorder.clone()))
+        .sink(Box::new(explain.clone()))
         .sink(Box::new(bridge.completion_sink()))
         .build_pooled(&trace, pool, &mut sched)?;
 
@@ -138,6 +143,7 @@ fn main() -> Result<()> {
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
         trace: Some(recorder.clone()),
+        explain: Some(explain.clone()),
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4)?;
@@ -155,9 +161,12 @@ fn main() -> Result<()> {
         push("POST /v1/generate (async)",
              http(addr, "POST /v1/generate",
                   r#"{"total_len": 60, "tenant": "api"}"#)?);
-        push("POST /v1/generate (wait)",
-             http(addr, "POST /v1/generate",
-                  r#"{"total_len": 40, "tenant": "api", "wait": true}"#)?);
+        let wait_resp = http(addr, "POST /v1/generate",
+                             r#"{"total_len": 40, "tenant": "api", "wait": true}"#)?;
+        let wait_job = elis::util::json::Json::parse(body_of(&wait_resp))
+            .ok()
+            .and_then(|j| j.get("job_id")?.as_usize());
+        push("POST /v1/generate (wait)", wait_resp);
         let (chunks, toks) = stream_generate(
             addr, r#"{"total_len": 120, "tenant": "api", "stream": true}"#)?;
         log.push(("POST /v1/generate (stream)".to_string(),
@@ -179,6 +188,27 @@ fn main() -> Result<()> {
         log.push(("GET /debug/trace".to_string(),
                   format!("{} | {n_events} trace events (load the body in \
                            Perfetto)", first_line(&trace))));
+        if let Some(job) = wait_job {
+            let explain = http(addr, &format!("GET /debug/explain?job={job}"),
+                               "")?;
+            let parts = elis::util::json::Json::parse(body_of(&explain))
+                .ok()
+                .and_then(|j| {
+                    let b = j.get("breakdown")?;
+                    Some(format!(
+                        "queue {:.1} + hol {:.1} + preempt {:.1} + \
+                         failover {:.1} + exec {:.1} ms",
+                        b.get("queueing_ms")?.as_f64()?,
+                        b.get("hol_blocking_ms")?.as_f64()?,
+                        b.get("preemption_stall_ms")?.as_f64()?,
+                        b.get("failover_stall_ms")?.as_f64()?,
+                        b.get("execution_ms")?.as_f64()?,
+                    ))
+                })
+                .unwrap_or_else(|| "no breakdown".to_string());
+            log.push(("GET /debug/explain?job=".to_string(),
+                      format!("{} | {parts}", first_line(&explain))));
+        }
         Ok(log)
     });
 

@@ -54,7 +54,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::events::{EventSink, FinishStats, JobMeta};
 use crate::coordinator::Coordinator;
-use crate::telemetry::{FlightRecorder, FrontendStats, TelemetrySink};
+use crate::telemetry::{AttributionSink, FlightRecorder, FrontendStats,
+                       TelemetrySink};
 use crate::util::json::Json;
 use crate::workload::TraceRequest;
 
@@ -380,6 +381,10 @@ pub struct Gateway {
     pub stats: Arc<FrontendStats>,
     /// flight recorder behind `GET /debug/trace`; `None` renders 503
     pub trace: Option<FlightRecorder>,
+    /// JCT attribution behind `GET /debug/explain` and the `breakdown`
+    /// objects in `wait: true` replies / SSE `done` events; `None`
+    /// renders 503 and omits the reply fields
+    pub explain: Option<AttributionSink>,
     /// server start, for the `/healthz` uptime field
     pub started: Instant,
 }
@@ -703,6 +708,9 @@ fn route(req: &Request, gw: &Gateway) -> Response {
         if let Some(query) = match_path(&req.path, "/debug/trace") {
             return debug_trace(query, gw);
         }
+        if let Some(query) = match_path(&req.path, "/debug/explain") {
+            return debug_explain(query, gw);
+        }
     }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => healthz(gw),
@@ -786,6 +794,44 @@ fn debug_trace(query: Option<&str>, gw: &Gateway) -> Response {
         }
     }
     Response::json(200, rec.render_chrome(job))
+}
+
+/// `GET /debug/explain?job=<id>`: a finished job's JCT attribution —
+/// queueing / head-of-line blocking / preemption stall / failover stall /
+/// execution, components summing to the JCT — plus its identity facts
+/// (tenant, node, tokens, predicted length, window count).
+fn debug_explain(query: Option<&str>, gw: &Gateway) -> Response {
+    let Some(explain) = &gw.explain else {
+        return Response::text(503, "attribution is not enabled\n");
+    };
+    let mut job = None;
+    for pair in query.unwrap_or("").split('&') {
+        if let Some(v) = pair.strip_prefix("job=") {
+            match v.parse::<u64>() {
+                Ok(id) => job = Some(id),
+                Err(_) => {
+                    return Response::text(
+                        400, "job must be a numeric job id\n");
+                }
+            }
+        }
+    }
+    let Some(job) = job else {
+        return Response::text(
+            400, "missing required query parameter: job=<id>\n");
+    };
+    match explain.explain_json(job) {
+        Some(doc) => Response::json(200, doc),
+        None => Response::json(
+            404,
+            Json::obj(vec![
+                ("error",
+                 Json::Str("job not finished (or evicted from the \
+                            explain ring)".into())),
+                ("job_id", Json::Num(job as f64)),
+            ]),
+        ),
+    }
 }
 
 /// Build the [`TraceRequest`] a `POST /v1/generate` body describes.
@@ -906,6 +952,14 @@ fn handle_generate(body: &[u8], gw: &Gateway, stream: &mut TcpStream,
             ]),
         ),
         Ok(GenerateReply::Finished { job_id, tokens, jct_ms, token_ids }) => {
+            // the attribution sink is registered ahead of the completion
+            // notifier, so by the time this reply fires the breakdown for
+            // the finished job is already folded
+            let breakdown = gw
+                .explain
+                .as_ref()
+                .and_then(|e| e.breakdown_json(job_id))
+                .unwrap_or(Json::Null);
             Response::json(
                 200,
                 Json::obj(vec![
@@ -913,6 +967,7 @@ fn handle_generate(body: &[u8], gw: &Gateway, stream: &mut TcpStream,
                     ("status", Json::Str("finished".into())),
                     ("tokens", Json::Num(tokens as f64)),
                     ("jct_ms", Json::Num(jct_ms)),
+                    ("breakdown", breakdown),
                     ("token_ids", token_array(&token_ids)),
                     ("trace_id", Json::Num(job_id as f64)),
                 ]),
@@ -980,7 +1035,8 @@ fn stream_reply(gw: &Gateway, rx: &Receiver<GenerateReply>,
         }
     };
     gw.stats.streams_active.fetch_add(1, Ordering::Relaxed);
-    let ok = stream_events(rx, stream, gw.wait_timeout, head, keep);
+    let ok = stream_events(rx, stream, gw.wait_timeout, head, keep,
+                           gw.explain.as_ref());
     gw.stats.streams_active.fetch_sub(1, Ordering::Relaxed);
     ok && keep
 }
@@ -988,7 +1044,8 @@ fn stream_reply(gw: &Gateway, rx: &Receiver<GenerateReply>,
 /// Write the chunked SSE body for one admitted job.  Returns false if
 /// the connection must close (write failure or abnormal termination).
 fn stream_events(rx: &Receiver<GenerateReply>, stream: &mut TcpStream,
-                 timeout: Duration, job_id: u64, keep: bool) -> bool {
+                 timeout: Duration, job_id: u64, keep: bool,
+                 explain: Option<&AttributionSink>) -> bool {
     let conn = if keep { "keep-alive" } else { "close" };
     let head = format!(
         "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
@@ -1021,11 +1078,15 @@ fn stream_events(rx: &Receiver<GenerateReply>, stream: &mut TcpStream,
                 }
             }
             Ok(GenerateReply::Finished { job_id, tokens, jct_ms, .. }) => {
+                let breakdown = explain
+                    .and_then(|e| e.breakdown_json(job_id))
+                    .unwrap_or(Json::Null);
                 let data = Json::obj(vec![
                     ("job_id", Json::Num(job_id as f64)),
                     ("status", Json::Str("finished".into())),
                     ("tokens", Json::Num(tokens as f64)),
                     ("jct_ms", Json::Num(jct_ms)),
+                    ("breakdown", breakdown),
                 ]);
                 let ok = write_chunk(
                     stream,
@@ -1366,6 +1427,7 @@ mod tests {
             admission: Admission::unlimited(),
             stats: Arc::new(FrontendStats::default()),
             trace: Some(FlightRecorder::default()),
+            explain: Some(AttributionSink::default()),
             started: Instant::now(),
         }
     }
@@ -1421,5 +1483,62 @@ mod tests {
         assert_eq!(sse_event(Some("done"), "{}"),
                    "event: done\ndata: {}\n\n");
         assert_eq!(sse_event(None, "x"), "data: x\n\n");
+    }
+
+    #[test]
+    fn debug_explain_validates_and_serves_breakdowns() {
+        use crate::coordinator::{
+            EventSink, FinishStats, JobId, JobMeta, WindowEvents,
+            WindowJobEvent,
+        };
+        let gw = test_gateway();
+        // parameter validation before any job exists
+        assert_eq!(debug_explain(None, &gw).status, 400);
+        assert_eq!(debug_explain(Some("job=frog"), &gw).status, 400);
+        assert_eq!(debug_explain(Some("job=9"), &gw).status, 404);
+
+        // finish one job through the sink, then explain it over HTTP
+        let mut sink = gw.explain.clone().unwrap();
+        let job = JobMeta {
+            id: JobId::from_raw(9),
+            tenant: Some("paid"),
+            arrival_ms: 0.0,
+            prompt_len: 4,
+            total_len: 8,
+        };
+        sink.on_job_admitted(&job, 0, 0.0);
+        sink.on_window_applied(&WindowEvents {
+            node: 0,
+            batch: &[job.id],
+            events: &[WindowJobEvent::Finished {
+                job: job.clone(),
+                stats: FinishStats {
+                    jct_ms: 30.0,
+                    ttft_ms: Some(22.0),
+                    queue_delay_ms: 20.0,
+                    service_ms: 10.0,
+                    tokens: 4,
+                    predicted_total: Some(8.0),
+                },
+            }],
+            tokens: 4,
+            service_ms: 10.0,
+            now_ms: 30.0,
+            pod: None,
+        });
+        let resp = debug_explain(Some("job=9"), &gw);
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let j = Json::parse(&resp.body).unwrap();
+        assert_eq!(j.get("job_id").and_then(Json::as_usize), Some(9));
+        assert_eq!(j.get("tenant").and_then(Json::as_str), Some("paid"));
+        let b = j.get("breakdown").expect("breakdown object");
+        assert!(
+            (b.get("total_ms").and_then(Json::as_f64).unwrap() - 30.0).abs()
+                < 1e-6
+        );
+
+        let mut bare = test_gateway();
+        bare.explain = None;
+        assert_eq!(debug_explain(Some("job=9"), &bare).status, 503);
     }
 }

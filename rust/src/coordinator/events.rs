@@ -113,6 +113,12 @@ pub struct DecisionRecord<'a> {
     pub queue_depth: usize,
     /// the selected batch, in priority order
     pub batch: &'a [JobId],
+    /// the batch-size cap the selection ran under (engine cap, possibly
+    /// tightened by `ServeConfig::max_batch` on the rebuild path) — with
+    /// `batch.len()` this is the window's occupancy context: a full batch
+    /// (`batch.len() >= batch_cap`) with jobs still queued is the
+    /// head-of-line blocking signature JCT attribution accounts for
+    pub batch_cap: usize,
     /// preemption victim candidates (raw job ids, the engine's eviction
     /// order), best victim first
     pub victims: &'a [u64],

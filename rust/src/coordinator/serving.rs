@@ -456,6 +456,7 @@ impl CoordinatorBuilder {
             victims_scratch: Vec::new(),
             events_scratch: Vec::new(),
             decision_depth: 0,
+            decision_cap: 0,
             sinks,
             shaper,
             now: 0.0,
@@ -523,6 +524,10 @@ pub struct Coordinator<'a> {
     /// the [`DecisionRecord`] fired by [`execute_window`](Self) — written
     /// by both dispatch paths before they start draining the pool
     decision_depth: usize,
+    /// batch-size cap the current window's selection ran under (engine
+    /// cap, possibly tightened by `max_batch` on the rebuild path) —
+    /// batch-occupancy context for the [`DecisionRecord`]
+    decision_cap: usize,
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
     now: f64,
@@ -913,6 +918,7 @@ impl<'a> Coordinator<'a> {
 
         // top-k partial selection: k pops, the rest never moves
         let engine_cap = self.backend.max_batch(w);
+        self.decision_cap = engine_cap;
         let mut batch_entries = std::mem::take(&mut self.order_scratch);
         self.batcher.select_into(&mut self.buffer, w, engine_cap,
                                  &mut batch_entries);
@@ -1027,6 +1033,7 @@ impl<'a> Coordinator<'a> {
         // form the batch from the highest-priority prefix; the sorted
         // remainder becomes the node's new pool
         let take = self.cfg.max_batch.min(self.backend.max_batch(w));
+        self.decision_cap = take;
         let batch: Vec<JobId> =
             full_order.iter().take(take).map(|e| e.id).collect();
         self.order_scratch = full_order;
@@ -1110,6 +1117,7 @@ impl<'a> Coordinator<'a> {
                 now_ms: now,
                 queue_depth: self.decision_depth,
                 batch: &batch,
+                batch_cap: self.decision_cap,
                 victims: &self.victims_scratch,
                 key_min,
                 key_max,

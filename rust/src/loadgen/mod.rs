@@ -38,7 +38,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::cluster::SseDecoder;
-use crate::telemetry::QuantileSketch;
+use crate::telemetry::{Breakdown, QuantileSketch};
 use crate::util::json::Json;
 
 /// Everything `elis loadgen` can be told from the CLI.
@@ -114,6 +114,11 @@ pub struct LoadReport {
     /// feed the ids to the server's `/debug/trace?job=<id>` to see where
     /// the tail latency went
     pub trace_sample: Vec<(f64, u64)>,
+    /// replies that carried a server-side JCT breakdown object
+    pub breakdown_count: u64,
+    /// component-wise sums of those breakdowns (ms); divide by
+    /// `breakdown_count` for the fleet-average attribution
+    pub breakdown_sum: Breakdown,
 }
 
 impl LoadReport {
@@ -160,6 +165,20 @@ impl LoadReport {
                     ]))
                     .collect(),
             )),
+            ("breakdown", {
+                let n = (self.breakdown_count as f64).max(1.0);
+                let b = &self.breakdown_sum;
+                Json::obj(vec![
+                    ("count", Json::Num(self.breakdown_count as f64)),
+                    ("queueing_ms", Json::Num(b.queueing_ms / n)),
+                    ("hol_blocking_ms", Json::Num(b.hol_blocking_ms / n)),
+                    ("preemption_stall_ms",
+                     Json::Num(b.preemption_stall_ms / n)),
+                    ("failover_stall_ms",
+                     Json::Num(b.failover_stall_ms / n)),
+                    ("execution_ms", Json::Num(b.execution_ms / n)),
+                ])
+            }),
         ])
     }
 }
@@ -176,6 +195,22 @@ struct Sample {
     tokens: u64,
     /// server-assigned trace id (the job id), when the reply carried one
     trace_id: Option<u64>,
+    /// server-side JCT attribution, when the reply carried one
+    breakdown: Option<Breakdown>,
+}
+
+/// Parse a reply's `breakdown` object into component milliseconds;
+/// `None` when the field is absent or null (attribution disabled).
+fn parse_breakdown(j: &Json) -> Option<Breakdown> {
+    let b = j.get("breakdown")?;
+    let f = |k: &str| b.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    b.as_obj().map(|_| Breakdown {
+        queueing_ms: f("queueing_ms"),
+        hol_blocking_ms: f("hol_blocking_ms"),
+        preemption_stall_ms: f("preemption_stall_ms"),
+        failover_stall_ms: f("failover_stall_ms"),
+        execution_ms: f("execution_ms"),
+    })
 }
 
 /// Shared counters the request threads bump as they go.
@@ -224,6 +259,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
     let mut tpot = QuantileSketch::new();
     let mut jct = QuantileSketch::new();
     let mut slowest: Vec<(f64, u64)> = Vec::new();
+    let mut breakdown_count = 0u64;
+    let mut breakdown_sum = Breakdown::default();
     let prune = |v: &mut Vec<(f64, u64)>| {
         v.sort_by(|a, b| b.0.total_cmp(&a.0));
         v.truncate(TRACE_SAMPLE);
@@ -236,6 +273,14 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
             }
         }
         jct.add(s.jct_ms);
+        if let Some(b) = s.breakdown {
+            breakdown_count += 1;
+            breakdown_sum.queueing_ms += b.queueing_ms;
+            breakdown_sum.hol_blocking_ms += b.hol_blocking_ms;
+            breakdown_sum.preemption_stall_ms += b.preemption_stall_ms;
+            breakdown_sum.failover_stall_ms += b.failover_stall_ms;
+            breakdown_sum.execution_ms += b.execution_ms;
+        }
         if let Some(id) = s.trace_id {
             slowest.push((s.jct_ms, id));
             if slowest.len() > 256 {
@@ -261,6 +306,8 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
         elapsed_s: start.elapsed().as_secs_f64(),
         peak_in_flight: counters.peak.load(Ordering::Relaxed) as u64,
         trace_sample: slowest,
+        breakdown_count,
+        breakdown_sum,
     })
 }
 
@@ -480,11 +527,15 @@ fn read_sse(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
                 }
                 Some("done") => {
                     counters.ok.fetch_add(1, Ordering::Relaxed);
+                    let breakdown = Json::parse(&ev.data)
+                        .ok()
+                        .and_then(|j| parse_breakdown(&j));
                     let _ = tx.send(Sample {
                         ttft_ms: ttft,
                         jct_ms: t0.elapsed().as_secs_f64() * 1e3,
                         tokens,
                         trace_id,
+                        breakdown,
                     });
                     // the server leaves the connection reusable after
                     // the terminating chunk
@@ -553,10 +604,11 @@ fn read_json_reply(mut stream: TcpStream, head: &HeadInfo, t0: Instant,
         .as_ref()
         .and_then(|j| j.get("trace_id").and_then(Json::as_usize))
         .map(|id| id as u64);
+    let breakdown = parsed.as_ref().and_then(parse_breakdown);
     counters.ok.fetch_add(1, Ordering::Relaxed);
     counters.tokens.fetch_add(tokens, Ordering::Relaxed);
     let _ = tx.send(Sample { ttft_ms: f64::NAN, jct_ms: jct, tokens,
-                             trace_id });
+                             trace_id, breakdown });
     if head.keep_alive { Some(stream) } else { None }
 }
 
@@ -715,6 +767,14 @@ mod tests {
             elapsed_s: 5.0,
             peak_in_flight: 8,
             trace_sample: vec![(912.0, 4), (555.0, 9)],
+            breakdown_count: 9,
+            breakdown_sum: Breakdown {
+                queueing_ms: 900.0,
+                hol_blocking_ms: 450.0,
+                preemption_stall_ms: 0.0,
+                failover_stall_ms: 0.0,
+                execution_ms: 1800.0,
+            },
         };
         for i in 0..100 {
             report.ttft_ms.add(10.0 + i as f64);
@@ -740,8 +800,32 @@ mod tests {
                    Some(4));
         assert_eq!(sample[0].get("jct_ms").and_then(Json::as_f64),
                    Some(912.0));
+        // the breakdown block reports per-request component means
+        let b = j.get("breakdown").expect("breakdown object");
+        assert_eq!(b.get("count").and_then(Json::as_usize), Some(9));
+        assert_eq!(b.get("queueing_ms").and_then(Json::as_f64), Some(100.0));
+        assert_eq!(b.get("hol_blocking_ms").and_then(Json::as_f64),
+                   Some(50.0));
+        assert_eq!(b.get("execution_ms").and_then(Json::as_f64), Some(200.0));
         // and the whole document round-trips through the parser
         let text = j.to_string();
         assert!(Json::parse(&text).is_ok(), "{text}");
+    }
+
+    #[test]
+    fn breakdown_parser_reads_reply_objects_and_rejects_null() {
+        let j = Json::parse(
+            r#"{"jct_ms":30,"breakdown":{"queueing_ms":20,
+                "hol_blocking_ms":2,"preemption_stall_ms":0,
+                "failover_stall_ms":0,"execution_ms":8,"total_ms":30}}"#,
+        )
+        .unwrap();
+        let b = parse_breakdown(&j).expect("object parses");
+        assert_eq!(b.queueing_ms, 20.0);
+        assert_eq!(b.execution_ms, 8.0);
+        // attribution disabled server-side: breakdown rides as null
+        let off = Json::parse(r#"{"jct_ms":30,"breakdown":null}"#).unwrap();
+        assert!(parse_breakdown(&off).is_none());
+        assert!(parse_breakdown(&Json::parse("{}").unwrap()).is_none());
     }
 }

@@ -33,7 +33,8 @@ use elis::coordinator::{
     ClockMode, CoordinatorBuilder, LbStrategy, Policy, PreemptionPolicy,
     PriorityShaper, Scheduler, ServeConfig,
 };
-use elis::telemetry::{FlightRecorder, SloPolicy, SloSpec, TelemetrySink,
+use elis::telemetry::{AttributionSink, FlightRecorder, ShadowMode,
+                      ShadowScheduler, SloPolicy, SloSpec, TelemetrySink,
                       WfqPolicy};
 use elis::engine::profiles::{avg_request_rate, ModelProfile};
 use elis::engine::sim_engine::SimEngine;
@@ -88,8 +89,12 @@ USAGE: elis <subcommand> [--flags]
                     (structured probe JSON), GET /metrics (Prometheus),
                     GET /debug/trace[?job=ID] (Chrome trace-event JSON
                     from the flight recorder; load in Perfetto),
-                    POST /v1/generate (JSON reply carrying trace_id, or
-                    chunked SSE token streaming with \"stream\": true).
+                    GET /debug/explain?job=ID (per-job JCT breakdown:
+                    queueing / head-of-line blocking / preemption stall /
+                    failover stall / execution, summing to the JCT),
+                    POST /v1/generate (JSON reply carrying trace_id and a
+                    breakdown object, or chunked SSE token streaming with
+                    \"stream\": true; the done event carries breakdown).
                     With --listen: --http-conns
                     (max concurrent connections, default 4096)
                     --wait-timeout-s --idle-exit-ms (0 = serve forever)
@@ -105,6 +110,14 @@ USAGE: elis <subcommand> [--flags]
                     building local engines, so workers span machines; a
                     pod lost mid-run fails over to the survivors.  With
                     --worker-listen: --accept-timeout-s (default 120)
+                    --shadow fcfs|srpt|off (default off): replay finished
+                    jobs through a deterministic counterfactual scheduler
+                    off the hot path and export elis_shadow_jct_delta_ms /
+                    elis_shadow_jct_saved_ratio on /metrics — live
+                    measurement of what the scheduling policy saves
+                    --log-jobs path|-   append one NDJSON line per
+                    finished job (tenant, predicted vs realized tokens,
+                    JCT breakdown, trace_id)
   worker            backend pod for a distributed coordinator:
                     --connect host:port (required, the coordinator's
                     --worker-listen address)  --engine sim|pjrt
@@ -425,9 +438,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         idle_tick_ms: args.f64("idle-tick-ms", 10.0),
     };
-    let builder = register_telemetry(CoordinatorBuilder::from_config(cfg),
-                                     &telemetry, args.bool("wfq"),
-                                     &tenant_spec);
+    let mut builder = register_telemetry(CoordinatorBuilder::from_config(cfg),
+                                         &telemetry, args.bool("wfq"),
+                                         &tenant_spec);
+
+    // JCT attribution: fold window events into per-job breakdowns for
+    // /debug/explain, the generate replies, and --log-jobs NDJSON.  The
+    // sink registers ahead of the completion bridge so the breakdown is
+    // already folded when a waiting handler wakes.
+    let explain = if listen.is_some() || args.opt_str("log-jobs").is_some() {
+        let sink = AttributionSink::default();
+        if let Some(path) = args.opt_str("log-jobs") {
+            let out: Box<dyn std::io::Write + Send> = if path == "-" {
+                Box::new(std::io::stdout())
+            } else {
+                Box::new(std::fs::File::create(path).map_err(|e| {
+                    anyhow!("--log-jobs: cannot create {path}: {e}")
+                })?)
+            };
+            sink.log_to(out);
+        }
+        builder = builder.sink(Box::new(sink.clone()));
+        Some(sink)
+    } else {
+        None
+    };
+
+    // --shadow: deterministic counterfactual replay of the live arrival
+    // stream (off the dispatch path; runs on job-finish events only)
+    let shadow_mode = args.parse_with("shadow", "off", |s| {
+        ShadowMode::parse(s)
+            .ok_or_else(|| format!("unknown mode '{s}' (valid: off, \
+                                    fcfs, srpt)"))
+    })?;
+    if shadow_mode != ShadowMode::Off {
+        let shadow = ShadowScheduler::new(
+            shadow_mode, elis::telemetry::shadow::DEFAULT_SHADOW_WINDOW);
+        builder = builder.sink(Box::new(shadow.clone()));
+        if let Some((sink, _)) = &telemetry {
+            sink.attach_shadow(shadow);
+        }
+        println!("shadow scheduler: counterfactual {} replay on /metrics",
+                 shadow_mode.label());
+    }
 
     let report = match (listen, backend) {
         (None, ServeBackend::Local(mut engines)) => {
@@ -440,7 +493,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         (Some(addr), backend) => {
             serve_http(args, &addr, backend, builder, &trace, &mut sched,
-                       &telemetry)?
+                       &telemetry, explain)?
         }
     };
     report.print_summary();
@@ -541,7 +594,8 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
               builder: CoordinatorBuilder,
               trace: &[elis::workload::TraceRequest],
               sched: &mut Scheduler,
-              telemetry: &Option<(TelemetrySink, f64)>)
+              telemetry: &Option<(TelemetrySink, f64)>,
+              explain: Option<AttributionSink>)
               -> Result<elis::metrics::ServeReport> {
     let (api_tx, mut bridge) = ApiBridge::channel();
     // request-scoped tracing: one bounded flight recorder shared between
@@ -576,13 +630,14 @@ fn serve_http(args: &Args, addr: &str, backend: ServeBackend,
         admission,
         stats,
         trace: Some(recorder.clone()),
+        explain,
         started: std::time::Instant::now(),
     };
     let mut server = HttpServer::serve(addr, gateway,
                                        args.usize("http-conns", 4096))?;
     println!("listening on http://{}  \
               (GET /healthz | GET /metrics | GET /debug/trace | \
-              POST /v1/generate)",
+              GET /debug/explain | POST /v1/generate)",
              server.local_addr());
     std::io::Write::flush(&mut std::io::stdout()).ok();
 

@@ -1,0 +1,700 @@
+//! JCT attribution: fold the coordinator's event stream into a per-job
+//! completion-time breakdown — *why* was this request slow?
+//!
+//! Every finished job's JCT is partitioned into five components that sum
+//! back to the JCT (the invariant the property tests enforce):
+//!
+//! * **execution** — time inside executing scheduling windows (the job's
+//!   execute spans, reconstructed exactly as the flight recorder draws
+//!   them: `[now − service, now]` per window the job progressed in);
+//! * **hol_blocking** — time queued while the job's node was dispatching
+//!   *full* batches (batch length at the cap carried by
+//!   [`DecisionRecord::batch_cap`]): the head-of-line blocking signature —
+//!   the job was runnable but the batch had no free slot;
+//! * **preemption_stall** — queued time following an engine KV eviction
+//!   of this job, until it next executes;
+//! * **failover_stall** — queued time after the job's worker was lost and
+//!   it was re-homed, until it next executes;
+//! * **queueing** — all remaining non-execution time (admission to first
+//!   window, scheduler gaps between windows).
+//!
+//! The sink is a clonable `Arc<Mutex<_>>` handle (same shape as
+//! [`FlightRecorder`](crate::telemetry::FlightRecorder)): register one
+//! clone on the coordinator builder, keep another for the HTTP
+//! `/debug/explain?job=<id>` endpoint and the `breakdown` objects in
+//! `wait:true` replies and SSE `done` events.  Finished records live in a
+//! bounded ring (oldest evicted first), so memory is O(capacity); the
+//! optional `--log-jobs` writer emits one NDJSON record per finish — the
+//! greppable offline companion to `/debug/trace`.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{DecisionRecord, EventSink, JobId, JobMeta,
+                         WindowEvents, WindowJobEvent};
+use crate::util::json::Json;
+
+/// Default bound on retained finished-job records.
+pub const DEFAULT_EXPLAIN_CAPACITY: usize = 16_384;
+
+/// Bound on remembered full-batch window spans per node (the HOL overlap
+/// source).  Spans older than the ring degrade gracefully: a very long
+/// queued stretch loses its oldest HOL evidence and counts as plain
+/// queueing instead — the sum-to-JCT invariant is unaffected.
+const NODE_FULL_SPANS: usize = 4_096;
+
+/// The five-way JCT partition.  All fields are milliseconds;
+/// [`total_ms`](Breakdown::total_ms) reproduces the job's JCT.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Breakdown {
+    /// plain queued time (admission wait, scheduler gaps)
+    pub queueing_ms: f64,
+    /// queued time overlapping full-batch windows on the job's node
+    pub hol_blocking_ms: f64,
+    /// queued time following a KV eviction of this job
+    pub preemption_stall_ms: f64,
+    /// queued time following a worker loss that re-homed this job
+    pub failover_stall_ms: f64,
+    /// time inside executing windows
+    pub execution_ms: f64,
+}
+
+impl Breakdown {
+    /// Sum of the components — equals the job's JCT by construction.
+    pub fn total_ms(&self) -> f64 {
+        self.queueing_ms + self.hol_blocking_ms + self.preemption_stall_ms
+            + self.failover_stall_ms + self.execution_ms
+    }
+
+    /// The `breakdown` JSON object embedded in `/debug/explain`,
+    /// `wait:true` replies and the SSE `done` event.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queueing_ms", Json::Num(self.queueing_ms)),
+            ("hol_blocking_ms", Json::Num(self.hol_blocking_ms)),
+            ("preemption_stall_ms", Json::Num(self.preemption_stall_ms)),
+            ("failover_stall_ms", Json::Num(self.failover_stall_ms)),
+            ("execution_ms", Json::Num(self.execution_ms)),
+            ("total_ms", Json::Num(self.total_ms())),
+        ])
+    }
+
+    /// Absorb float drift so the components sum to `jct_ms` *exactly*:
+    /// the residual folds into queueing (clamped at zero against
+    /// execution), keeping the exported invariant sharp instead of
+    /// "within epsilon of construction order".
+    fn reconcile(&mut self, jct_ms: f64) {
+        let drift = jct_ms - self.total_ms();
+        self.queueing_ms += drift;
+        if self.queueing_ms < 0.0 {
+            self.execution_ms = (self.execution_ms + self.queueing_ms)
+                .max(0.0);
+            self.queueing_ms = 0.0;
+        }
+    }
+}
+
+/// Why the job is currently *not* executing — classifies the next gap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Stall {
+    Queued,
+    Preempted,
+    Failover,
+}
+
+/// In-flight accounting for one job.
+#[derive(Debug)]
+struct Pending {
+    arrival_ms: f64,
+    node: usize,
+    tenant: Option<String>,
+    /// end of the accounted timeline prefix `[arrival, cursor)`
+    cursor_ms: f64,
+    stall: Stall,
+    acc: Breakdown,
+    windows: usize,
+    preemptions: usize,
+}
+
+/// One finished job's full attribution record.
+#[derive(Debug, Clone)]
+pub struct ExplainRecord {
+    pub job: u64,
+    pub tenant: Option<String>,
+    pub node: usize,
+    pub arrival_ms: f64,
+    pub jct_ms: f64,
+    pub ttft_ms: Option<f64>,
+    pub tokens: usize,
+    pub predicted_total: Option<f64>,
+    pub windows: usize,
+    pub preemptions: usize,
+    pub breakdown: Breakdown,
+}
+
+impl ExplainRecord {
+    /// The `/debug/explain?job=<id>` document (also the NDJSON log line).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("job_id", Json::Num(self.job as f64)),
+            ("trace_id", Json::Num(self.job as f64)),
+            ("tenant", match &self.tenant {
+                Some(t) => Json::Str(t.clone()),
+                None => Json::Null,
+            }),
+            ("node", Json::Num(self.node as f64)),
+            ("arrival_ms", Json::Num(self.arrival_ms)),
+            ("jct_ms", Json::Num(self.jct_ms)),
+            ("ttft_ms", match self.ttft_ms {
+                Some(t) => Json::Num(t),
+                None => Json::Null,
+            }),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("predicted_total", match self.predicted_total {
+                Some(p) => Json::Num(p),
+                None => Json::Null,
+            }),
+            ("windows", Json::Num(self.windows as f64)),
+            ("preemptions", Json::Num(self.preemptions as f64)),
+            ("breakdown", self.breakdown.to_json()),
+        ])
+    }
+}
+
+/// Per-node occupancy context: the decision flag set at dispatch time and
+/// the bounded, time-ordered ring of full-batch window spans it feeds.
+#[derive(Debug, Default)]
+struct NodeCtx {
+    /// the window currently in flight was dispatched at its batch cap
+    pending_full: bool,
+    /// `(start_ms, end_ms)` of applied full-batch windows, oldest first
+    full: VecDeque<(f64, f64)>,
+}
+
+struct AttribState {
+    cap: usize,
+    pending: HashMap<u64, Pending>,
+    nodes: Vec<NodeCtx>,
+    /// finish order of retained records, for ring eviction
+    order: VecDeque<u64>,
+    finished: HashMap<u64, ExplainRecord>,
+    /// most recently finished job id (CI's "pick any finished job" hook)
+    last_finished: Option<u64>,
+    /// `--log-jobs` NDJSON writer
+    log: Option<Box<dyn Write + Send>>,
+}
+
+impl AttribState {
+    fn node(&mut self, node: usize) -> &mut NodeCtx {
+        if self.nodes.len() <= node {
+            self.nodes.resize_with(node + 1, NodeCtx::default);
+        }
+        &mut self.nodes[node]
+    }
+}
+
+/// Classify the unaccounted gap `[p.cursor, upto)` and advance the cursor.
+/// `full` is the job's node's full-window span ring (HOL evidence).
+fn close_gap(p: &mut Pending, upto: f64, full: &VecDeque<(f64, f64)>) {
+    let gap = upto - p.cursor_ms;
+    if gap <= 0.0 {
+        return;
+    }
+    match p.stall {
+        Stall::Preempted => p.acc.preemption_stall_ms += gap,
+        Stall::Failover => p.acc.failover_stall_ms += gap,
+        Stall::Queued => {
+            // overlap with full-batch windows, newest backwards until the
+            // spans predate the gap (they are end-time ordered)
+            let mut hol = 0.0;
+            for &(s, e) in full.iter().rev() {
+                if e <= p.cursor_ms {
+                    break;
+                }
+                let o = e.min(upto) - s.max(p.cursor_ms);
+                if o > 0.0 {
+                    hol += o;
+                }
+            }
+            let hol = hol.min(gap);
+            p.acc.hol_blocking_ms += hol;
+            p.acc.queueing_ms += gap - hol;
+        }
+    }
+    p.cursor_ms = upto;
+    // executing (or merely reaching a later window) resets the stall class
+    p.stall = Stall::Queued;
+}
+
+/// Clonable handle to the shared attribution state.  Register one clone as
+/// an [`EventSink`]; query another from HTTP handlers / the job logger.
+#[derive(Clone)]
+pub struct AttributionSink(Arc<Mutex<AttribState>>);
+
+impl std::fmt::Debug for AttributionSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.0.lock().unwrap();
+        f.debug_struct("AttributionSink")
+            .field("pending", &st.pending.len())
+            .field("finished", &st.finished.len())
+            .finish_non_exhaustive()
+    }
+}
+
+impl Default for AttributionSink {
+    fn default() -> AttributionSink {
+        AttributionSink::new(DEFAULT_EXPLAIN_CAPACITY)
+    }
+}
+
+impl AttributionSink {
+    pub fn new(capacity: usize) -> AttributionSink {
+        assert!(capacity > 0, "attribution needs capacity >= 1");
+        AttributionSink(Arc::new(Mutex::new(AttribState {
+            cap: capacity,
+            pending: HashMap::new(),
+            nodes: Vec::new(),
+            order: VecDeque::new(),
+            finished: HashMap::new(),
+            last_finished: None,
+            log: None,
+        })))
+    }
+
+    /// Attach an NDJSON writer: one [`ExplainRecord`] JSON line per job
+    /// finish (`elis serve --log-jobs <path|->`).  Lines are flushed as
+    /// written so `tail -f` keeps up with the run.
+    pub fn log_to(&self, w: Box<dyn Write + Send>) {
+        self.0.lock().unwrap().log = Some(w);
+    }
+
+    /// Retained finished-job records (≤ capacity).
+    pub fn finished_len(&self) -> usize {
+        self.0.lock().unwrap().finished.len()
+    }
+
+    /// The most recently finished job id, if any finished yet.
+    pub fn last_finished(&self) -> Option<u64> {
+        self.0.lock().unwrap().last_finished
+    }
+
+    /// Full attribution record for a finished job.
+    pub fn explain(&self, job: u64) -> Option<ExplainRecord> {
+        self.0.lock().unwrap().finished.get(&job).cloned()
+    }
+
+    /// `/debug/explain?job=<id>` document for a finished job.
+    pub fn explain_json(&self, job: u64) -> Option<Json> {
+        self.0.lock().unwrap().finished.get(&job).map(|r| r.to_json())
+    }
+
+    /// The compact `breakdown` object for reply embedding.
+    pub fn breakdown_json(&self, job: u64) -> Option<Json> {
+        self.0.lock().unwrap().finished.get(&job)
+            .map(|r| r.breakdown.to_json())
+    }
+}
+
+impl EventSink for AttributionSink {
+    fn on_job_admitted(&mut self, job: &JobMeta<'_>, node: usize,
+                       _now_ms: f64) {
+        let mut st = self.0.lock().unwrap();
+        st.pending.entry(job.id.raw()).or_insert(Pending {
+            arrival_ms: job.arrival_ms,
+            node,
+            tenant: job.tenant.map(str::to_string),
+            cursor_ms: job.arrival_ms,
+            stall: Stall::Queued,
+            acc: Breakdown::default(),
+            windows: 0,
+            preemptions: 0,
+        });
+    }
+
+    fn on_window_decision(&mut self, d: &DecisionRecord<'_>) {
+        let mut st = self.0.lock().unwrap();
+        // occupancy context: a batch dispatched at its cap is the HOL
+        // signature the gap classifier looks for
+        st.node(d.node).pending_full =
+            d.batch_cap > 0 && d.batch.len() >= d.batch_cap;
+    }
+
+    fn on_job_preempted(&mut self, job: JobId, _node: usize, _now_ms: f64) {
+        let mut st = self.0.lock().unwrap();
+        if let Some(p) = st.pending.get_mut(&job.raw()) {
+            p.preemptions += 1;
+            p.stall = Stall::Preempted;
+        }
+    }
+
+    fn on_worker_lost(&mut self, node: usize, _rehomed: usize,
+                      _now_ms: f64) {
+        let mut st = self.0.lock().unwrap();
+        st.node(node).pending_full = false;
+        for p in st.pending.values_mut() {
+            if p.node == node {
+                p.stall = Stall::Failover;
+            }
+        }
+    }
+
+    fn on_window_applied(&mut self, w: &WindowEvents<'_>) {
+        // one lock for the whole window
+        let mut st = self.0.lock().unwrap();
+        st.node(w.node); // ensure the slot exists before the split borrow
+        let start_ms = (w.now_ms - w.service_ms).max(0.0);
+        let AttribState {
+            cap, pending, nodes, order, finished, last_finished, log,
+        } = &mut *st;
+        {
+            let full = &nodes[w.node].full;
+            for ev in w.events {
+                match ev {
+                    WindowJobEvent::Progress { job, .. } => {
+                        let p = pending.entry(job.id.raw())
+                            .or_insert_with(|| fresh(job, w.node));
+                        close_gap(p, start_ms, full);
+                        if w.now_ms > p.cursor_ms {
+                            p.acc.execution_ms += w.now_ms - p.cursor_ms;
+                            p.cursor_ms = w.now_ms;
+                        }
+                        p.windows += 1;
+                        p.node = w.node;
+                    }
+                    WindowJobEvent::Finished { job, stats } => {
+                        let id = job.id.raw();
+                        let mut p = pending.remove(&id)
+                            .unwrap_or_else(|| fresh(job, w.node));
+                        if p.cursor_ms < w.now_ms {
+                            // zero-token final window: still an execute span
+                            close_gap(&mut p, start_ms, full);
+                            if w.now_ms > p.cursor_ms {
+                                p.acc.execution_ms += w.now_ms - p.cursor_ms;
+                                p.cursor_ms = w.now_ms;
+                            }
+                            p.windows += 1;
+                        }
+                        // residual between the accounted prefix and the
+                        // authoritative JCT (zero by construction; kept
+                        // exact by reconcile either way)
+                        let finish_ms = job.arrival_ms + stats.jct_ms;
+                        close_gap(&mut p, finish_ms, full);
+                        p.acc.reconcile(stats.jct_ms);
+                        let rec = ExplainRecord {
+                            job: id,
+                            tenant: p.tenant.clone(),
+                            node: w.node,
+                            arrival_ms: job.arrival_ms,
+                            jct_ms: stats.jct_ms,
+                            ttft_ms: stats.ttft_ms,
+                            tokens: stats.tokens,
+                            predicted_total: stats.predicted_total,
+                            windows: p.windows,
+                            preemptions: p.preemptions,
+                            breakdown: p.acc,
+                        };
+                        if let Some(log) = log.as_mut() {
+                            let _ = writeln!(log, "{}", rec.to_json());
+                            let _ = log.flush();
+                        }
+                        if finished.len() == *cap {
+                            if let Some(old) = order.pop_front() {
+                                finished.remove(&old);
+                            }
+                        }
+                        order.push_back(id);
+                        finished.insert(id, rec);
+                        *last_finished = Some(id);
+                    }
+                    WindowJobEvent::Preempted { job } => {
+                        if let Some(p) = pending.get_mut(&job.raw()) {
+                            p.preemptions += 1;
+                            p.stall = Stall::Preempted;
+                        }
+                    }
+                }
+            }
+        }
+        let node = &mut nodes[w.node];
+        if node.pending_full {
+            node.pending_full = false;
+            if node.full.len() == NODE_FULL_SPANS {
+                node.full.pop_front();
+            }
+            node.full.push_back((start_ms, w.now_ms));
+        }
+    }
+}
+
+/// Lazily-created record for a job whose admission predates the sink (or
+/// was evicted): the timeline starts at its arrival either way.
+fn fresh(job: &JobMeta<'_>, node: usize) -> Pending {
+    Pending {
+        arrival_ms: job.arrival_ms,
+        node,
+        tenant: job.tenant.map(str::to_string),
+        cursor_ms: job.arrival_ms,
+        stall: Stall::Queued,
+        acc: Breakdown::default(),
+        windows: 0,
+        preemptions: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{FinishStats, JobId};
+
+    fn meta(id: u64, arrival: f64) -> JobMeta<'static> {
+        JobMeta {
+            id: JobId::from_raw(id),
+            tenant: Some("default"),
+            arrival_ms: arrival,
+            prompt_len: 4,
+            total_len: 20,
+        }
+    }
+
+    fn stats(jct: f64, service: f64) -> FinishStats {
+        FinishStats {
+            jct_ms: jct,
+            ttft_ms: Some(jct),
+            queue_delay_ms: (jct - service).max(0.0),
+            service_ms: service,
+            tokens: 20,
+            predicted_total: Some(22.0),
+        }
+    }
+
+    /// One window on `node` spanning `[end - service, end]`; `job` either
+    /// progresses or finishes in it.  `cap`/`others` shape the decision's
+    /// occupancy context.
+    fn window(sink: &mut AttributionSink, job: u64, arrival: f64,
+              node: usize, end: f64, service: f64, finish: bool,
+              cap: usize, fill: usize) {
+        let m = meta(job, arrival);
+        let toks = [7i32; 4];
+        let batch: Vec<JobId> = (0..fill.max(1))
+            .map(|i| if i == 0 { JobId::from_raw(job) }
+                     else { JobId::from_raw(1000 + i as u64) })
+            .collect();
+        sink.on_window_decision(&DecisionRecord {
+            node,
+            window: 0,
+            now_ms: end - service,
+            queue_depth: fill + 3,
+            batch: &batch,
+            batch_cap: cap,
+            victims: &[],
+            key_min: f64::NAN,
+            key_max: f64::NAN,
+            sched_overhead_ms: 0.0,
+        });
+        let events = if finish {
+            vec![
+                WindowJobEvent::Progress { job: m, tokens: &toks },
+                WindowJobEvent::Finished {
+                    job: m,
+                    stats: stats(end - arrival, service),
+                },
+            ]
+        } else {
+            vec![WindowJobEvent::Progress { job: m, tokens: &toks }]
+        };
+        sink.on_window_applied(&WindowEvents {
+            node,
+            batch: &batch,
+            events: &events,
+            tokens: 4,
+            service_ms: service,
+            now_ms: end,
+            pod: None,
+        });
+    }
+
+    /// A full-batch window of *other* jobs on `node` (HOL evidence).
+    fn full_window(sink: &mut AttributionSink, node: usize, end: f64,
+                   service: f64) {
+        let batch = [JobId::from_raw(900), JobId::from_raw(901)];
+        sink.on_window_decision(&DecisionRecord {
+            node,
+            window: 0,
+            now_ms: end - service,
+            queue_depth: 5,
+            batch: &batch,
+            batch_cap: 2,
+            victims: &[],
+            key_min: f64::NAN,
+            key_max: f64::NAN,
+            sched_overhead_ms: 0.0,
+        });
+        let m0 = meta(900, 0.0);
+        let m1 = meta(901, 0.0);
+        let toks = [1i32; 2];
+        let events = [
+            WindowJobEvent::Progress { job: m0, tokens: &toks },
+            WindowJobEvent::Progress { job: m1, tokens: &toks },
+        ];
+        sink.on_window_applied(&WindowEvents {
+            node,
+            batch: &batch,
+            events: &events,
+            tokens: 4,
+            service_ms: service,
+            now_ms: end,
+            pod: None,
+        });
+    }
+
+    fn assert_sums(rec: &ExplainRecord) {
+        let total = rec.breakdown.total_ms();
+        assert!((total - rec.jct_ms).abs() < 1e-6,
+                "components {total} must sum to jct {}", rec.jct_ms);
+    }
+
+    #[test]
+    fn simple_timeline_splits_queueing_and_execution() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(1, 0.0), 0, 0.0);
+        // queued 0..20, executes 20..30
+        window(&mut sink, 1, 0.0, 0, 30.0, 10.0, true, 4, 1);
+        let rec = sink.explain(1).expect("finished record");
+        assert_sums(&rec);
+        assert!((rec.breakdown.execution_ms - 10.0).abs() < 1e-9);
+        assert!((rec.breakdown.queueing_ms - 20.0).abs() < 1e-9);
+        assert_eq!(rec.breakdown.hol_blocking_ms, 0.0);
+        assert_eq!(rec.windows, 1);
+        assert_eq!(sink.last_finished(), Some(1));
+    }
+
+    #[test]
+    fn full_batches_attribute_head_of_line_blocking() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(1, 0.0), 0, 0.0);
+        // two full windows keep the node saturated 0..20 while job 1 waits
+        full_window(&mut sink, 0, 10.0, 10.0);
+        full_window(&mut sink, 0, 20.0, 10.0);
+        // then job 1 runs 20..30
+        window(&mut sink, 1, 0.0, 0, 30.0, 10.0, true, 4, 1);
+        let rec = sink.explain(1).unwrap();
+        assert_sums(&rec);
+        assert!((rec.breakdown.hol_blocking_ms - 20.0).abs() < 1e-9,
+                "hol {}", rec.breakdown.hol_blocking_ms);
+        assert!(rec.breakdown.queueing_ms.abs() < 1e-9);
+        assert!((rec.breakdown.execution_ms - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_windows_on_other_nodes_do_not_count_as_hol() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(1, 0.0), 0, 0.0);
+        full_window(&mut sink, 3, 10.0, 10.0); // busy, but a different node
+        window(&mut sink, 1, 0.0, 0, 15.0, 5.0, true, 4, 1);
+        let rec = sink.explain(1).unwrap();
+        assert_sums(&rec);
+        assert_eq!(rec.breakdown.hol_blocking_ms, 0.0);
+        assert!((rec.breakdown.queueing_ms - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn preemption_gap_becomes_preemption_stall() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(1, 0.0), 0, 0.0);
+        window(&mut sink, 1, 0.0, 0, 10.0, 10.0, false, 4, 1);
+        sink.on_job_preempted(JobId::from_raw(1), 0, 10.0);
+        // stalled 10..40, then runs 40..50 and finishes
+        window(&mut sink, 1, 0.0, 0, 50.0, 10.0, true, 4, 1);
+        let rec = sink.explain(1).unwrap();
+        assert_sums(&rec);
+        assert!((rec.breakdown.preemption_stall_ms - 30.0).abs() < 1e-9,
+                "stall {}", rec.breakdown.preemption_stall_ms);
+        assert!((rec.breakdown.execution_ms - 20.0).abs() < 1e-9);
+        assert_eq!(rec.preemptions, 1);
+    }
+
+    #[test]
+    fn worker_loss_gap_becomes_failover_stall() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(1, 0.0), 0, 0.0);
+        window(&mut sink, 1, 0.0, 0, 10.0, 10.0, false, 4, 1);
+        sink.on_worker_lost(0, 1, 10.0);
+        // re-homed onto node 1, which runs it 25..35
+        window(&mut sink, 1, 0.0, 1, 35.0, 10.0, true, 4, 1);
+        let rec = sink.explain(1).unwrap();
+        assert_sums(&rec);
+        assert!((rec.breakdown.failover_stall_ms - 15.0).abs() < 1e-9,
+                "failover {}", rec.breakdown.failover_stall_ms);
+        assert_eq!(rec.node, 1, "record carries the finishing node");
+    }
+
+    #[test]
+    fn finished_ring_is_bounded_oldest_first() {
+        let mut sink = AttributionSink::new(2);
+        for id in 0..5u64 {
+            sink.on_job_admitted(&meta(id, 0.0), 0, 0.0);
+            window(&mut sink, id, 0.0, 0, 10.0, 5.0, true, 4, 1);
+        }
+        assert_eq!(sink.finished_len(), 2);
+        assert!(sink.explain(0).is_none(), "oldest evicted");
+        assert!(sink.explain(4).is_some());
+        assert_eq!(sink.last_finished(), Some(4));
+    }
+
+    #[test]
+    fn explain_json_schema_and_roundtrip() {
+        let mut sink = AttributionSink::default();
+        sink.on_job_admitted(&meta(7, 5.0), 0, 5.0);
+        window(&mut sink, 7, 5.0, 0, 30.0, 10.0, true, 4, 1);
+        let j = sink.explain_json(7).unwrap();
+        assert_eq!(j.get("job_id").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("trace_id").and_then(Json::as_usize), Some(7));
+        assert_eq!(j.get("tenant").and_then(Json::as_str), Some("default"));
+        let b = j.get("breakdown").expect("breakdown object");
+        let total = b.get("total_ms").and_then(Json::as_f64).unwrap();
+        let jct = j.get("jct_ms").and_then(Json::as_f64).unwrap();
+        assert!((total - jct).abs() < 1.0, "total {total} vs jct {jct}");
+        for key in ["queueing_ms", "hol_blocking_ms", "preemption_stall_ms",
+                    "failover_stall_ms", "execution_ms"] {
+            assert!(b.get(key).and_then(Json::as_f64).is_some(), "{key}");
+        }
+        // and the document round-trips through the parser
+        Json::parse(&j.to_string()).unwrap();
+        // compact embedding form
+        let c = sink.breakdown_json(7).unwrap();
+        assert!(c.get("total_ms").is_some());
+        assert!(sink.breakdown_json(999).is_none());
+    }
+
+    #[test]
+    fn ndjson_log_emits_one_parseable_line_per_finish() {
+        #[derive(Clone)]
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(b);
+                Ok(b.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Buf(Arc::new(Mutex::new(Vec::new())));
+        let mut sink = AttributionSink::default();
+        sink.log_to(Box::new(buf.clone()));
+        for id in 0..3u64 {
+            sink.on_job_admitted(&meta(id, 0.0), 0, 0.0);
+            window(&mut sink, id, 0.0, 0, 20.0, 5.0, true, 4, 1);
+        }
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> =
+            text.lines().filter(|l| !l.is_empty()).collect();
+        assert_eq!(lines.len(), 3, "one NDJSON record per finish");
+        for line in lines {
+            let j = Json::parse(line).expect("log line must be valid JSON");
+            assert!(j.get("breakdown").is_some());
+            assert!(j.get("jct_ms").is_some());
+        }
+    }
+}

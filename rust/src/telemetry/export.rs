@@ -11,7 +11,7 @@
 use std::fmt::Write;
 
 use super::sink::{TelemetryState, TenantStats};
-use super::sketch::QuantileSketch;
+use super::sketch::{Histogram, QuantileSketch};
 
 /// Escape a label value: backslash, double-quote, and newline.
 fn escape_label(v: &str) -> String {
@@ -75,6 +75,38 @@ fn summary_family(out: &mut String, name: &str, help: &str,
         sample(out, &sum_name, &[("tenant", tenant)], sketch.sum());
         sample(out, &count_name, &[("tenant", tenant)],
                sketch.count() as f64);
+    }
+}
+
+/// Emit one histogram's samples: cumulative `_bucket{le="…"}` lines (the
+/// implicit `+Inf` bucket equals `_count`), then `_sum`/`_count`, all
+/// under the given base labels.
+fn emit_histogram(out: &mut String, name: &str, labels: &[(&str, &str)],
+                  h: &Histogram) {
+    let bucket_name = format!("{name}_bucket");
+    let cum = h.cumulative();
+    for (i, b) in h.bounds().iter().enumerate() {
+        let le = b.to_string();
+        let mut ls: Vec<(&str, &str)> = labels.to_vec();
+        ls.push(("le", &le));
+        sample(out, &bucket_name, &ls, cum[i] as f64);
+    }
+    let mut ls: Vec<(&str, &str)> = labels.to_vec();
+    ls.push(("le", "+Inf"));
+    sample(out, &bucket_name, &ls, h.count() as f64);
+    sample(out, &format!("{name}_sum"), labels, h.sum());
+    sample(out, &format!("{name}_count"), labels, h.count() as f64);
+}
+
+/// Emit one latency histogram family labeled by tenant.  Histograms
+/// complement the P² summaries: fixed log-spaced bounds aggregate across
+/// instances and feed `histogram_quantile()`, which summaries cannot.
+fn histogram_family(out: &mut String, name: &str, help: &str,
+                    tenants: &[(&str, &TenantStats)],
+                    pick: fn(&TenantStats) -> &Histogram) {
+    header(out, name, help, "histogram");
+    for &(tenant, stats) in tenants {
+        emit_histogram(out, name, &[("tenant", tenant)], pick(stats));
     }
 }
 
@@ -171,6 +203,12 @@ pub fn render(state: &mut TelemetryState) -> String {
     summary_family(&mut out, "elis_tenant_queue_delay_ms",
                    "Queueing delay (ms), streaming P2 quantiles.",
                    &tenants, pick_queue_delay);
+    histogram_family(&mut out, "elis_tenant_jct_ms_hist",
+                     "Job completion time (ms), fixed log-spaced buckets.",
+                     &tenants, |t| &t.jct_hist);
+    histogram_family(&mut out, "elis_tenant_ttft_ms_hist",
+                     "Time to first token (ms), fixed log-spaced buckets.",
+                     &tenants, |t| &t.ttft_hist);
 
     // ---- predictor accuracy (predicted vs realized length) --------------
     // Unlabeled summaries: the predictor is one model shared across
@@ -220,6 +258,50 @@ pub fn render(state: &mut TelemetryState) -> String {
         header(&mut out, "elis_streams_active",
                "Streaming responses currently open.", "gauge");
         sample(&mut out, "elis_streams_active", &[], f.streams() as f64);
+    }
+
+    // ---- shadow scheduler (counterfactual JCT vs a baseline policy) -----
+    // All families render whenever a shadow handle is attached — the
+    // saved-ratio gauge is NaN until the first comparison — so scrapers
+    // and the CI grep gate can rely on their presence under `--shadow`.
+    if let Some(shadow) = &state.shadow {
+        let snap = shadow.snapshot();
+        header(&mut out, "elis_shadow_mode",
+               "Baseline policy the shadow scheduler replays (info gauge).",
+               "gauge");
+        sample(&mut out, "elis_shadow_mode", &[("mode", snap.mode)], 1.0);
+        header(&mut out, "elis_shadow_jct_delta_ms",
+               "Counterfactual-minus-realized JCT per finished job (ms), \
+                streaming P2 quantiles; positive means the baseline would \
+                have been slower.", "summary");
+        let s = &snap.delta_ms;
+        if s.count() > 0 {
+            for (q, v) in [("0.5", s.p50()), ("0.9", s.p90()),
+                           ("0.99", s.p99())] {
+                sample(&mut out, "elis_shadow_jct_delta_ms",
+                       &[("quantile", q)], v);
+            }
+        }
+        sample(&mut out, "elis_shadow_jct_delta_ms_sum", &[], s.sum());
+        sample(&mut out, "elis_shadow_jct_delta_ms_count", &[],
+               s.count() as f64);
+        header(&mut out, "elis_shadow_jct_delta_ms_hist",
+               "Counterfactual-minus-realized JCT (ms), fixed log-spaced \
+                buckets.", "histogram");
+        emit_histogram(&mut out, "elis_shadow_jct_delta_ms_hist", &[],
+                       &snap.delta_hist);
+        header(&mut out, "elis_shadow_compared_total",
+               "Finished jobs replayed through the shadow scheduler.",
+               "counter");
+        sample(&mut out, "elis_shadow_compared_total", &[],
+               snap.compared as f64);
+        header(&mut out, "elis_shadow_jct_saved_ratio",
+               "(sum shadow JCT - sum real JCT) / sum shadow JCT over the \
+                trailing replay window; the live analogue of the paper's \
+                19.6% average-JCT reduction.  NaN until jobs compared.",
+               "gauge");
+        sample(&mut out, "elis_shadow_jct_saved_ratio", &[],
+               snap.saved_ratio);
     }
 
     out
@@ -280,7 +362,9 @@ mod tests {
                 let mut it = rest.split_whitespace();
                 let name = it.next().expect("TYPE line must name a metric");
                 let typ = it.next().expect("TYPE line must carry a type");
-                assert!(matches!(typ, "counter" | "gauge" | "summary"),
+                assert!(matches!(typ,
+                                 "counter" | "gauge" | "summary"
+                                 | "histogram"),
                         "bad type: {line}");
                 families.insert(name.to_string());
                 continue;
@@ -299,6 +383,12 @@ mod tests {
                         assert!(!k.is_empty());
                         assert!(v.starts_with('"') && v.ends_with('"'),
                                 "unquoted label value: {line}");
+                        if k == "le" {
+                            let le = &v[1..v.len() - 1];
+                            assert!(le == "+Inf"
+                                        || le.parse::<f64>().is_ok(),
+                                    "bad le bound: {line}");
+                        }
                     }
                     (&line[..brace], line[close + 1..].trim())
                 }
@@ -313,6 +403,7 @@ mod tests {
             let family = name_part
                 .strip_suffix("_sum")
                 .or_else(|| name_part.strip_suffix("_count"))
+                .or_else(|| name_part.strip_suffix("_bucket"))
                 .filter(|f| families.contains(*f))
                 .unwrap_or(name_part);
             assert!(families.contains(family),
@@ -376,6 +467,7 @@ mod tests {
             now_ms: 700.0,
             queue_depth: 5,
             batch: &batch,
+            batch_cap: 4,
             victims: &[],
             key_min: 10.0,
             key_max: 40.0,
@@ -408,6 +500,96 @@ mod tests {
         assert!(text.contains("elis_predictor_kendall_tau NaN"), "{text}");
         assert!(text.contains("elis_predictor_abs_err_tokens_count 0"),
                 "{text}");
+    }
+
+    #[test]
+    fn tenant_histograms_render_cumulative_buckets() {
+        let sink = populated_sink();
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("# TYPE elis_tenant_jct_ms_hist histogram"),
+                "{text}");
+        assert!(text.contains("elis_tenant_ttft_ms_hist_bucket"), "{text}");
+        // the paid tenant's bucket counts must be non-decreasing in le
+        // order and the +Inf bucket must equal _count
+        let mut cum = Vec::new();
+        let mut inf = None;
+        let mut count = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix(
+                "elis_tenant_jct_ms_hist_bucket{tenant=\"paid\",le=\"") {
+                let (le, val) = rest.split_once("\"} ").unwrap();
+                let v: f64 = val.trim().parse().unwrap();
+                if le == "+Inf" {
+                    inf = Some(v);
+                } else {
+                    cum.push(v);
+                }
+            }
+            if let Some(rest) = line.strip_prefix(
+                "elis_tenant_jct_ms_hist_count{tenant=\"paid\"} ") {
+                count = Some(rest.trim().parse::<f64>().unwrap());
+            }
+        }
+        assert!(!cum.is_empty(), "no bucket lines:\n{text}");
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]),
+                "buckets must be cumulative: {cum:?}");
+        assert_eq!(inf, count, "+Inf bucket must equal _count");
+        // populated_sink finishes 7 paid jobs
+        assert_eq!(count, Some(7.0));
+    }
+
+    #[test]
+    fn shadow_families_render_when_attached() {
+        use super::super::shadow::{ShadowMode, ShadowScheduler};
+
+        let sink = populated_sink();
+        let shadow = ShadowScheduler::new(ShadowMode::Fcfs, 64);
+        let mut h = shadow.clone();
+        // short job jumped a long one on a single-slot node: the FCFS
+        // counterfactual is slower in aggregate
+        let m = |id: u64, arrival: f64| JobMeta {
+            id: JobId::from_raw(id),
+            tenant: None,
+            arrival_ms: arrival,
+            prompt_len: 4,
+            total_len: 20,
+        };
+        h.on_job_finished(&m(1, 1.0), 0, &FinishStats {
+            jct_ms: 9.0,
+            ttft_ms: Some(9.0),
+            queue_delay_ms: 0.0,
+            service_ms: 10.0,
+            tokens: 10,
+            predicted_total: None,
+        }, 10.0);
+        h.on_job_finished(&m(2, 0.0), 0, &FinishStats {
+            jct_ms: 110.0,
+            ttft_ms: Some(110.0),
+            queue_delay_ms: 10.0,
+            service_ms: 100.0,
+            tokens: 100,
+            predicted_total: None,
+        }, 110.0);
+        sink.attach_shadow(shadow);
+        let text = sink.render_prometheus();
+        validate(&text);
+        assert!(text.contains("elis_shadow_mode{mode=\"fcfs\"} 1"),
+                "{text}");
+        assert!(text.contains("elis_shadow_jct_delta_ms_count 2"),
+                "{text}");
+        assert!(text.contains("elis_shadow_jct_delta_ms_hist_bucket"),
+                "{text}");
+        assert!(text.contains("elis_shadow_compared_total 2"), "{text}");
+        let ratio_line = text.lines()
+            .find(|l| l.starts_with("elis_shadow_jct_saved_ratio "))
+            .unwrap_or_else(|| panic!("no saved-ratio gauge:\n{text}"));
+        let ratio: f64 = ratio_line.split(' ').nth(1).unwrap()
+            .parse().unwrap();
+        assert!(ratio > 0.0, "expected positive savings, got {ratio}");
+        // without an attached shadow the families stay silent
+        let bare = TelemetrySink::new(1).render_prometheus();
+        assert!(!bare.contains("elis_shadow_jct_saved_ratio"), "{bare}");
     }
 
     #[test]

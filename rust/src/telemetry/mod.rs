@@ -20,6 +20,13 @@
 //! * [`trace`] — [`FlightRecorder`], a bounded ring of request-scoped
 //!   span timelines and per-window scheduler decision records, exported
 //!   as Chrome trace-event JSON (`GET /debug/trace`, Perfetto-loadable).
+//! * [`attribution`] — [`AttributionSink`], per-job JCT breakdowns
+//!   (queueing / head-of-line blocking / preemption stall / failover
+//!   stall / execution, summing to the JCT) behind `GET /debug/explain`
+//!   and the `breakdown` objects in replies; optional NDJSON job log.
+//! * [`shadow`] — [`ShadowScheduler`], a deterministic FCFS/oracle-SRPT
+//!   counterfactual replay of the live arrival stream, measuring the
+//!   paper's JCT-reduction claim as `elis_shadow_jct_saved_ratio`.
 //! * [`wfq`] — [`WfqPolicy`], a weighted-fair
 //!   [`PriorityShaper`](crate::coordinator::PriorityShaper) balancing
 //!   per-tenant *token throughput* from the sink's live counters;
@@ -38,17 +45,22 @@
 //!
 //! [`EventSink`]: crate::coordinator::EventSink
 
+pub mod attribution;
 pub mod export;
+pub mod shadow;
 pub mod sink;
 pub mod sketch;
 pub mod slo;
 pub mod trace;
 pub mod wfq;
 
+pub use attribution::{AttributionSink, Breakdown, ExplainRecord};
 pub use export::render;
+pub use shadow::{ShadowMode, ShadowScheduler, ShadowSnapshot};
 pub use sink::{FrontendStats, NodeStats, SloSpec, TelemetrySink,
                TelemetryState, TenantStats, DEFAULT_TENANT};
-pub use sketch::{KendallWindow, P2Quantile, QuantileSketch, WindowedRate};
+pub use sketch::{Histogram, KendallWindow, P2Quantile, QuantileSketch,
+                 WindowedRate};
 pub use trace::FlightRecorder;
 pub use slo::SloPolicy;
 pub use wfq::WfqPolicy;

@@ -1,0 +1,472 @@
+//! Shadow scheduler: a deterministic counterfactual replay that measures
+//! the paper's headline claim — "ISRTF cuts average JCT ~19.6% vs FCFS" —
+//! *live*, on the traffic the serving stack is actually handling.
+//!
+//! The sink records the realized arrival stream (job id, arrival time,
+//! node assignment, realized cumulative service) into a bounded trailing
+//! ring of finished jobs.  On each job finish it replays every node's
+//! slice of the ring through an in-memory discrete simulation of a
+//! baseline policy — FCFS, or oracle-SRPT (non-preemptive
+//! shortest-realized-service-first) — yielding a counterfactual JCT for
+//! every job in the window.  The replay uses *realized* service times, so
+//! the only variable that changes between reality and the counterfactual
+//! is dispatch order: the delta is pure scheduling effect.
+//!
+//! The aggregate sums (`Σ real`, `Σ shadow`) are recomputed over the
+//! whole ring each finish rather than folded per job at its own finish
+//! time — a short job that jumped a long one finishes *before* its
+//! victim, so its counterfactual only becomes honest once the long job's
+//! record lands in the ring.  The per-job delta summary is necessarily a
+//! finish-time snapshot (streaming), which slightly *understates* the
+//! baseline's penalty; the saved-ratio gauge does not.
+//!
+//! Exports (rendered by [`export`](crate::telemetry::export) when the
+//! sink is attached to the telemetry state):
+//!
+//! * `elis_shadow_jct_delta_ms` — P² summary of `shadow_jct − real_jct`
+//!   per finished job (positive ⇒ the baseline would have been slower);
+//! * `elis_shadow_jct_delta_ms_hist` — the same deltas as a fixed
+//!   log-spaced Prometheus histogram;
+//! * `elis_shadow_jct_saved_ratio` — `(Σ shadow − Σ real) / Σ shadow`
+//!   over the trailing window, the live analogue of the paper's 19.6%
+//!   average-JCT reduction;
+//! * `elis_shadow_compared_total` — jobs replayed so far.
+//!
+//! Everything is deterministic by construction: no RNG, no wall clock —
+//! the same arrival stream always produces identical counterfactual JCTs
+//! (the property the determinism test pins down).  Replays run on the
+//! job-finish path, bounded by the replay window, never on dispatch.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{DecisionRecord, EventSink, FinishStats, JobMeta};
+use super::sketch::{Histogram, QuantileSketch};
+
+/// Baseline policy the counterfactual replays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShadowMode {
+    /// no shadow accounting at all
+    Off,
+    /// first-come-first-served in arrival order
+    Fcfs,
+    /// oracle SRPT: non-preemptive shortest-realized-service-first
+    Srpt,
+}
+
+impl ShadowMode {
+    /// Parse the `--shadow fcfs|srpt|off` flag value.
+    pub fn parse(s: &str) -> Option<ShadowMode> {
+        match s {
+            "off" | "none" => Some(ShadowMode::Off),
+            "fcfs" => Some(ShadowMode::Fcfs),
+            "srpt" => Some(ShadowMode::Srpt),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            ShadowMode::Off => "off",
+            ShadowMode::Fcfs => "fcfs",
+            ShadowMode::Srpt => "srpt",
+        }
+    }
+}
+
+/// Default bound on the trailing replay window (finished jobs retained).
+pub const DEFAULT_SHADOW_WINDOW: usize = 512;
+
+/// One finished job as the replay sees it.
+#[derive(Debug, Clone, Copy)]
+struct ShadowJob {
+    job: u64,
+    node: usize,
+    arrival_ms: f64,
+    /// realized cumulative execute time (the counterfactual's service)
+    service_ms: f64,
+    real_jct_ms: f64,
+}
+
+struct ShadowState {
+    mode: ShadowMode,
+    window: usize,
+    ring: VecDeque<ShadowJob>,
+    /// per-node slot count for the simulation: the largest batch cap the
+    /// node's dispatcher has reported (≥ 1 once any window dispatched)
+    node_caps: Vec<usize>,
+    delta_ms: QuantileSketch,
+    delta_hist: Histogram,
+    /// Σ realized JCT over the current trailing window
+    sum_real_ms: f64,
+    /// Σ counterfactual JCT over the current trailing window
+    sum_shadow_ms: f64,
+    compared: u64,
+}
+
+/// Read-only view for the Prometheus exporter.
+#[derive(Debug, Clone)]
+pub struct ShadowSnapshot {
+    pub mode: &'static str,
+    pub compared: u64,
+    pub delta_ms: QuantileSketch,
+    pub delta_hist: Histogram,
+    pub sum_real_ms: f64,
+    pub sum_shadow_ms: f64,
+    /// `(Σ shadow − Σ real) / Σ shadow`; NaN until anything was compared
+    pub saved_ratio: f64,
+}
+
+/// Clonable handle (register one clone as an [`EventSink`], keep another
+/// for the exporter).
+#[derive(Clone)]
+pub struct ShadowScheduler(Arc<Mutex<ShadowState>>);
+
+impl std::fmt::Debug for ShadowScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.0.lock().unwrap();
+        f.debug_struct("ShadowScheduler")
+            .field("mode", &st.mode)
+            .field("window", &st.window)
+            .field("compared", &st.compared)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ShadowScheduler {
+    pub fn new(mode: ShadowMode, window: usize) -> ShadowScheduler {
+        ShadowScheduler(Arc::new(Mutex::new(ShadowState {
+            mode,
+            window: window.max(1),
+            ring: VecDeque::new(),
+            node_caps: Vec::new(),
+            delta_ms: QuantileSketch::new(),
+            delta_hist: Histogram::log_ms(),
+            sum_real_ms: 0.0,
+            sum_shadow_ms: 0.0,
+            compared: 0,
+        })))
+    }
+
+    pub fn mode(&self) -> ShadowMode {
+        self.0.lock().unwrap().mode
+    }
+
+    pub fn snapshot(&self) -> ShadowSnapshot {
+        let st = self.0.lock().unwrap();
+        let saved = if st.sum_shadow_ms > 0.0 {
+            (st.sum_shadow_ms - st.sum_real_ms) / st.sum_shadow_ms
+        } else {
+            f64::NAN
+        };
+        ShadowSnapshot {
+            mode: st.mode.label(),
+            compared: st.compared,
+            delta_ms: st.delta_ms.clone(),
+            delta_hist: st.delta_hist.clone(),
+            sum_real_ms: st.sum_real_ms,
+            sum_shadow_ms: st.sum_shadow_ms,
+            saved_ratio: saved,
+        }
+    }
+}
+
+/// Simulate the baseline over `jobs` (one node's window slice, sorted by
+/// `(arrival, id)`) with `slots` parallel batch slots; returns each job's
+/// counterfactual JCT as `(job id, shadow_jct_ms)`.
+///
+/// The simulation is a C-slot machine: each slot runs one job at a time
+/// for its full realized service.  FCFS seats jobs strictly in arrival
+/// order; SRPT seats, whenever a slot frees, the shortest-service job
+/// that has already arrived.  All ties break on `(arrival, id)`, so the
+/// replay is a pure function of the recorded stream.
+fn replay_all(mode: ShadowMode, jobs: &[ShadowJob],
+              slots: usize) -> Vec<(u64, f64)> {
+    let slots = slots.max(1);
+    let mut free = vec![0.0f64; slots];
+    let mut out = Vec::with_capacity(jobs.len());
+    let mut seat = |free: &mut Vec<f64>, si: usize, j: &ShadowJob| {
+        let start = free[si].max(j.arrival_ms);
+        let done = start + j.service_ms;
+        free[si] = done;
+        (j.job, done - j.arrival_ms)
+    };
+    match mode {
+        ShadowMode::Off => {}
+        ShadowMode::Fcfs => {
+            // arrival order; each job takes the earliest-freeing slot
+            for j in jobs {
+                let si = (0..free.len())
+                    .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+                    .expect("slots >= 1");
+                out.push(seat(&mut free, si, j));
+            }
+        }
+        ShadowMode::Srpt => {
+            let mut pend: Vec<&ShadowJob> = jobs.iter().collect();
+            while !pend.is_empty() {
+                let si = (0..free.len())
+                    .min_by(|&a, &b| free[a].total_cmp(&free[b]))
+                    .expect("slots >= 1");
+                let now = free[si];
+                let pick = pend
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, j)| j.arrival_ms <= now)
+                    .min_by(|(_, a), (_, b)| {
+                        a.service_ms
+                            .total_cmp(&b.service_ms)
+                            .then(a.arrival_ms.total_cmp(&b.arrival_ms))
+                            .then(a.job.cmp(&b.job))
+                    })
+                    .map(|(i, _)| i);
+                match pick {
+                    Some(i) => {
+                        let j = pend.remove(i);
+                        out.push(seat(&mut free, si, j));
+                    }
+                    None => {
+                        // nobody has arrived yet: idle the slot forward to
+                        // the next arrival and re-decide
+                        let next = pend
+                            .iter()
+                            .map(|j| j.arrival_ms)
+                            .fold(f64::INFINITY, f64::min);
+                        free[si] = next;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+impl EventSink for ShadowScheduler {
+    fn on_window_decision(&mut self, d: &DecisionRecord<'_>) {
+        let mut st = self.0.lock().unwrap();
+        if st.mode == ShadowMode::Off {
+            return;
+        }
+        if st.node_caps.len() <= d.node {
+            st.node_caps.resize(d.node + 1, 0);
+        }
+        let cap = if d.batch_cap > 0 { d.batch_cap } else { d.batch.len() };
+        st.node_caps[d.node] = st.node_caps[d.node].max(cap.max(1));
+    }
+
+    fn on_job_finished(&mut self, job: &JobMeta<'_>, node: usize,
+                       stats: &FinishStats, _now_ms: f64) {
+        let mut st = self.0.lock().unwrap();
+        if st.mode == ShadowMode::Off {
+            return;
+        }
+        let rec = ShadowJob {
+            job: job.id.raw(),
+            node,
+            arrival_ms: job.arrival_ms,
+            service_ms: stats.service_ms.max(0.0),
+            real_jct_ms: stats.jct_ms,
+        };
+        if st.ring.len() == st.window {
+            st.ring.pop_front();
+        }
+        st.ring.push_back(rec);
+        // recompute the trailing-window aggregate: replay each node's
+        // slice and total counterfactual vs realized JCT over the ring
+        let mode = st.mode;
+        let nodes: BTreeSet<usize> =
+            st.ring.iter().map(|j| j.node).collect();
+        let mut sum_real = 0.0;
+        let mut sum_shadow = 0.0;
+        let mut finishing_delta = None;
+        for n in nodes {
+            let mut peers: Vec<ShadowJob> = st
+                .ring
+                .iter()
+                .filter(|j| j.node == n)
+                .copied()
+                .collect();
+            peers.sort_by(|a, b| {
+                a.arrival_ms.total_cmp(&b.arrival_ms).then(a.job.cmp(&b.job))
+            });
+            let slots = st.node_caps.get(n).copied().unwrap_or(1);
+            let shadow = replay_all(mode, &peers, slots);
+            sum_real += peers.iter().map(|j| j.real_jct_ms).sum::<f64>();
+            sum_shadow += shadow.iter().map(|(_, jct)| jct).sum::<f64>();
+            if n == node {
+                finishing_delta = shadow
+                    .iter()
+                    .find(|(id, _)| *id == rec.job)
+                    .map(|(_, jct)| jct - rec.real_jct_ms);
+            }
+        }
+        st.sum_real_ms = sum_real;
+        st.sum_shadow_ms = sum_shadow;
+        if let Some(delta) = finishing_delta {
+            st.delta_ms.add(delta);
+            st.delta_hist.add(delta);
+            st.compared += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::JobId;
+
+    fn meta(id: u64, arrival: f64) -> JobMeta<'static> {
+        JobMeta {
+            id: JobId::from_raw(id),
+            tenant: None,
+            arrival_ms: arrival,
+            prompt_len: 4,
+            total_len: 20,
+        }
+    }
+
+    fn stats(jct: f64, service: f64) -> FinishStats {
+        FinishStats {
+            jct_ms: jct,
+            ttft_ms: Some(jct),
+            queue_delay_ms: (jct - service).max(0.0),
+            service_ms: service,
+            tokens: 10,
+            predicted_total: None,
+        }
+    }
+
+    fn cap(sink: &mut ShadowScheduler, node: usize, batch_cap: usize) {
+        let batch = [JobId::from_raw(0)];
+        sink.on_window_decision(&DecisionRecord {
+            node,
+            window: 0,
+            now_ms: 0.0,
+            queue_depth: 1,
+            batch: &batch,
+            batch_cap,
+            victims: &[],
+            key_min: f64::NAN,
+            key_max: f64::NAN,
+            sched_overhead_ms: 0.0,
+        });
+    }
+
+    /// Live SRPT-ish run: the short job jumped the long one.  The FCFS
+    /// counterfactual must charge the short job the long job's service,
+    /// yielding a positive saved ratio once both records are in the ring.
+    #[test]
+    fn fcfs_counterfactual_shows_srptish_savings() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Fcfs, 64);
+        cap(&mut sink, 0, 1); // single-slot node
+        // long job A: arrival 0, service 100; ran second, real jct 110
+        // short job B: arrival 1, service 10; ran first, real jct 9
+        sink.on_job_finished(&meta(2, 1.0), 0, &stats(9.0, 10.0), 10.0);
+        sink.on_job_finished(&meta(1, 0.0), 0, &stats(110.0, 100.0), 110.0);
+        let snap = sink.snapshot();
+        assert_eq!(snap.compared, 2);
+        // FCFS: A runs 0..100 (jct 100), B runs 100..110 (jct 109)
+        // Σ real = 119, Σ shadow = 209 → ratio (209-119)/209 ≈ 0.43
+        assert!((snap.sum_shadow_ms - 209.0).abs() < 1e-9,
+                "shadow sum {}", snap.sum_shadow_ms);
+        assert!((snap.sum_real_ms - 119.0).abs() < 1e-9);
+        assert!(snap.saved_ratio > 0.4, "ratio {}", snap.saved_ratio);
+        assert_eq!(snap.delta_hist.count(), 2);
+        assert_eq!(snap.mode, "fcfs");
+    }
+
+    #[test]
+    fn srpt_counterfactual_reorders_by_service() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Srpt, 64);
+        cap(&mut sink, 0, 1);
+        // real run was FCFS-ish: long A (arrival 0, svc 100) then B
+        sink.on_job_finished(&meta(1, 0.0), 0, &stats(100.0, 100.0), 100.0);
+        sink.on_job_finished(&meta(2, 0.0), 0, &stats(110.0, 10.0), 110.0);
+        let snap = sink.snapshot();
+        // SRPT at t=0 picks B (svc 10): B 0..10 (jct 10), A 10..110 (110)
+        // Σ shadow = 120 < Σ real = 210 → negative "saved"
+        assert!((snap.sum_shadow_ms - 120.0).abs() < 1e-9,
+                "shadow sum {}", snap.sum_shadow_ms);
+        assert!(snap.saved_ratio < 0.0,
+                "an SRPT shadow should beat a FCFS-ish reality");
+    }
+
+    #[test]
+    fn replay_is_deterministic_across_identical_streams() {
+        let run = || {
+            let mut sink = ShadowScheduler::new(ShadowMode::Fcfs, 32);
+            cap(&mut sink, 0, 2);
+            cap(&mut sink, 1, 1);
+            for i in 0..40u64 {
+                let node = (i % 2) as usize;
+                let arrival = (i as f64) * 3.0;
+                let service = 5.0 + ((i * 7) % 13) as f64;
+                let jct = service + ((i * 5) % 11) as f64;
+                sink.on_job_finished(&meta(i, arrival), node,
+                                     &stats(jct, service),
+                                     arrival + jct);
+            }
+            sink.snapshot()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.compared, b.compared);
+        assert_eq!(a.sum_shadow_ms.to_bits(), b.sum_shadow_ms.to_bits(),
+                   "identical streams must produce identical shadow JCTs");
+        assert_eq!(a.delta_ms.sum().to_bits(), b.delta_ms.sum().to_bits());
+        assert_eq!(a.delta_hist.cumulative(), b.delta_hist.cumulative());
+    }
+
+    #[test]
+    fn multi_slot_fcfs_overlaps_jobs() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Fcfs, 16);
+        cap(&mut sink, 0, 2); // two slots: both jobs start immediately
+        sink.on_job_finished(&meta(1, 0.0), 0, &stats(50.0, 50.0), 50.0);
+        sink.on_job_finished(&meta(2, 0.0), 0, &stats(60.0, 60.0), 60.0);
+        let snap = sink.snapshot();
+        // shadow: both start at 0 → jcts 50 and 60, same as reality
+        assert!((snap.sum_shadow_ms - 110.0).abs() < 1e-9);
+        assert!(snap.saved_ratio.abs() < 1e-9);
+    }
+
+    #[test]
+    fn nodes_replay_independently() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Fcfs, 16);
+        cap(&mut sink, 0, 1);
+        cap(&mut sink, 1, 1);
+        // same arrival times on two different single-slot nodes: neither
+        // job queues behind the other in the counterfactual
+        sink.on_job_finished(&meta(1, 0.0), 0, &stats(40.0, 40.0), 40.0);
+        sink.on_job_finished(&meta(2, 0.0), 1, &stats(40.0, 40.0), 40.0);
+        let snap = sink.snapshot();
+        assert!((snap.sum_shadow_ms - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_mode_records_nothing() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Off, 16);
+        cap(&mut sink, 0, 1);
+        sink.on_job_finished(&meta(1, 0.0), 0, &stats(10.0, 10.0), 10.0);
+        let snap = sink.snapshot();
+        assert_eq!(snap.compared, 0);
+        assert!(snap.saved_ratio.is_nan());
+    }
+
+    #[test]
+    fn mode_parse_covers_flag_values() {
+        assert_eq!(ShadowMode::parse("fcfs"), Some(ShadowMode::Fcfs));
+        assert_eq!(ShadowMode::parse("srpt"), Some(ShadowMode::Srpt));
+        assert_eq!(ShadowMode::parse("off"), Some(ShadowMode::Off));
+        assert_eq!(ShadowMode::parse("bogus"), None);
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let mut sink = ShadowScheduler::new(ShadowMode::Fcfs, 4);
+        cap(&mut sink, 0, 1);
+        for i in 0..32u64 {
+            sink.on_job_finished(&meta(i, i as f64), 0,
+                                 &stats(5.0, 5.0), i as f64 + 5.0);
+        }
+        assert_eq!(sink.0.lock().unwrap().ring.len(), 4);
+    }
+}

@@ -29,7 +29,8 @@ use crate::coordinator::events::{DecisionRecord, EventSink, FinishStats,
                                  JobMeta, WindowEvents, WindowJobEvent};
 use crate::coordinator::job::JobId;
 
-use super::sketch::{KendallWindow, QuantileSketch, WindowedRate};
+use super::shadow::ShadowScheduler;
+use super::sketch::{Histogram, KendallWindow, QuantileSketch, WindowedRate};
 
 /// Tenant label applied to requests that carry no tenant tag.
 pub const DEFAULT_TENANT: &str = "default";
@@ -182,6 +183,11 @@ pub struct TenantStats {
     pub jct_ms: QuantileSketch,
     pub ttft_ms: QuantileSketch,
     pub queue_delay_ms: QuantileSketch,
+    /// fixed log-spaced JCT histogram (Prometheus `_bucket` exposition —
+    /// P² summaries can't be aggregated across instances, histograms can)
+    pub jct_hist: Histogram,
+    /// fixed log-spaced TTFT histogram
+    pub ttft_hist: Histogram,
 }
 
 impl TenantStats {
@@ -195,6 +201,8 @@ impl TenantStats {
             jct_ms: QuantileSketch::new(),
             ttft_ms: QuantileSketch::new(),
             queue_delay_ms: QuantileSketch::new(),
+            jct_hist: Histogram::log_ms(),
+            ttft_hist: Histogram::log_ms(),
         }
     }
 }
@@ -215,6 +223,9 @@ pub struct TelemetryState {
     pub last_event_ms: f64,
     /// HTTP front-door gauges, when serving (see [`FrontendStats`])
     pub frontend: Option<Arc<FrontendStats>>,
+    /// counterfactual-replay handle, when `--shadow` is on — `/metrics`
+    /// renders its snapshot (see [`ShadowScheduler`])
+    pub shadow: Option<ShadowScheduler>,
 }
 
 impl TelemetryState {
@@ -227,6 +238,7 @@ impl TelemetryState {
             sched_overhead_ms_total: 0.0,
             last_event_ms: 0.0,
             frontend: None,
+            shadow: None,
         }
     }
 
@@ -279,8 +291,10 @@ impl TelemetryState {
         t.finished += 1;
         t.active = t.active.saturating_sub(1);
         t.jct_ms.add(stats.jct_ms);
+        t.jct_hist.add(stats.jct_ms);
         if let Some(ttft) = stats.ttft_ms {
             t.ttft_ms.add(ttft);
+            t.ttft_hist.add(ttft);
         }
         t.queue_delay_ms.add(stats.queue_delay_ms);
         if let Some(slo_ms) = slo_ms {
@@ -364,6 +378,13 @@ impl TelemetrySink {
     /// handler threads and this sink).
     pub fn attach_frontend(&self, stats: Arc<FrontendStats>) {
         self.state.lock().unwrap().frontend = Some(stats);
+    }
+
+    /// Attach a shadow-scheduler handle so `/metrics` renders the
+    /// counterfactual families (`elis_shadow_*`).  The same handle should
+    /// be registered as an event sink on the coordinator builder.
+    pub fn attach_shadow(&self, shadow: ShadowScheduler) {
+        self.state.lock().unwrap().shadow = Some(shadow);
     }
 
     /// Workers the coordinator marked dead via failover (surfaced in the
@@ -629,6 +650,7 @@ mod tests {
             now_ms: 10.0,
             queue_depth: 7,
             batch: &batch,
+            batch_cap: 4,
             victims: &[],
             key_min: 1.0,
             key_max: 2.0,

@@ -380,6 +380,94 @@ impl KendallWindow {
     }
 }
 
+/// Fixed-bound latency histogram for native Prometheus `histogram`
+/// exposition (`_bucket`/`_sum`/`_count` with cumulative `le` labels).
+/// The P² sketches answer "what is p99 *on this pod*"; histograms are the
+/// form Grafana and alerting can aggregate *across* pods (summing buckets
+/// is sound, summing pre-computed quantiles is not).  Bounds are fixed at
+/// construction so every pod exports the same `le` series.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    /// observations ≤ bounds[i]; the implicit +Inf bucket is `count`
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+}
+
+/// Log-spaced millisecond bounds, three per decade from 1 ms to 100 s —
+/// wide enough for TTFT and JCT under overload, small enough that a
+/// per-tenant family stays readable.
+pub const LOG_MS_BOUNDS: [f64; 16] = [
+    1.0, 2.15, 4.64, 10.0, 21.5, 46.4, 100.0, 215.0, 464.0, 1000.0,
+    2150.0, 4640.0, 10_000.0, 21_500.0, 46_400.0, 100_000.0,
+];
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::log_ms()
+    }
+}
+
+impl Histogram {
+    /// Histogram over the shared [`LOG_MS_BOUNDS`] latency grid.
+    pub fn log_ms() -> Histogram {
+        Histogram::with_bounds(&LOG_MS_BOUNDS)
+    }
+
+    /// `bounds` must be strictly increasing (Prometheus `le` semantics).
+    pub fn with_bounds(bounds: &'static [f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bound");
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]),
+                "histogram bounds must be strictly increasing");
+        Histogram {
+            bounds,
+            buckets: vec![0; bounds.len()],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Record one observation.  Non-finite samples are dropped (they have
+    /// no bucket and would poison `_sum`); values beyond the last bound
+    /// land only in the implicit +Inf bucket.
+    pub fn add(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        // first bound >= x: cumulative buckets, so bump it and everything
+        // above — done at render time instead by prefix-summing, keeping
+        // add() a single O(log B) search
+        if let Some(i) = self.bounds.iter().position(|&b| x <= b) {
+            self.buckets[i] += 1;
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn bounds(&self) -> &'static [f64] {
+        self.bounds
+    }
+
+    /// Cumulative counts per bound (Prometheus `le` buckets, excluding the
+    /// implicit +Inf bucket, which equals [`count`](Self::count)).
+    pub fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets.iter().map(|&b| {
+            acc += b;
+            acc
+        }).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -507,6 +595,36 @@ mod tests {
         r.add(400.0, 1.0); // late event lands in the current bucket
         assert_eq!(r.total(), 2.0);
         assert!(r.rate_per_s(500.0) > 0.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_inf_equals_count() {
+        let mut h = Histogram::log_ms();
+        for x in [0.5, 3.0, 3.0, 50.0, 5_000.0, 1e9] {
+            h.add(x);
+        }
+        assert_eq!(h.count(), 6);
+        assert!((h.sum() - (0.5 + 3.0 + 3.0 + 50.0 + 5_000.0 + 1e9)).abs()
+                < 1e-6);
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), LOG_MS_BOUNDS.len());
+        // cumulative: monotone non-decreasing, last bound holds everything
+        // except the 1e9 overflow (which lives only in +Inf = count)
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(cum[0], 1, "0.5 ms lands in the le=1 bucket");
+        assert_eq!(*cum.last().unwrap(), 5);
+        assert!(h.count() >= *cum.last().unwrap(),
+                "+Inf bucket must dominate every bound");
+    }
+
+    #[test]
+    fn histogram_drops_non_finite() {
+        let mut h = Histogram::log_ms();
+        h.add(f64::NAN);
+        h.add(f64::INFINITY);
+        h.add(10.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.sum(), 10.0);
     }
 
     #[test]

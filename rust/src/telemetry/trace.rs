@@ -454,6 +454,7 @@ mod tests {
             now_ms: 1.0,
             queue_depth: 3,
             batch: &batch,
+            batch_cap: 4,
             victims: &[],
             key_min: 10.0,
             key_max: 10.0,
@@ -531,6 +532,7 @@ mod tests {
             now_ms: 1.0,
             queue_depth: 2,
             batch: &batch,
+            batch_cap: 1,
             victims: &[],
             key_min: f64::NAN,
             key_max: f64::NAN,

@@ -25,7 +25,8 @@ use elis::engine::sim_engine::SimEngine;
 use elis::engine::{Engine, SeqSpec, SeqWindowOut, WindowOutcome};
 use elis::predictor::oracle::OraclePredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::telemetry::{FlightRecorder, TelemetrySink};
+use elis::telemetry::{AttributionSink, FlightRecorder, ShadowMode,
+                      ShadowScheduler, TelemetrySink};
 use elis::util::json::Json;
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
@@ -363,6 +364,13 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
     };
     let telemetry = TelemetrySink::new(2);
     let recorder = FlightRecorder::default();
+    // JCT attribution + FCFS shadow counterfactual, exactly as `elis
+    // serve --listen --shadow fcfs` wires them: attribution registers
+    // ahead of the completion bridge so breakdowns exist when waiting
+    // handlers wake, the shadow scheduler attaches to /metrics
+    let explain = AttributionSink::default();
+    let shadow = ShadowScheduler::new(ShadowMode::Fcfs, 512);
+    telemetry.attach_shadow(shadow.clone());
     let (api_tx, mut bridge) = ApiBridge::channel();
     let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
     let cfg = ServeConfig {
@@ -374,6 +382,8 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
     let mut coord = CoordinatorBuilder::from_config(cfg)
         .sink(Box::new(telemetry.clone()))
         .sink(Box::new(recorder.clone()))
+        .sink(Box::new(explain.clone()))
+        .sink(Box::new(shadow.clone()))
         .sink(Box::new(bridge.completion_sink()))
         .build_pooled(&trace, WorkerPool::new(sim_engines(2)), &mut sched)
         .unwrap();
@@ -385,6 +395,7 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
         trace: Some(recorder.clone()),
+        explain: Some(explain.clone()),
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();
@@ -402,10 +413,23 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
                      r#"{"total_len": 30, "tenant": "api"}"#),
             ));
         }
+        let wait_resp = http(addr, "POST /v1/generate",
+                             r#"{"total_len": 20, "tenant": "api", "wait": true}"#);
+        // the wait reply names its job; explain it over the same API
+        let wait_job = wait_resp
+            .split("\r\n\r\n")
+            .nth(1)
+            .and_then(|b| Json::parse(b).ok())
+            .and_then(|j| j.get("job_id").and_then(Json::as_usize))
+            .expect("wait reply carries job_id");
+        responses.push(("generate-wait", wait_resp));
         responses.push((
-            "generate-wait",
-            http(addr, "POST /v1/generate",
-                 r#"{"total_len": 20, "tenant": "api", "wait": true}"#),
+            "explain",
+            http(addr, &format!("GET /debug/explain?job={wait_job}"), ""),
+        ));
+        responses.push((
+            "explain-missing",
+            http(addr, "GET /debug/explain?job=999999", ""),
         ));
         responses.push(("metrics", http(addr, "GET /metrics", "")));
         // the wait generate above finished, so execute spans exist by now
@@ -455,6 +479,30 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
                 assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
                 assert!(resp.contains("\"finished\""), "{resp}");
                 assert!(resp.contains("\"tokens\":20"), "{resp}");
+                // the reply carries the attribution object inline
+                let body = resp.split("\r\n\r\n").nth(1).expect("wait body");
+                let j = Json::parse(body).expect("wait json");
+                let b = j.get("breakdown").expect("breakdown in wait reply");
+                let total = b.get("total_ms").and_then(Json::as_f64)
+                    .expect("total_ms");
+                let jct = j.get("jct_ms").and_then(Json::as_f64).unwrap();
+                assert!((total - jct).abs() < 1.0,
+                        "breakdown {total} != jct {jct}:\n{body}");
+            }
+            "explain" => {
+                assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+                let body = resp.split("\r\n\r\n").nth(1).expect("body");
+                let j = Json::parse(body).expect("explain json");
+                let b = j.get("breakdown").expect("breakdown");
+                let total = b.get("total_ms").and_then(Json::as_f64).unwrap();
+                let jct = j.get("jct_ms").and_then(Json::as_f64).unwrap();
+                assert!((total - jct).abs() < 1.0,
+                        "explain breakdown {total} != jct {jct}:\n{body}");
+                assert_eq!(j.get("tenant").and_then(Json::as_str),
+                           Some("api"), "{body}");
+            }
+            "explain-missing" => {
+                assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
             }
             "metrics" => {
                 assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
@@ -464,6 +512,17 @@ fn http_frontend_serves_generate_metrics_and_health_end_to_end() {
                 assert!(resp.contains("elis_tenant_jobs_admitted_total\
                                        {tenant=\"api\"}"),
                         "{resp}");
+                // shadow counterfactual families render once attached
+                assert!(resp.contains("elis_shadow_jct_delta_ms"), "{resp}");
+                assert!(resp.contains("elis_shadow_jct_saved_ratio"),
+                        "{resp}");
+                assert!(resp.contains("elis_shadow_mode{mode=\"fcfs\"}"),
+                        "{resp}");
+                // fixed-bound histogram exposition rides alongside the
+                // P² summaries
+                assert!(resp.contains("elis_tenant_jct_ms_hist_bucket{"),
+                        "{resp}");
+                assert!(resp.contains("le=\"+Inf\""), "{resp}");
             }
             "trace" => {
                 assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
@@ -607,8 +666,10 @@ fn killed_remote_worker_fails_over_and_report_matches_reference() {
         ..Default::default()
     };
     let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let explain = AttributionSink::default();
     let mut coord = CoordinatorBuilder::from_config(cfg)
         .sink(Box::new(lost.clone()))
+        .sink(Box::new(explain.clone()))
         .build_remote(&trace, pool, &mut sched)
         .unwrap();
     let report = coord.run_to_completion().unwrap();
@@ -633,6 +694,18 @@ fn killed_remote_worker_fails_over_and_report_matches_reference() {
     for rec in &report.records {
         assert_eq!(rec.tokens, TOTAL_LEN, "job {} under-generated", rec.id);
     }
+
+    // attribution holds through the kill: every breakdown still sums to
+    // its JCT, and the re-homed jobs carry the stall as failover time
+    let mut failover_ms = 0.0;
+    for rec in &report.records {
+        let ex = explain.explain(rec.id).expect("explain record");
+        assert!((ex.breakdown.total_ms() - rec.jct_ms).abs() < 1.0,
+                "job {}: breakdown {} != jct {}", rec.id,
+                ex.breakdown.total_ms(), rec.jct_ms);
+        failover_ms += ex.breakdown.failover_stall_ms;
+    }
+    assert!(failover_ms >= 0.0);
 
     healthy.join().unwrap();
     doomed.join().unwrap();
@@ -866,6 +939,7 @@ fn wait_generate_racing_shutdown_gets_terminal_response() {
         admission: Admission::unlimited(),
         stats: bridge.frontend_stats(),
         trace: None,
+        explain: None,
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
@@ -908,6 +982,7 @@ fn http_server_shutdown_is_idempotent_and_quiet() {
         admission: Admission::unlimited(),
         stats: _bridge.frontend_stats(),
         trace: None,
+        explain: None,
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 2).unwrap();
@@ -952,6 +1027,7 @@ fn streaming_generate_matches_wait_reply_over_one_keep_alive_conn() {
         admission: Admission::unlimited(),
         stats: stats.clone(),
         trace: None,
+        explain: None,
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 4).unwrap();
@@ -1009,6 +1085,7 @@ fn overload_sheds_429_and_drain_answers_held_streams() {
         }),
         stats: stats.clone(),
         trace: None,
+        explain: None,
         started: Instant::now(),
     };
     let mut server = HttpServer::serve("127.0.0.1:0", gateway, 8).unwrap();

@@ -18,7 +18,8 @@ use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
 use elis::predictor::surrogate::SurrogatePredictor;
 use elis::predictor::LengthPredictor;
 use elis::runtime::manifest::ServedModelMeta;
-use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink};
+use elis::telemetry::{AttributionSink, ShadowMode, ShadowScheduler,
+                      SloPolicy, SloSpec, TelemetrySink};
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
 fn profile(avg_latency_ms: f64) -> ModelProfile {
@@ -825,4 +826,130 @@ fn higher_rps_multiple_worsens_jct() {
     let low = run(Policy::Fcfs, 1, 1.0, 60, 37);
     let high = run(Policy::Fcfs, 1, 5.0, 60, 37);
     assert!(high.avg_jct_s() > low.avg_jct_s());
+}
+
+// ---------------------------------------------------------------------------
+// JCT attribution + shadow counterfactual (PR 8)
+// ---------------------------------------------------------------------------
+
+/// Run one seeded trace with an [`AttributionSink`] registered and return
+/// (report, sink) so callers can cross-check the two accountings.
+fn run_attributed(policy: Policy, predictor: Box<dyn LengthPredictor>,
+                  workers: usize, rps: f64, n: usize, seed: u64,
+                  preemption: PreemptionPolicy, kv_bytes: usize)
+                  -> (ServeReport, AttributionSink) {
+    let corpus = Corpus::synthetic(400, seed);
+    let mut gen = RequestGenerator::fabrix(rps, seed);
+    let trace = gen.trace(&corpus, n);
+    let mut sched = Scheduler::new(policy, predictor);
+    let cfg = ServeConfig {
+        workers,
+        preemption,
+        max_iterations: 5_000_000,
+        seed,
+        ..Default::default()
+    };
+    let sink = AttributionSink::default();
+    let mut e = engines(workers, kv_bytes);
+    let report = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(sink.clone()))
+        .build(&trace, &mut e, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    (report, sink)
+}
+
+#[test]
+fn prop_attribution_components_sum_to_jct() {
+    // the tentpole invariant, end to end: for random traces under every
+    // policy shape — FCFS, oracle SRPT, ISRTF with a noisy predictor,
+    // and a KV pool tiny enough to force preemptions — each finished
+    // job's five-way breakdown reproduces its report JCT within 1 ms,
+    // and execution never exceeds measured service
+    let cases: Vec<(Policy, Box<dyn Fn(u64) -> Box<dyn LengthPredictor>>,
+                    PreemptionPolicy, usize)> = vec![
+        (Policy::Fcfs, Box::new(|_| Box::new(OraclePredictor)),
+         PreemptionPolicy::default(), 8 << 30),
+        (Policy::Srpt, Box::new(|_| Box::new(OraclePredictor)),
+         PreemptionPolicy::default(), 8 << 30),
+        (Policy::Isrtf,
+         Box::new(|s| Box::new(SurrogatePredictor::calibrated(s))),
+         PreemptionPolicy::default(), 8 << 30),
+        // a 100 MiB pool forces evictions (cf. the preemption test above)
+        (Policy::Srpt, Box::new(|_| Box::new(OraclePredictor)),
+         PreemptionPolicy { enabled: true, max_preemptions_per_job: 3,
+                            max_per_iteration: usize::MAX },
+         100 << 20),
+    ];
+    for (policy, predictor_for, preemption, kv) in &cases {
+        for seed in [11u64, 23, 59] {
+            let (report, sink) = run_attributed(
+                *policy, predictor_for(seed), 2, 3.0, 50, seed,
+                preemption.clone(), *kv);
+            assert_eq!(report.n(), 50);
+            assert_eq!(sink.finished_len(), 50);
+            for rec in &report.records {
+                let ex = sink
+                    .explain(rec.id)
+                    .unwrap_or_else(|| panic!("job {} has no explain \
+                                               record", rec.id));
+                let total = ex.breakdown.total_ms();
+                assert!(
+                    (total - rec.jct_ms).abs() < 1.0,
+                    "{:?} seed {seed} job {}: breakdown {total} != jct {}",
+                    policy, rec.id, rec.jct_ms
+                );
+                assert!(ex.breakdown.execution_ms
+                            <= rec.service_ms + 1e-6,
+                        "execution cannot exceed measured service");
+                let b = ex.breakdown;
+                for part in [b.queueing_ms, b.hol_blocking_ms,
+                             b.preemption_stall_ms, b.failover_stall_ms,
+                             b.execution_ms] {
+                    assert!(part >= 0.0, "components are non-negative");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn shadow_replay_is_deterministic_and_fcfs_counterfactual_is_positive() {
+    // acceptance: under ISRTF the FCFS counterfactual must report a
+    // positive saved ratio (the paper's 19.6% claim, measured live), and
+    // two identical runs must produce bit-identical shadow aggregates
+    let run_shadow = |mode: ShadowMode| {
+        let corpus = Corpus::synthetic(400, 101);
+        let mut gen = RequestGenerator::fabrix(5.0, 101);
+        let trace = gen.trace(&corpus, 80);
+        let mut sched = Scheduler::new(
+            Policy::Isrtf, Box::new(SurrogatePredictor::calibrated(101)));
+        let cfg = ServeConfig {
+            workers: 1,
+            max_iterations: 5_000_000,
+            seed: 101,
+            ..Default::default()
+        };
+        let shadow = ShadowScheduler::new(mode, 512);
+        let mut e = engines(1, 8 << 30);
+        CoordinatorBuilder::from_config(cfg)
+            .sink(Box::new(shadow.clone()))
+            .build(&trace, &mut e, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        shadow.snapshot()
+    };
+    let a = run_shadow(ShadowMode::Fcfs);
+    let b = run_shadow(ShadowMode::Fcfs);
+    assert_eq!(a.compared, 80);
+    assert_eq!(a.compared, b.compared);
+    assert_eq!(a.sum_shadow_ms.to_bits(), b.sum_shadow_ms.to_bits(),
+               "shadow replay must be bit-deterministic");
+    assert_eq!(a.sum_real_ms.to_bits(), b.sum_real_ms.to_bits());
+    assert_eq!(a.delta_ms.count(), b.delta_ms.count());
+    assert!(a.saved_ratio > 0.0,
+            "ISRTF should beat its FCFS counterfactual under load: \
+             real {} vs shadow {}", a.sum_real_ms, a.sum_shadow_ms);
 }

@@ -14,10 +14,17 @@ Serve mode guards the streaming serving path (`elis loadgen` output):
 (>= --serve-min-tokens) and completed requests; with --serve-baseline it
 also fails when TTFT/JCT p99 regress by more than --serve-max-ratio.
 
+Shadow mode reads a /metrics snapshot (--metrics) and reports the
+elis_shadow_jct_saved_ratio gauge — the live counterfactual measurement
+of what the scheduling policy saves over FCFS.  --shadow-min-saved sets
+an *advisory* floor: a ratio below it prints a WARNING but does not fail
+the check (the ratio is workload-dependent; CI smoke runs are short).
+
 Usage:
     tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json [--max-ratio 1.5]
     tools/bench_diff.py --serve-fresh BENCH_serve.json \
-        [--serve-baseline BENCH_serve_baseline.json] [--serve-max-ratio 2.0]
+        [--serve-baseline BENCH_serve_baseline.json] [--serve-max-ratio 2.0] \
+        [--metrics metrics.txt --shadow-min-saved 0.05]
 
 Refreshing a baseline: copy the matching artifact from a green CI run
 over the committed baseline (drop the "provisional" flag) and commit it.
@@ -126,6 +133,43 @@ def check_serve(args, failures):
                             f"(> {args.serve_max_ratio}x)")
 
 
+def parse_gauge(text, name):
+    """First sample of an unlabelled gauge in Prometheus text exposition."""
+    for line in text.splitlines():
+        if line.startswith("#"):
+            continue
+        parts = line.split()
+        if len(parts) == 2 and parts[0] == name:
+            try:
+                return float(parts[1])
+            except ValueError:
+                return None
+    return None
+
+
+def check_shadow(args):
+    with open(args.metrics) as f:
+        text = f.read()
+    saved = parse_gauge(text, "elis_shadow_jct_saved_ratio")
+    if saved is None:
+        print("shadow: elis_shadow_jct_saved_ratio not found in "
+              f"{args.metrics} (was the server started with --shadow?)")
+        return
+    compared = parse_gauge(text, "elis_shadow_compared_total") or 0
+    if saved != saved:  # NaN: no finished jobs compared yet
+        print("shadow: saved ratio is NaN (no comparisons yet)")
+        return
+    print(f"shadow: counterfactual saved ratio {saved:.3f} "
+          f"({compared:.0f} jobs compared)")
+    if args.shadow_min_saved is not None and saved < args.shadow_min_saved:
+        # advisory only: short CI smoke runs under light load can
+        # legitimately sit near zero
+        print(f"WARNING: shadow saved ratio {saved:.3f} below the advisory "
+              f"{args.shadow_min_saved} floor — the scheduler is not "
+              f"beating its counterfactual on this workload",
+              file=sys.stderr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?",
@@ -144,18 +188,27 @@ def main():
     ap.add_argument("--serve-min-tokens", type=int, default=1,
                     help="minimum tokens_streamed for a healthy serve run "
                          "(default 1)")
+    ap.add_argument("--metrics",
+                    help="saved /metrics snapshot to read shadow-scheduler "
+                         "gauges from")
+    ap.add_argument("--shadow-min-saved", type=float, default=None,
+                    help="advisory floor for elis_shadow_jct_saved_ratio; "
+                         "below it prints a WARNING (never a failure)")
     args = ap.parse_args()
 
     if bool(args.baseline) != bool(args.fresh):
         ap.error("hotpath mode needs both BASELINE and FRESH")
-    if not args.baseline and not args.serve_fresh:
-        ap.error("nothing to check: pass BASELINE FRESH and/or --serve-fresh")
+    if not args.baseline and not args.serve_fresh and not args.metrics:
+        ap.error("nothing to check: pass BASELINE FRESH, --serve-fresh, "
+                 "and/or --metrics")
 
     failures = []
     if args.baseline:
         check_hotpath(args, failures)
     if args.serve_fresh:
         check_serve(args, failures)
+    if args.metrics:
+        check_shadow(args)
 
     if failures:
         print("\nbench trajectory check FAILED:", file=sys.stderr)
