@@ -2,6 +2,11 @@
 //! * dispatch cost at queue depth (1k/10k/50k/100k backlog): incremental
 //!   index vs full rebuild vs shaper-forced rebuild, FCFS vs ISRTF —
 //!   the repo's recorded perf baseline, emitted to `BENCH_hotpath.json`;
+//! * shaped dispatch cost at depth: SLO and WFQ shapers on the folded
+//!   incremental index vs the per-window rebuild (the PR 9 tentpole;
+//!   gated at >=3x at 50k queued jobs);
+//! * sharded dispatch wall time per window at 1/2/4 planner shards
+//!   (informational — the schedule is bit-identical at any count);
 //! * scheduling overhead per iteration (priority refresh + batching) —
 //!   paper reports 11.04 ms including the predictor;
 //! * predictor batched-call latency (the real PJRT artifact);
@@ -34,6 +39,7 @@ use elis::predictor::{LengthPredictor, PredictQuery};
 use elis::runtime::manifest::ServedModelMeta;
 use elis::runtime::{HostTensor, LoadedModel};
 use elis::stats::rng::Pcg64;
+use elis::telemetry::{SloPolicy, SloSpec, TelemetrySink, WfqPolicy};
 use elis::util::bench::{bench, fmt_f, Table};
 use elis::util::json::Json;
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
@@ -66,6 +72,16 @@ fn burst_trace(n: usize) -> Vec<TraceRequest> {
             tenant: None,
         })
         .collect()
+}
+
+/// The burst trace with tenant tags, for the shaped sweeps: three tenants
+/// of uneven size so the SLO/WFQ shapers do real per-tenant work.
+fn tenant_burst_trace(n: usize) -> Vec<TraceRequest> {
+    let mut trace = burst_trace(n);
+    for (i, r) in trace.iter_mut().enumerate() {
+        r.tenant = Some(["paid", "free", "batch"][i % 3].to_string());
+    }
+    trace
 }
 
 /// Forces the rebuild path without changing any priority (the cheapest
@@ -177,24 +193,168 @@ fn depth_benches(quick: bool) -> (Vec<DepthRow>, Vec<(String, f64)>) {
     (rows, acceptance)
 }
 
-fn write_bench_json(rows: &[DepthRow], acceptance: &[(String, f64)]) {
+/// Steady-state per-window dispatch cost with a **foldable shaper**
+/// registered: the shaped index (per-tenant lanes, epoch-gated re-keys)
+/// vs the same shaper on the forced per-window rebuild.  Each run owns a
+/// fresh [`TelemetrySink`] so pressure/lead state is its own.
+fn shaped_dispatch_cost_ms(depth: usize, kind: &str, rebuild: bool,
+                           warmup: u64, measure: u64) -> f64 {
+    let trace = tenant_burst_trace(depth);
+    let mut engines: Vec<Box<dyn Engine>> =
+        vec![Box::new(SimEngine::new(sim_profile(), 50, 8, 64 << 30))];
+    let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor));
+    let cfg = ServeConfig { max_batch: 8, ..Default::default() };
+    let telemetry = TelemetrySink::new(1);
+    let shaper: Box<dyn PriorityShaper> = match kind {
+        "slo" => Box::new(SloPolicy::new(
+            &telemetry, SloSpec::new(60_000.0).tenant("paid", 4_000.0))),
+        _ => Box::new(WfqPolicy::new(&telemetry).weight("paid", 3.0)),
+    };
+    let mut b = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(telemetry.clone()))
+        .priority_shaper(shaper);
+    if rebuild {
+        b = b.full_rebuild(true);
+    }
+    let mut coord = b.build(&trace, &mut engines, &mut sched).unwrap();
+    while coord.iterations() < warmup && !coord.is_done() {
+        coord.step().unwrap();
+    }
+    let (o0, i0) = (coord.sched_overhead_ms_total(), coord.iterations());
+    while coord.iterations() < warmup + measure && !coord.is_done() {
+        coord.step().unwrap();
+    }
+    let (o1, i1) = (coord.sched_overhead_ms_total(), coord.iterations());
+    assert!(i1 > i0, "no shaped windows measured at depth {depth}");
+    (o1 - o0) / (i1 - i0) as f64
+}
+
+fn shaped_depth_benches(quick: bool) -> (Vec<DepthRow>, Vec<(String, f64)>) {
+    let depths: &[usize] = &[1_000, 10_000, 50_000];
+    let (warmup, measure) = if quick { (4, 16) } else { (4, 32) };
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "shaped dispatch cost per window at queue depth (ms, SRPT base)",
+        &["depth", "shaper", "incremental", "rebuild"],
+    );
+    for &depth in depths {
+        for kind in ["slo", "wfq"] {
+            let mut cells = vec![depth.to_string(), kind.to_string()];
+            for (variant, rebuild) in [("incremental", false),
+                                       ("rebuild", true)] {
+                let ms = shaped_dispatch_cost_ms(depth, kind, rebuild,
+                                                 warmup, measure);
+                cells.push(fmt_f(ms, 4));
+                // the static variant tag keeps DepthRow shared with the
+                // unshaped sweep; shaper kind is disambiguated below
+                let variant: &'static str = match (kind, variant) {
+                    ("slo", "incremental") => "slo-incremental",
+                    ("slo", _) => "slo-rebuild",
+                    (_, "incremental") => "wfq-incremental",
+                    _ => "wfq-rebuild",
+                };
+                rows.push(DepthRow { depth, policy: Policy::Srpt, variant,
+                                     ms_per_window: ms });
+            }
+            table.row(cells);
+        }
+    }
+    table.print();
+
+    let cost = |kind: &str, variant: &str| {
+        let tag = format!("{kind}-{variant}");
+        rows.iter()
+            .find(|r| r.depth == ACCEPT_DEPTH && r.variant == tag)
+            .map(|r| r.ms_per_window)
+            .unwrap_or(f64::NAN)
+    };
+    let mut acceptance = Vec::new();
+    for kind in ["slo", "wfq"] {
+        let speedup = cost(kind, "rebuild") / cost(kind, "incremental");
+        println!(
+            "{kind} shaped @ {} queued: rebuild {:.4} ms vs incremental \
+             {:.4} ms per window -> {:.1}x {}",
+            ACCEPT_DEPTH, cost(kind, "rebuild"), cost(kind, "incremental"),
+            speedup,
+            if speedup >= 3.0 { "(meets >=3x)" } else { "(BELOW 3x target)" },
+        );
+        acceptance.push((format!("{kind}_shaped_speedup_50k"), speedup));
+    }
+    (rows, acceptance)
+}
+
+/// Sharded dispatch scaling (informational): wall time per window on a
+/// 4-worker WFQ-shaped backlog at 1/2/4 planner shards.  The schedule is
+/// bit-identical at any count; only the plan phase's wall time moves.
+fn shard_scaling_benches(quick: bool) {
+    let depth = if quick { 20_000 } else { 50_000 };
+    let (warmup, measure) = (4u64, if quick { 32u64 } else { 64 });
+    let mut table = Table::new(
+        "sharded dispatch (4 workers, WFQ-shaped backlog)",
+        &["shards", "wall ms/window", "sched ms/window"],
+    );
+    for &shards in &[1usize, 2, 4] {
+        let trace = tenant_burst_trace(depth);
+        let mut engines: Vec<Box<dyn Engine>> = (0..4)
+            .map(|_| Box::new(SimEngine::new(sim_profile(), 50, 8, 64 << 30))
+                 as Box<dyn Engine>)
+            .collect();
+        let mut sched = Scheduler::new(Policy::Srpt,
+                                       Box::new(OraclePredictor));
+        let cfg = ServeConfig { workers: 4, max_batch: 8,
+                                ..Default::default() };
+        let telemetry = TelemetrySink::new(4);
+        let mut coord = CoordinatorBuilder::from_config(cfg)
+            .dispatch_shards(shards)
+            .sink(Box::new(telemetry.clone()))
+            .priority_shaper(Box::new(
+                WfqPolicy::new(&telemetry).weight("paid", 3.0)))
+            .build(&trace, &mut engines, &mut sched)
+            .unwrap();
+        while coord.iterations() < warmup && !coord.is_done() {
+            coord.step().unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let (o0, i0) = (coord.sched_overhead_ms_total(), coord.iterations());
+        while coord.iterations() < warmup + measure && !coord.is_done() {
+            coord.step().unwrap();
+        }
+        let (o1, i1) = (coord.sched_overhead_ms_total(), coord.iterations());
+        let windows = (i1 - i0).max(1) as f64;
+        table.row(vec![
+            coord.dispatch_shards().to_string(),
+            fmt_f(t0.elapsed().as_secs_f64() * 1e3 / windows, 4),
+            fmt_f((o1 - o0) / windows, 4),
+        ]);
+    }
+    table.print();
+}
+
+fn write_bench_json(rows: &[DepthRow], acceptance: &[(String, f64)],
+                    shaped_rows: &[DepthRow],
+                    shaped_acceptance: &[(String, f64)]) {
     let path = std::env::var("ELIS_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".into());
-    let arr = Json::Arr(rows.iter().map(|r| Json::obj(vec![
-        ("depth", Json::Num(r.depth as f64)),
-        ("policy", Json::Str(r.policy.name().to_string())),
-        ("variant", Json::Str(r.variant.to_string())),
-        ("ms_per_window", Json::Num(r.ms_per_window)),
-    ])).collect());
-    let acc = Json::Obj(acceptance.iter()
+    let row_arr = |rows: &[DepthRow]| Json::Arr(rows.iter()
+        .map(|r| Json::obj(vec![
+            ("depth", Json::Num(r.depth as f64)),
+            ("policy", Json::Str(r.policy.name().to_string())),
+            ("variant", Json::Str(r.variant.to_string())),
+            ("ms_per_window", Json::Num(r.ms_per_window)),
+        ]))
+        .collect());
+    let acc_obj = |acc: &[(String, f64)]| Json::Obj(acc.iter()
         .map(|(k, v)| (k.clone(), Json::Num(*v)))
         .collect());
     let doc = Json::obj(vec![
         ("bench", Json::Str("dispatch_cost_at_depth".into())),
         ("accept_depth", Json::Num(ACCEPT_DEPTH as f64)),
         ("target_speedup", Json::Num(5.0)),
-        ("rows", arr),
-        ("acceptance", acc),
+        ("shaped_target_speedup", Json::Num(3.0)),
+        ("rows", row_arr(rows)),
+        ("acceptance", acc_obj(acceptance)),
+        ("shaped_rows", row_arr(shaped_rows)),
+        ("shaped_acceptance", acc_obj(shaped_acceptance)),
     ]);
     match std::fs::write(&path, doc.to_string()) {
         Ok(()) => println!("wrote {path}"),
@@ -357,15 +517,25 @@ fn main() {
 
     // ---------- dispatch cost at queue depth (the perf baseline) --------
     let (rows, acceptance) = depth_benches(quick);
-    write_bench_json(&rows, &acceptance);
+    let (shaped_rows, shaped_acceptance) = shaped_depth_benches(quick);
+    shard_scaling_benches(quick);
+    write_bench_json(&rows, &acceptance, &shaped_rows, &shaped_acceptance);
     if quick {
-        // CI gate: the acceptance floor is self-enforcing, not just
-        // recorded — a regression below 5x fails the job
+        // CI gate: the acceptance floors are self-enforcing, not just
+        // recorded — a regression below 5x unshaped / 3x shaped fails
         let ok = acceptance.iter().all(|(_, s)| s.is_finite() && *s >= 5.0);
         if !ok {
             eprintln!("FAIL: dispatch speedup at {ACCEPT_DEPTH} queued \
                        jobs fell below the 5x acceptance floor: \
                        {acceptance:?}");
+            std::process::exit(1);
+        }
+        let ok = shaped_acceptance.iter()
+            .all(|(_, s)| s.is_finite() && *s >= 3.0);
+        if !ok {
+            eprintln!("FAIL: shaped dispatch speedup at {ACCEPT_DEPTH} \
+                       queued jobs fell below the 3x acceptance floor: \
+                       {shaped_acceptance:?}");
             std::process::exit(1);
         }
         println!("\nELIS_BENCH_QUICK set: skipping artifact-dependent \

@@ -122,6 +122,9 @@ pub struct DecisionRecord<'a> {
     /// preemption victim candidates (raw job ids, the engine's eviction
     /// order), best victim first
     pub victims: &'a [u64],
+    /// which dispatch shard planned this window (0 when planning ran
+    /// inline — single shard or the rebuild path)
+    pub shard: usize,
     /// smallest folded priority key in the batch (NaN if unkeyed)
     pub key_min: f64,
     /// largest folded priority key in the batch (NaN if unkeyed)

@@ -17,7 +17,11 @@
 //!   keys for the incremental index).
 //! * [`priority_buffer`] — per-node priority queues with a fully
 //!   deterministic (priority, arrival, id) order; persistent across
-//!   windows in the default incremental dispatch mode.
+//!   windows in the default incremental dispatch mode, with per-tenant
+//!   [`TenantQueues`] lanes when a foldable shaper keys the index.
+//! * [`shards`] — the persistent [`DispatchShards`] planner pool behind
+//!   `--dispatch-shards`: per-node plan work fans out, apply stays
+//!   serial, reports stay bit-identical at any shard count.
 //! * [`batcher`] — window batching (prompts sent once).
 //! * [`load_balancer`] — min-load greedy assignment over global state `G`.
 //! * [`preemption`] — frequency control + starvation guard (§3.4).
@@ -37,6 +41,7 @@ pub mod preemption;
 pub mod priority_buffer;
 pub mod scheduler;
 pub mod serving;
+pub mod shards;
 
 pub use events::{DecisionRecord, EventCounter, EventSink, FinishStats,
                  JobMeta, PodExec, SharedCounter, WindowEvents,
@@ -45,6 +50,8 @@ pub use frontend::{peak_rps_search, run_serving};
 pub use job::{Job, JobId, JobState, JobTable};
 pub use load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 pub use preemption::PreemptionPolicy;
-pub use scheduler::{Policy, PriorityShaper, Scheduler};
+pub use priority_buffer::TenantQueues;
+pub use scheduler::{FoldedShaper, Policy, PriorityShaper, Scheduler};
+pub use shards::DispatchShards;
 pub use serving::{ClockMode, Coordinator, CoordinatorBuilder, ServeConfig,
                   StepOutcome};

@@ -12,9 +12,17 @@
 //!   O(n log n) full rebuild.  Requires keys that do not drift with time;
 //!   see `Scheduler::refresh_folded` for how anti-starvation aging is
 //!   folded into a time-invariant key.
-//! * **per-window rebuild** (shaper registered, or forced for reference
-//!   runs): Algorithm 1 as written — every job is re-keyed and pushed each
-//!   iteration, then the queue is drained sorted.
+//! * **per-window rebuild** (non-folding shaper registered, or forced for
+//!   reference runs): Algorithm 1 as written — every job is re-keyed and
+//!   pushed each iteration, then the queue is drained sorted.
+//!
+//! Shaped runs with a *folding* shaper (`PriorityShaper::as_folded`) keep a
+//! persistent index too, via [`TenantQueues`]: one heap lane per tenant,
+//! each stamped with the tenant epoch its keys were computed under.  When a
+//! tenant's shaping term changes (pressure/virtual-time moved), only that
+//! lane is drained and re-keyed; the global pop order is recovered by
+//! scanning the lane heads — O(T + log n) per pop for T tenants, and
+//! bit-identical to a single global heap because the entry order is total.
 //!
 //! Ordering is **fully deterministic**: priority, then arrival time, then
 //! job id — all via `f64::total_cmp`, so even NaN priorities (a misbehaving
@@ -24,9 +32,10 @@
 //! re-sort agree exactly.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap};
 
-use super::job::JobId;
+use super::job::{JobId, JobTable};
+use super::scheduler::FoldedShaper;
 
 /// Min-heap item: lower priority value runs first; arrival then id break
 /// ties deterministically.
@@ -141,6 +150,188 @@ impl PriorityBuffer {
         out.reserve(self.queues[node].len());
         while let Some(e) = self.queues[node].pop() {
             out.push(e);
+        }
+    }
+}
+
+/// Shaped-index heap item: `entry.priority` holds the *shaped* folded key;
+/// `base_folded` keeps the unshaped folded base so a lane can be re-keyed
+/// from stored state when its tenant's epoch moves (no predictor call).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShapedEntry {
+    pub entry: Entry,
+    pub base_folded: f64,
+}
+
+impl Eq for ShapedEntry {}
+
+impl Ord for ShapedEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // order is entirely the inner Entry's (already reversed for
+        // min-heap use); base_folded is payload, not key
+        self.entry.cmp(&other.entry)
+    }
+}
+
+impl PartialOrd for ShapedEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug)]
+struct Lane {
+    tenant: Option<String>,
+    /// the shaper epoch this lane's keys were computed under
+    epoch_applied: u64,
+    heap: BinaryHeap<ShapedEntry>,
+}
+
+/// Per-tenant heap lanes for one node's *shaped* persistent order index.
+///
+/// Invariant: every entry in a lane carries the shaped key
+/// `shaper.shape_folded(job, base_folded)` as of epoch `epoch_applied` for
+/// that tenant.  [`rekey_stale`](Self::rekey_stale) restores the invariant
+/// at the top of a round; pushes within a round must pass the tenant's
+/// current epoch.  Pop order equals a single global heap's because `Entry`'s
+/// ordering is total (priority, arrival, id).
+#[derive(Debug, Default)]
+pub struct TenantQueues {
+    lanes: Vec<Lane>,
+    /// tenant name -> lane index (first-seen lane order is deterministic,
+    /// but pops never depend on it)
+    by_name: BTreeMap<String, usize>,
+    /// lane index for untagged (tenant = None) jobs
+    untagged: Option<usize>,
+    len: usize,
+}
+
+impl TenantQueues {
+    pub fn new() -> TenantQueues {
+        TenantQueues::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.lanes.clear();
+        self.by_name.clear();
+        self.untagged = None;
+        self.len = 0;
+    }
+
+    fn lane_of(&mut self, tenant: Option<&str>, epoch: u64) -> usize {
+        let slot = match tenant {
+            Some(t) => self.by_name.get(t).copied(),
+            None => self.untagged,
+        };
+        if let Some(i) = slot {
+            return i;
+        }
+        let i = self.lanes.len();
+        self.lanes.push(Lane {
+            tenant: tenant.map(str::to_owned),
+            epoch_applied: epoch,
+            heap: BinaryHeap::new(),
+        });
+        match tenant {
+            Some(t) => {
+                self.by_name.insert(t.to_owned(), i);
+            }
+            None => self.untagged = Some(i),
+        }
+        i
+    }
+
+    /// Insert an entry keyed under the tenant's current `epoch`.  Callers
+    /// must have synced stale lanes first ([`rekey_stale`](Self::rekey_stale));
+    /// an existing lane at a different epoch would mix key generations.
+    pub fn push(&mut self, tenant: Option<&str>, epoch: u64, e: ShapedEntry) {
+        let i = self.lane_of(tenant, epoch);
+        debug_assert_eq!(
+            self.lanes[i].epoch_applied, epoch,
+            "push into stale lane (tenant {:?}): rekey_stale must run first",
+            tenant
+        );
+        self.lanes[i].heap.push(e);
+        self.len += 1;
+    }
+
+    /// Re-key every lane whose tenant epoch moved since its keys were
+    /// computed: drain, recompute `shape_folded` over the stored folded
+    /// bases, heapify.  Returns the number of entries re-keyed (telemetry /
+    /// tests).  This is the only O(lane) step of a shaped window, and it
+    /// runs only for tenants whose pressure/lead term actually changed.
+    pub fn rekey_stale(&mut self, shaper: &dyn FoldedShaper,
+                       table: &JobTable) -> usize {
+        let mut rekeyed = 0;
+        for lane in &mut self.lanes {
+            let cur = shaper.tenant_epoch(lane.tenant.as_deref());
+            if lane.epoch_applied == cur {
+                continue;
+            }
+            lane.epoch_applied = cur;
+            if lane.heap.is_empty() {
+                continue;
+            }
+            let mut v = std::mem::take(&mut lane.heap).into_vec();
+            for se in &mut v {
+                se.entry.priority =
+                    shaper.shape_folded(&table[se.entry.id], se.base_folded);
+            }
+            rekeyed += v.len();
+            lane.heap = BinaryHeap::from(v);
+        }
+        rekeyed
+    }
+
+    /// Pop the globally best entry: scan lane heads, take the minimum under
+    /// the total (priority, arrival, id) order.  Ties across lanes are
+    /// impossible (ids are unique), so the winner — and therefore the whole
+    /// pop sequence — is unique.
+    pub fn pop_best(&mut self) -> Option<ShapedEntry> {
+        let mut best: Option<usize> = None;
+        for (i, lane) in self.lanes.iter().enumerate() {
+            let Some(head) = lane.heap.peek() else { continue };
+            match best {
+                // BinaryHeap::peek is the max under ShapedEntry's reversed
+                // Ord, i.e. the lane's (priority, arrival, id) minimum;
+                // `>` picks the smaller tuple across lanes
+                Some(b) if !(head > self.lanes[b].heap.peek().unwrap()) => {}
+                _ => best = Some(i),
+            }
+        }
+        let popped = best.and_then(|i| self.lanes[i].heap.pop());
+        if popped.is_some() {
+            self.len -= 1;
+        }
+        popped
+    }
+
+    /// Pop up to `k` best entries into a caller-owned scratch vector
+    /// (cleared first) — the shaped top-k selection, O(k (T + log n)).
+    pub fn pop_batch_into(&mut self, k: usize, out: &mut Vec<ShapedEntry>) {
+        out.clear();
+        while out.len() < k {
+            match self.pop_best() {
+                Some(e) => out.push(e),
+                None => break,
+            }
+        }
+    }
+
+    /// Drain every lane in global priority order (fail-over re-homing).
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Entry>) {
+        out.clear();
+        out.reserve(self.len);
+        while let Some(se) = self.pop_best() {
+            out.push(se.entry);
         }
     }
 }
@@ -305,6 +496,191 @@ mod tests {
                                 <= (w[1].arrival_ms, w[1].id)),
                     "out of order: {w:?}"
                 );
+            }
+        });
+    }
+
+    // ---- TenantQueues (shaped persistent index) ----
+
+    use crate::coordinator::job::Job;
+    use std::collections::BTreeMap as Map;
+
+    /// Test shaper: shaped key = base + per-tenant offset, with explicit
+    /// epochs the test bumps by hand.
+    #[derive(Default)]
+    struct OffsetShaper {
+        offsets: Map<String, f64>,
+        epochs: Map<String, u64>,
+    }
+
+    impl OffsetShaper {
+        fn set(&mut self, tenant: &str, offset: f64) {
+            self.offsets.insert(tenant.to_owned(), offset);
+            *self.epochs.entry(tenant.to_owned()).or_insert(0) += 1;
+        }
+    }
+
+    impl FoldedShaper for OffsetShaper {
+        fn shape_folded(&self, job: &Job, base_folded: f64) -> f64 {
+            let off = job
+                .tenant
+                .as_deref()
+                .and_then(|t| self.offsets.get(t))
+                .copied()
+                .unwrap_or(0.0);
+            base_folded + off
+        }
+
+        fn tenant_epoch(&self, tenant: Option<&str>) -> u64 {
+            tenant
+                .and_then(|t| self.epochs.get(t))
+                .copied()
+                .unwrap_or(0)
+        }
+    }
+
+    fn tenant_table(jobs: &[(Option<&str>, f64)]) -> (JobTable, Vec<JobId>) {
+        let mut table = JobTable::new();
+        let mut ids = Vec::new();
+        for (tenant, arrival) in jobs {
+            let t = tenant.map(str::to_owned);
+            let a = *arrival;
+            ids.push(table.insert_with(|id| {
+                let mut j = Job::new(id, vec![1], 10, 0, a);
+                j.tenant = t;
+                j
+            }));
+        }
+        (table, ids)
+    }
+
+    fn shaped(shaper: &OffsetShaper, table: &JobTable, id: JobId,
+              base: f64) -> ShapedEntry {
+        ShapedEntry {
+            entry: Entry {
+                priority: shaper.shape_folded(&table[id], base),
+                arrival_ms: table[id].arrival_ms,
+                id,
+            },
+            base_folded: base,
+        }
+    }
+
+    #[test]
+    fn tenant_queues_pop_order_matches_global_heap() {
+        let (table, ids) = tenant_table(&[
+            (Some("a"), 0.0),
+            (Some("b"), 1.0),
+            (None, 2.0),
+            (Some("a"), 3.0),
+            (Some("b"), 4.0),
+        ]);
+        let mut sh = OffsetShaper::default();
+        sh.set("a", 10.0);
+        sh.set("b", 0.0);
+
+        let bases = [5.0, 7.0, 1.0, 2.0, 30.0];
+        let mut tq = TenantQueues::new();
+        let mut global = BinaryHeap::new();
+        for (&id, &b) in ids.iter().zip(&bases) {
+            let se = shaped(&sh, &table, id, b);
+            tq.push(table[id].tenant.as_deref(),
+                    sh.tenant_epoch(table[id].tenant.as_deref()), se);
+            global.push(se);
+        }
+        assert_eq!(tq.len(), 5);
+        while let Some(expect) = global.pop() {
+            assert_eq!(tq.pop_best(), Some(expect));
+        }
+        assert!(tq.pop_best().is_none());
+        assert!(tq.is_empty());
+    }
+
+    #[test]
+    fn rekey_touches_only_changed_tenant_and_restores_order() {
+        let (table, ids) = tenant_table(&[
+            (Some("a"), 0.0),
+            (Some("a"), 1.0),
+            (Some("b"), 2.0),
+            (Some("b"), 3.0),
+        ]);
+        let mut sh = OffsetShaper::default();
+        sh.set("a", 0.0);
+        sh.set("b", 0.0);
+
+        let bases = [4.0, 8.0, 5.0, 6.0];
+        let mut tq = TenantQueues::new();
+        for (&id, &b) in ids.iter().zip(&bases) {
+            let se = shaped(&sh, &table, id, b);
+            tq.push(table[id].tenant.as_deref(),
+                    sh.tenant_epoch(table[id].tenant.as_deref()), se);
+        }
+        // no epoch movement -> nothing re-keyed
+        assert_eq!(tq.rekey_stale(&sh, &table), 0);
+
+        // tenant "a" gets a big offset: only its 2 entries re-key, and the
+        // global order now puts both "b" jobs first
+        sh.set("a", 100.0);
+        assert_eq!(tq.rekey_stale(&sh, &table), 2);
+        let mut order = Vec::new();
+        tq.drain_sorted_into(&mut order);
+        let got: Vec<u64> = order.iter().map(|e| e.id.raw()).collect();
+        assert_eq!(got, vec![ids[2].raw(), ids[3].raw(), ids[0].raw(),
+                             ids[1].raw()]);
+        assert_eq!(order[0].priority, 5.0);
+        assert_eq!(order[2].priority, 104.0);
+    }
+
+    #[test]
+    fn prop_tenant_queues_match_single_heap_under_churn() {
+        prop::check("tenant-queues-vs-heap", 50, |g| {
+            let tenants = ["a", "b", "c"];
+            let n = g.usize_in(1, 40);
+            let spec: Vec<(Option<&str>, f64)> = (0..n)
+                .map(|_| {
+                    let t = if g.bool() {
+                        Some(tenants[g.usize_in(0, tenants.len() - 1)])
+                    } else {
+                        None
+                    };
+                    (t, g.f64_in(0.0, 10.0))
+                })
+                .collect();
+            let (table, ids) = tenant_table(&spec);
+            let mut sh = OffsetShaper::default();
+            for t in tenants {
+                sh.set(t, g.f64_in(-50.0, 50.0));
+            }
+
+            let mut tq = TenantQueues::new();
+            let mut live: Vec<(JobId, f64)> = Vec::new();
+            for &id in &ids {
+                let b = g.f64_in(-100.0, 100.0);
+                tq.push(table[id].tenant.as_deref(),
+                        sh.tenant_epoch(table[id].tenant.as_deref()),
+                        shaped(&sh, &table, id, b));
+                live.push((id, b));
+            }
+            for _ in 0..4 {
+                // churn one tenant's offset, re-key, then pop a few and
+                // compare against a fresh full sort of the live set
+                sh.set(tenants[g.usize_in(0, tenants.len() - 1)],
+                       g.f64_in(-50.0, 50.0));
+                tq.rekey_stale(&sh, &table);
+                let mut expect: Vec<Entry> = live
+                    .iter()
+                    .map(|&(id, b)| shaped(&sh, &table, id, b).entry)
+                    .collect();
+                expect.sort_unstable_by(|a, b| b.cmp(a)); // ascending keys
+                let k = g.usize_in(1, 4).min(live.len());
+                for want in expect.iter().take(k) {
+                    let got = tq.pop_best().unwrap();
+                    assert_eq!(&got.entry, want);
+                    live.retain(|&(id, _)| id != want.id);
+                }
+                if live.is_empty() {
+                    break;
+                }
             }
         });
     }

@@ -43,8 +43,60 @@ use super::job::{Job, JobId};
 /// against per-tenant budgets using live latency sketches).  When no
 /// shaper is registered the base priority is used untouched, so the
 /// schedule — and every report — is bit-identical to a shaper-less run.
-pub trait PriorityShaper {
+///
+/// A shaper that can express its per-tenant offset as a time-invariant
+/// term over folded keys additionally returns itself from
+/// [`as_folded`](Self::as_folded); the coordinator then keeps the
+/// persistent incremental order index even under shaping (see
+/// [`FoldedShaper`]).  The default (`None`) preserves the classic
+/// re-shape-everything rebuild path for arbitrary shapers.
+///
+/// `Send + Sync` bounds let folded shapers be consulted from the
+/// coordinator's dispatch shards; all mutation is confined to
+/// [`begin_round`](Self::begin_round), which runs serially.
+pub trait PriorityShaper: Send + Sync {
     fn shape(&mut self, job: &Job, base_priority: f64, now_ms: f64) -> f64;
+
+    /// Called once at the top of every dispatch round, before any
+    /// `shape`/[`FoldedShaper::shape_folded`] call of that round.  This is
+    /// where per-round state (telemetry snapshots, tenant pressure memos,
+    /// epoch bumps) is rebuilt — keyed on the round counter, not on
+    /// `now_ms`, so wall-clock pooled runs that dispatch several nodes in
+    /// one round snapshot the telemetry exactly once.
+    fn begin_round(&mut self, _round: u64, _now_ms: f64) {}
+
+    /// `Some(self)` when this shaper folds (its shaped key over a *folded*
+    /// base is constant between [`begin_round`](Self::begin_round)s and
+    /// per-tenant epochs flag every change).  `None` (default) selects the
+    /// per-window rebuild dispatch path.
+    fn as_folded(&self) -> Option<&dyn FoldedShaper> {
+        None
+    }
+}
+
+/// The folded-shaping surface behind [`PriorityShaper::as_folded`]: a
+/// shaped analogue of [`Scheduler::refresh_folded`]'s time-invariant keys.
+///
+/// Contract: for a fixed job and fixed `base_folded`,
+/// [`shape_folded`](Self::shape_folded) returns bit-identical keys across
+/// rounds as long as [`tenant_epoch`](Self::tenant_epoch) for the job's
+/// tenant is unchanged — so the coordinator re-keys only the lanes of
+/// tenants whose pressure/lead term actually moved, and a shaped
+/// steady-state window costs O(k log n + changed-tenant re-keys) instead
+/// of the O(n log n) rebuild.  Both dispatch paths key with
+/// `shape_folded` when a shaper folds, so the incremental index and the
+/// rebuild reference compare the exact same f64s.
+///
+/// `shape_folded` takes `&self` (it is called concurrently from dispatch
+/// shards); every mutation belongs in `begin_round`.
+pub trait FoldedShaper: Send + Sync {
+    /// Shaped time-invariant key for `job` given its folded base priority.
+    fn shape_folded(&self, job: &Job, base_folded: f64) -> f64;
+
+    /// Monotone per-tenant change counter: bumped (during `begin_round`)
+    /// whenever the tenant's shaping term changed since the last round.
+    /// `None` is the untagged-tenant lane.
+    fn tenant_epoch(&self, tenant: Option<&str>) -> u64;
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

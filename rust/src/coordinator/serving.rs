@@ -20,11 +20,28 @@
 //!   anti-starvation aging is folded into a time-invariant key (see
 //!   [`Scheduler::refresh_folded`]), so the steady-state cost per window
 //!   is O(k log n) for a batch of k against a backlog of n, not the
-//!   O(n log n) full rebuild.  Registering a [`PriorityShaper`] (whose
-//!   output legitimately drifts every round) — or forcing
+//!   O(n log n) full rebuild.  A [`PriorityShaper`] that exposes a
+//!   [`FoldedShaper`] view (the SLO policy without a shedding band, WFQ
+//!   over a foldable inner — see `as_folded`) keeps the incremental
+//!   path: its per-tenant shaping offsets fold into the key, and when a
+//!   tenant's offset moves the coordinator re-keys **only that tenant's
+//!   lane** (per-tenant epochs, see
+//!   [`TenantQueues`](super::priority_buffer::TenantQueues)).
+//!   A non-foldable shaper — or forcing
 //!   [`CoordinatorBuilder::full_rebuild`] — selects the classic
 //!   re-key-everything path instead; both paths produce bit-identical
-//!   virtual-clock reports (regression-tested per policy).
+//!   virtual-clock reports (regression-tested per policy and shaper).
+//!
+//!   Dispatch itself is split into three phases: a serial *pre-phase*
+//!   (iteration accounting + predictor refresh — the scheduler is
+//!   `&mut`), a *plan* phase that runs each ready node's index
+//!   maintenance, top-k pops, and victim ranking — in parallel on a
+//!   small persistent [`DispatchShards`] pool when
+//!   [`ServeConfig::dispatch_shards`] > 1 — and a serial *apply* phase
+//!   that admits, records, and executes windows in ascending node
+//!   order.  Per-node plans read only shared snapshots and write only
+//!   their own node's state, and the apply order is fixed, so reports
+//!   are bit-identical regardless of shard count.
 //! * [`Coordinator::step`] — one full iteration of the above plus clock
 //!   advance when nothing could run; returns a [`StepOutcome`].
 //! * [`Coordinator::run_to_completion`] — step until every job finished,
@@ -62,7 +79,7 @@
 //!   wiped) and its jobs re-balanced onto survivors, resuming from the
 //!   tokens the coordinator already holds.
 
-use std::collections::HashSet;
+use std::collections::HashMap;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -80,8 +97,9 @@ use super::events::{DecisionRecord, EventSink, FinishStats, JobMeta,
 use super::job::{Job, JobId, JobState, JobTable};
 use super::load_balancer::{GlobalState, LbStrategy, LoadBalancer};
 use super::preemption::PreemptionPolicy;
-use super::priority_buffer::{Entry, PriorityBuffer};
-use super::scheduler::{PriorityShaper, Scheduler};
+use super::priority_buffer::{Entry, ShapedEntry, TenantQueues};
+use super::scheduler::{FoldedShaper, PriorityShaper, Scheduler};
+use super::shards::DispatchShards;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClockMode {
@@ -110,6 +128,14 @@ pub struct ServeConfig {
     /// of waiting out the full gap to the next known arrival.  Ignored in
     /// virtual mode (the simulated clock jumps exactly).
     pub idle_tick_ms: f64,
+    /// Dispatch-plan parallelism: per-node index maintenance / top-k /
+    /// victim ranking run on this many shard threads.  `1` (the default)
+    /// plans inline on the coordinator thread; `0` = auto (about half the
+    /// machine's cores).  Always capped at `workers` — a shard never has
+    /// less than one node — and ignored on the rebuild path (which stays
+    /// serial as the reference implementation).  Shard count never
+    /// changes the schedule: plans are applied serially in node order.
+    pub dispatch_shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -124,6 +150,7 @@ impl Default for ServeConfig {
             seed: 1,
             max_iterations: 0,
             idle_tick_ms: 10.0,
+            dispatch_shards: 1,
         }
     }
 }
@@ -167,6 +194,116 @@ struct WorkerSlot {
 enum SpillOnError {
     FullOrder,
     BatchOnly,
+}
+
+/// A queued-but-engine-resident job's cached ranking key: incremental
+/// mode never re-reads the table for victim ranking, it keeps the folded
+/// base and the shaped key here and lazily re-shapes when the job's
+/// tenant epoch moved (same [`FoldedShaper`] contract as the index).
+#[derive(Debug, Clone, Copy)]
+struct WarmEntry {
+    key: f64,
+    base_folded: f64,
+    arrival_ms: f64,
+    epoch: u64,
+}
+
+/// One dispatch round's outputs for a node, produced by the (possibly
+/// sharded) plan phase and consumed by the serial apply phase.  All the
+/// vectors are reused across rounds.
+struct NodePlan {
+    /// node passed this round's dispatch guard (idle, alive, has work)
+    ready: bool,
+    /// global iteration number assigned to this window (serial pre-phase)
+    window: u64,
+    /// the engine's own batch cap this window
+    engine_cap: usize,
+    /// batch-cap context reported in the [`DecisionRecord`]
+    cap: usize,
+    /// queue depth observed at dispatch entry
+    depth: usize,
+    /// a victim ranking was built (preemption budget > 0)
+    rank: bool,
+    /// which shard chunk planned this node (0 when planning ran inline)
+    shard: usize,
+    /// plan-phase wall time, folded into the window's overhead metric
+    sched_ns: u128,
+    /// the selected batch, highest priority first
+    batch: Vec<Entry>,
+    /// rebuild path only: the sorted remainder behind the batch prefix
+    rest: Vec<Entry>,
+    /// preemption-victim order shipped to the engine (raw ids)
+    victims: Vec<u64>,
+    /// what an error hand-off must return to `pending`
+    spill: SpillOnError,
+    // scratch for the victim ranking
+    ventries: Vec<Entry>,
+    ranked: Vec<(JobId, usize)>,
+}
+
+impl NodePlan {
+    fn new() -> NodePlan {
+        NodePlan {
+            ready: false,
+            window: 0,
+            engine_cap: 0,
+            cap: 0,
+            depth: 0,
+            rank: false,
+            shard: 0,
+            sched_ns: 0,
+            batch: Vec::new(),
+            rest: Vec::new(),
+            victims: Vec::new(),
+            spill: SpillOnError::BatchOnly,
+            ventries: Vec::new(),
+            ranked: Vec::new(),
+        }
+    }
+}
+
+/// Everything dispatch needs that belongs to exactly one node, grouped so
+/// the plan phase can hand each shard a disjoint `&mut` chunk.
+struct NodeSched {
+    /// Waiting jobs whose order key is missing or stale.  In incremental
+    /// mode this is the *pending/dirty* list — everything that changed
+    /// since the node's last window (new admits, returned batch members,
+    /// error spills) — and the rest of the backlog lives keyed in the
+    /// index.  In rebuild mode the index is drained every window, so this
+    /// list is simply the whole pool.
+    pending: Vec<JobId>,
+    /// unshaped order index (min-heap on the folded key); also the
+    /// rebuild path's per-window sort scratch
+    flat: std::collections::BinaryHeap<Entry>,
+    /// shaped order index: per-tenant lanes with epoch-stamped keys;
+    /// `Some` exactly when a foldable shaper runs incrementally
+    shaped: Option<TenantQueues>,
+    /// ids in the index that may still hold engine KV state (admitted by
+    /// an earlier batch, not since evicted) — the only preemption-victim
+    /// candidates besides the batch itself.  Pruned on eviction;
+    /// re-entered through the pending fold.
+    warm: HashMap<JobId, WarmEntry>,
+    plan: NodePlan,
+}
+
+impl NodeSched {
+    fn new(shaped: bool) -> NodeSched {
+        NodeSched {
+            pending: Vec::new(),
+            flat: std::collections::BinaryHeap::new(),
+            shaped: shaped.then(TenantQueues::new),
+            warm: HashMap::new(),
+            plan: NodePlan::new(),
+        }
+    }
+
+    fn index_len(&self) -> usize {
+        self.flat.len() + self.shaped.as_ref().map_or(0, TenantQueues::len)
+    }
+
+    fn has_work(&self) -> bool {
+        !self.pending.is_empty() || self.index_len() > 0
+    }
 }
 
 /// A window's job-scoped event recorded during state mutation and
@@ -292,12 +429,23 @@ impl CoordinatorBuilder {
     /// priority through it before ordering (the SLO-policy seam).  Without
     /// one, scheduling is bit-identical to the pre-shaper coordinator.
     ///
-    /// A shaper's output legitimately changes every round (deadlines,
-    /// live-telemetry pressure), so registering one selects the
-    /// re-shape-everything dispatch path: O(n log n) per window instead of
-    /// the incremental index's O(k log n).
+    /// A shaper that exposes a [`FoldedShaper`] view (see
+    /// [`PriorityShaper::as_folded`]) keeps the incremental dispatch
+    /// path: its shaping offset folds into the time-invariant key, and a
+    /// round only re-keys the lanes of tenants whose offset actually
+    /// moved — O(k log n + changed-tenant re-keys) per window.  A shaper
+    /// without one (its output drifts per-job per-round) selects the
+    /// re-shape-everything path: O(n log n) per window.
     pub fn priority_shaper(mut self, shaper: Box<dyn PriorityShaper>) -> Self {
         self.shaper = Some(shaper);
+        self
+    }
+
+    /// Dispatch-plan parallelism (see [`ServeConfig::dispatch_shards`]):
+    /// `1` = plan inline (default), `0` = auto-size to the machine, `n` =
+    /// exactly n shard threads (capped at the worker count).
+    pub fn dispatch_shards(mut self, shards: usize) -> Self {
+        self.cfg.dispatch_shards = shards;
         self
     }
 
@@ -427,36 +575,51 @@ impl CoordinatorBuilder {
         arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
         let workers_n = cfg.workers;
-        // shaped priorities drift every round, so a shaper needs the
-        // re-key-everything path; otherwise keys are change-driven and the
-        // index persists across windows
-        let incremental = shaper.is_none() && !force_rebuild;
+        // a shaper keeps the incremental path iff its shaping folds into
+        // the time-invariant key (per-tenant offsets with epochs);
+        // otherwise keys drift per-job per-round and the node needs the
+        // re-key-everything path
+        let incremental = !force_rebuild
+            && shaper.as_ref().map_or(true, |s| s.as_folded().is_some());
+        // the shaped index stores full shaped keys (base + tenant offset),
+        // so it only exists when a foldable shaper runs incrementally
+        let shaped_index = incremental && shaper.is_some();
+        // dispatch-shard resolution: 0 = auto (about half the cores), and
+        // never more shards than nodes.  A pool is only worth spawning
+        // when the incremental plan phase can actually run >1 node
+        // concurrently; the rebuild reference path stays serial.
+        let requested = if cfg.dispatch_shards == 0 {
+            std::thread::available_parallelism()
+                .map_or(1, |p| (p.get() / 2).max(1))
+        } else {
+            cfg.dispatch_shards
+        };
+        let n_shards = requested.min(workers_n).max(1);
+        let shards = (incremental && n_shards > 1)
+            .then(|| DispatchShards::new(n_shards));
         Ok(Coordinator {
             backend,
             scheduler,
             table,
             arrivals,
             next_arrival: 0,
-            queued: vec![Vec::new(); workers_n],
+            nodes: (0..workers_n).map(|_| NodeSched::new(shaped_index))
+                .collect(),
             workers: (0..workers_n)
                 .map(|_| WorkerSlot { pending: None, in_flight: false })
                 .collect(),
             state: GlobalState::new(workers_n),
             lb: LoadBalancer::new(cfg.lb, cfg.seed),
-            buffer: PriorityBuffer::new(workers_n),
             batcher: Batcher::new(workers_n, cfg.max_batch),
             incremental,
-            warm: vec![HashSet::new(); workers_n],
+            n_shards,
+            shards,
+            dispatch_rounds: 0,
             dead: vec![false; workers_n],
             failover: failover.unwrap_or(false),
             pending_scratch: Vec::new(),
             order_scratch: Vec::new(),
-            victim_entries_scratch: Vec::new(),
-            ranked_scratch: Vec::new(),
-            victims_scratch: Vec::new(),
             events_scratch: Vec::new(),
-            decision_depth: 0,
-            decision_cap: 0,
             sinks,
             shaper,
             now: 0.0,
@@ -481,31 +644,28 @@ pub struct Coordinator<'a> {
     /// (arrival_ms, id), sorted by arrival time
     arrivals: Vec<(f64, JobId)>,
     next_arrival: usize,
-    /// Per-node list of waiting jobs whose order key is missing or stale.
-    /// In incremental mode this is the *pending/dirty* list — everything
-    /// that changed since the node's last window (new admits, returned
-    /// batch members, error spills) — and the rest of the backlog lives
-    /// keyed inside `buffer`.  In rebuild mode the buffer is drained every
-    /// window, so this list is simply the whole pool.
-    queued: Vec<Vec<JobId>>,
+    /// Per-node scheduling state — pending/dirty list, persistent order
+    /// index (flat or shaped), warm set, and the current round's plan —
+    /// grouped per node so the plan phase can hand each dispatch shard a
+    /// disjoint `&mut` chunk.
+    nodes: Vec<NodeSched>,
     workers: Vec<WorkerSlot>,
     state: GlobalState,
     lb: LoadBalancer,
-    /// per-node order index: persistent across windows in incremental
-    /// mode, rebuilt per window in rebuild mode
-    buffer: PriorityBuffer,
     batcher: Batcher,
-    /// false when a shaper is registered (or a reference run forced the
-    /// rebuild path)
+    /// false when the registered shaper can't fold (or a reference run
+    /// forced the rebuild path)
     incremental: bool,
-    /// Per-node ids currently *in the index* that may still be resident
-    /// on the engine (admitted by an earlier batch and not since evicted)
-    /// — a superset of the engine's resident queued jobs and the only
-    /// candidates it could pick as preemption victims besides the batch
-    /// itself, so victim ranking sorts these instead of the whole
-    /// backlog.  Pruned on eviction; re-entered through the pending fold
-    /// when the job is next re-keyed.
-    warm: Vec<HashSet<JobId>>,
+    /// resolved dispatch-shard count (≥ 1; see
+    /// [`ServeConfig::dispatch_shards`])
+    n_shards: usize,
+    /// the persistent planner pool; `None` when planning runs inline
+    /// (single shard, or rebuild path)
+    shards: Option<DispatchShards>,
+    /// dispatch rounds begun — the monotone round id handed to
+    /// [`PriorityShaper::begin_round`] so shapers snapshot telemetry once
+    /// per round instead of once per (node, window)
+    dispatch_rounds: u64,
     /// Workers whose transport connection/thread is gone.  Dead workers
     /// are skipped by dispatch and excluded from load balancing; set only
     /// through [`fail_over`](Self::fail_over) (failover-enabled pooled
@@ -513,21 +673,10 @@ pub struct Coordinator<'a> {
     dead: Vec<bool>,
     /// see [`CoordinatorBuilder::failover`]
     failover: bool,
-    // -- per-window scratch buffers (allocations reused across windows) --
+    // -- cross-round scratch buffers (allocations reused) --
     pending_scratch: Vec<JobId>,
     order_scratch: Vec<Entry>,
-    victim_entries_scratch: Vec<Entry>,
-    ranked_scratch: Vec<(JobId, usize)>,
-    victims_scratch: Vec<u64>,
     events_scratch: Vec<PendingOutcomeEvent>,
-    /// queue depth observed at the current window's dispatch entry, for
-    /// the [`DecisionRecord`] fired by [`execute_window`](Self) — written
-    /// by both dispatch paths before they start draining the pool
-    decision_depth: usize,
-    /// batch-size cap the current window's selection ran under (engine
-    /// cap, possibly tightened by `max_batch` on the rebuild path) —
-    /// batch-occupancy context for the [`DecisionRecord`]
-    decision_cap: usize,
     sinks: Vec<Box<dyn EventSink>>,
     shaper: Option<Box<dyn PriorityShaper>>,
     now: f64,
@@ -587,7 +736,15 @@ impl<'a> Coordinator<'a> {
     /// Jobs waiting in `node`'s pool (excludes the running batch): the
     /// keyed entries in the node's order index plus the pending re-keys.
     pub fn queue_len(&self, node: usize) -> usize {
-        self.queued[node].len() + self.buffer.len(node)
+        self.nodes[node].pending.len() + self.nodes[node].index_len()
+    }
+
+    /// Resolved dispatch-plan parallelism: how many shard threads the
+    /// plan phase fans out over (1 = inline).  Exposed for the metrics
+    /// exporter's `elis_dispatch_shards` gauge and the shard-scaling
+    /// benches.
+    pub fn dispatch_shards(&self) -> usize {
+        if self.shards.is_some() { self.n_shards } else { 1 }
     }
 
     /// Cumulative scheduling-overhead wall time (ms) across all iterations
@@ -630,7 +787,7 @@ impl<'a> Coordinator<'a> {
             self.next_arrival += 1;
             let node = self.lb.assign_excluding(&mut self.state, &self.dead);
             self.table[id].node = Some(node);
-            self.queued[node].push(id);
+            self.nodes[node].pending.push(id);
             let meta = job_meta(&self.table, id);
             for s in self.sinks.iter_mut() {
                 s.on_job_admitted(&meta, node, now);
@@ -700,7 +857,7 @@ impl<'a> Coordinator<'a> {
                     // engine_admitted flag so a retry re-admits cleanly.
                     for &id in &done.batch {
                         self.table[id].state = JobState::Queued;
-                        self.queued[done.worker].push(id);
+                        self.nodes[done.worker].pending.push(id);
                     }
                     for &raw in &done.fresh {
                         let id = JobId::from_raw(raw);
@@ -786,52 +943,170 @@ impl<'a> Coordinator<'a> {
     ///
     /// Two key paths (chosen at build time, see
     /// [`CoordinatorBuilder::full_rebuild`]):
-    /// * **incremental** (default): only the node's pending jobs — new
-    ///   admits, batch members returned by the last window, error spills —
-    ///   are re-keyed (time-invariant folded keys) and pushed; the batch
-    ///   is a top-k pop off the persistent heap, O(k log n) per window.
-    /// * **rebuild** (shaper registered / forced): every queued job is
-    ///   re-keyed (aged, optionally shaped) and the whole queue re-sorted,
-    ///   O(n log n) per window.
+    /// * **incremental** (default; kept by foldable shapers): only the
+    ///   node's pending jobs — new admits, batch members returned by the
+    ///   last window, error spills — are re-keyed (time-invariant folded
+    ///   keys, plus the shaper's per-tenant offset when one is set) and
+    ///   pushed; the batch is a top-k pop off the persistent index,
+    ///   O(k log n) per window plus re-keys for tenants whose shaping
+    ///   offset moved since the node's last window.
+    /// * **rebuild** (non-foldable shaper / forced): every queued job is
+    ///   re-keyed and the whole queue re-sorted, O(n log n) per window.
+    ///
+    /// Structured as three phases: a serial pre-phase (iteration
+    /// accounting, engine caps, predictor refresh), a plan phase — per
+    /// node, fanned out over [`DispatchShards`] when configured — and a
+    /// serial apply phase in ascending node order.  Shard count never
+    /// changes the schedule.
     pub fn dispatch(&mut self, now: f64) -> Result<usize> {
-        let mut dispatched = 0;
+        // phase 0: this round's dispatch guard, per node
+        let mut any = false;
         for w in 0..self.cfg.workers {
-            if self.dead[w]
-                || self.workers[w].pending.is_some()
-                || self.workers[w].in_flight
-                || (self.queued[w].is_empty() && self.buffer.is_empty(w))
-            {
+            let ready = !self.dead[w]
+                && self.workers[w].pending.is_none()
+                && !self.workers[w].in_flight
+                && self.nodes[w].has_work();
+            self.nodes[w].plan.ready = ready;
+            any |= ready;
+        }
+        if !any {
+            return Ok(0);
+        }
+
+        // one shaper round per dispatch call: snapshot live telemetry and
+        // advance per-tenant epochs exactly once, off the planning path
+        self.dispatch_rounds += 1;
+        if let Some(s) = self.shaper.as_mut() {
+            s.begin_round(self.dispatch_rounds, now);
+        }
+
+        // phase 1 (serial): iteration accounting + predictor refresh over
+        // each ready node's pending list — the scheduler (predictor,
+        // prediction cache) is `&mut` and stays on this thread
+        let fold = self.shaper.as_ref()
+            .map_or(true, |s| s.as_folded().is_some());
+        for w in 0..self.cfg.workers {
+            if !self.nodes[w].plan.ready {
                 continue;
             }
             self.iterations += 1;
             if self.cfg.max_iterations > 0
                 && self.iterations > self.cfg.max_iterations
             {
+                // nothing has been consumed yet this round: every pending
+                // list and index is exactly as the guard saw it
                 bail!("iteration cap {} exceeded (livelock?)",
                       self.cfg.max_iterations);
             }
-            let run = if self.incremental {
-                self.dispatch_window_incremental(w, now)
-            } else {
-                self.dispatch_window_rebuild(w, now)
-            };
-            match run {
+            let t = Instant::now();
+            let engine_cap = self.backend.max_batch(w);
+            let node = &mut self.nodes[w];
+            node.plan.window = self.iterations;
+            node.plan.engine_cap = engine_cap;
+            node.plan.depth = node.pending.len() + node.index_len();
+            node.plan.shard = 0;
+            if !node.pending.is_empty() {
+                let (table, scheduler) =
+                    (&mut self.table, &mut *self.scheduler);
+                table.with_mut_refs(&node.pending, |refs| if fold {
+                    scheduler.refresh_folded(refs)
+                } else {
+                    scheduler.refresh(refs, now)
+                });
+            }
+            node.plan.sched_ns = t.elapsed().as_nanos();
+        }
+
+        // phase 2: per-node planning (index maintenance, top-k, victim
+        // ranking) — reads only shared snapshots, writes only its node
+        if self.incremental {
+            let table = &self.table;
+            let folded = self.shaper.as_deref().and_then(|s| s.as_folded());
+            let preemption = &self.cfg.preemption;
+            let rank = preemption.can_fire();
+            let max_batch = self.cfg.max_batch;
+            match &self.shards {
+                Some(pool) => {
+                    let per = self.nodes.len().div_ceil(pool.shards());
+                    let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = self
+                        .nodes
+                        .chunks_mut(per)
+                        .enumerate()
+                        .map(|(ci, chunk)| {
+                            let f: Box<dyn FnOnce() + Send + '_> =
+                                Box::new(move || {
+                                    for ns in chunk.iter_mut() {
+                                        if !ns.plan.ready {
+                                            continue;
+                                        }
+                                        ns.plan.shard = ci;
+                                        plan_incremental(ns, table, folded,
+                                                         preemption, rank,
+                                                         max_batch);
+                                    }
+                                });
+                            f
+                        })
+                        .collect();
+                    pool.run(tasks);
+                }
+                None => {
+                    for ns in self.nodes.iter_mut() {
+                        if ns.plan.ready {
+                            plan_incremental(ns, table, folded, preemption,
+                                             rank, max_batch);
+                        }
+                    }
+                }
+            }
+        } else {
+            // rebuild reference path: serial (the shaper may mutate its
+            // memo per shape() call)
+            for w in 0..self.cfg.workers {
+                if self.nodes[w].plan.ready {
+                    self.plan_rebuild(w, now);
+                }
+            }
+        }
+
+        // phase 3 (serial, ascending node order): admit, record, execute
+        let mut dispatched = 0;
+        let mut failed: Option<anyhow::Error> = None;
+        for w in 0..self.cfg.workers {
+            if !self.nodes[w].plan.ready {
+                continue;
+            }
+            self.nodes[w].plan.ready = false;
+            if failed.is_some() {
+                // an earlier window already failed the round: return this
+                // node's planned (already popped) work to its pending
+                // list so no job is lost
+                self.spill_planned(w);
+                continue;
+            }
+            match self.execute_planned(w, now) {
                 Ok(()) => dispatched += 1,
                 Err(err) => {
                     // the hand-off already spilled the window back into
-                    // `queued[w]`; if the worker died under our feet and
-                    // failover is on, re-home its jobs and keep serving
+                    // the node's pending list; if the worker died under
+                    // our feet and failover is on, re-home its jobs and
+                    // keep serving
                     let lost = match &self.backend {
                         Backend::Pool(p) => !p.worker_alive(w),
                         Backend::Inline(_) => false,
                     };
                     if self.failover && lost {
-                        self.fail_over(w, now)?;
+                        if let Err(e) = self.fail_over(w, now) {
+                            failed = Some(e);
+                        }
                     } else {
-                        return Err(err);
+                        failed = Some(err);
                     }
                 }
             }
+        }
+        if let Some(err) = failed {
+            return Err(err);
         }
         Ok(dispatched)
     }
@@ -856,14 +1131,23 @@ impl<'a> Coordinator<'a> {
 
         let mut moved = std::mem::take(&mut self.pending_scratch);
         moved.clear();
-        moved.append(&mut self.queued[w]);
         {
+            let node = &mut self.nodes[w];
+            moved.append(&mut node.pending);
             let mut order = std::mem::take(&mut self.order_scratch);
-            self.buffer.drain_sorted_into(w, &mut order);
+            order.clear();
+            match &mut node.shaped {
+                Some(tq) => tq.drain_sorted_into(&mut order),
+                None => {
+                    while let Some(e) = node.flat.pop() {
+                        order.push(e);
+                    }
+                }
+            }
             moved.extend(order.iter().map(|e| e.id));
             self.order_scratch = order;
+            node.warm.clear();
         }
-        self.warm[w].clear();
         for &id in &moved {
             self.table[id].engine_admitted = false;
             // the prompt must travel again to wherever the job lands
@@ -871,7 +1155,7 @@ impl<'a> Coordinator<'a> {
             self.state.on_finish(w);
             let node = self.lb.assign_excluding(&mut self.state, &self.dead);
             self.table[id].node = Some(node);
-            self.queued[node].push(id);
+            self.nodes[node].pending.push(id);
         }
         let rehomed = moved.len();
         self.pending_scratch = moved;
@@ -883,179 +1167,96 @@ impl<'a> Coordinator<'a> {
         Ok(())
     }
 
-    /// One window on node `w`, incremental path: re-key only the pending
-    /// jobs, top-k select against the persistent index, rank victims over
-    /// the engine-relevant (warm ∪ batch) set only.
-    fn dispatch_window_incremental(&mut self, w: usize, now: f64)
-                                   -> Result<()> {
-        let t_sched = Instant::now();
-        self.decision_depth = self.queued[w].len() + self.buffer.len(w);
-
-        // fold pending (changed) jobs into the index: their folded keys
-        // are recomputed — cache-hitting unless the job actually produced
-        // tokens since its last prediction — and everything already in the
-        // heap keeps its key untouched
-        let mut pending = std::mem::take(&mut self.pending_scratch);
-        pending.clear();
-        pending.append(&mut self.queued[w]);
-        if !pending.is_empty() {
-            let (table, scheduler) = (&mut self.table, &mut *self.scheduler);
-            table.with_mut_refs(&pending,
-                                |refs| scheduler.refresh_folded(refs));
-        }
-        for &id in &pending {
-            let j = &self.table[id];
-            self.buffer.push(w, Entry {
-                priority: j.priority.unwrap_or(f64::MAX),
-                arrival_ms: j.arrival_ms,
-                id,
-            });
-            if j.engine_admitted {
-                self.warm[w].insert(id);
-            }
-        }
-        self.pending_scratch = pending;
-
-        // top-k partial selection: k pops, the rest never moves
-        let engine_cap = self.backend.max_batch(w);
-        self.decision_cap = engine_cap;
-        let mut batch_entries = std::mem::take(&mut self.order_scratch);
-        self.batcher.select_into(&mut self.buffer, w, engine_cap,
-                                 &mut batch_entries);
-        for e in &batch_entries {
-            self.warm[w].remove(&e.id);
-        }
-        let batch: Vec<JobId> = batch_entries.iter().map(|e| e.id).collect();
-
-        // preemption victim ordering over the engine-relevant set only:
-        // the batch plus queued jobs that still hold engine KV state.
-        // Jobs the engine has never admitted can't be evicted, and the
-        // engine skips unknown ids, so the filtered ranking drives the
-        // exact same eviction choices as the old full-queue ranking.
-        let rank = self.cfg.preemption.can_fire();
-        let mut victims = std::mem::take(&mut self.victims_scratch);
-        victims.clear();
-        if rank {
-            let mut ve = std::mem::take(&mut self.victim_entries_scratch);
-            ve.clear();
-            ve.extend_from_slice(&batch_entries);
-            for &id in &self.warm[w] {
-                let j = &self.table[id];
-                ve.push(Entry {
-                    priority: j.priority.unwrap_or(f64::MAX),
-                    arrival_ms: j.arrival_ms,
-                    id,
-                });
-            }
-            // ascending (priority, arrival, id) — Entry's total order is
-            // reversed for the min-heap, so highest-priority-first is the
-            // reverse of Ord; one comparator shared with the heap keeps
-            // this ranking and the index order in lockstep
-            ve.sort_unstable_by(|a, b| b.cmp(a));
-            let mut ranked = std::mem::take(&mut self.ranked_scratch);
-            ranked.clear();
-            ranked.extend(ve.iter()
-                .map(|e| (e.id, self.table[e.id].preemptions)));
-            self.cfg.preemption.victim_order_into(&ranked, &mut victims);
-            self.ranked_scratch = ranked;
-            self.victim_entries_scratch = ve;
-        }
-        self.victims_scratch = victims;
-        self.order_scratch = batch_entries;
-
-        self.execute_window(w, now, batch, rank, t_sched,
-                            SpillOnError::BatchOnly)
-    }
-
-    /// One window on node `w`, rebuild path (shaper registered or forced):
-    /// re-key and re-sort the entire pool, rank victims over the full
-    /// queue — Algorithm 1 as written, through reusable scratch buffers.
+    /// Plan one window on node `w`, rebuild path (non-foldable shaper or
+    /// forced): re-key and re-sort the entire pool, rank victims over the
+    /// full queue — Algorithm 1 as written, through reusable buffers.
     ///
-    /// Key choice: a shaper gets the *aged* priority as its base (its
-    /// whole point is now-relative shaping); a forced rebuild without a
-    /// shaper uses the same *folded* keys as the incremental path, so the
-    /// two paths compare bit-for-bit — not merely algebraically — even
-    /// with aging enabled (aged and folded keys order identically in
-    /// exact arithmetic, but could split an f64-rounding near-tie).
-    fn dispatch_window_rebuild(&mut self, w: usize, now: f64) -> Result<()> {
-        let t_sched = Instant::now();
-        self.decision_depth = self.queued[w].len() + self.buffer.len(w);
+    /// Key choice: a *foldable* shaper keys through the same
+    /// `shape_folded` values as the incremental path, so forced-rebuild
+    /// reference runs compare bit-for-bit even under shaping.  A
+    /// non-foldable shaper gets the *aged* priority as its base (its
+    /// whole point is now-relative shaping).  A forced rebuild without a
+    /// shaper uses the folded keys — aged and folded keys order
+    /// identically in exact arithmetic, but could split an f64-rounding
+    /// near-tie, so the reference never mixes key kinds with the path it
+    /// is compared against.
+    fn plan_rebuild(&mut self, w: usize, now: f64) {
+        let t = Instant::now();
+        let fold = self.shaper.as_ref()
+            .map_or(true, |s| s.as_folded().is_some());
 
-        // refresh priorities of every queued job on this node: disjoint
-        // slab references, no per-iteration map rebuild or cloning
-        let mut pending = std::mem::take(&mut self.pending_scratch);
-        pending.clear();
-        pending.append(&mut self.queued[w]);
-        {
-            let (table, scheduler) = (&mut self.table, &mut *self.scheduler);
-            let shaped = self.shaper.is_some();
-            table.with_mut_refs(&pending, |refs| if shaped {
-                scheduler.refresh(refs, now)
-            } else {
-                scheduler.refresh_folded(refs)
-            });
-        }
-
-        // rebuild this node's priority queue and drain it sorted; an
-        // optional shaper (SLO policy) adjusts each base priority
+        // re-key every job in the pool (phase 1 already refreshed the
+        // bases); an optional shaper adjusts each base priority
+        let mut pending = std::mem::take(&mut self.nodes[w].pending);
         for &id in &pending {
-            let (priority, arrival_ms) = {
+            let entry = {
                 let j = &self.table[id];
                 let base = j.priority.unwrap_or(f64::MAX);
-                let shaped = match self.shaper.as_mut() {
+                let priority = match self.shaper.as_mut() {
+                    Some(s) if fold => {
+                        s.as_folded().unwrap().shape_folded(j, base)
+                    }
                     Some(s) => s.shape(j, base, now),
                     None => base,
                 };
-                (shaped, j.arrival_ms)
+                Entry { priority, arrival_ms: j.arrival_ms, id }
             };
-            self.buffer.push(w, Entry { priority, arrival_ms, id });
+            self.nodes[w].flat.push(entry);
         }
-        self.pending_scratch = pending;
-        let mut full_order = std::mem::take(&mut self.order_scratch);
-        self.buffer.drain_sorted_into(w, &mut full_order);
+        pending.clear();
+        self.nodes[w].pending = pending;
 
-        // preemption victim ordering for the engine (skipped when the
-        // per-window eviction budget is zero: the engine checks the budget
-        // before ever consulting the ranking)
+        // drain fully sorted (highest priority first); the remainder past
+        // the batch prefix becomes the node's new pool
+        let mut order = std::mem::take(&mut self.nodes[w].plan.batch);
+        order.clear();
+        while let Some(e) = self.nodes[w].flat.pop() {
+            order.push(e);
+        }
+
         let rank = self.cfg.preemption.can_fire();
-        let mut victims = std::mem::take(&mut self.victims_scratch);
-        victims.clear();
+        let node = &mut self.nodes[w];
+        // preemption victim ordering for the engine (skipped when the
+        // per-window eviction budget is zero: the engine checks the
+        // budget before ever consulting the ranking)
+        node.plan.victims.clear();
         if rank {
-            let mut ranked = std::mem::take(&mut self.ranked_scratch);
-            ranked.clear();
-            ranked.extend(full_order.iter()
-                .map(|e| (e.id, self.table[e.id].preemptions)));
-            self.cfg.preemption.victim_order_into(&ranked, &mut victims);
-            self.ranked_scratch = ranked;
+            node.plan.ranked.clear();
+            for e in &order {
+                node.plan.ranked.push((e.id, self.table[e.id].preemptions));
+            }
+            self.cfg.preemption.victim_order_into(&node.plan.ranked,
+                                                  &mut node.plan.victims);
         }
-        self.victims_scratch = victims;
 
-        // form the batch from the highest-priority prefix; the sorted
-        // remainder becomes the node's new pool
-        let take = self.cfg.max_batch.min(self.backend.max_batch(w));
-        self.decision_cap = take;
-        let batch: Vec<JobId> =
-            full_order.iter().take(take).map(|e| e.id).collect();
-        self.order_scratch = full_order;
-
-        self.execute_window(w, now, batch, rank, t_sched,
-                            SpillOnError::FullOrder)
+        // form the batch from the highest-priority prefix
+        let take = self.cfg.max_batch.min(node.plan.engine_cap);
+        node.plan.cap = take;
+        let cut = take.min(order.len());
+        node.plan.rest.clear();
+        node.plan.rest.extend_from_slice(&order[cut..]);
+        order.truncate(cut);
+        node.plan.batch = order;
+        node.plan.rank = rank;
+        node.plan.spill = SpillOnError::FullOrder;
+        node.plan.sched_ns += t.elapsed().as_nanos();
     }
 
-    /// Shared tail of both dispatch paths: admit fresh batch members,
-    /// account scheduling overhead, notify sinks, and execute the window
-    /// inline or ship it to the worker's pool thread.  `rank` says whether
-    /// a victim ranking was built this window (it lives in
-    /// `victims_scratch`); `spill` says what to return to the node's pool
-    /// if the engine errors so no job is ever lost.
-    fn execute_window(&mut self, w: usize, now: f64, batch: Vec<JobId>,
-                      rank: bool, t_sched: Instant, spill: SpillOnError)
-                      -> Result<()> {
+    /// Apply one planned window on node `w` (serial phase 3): admit fresh
+    /// batch members, account scheduling overhead, notify sinks, and
+    /// execute the window inline or ship it to the worker's pool thread.
+    /// On error the plan is spilled back into the node's pending list
+    /// first, so no job is ever lost.
+    fn execute_planned(&mut self, w: usize, now: f64) -> Result<()> {
+        let t_apply = Instant::now();
+        let rank = self.nodes[w].plan.rank;
         if rank {
             if let Backend::Inline(engines) = &mut self.backend {
-                engines[w].set_priority_order(&self.victims_scratch);
+                engines[w].set_priority_order(&self.nodes[w].plan.victims);
             } // pooled: the order ships inside the RunWindow command
         }
+        let batch: Vec<JobId> =
+            self.nodes[w].plan.batch.iter().map(|e| e.id).collect();
 
         // admit + (modelled) prompt transfer
         let mut admits: Vec<SeqSpec> = Vec::new();
@@ -1080,7 +1281,7 @@ impl<'a> Coordinator<'a> {
                         if let Err(err) = engines[w].admit(spec) {
                             // restore the pool so the coordinator stays
                             // consistent for callers that outlive the error
-                            self.spill_window(w, &batch, spill);
+                            self.spill_planned(w);
                             return Err(err);
                         }
                     }
@@ -1093,17 +1294,20 @@ impl<'a> Coordinator<'a> {
             }
             self.batcher.mark_prompt_sent(w, id, prompt_tokens);
         }
-        let sched_ns = t_sched.elapsed().as_nanos();
+        let sched_ns =
+            self.nodes[w].plan.sched_ns + t_apply.elapsed().as_nanos();
         self.sched_overhead_ns += sched_ns;
 
         // flight-recorder decision record: what the queue looked like, who
         // was picked (with the folded-key range actually compared), who
-        // would be evicted first, and what the decision cost.  Fired
-        // before the victims move into a pooled RunWindow command below.
+        // would be evicted first, which shard planned it, and what the
+        // decision cost.  Fired before the victims move into a pooled
+        // RunWindow command below.
         {
+            let plan = &self.nodes[w].plan;
             let mut key_min = f64::NAN;
             let mut key_max = f64::NAN;
-            for e in self.order_scratch.iter().take(batch.len()) {
+            for e in &plan.batch {
                 if !(e.priority >= key_min) {
                     key_min = e.priority;
                 }
@@ -1113,12 +1317,13 @@ impl<'a> Coordinator<'a> {
             }
             let d = DecisionRecord {
                 node: w,
-                window: self.iterations,
+                window: plan.window,
                 now_ms: now,
-                queue_depth: self.decision_depth,
+                queue_depth: plan.depth,
                 batch: &batch,
-                batch_cap: self.decision_cap,
-                victims: &self.victims_scratch,
+                batch_cap: plan.cap,
+                victims: &plan.victims,
+                shard: plan.shard,
                 key_min,
                 key_max,
                 sched_overhead_ms: sched_ns as f64 / 1e6,
@@ -1132,6 +1337,7 @@ impl<'a> Coordinator<'a> {
         }
 
         // execute one scheduling window
+        let window = self.nodes[w].plan.window;
         let raw_batch: Vec<u64> = batch.iter().map(|id| id.raw()).collect();
         if matches!(self.backend, Backend::Pool(_)) {
             // hand the window to the worker's thread; the outcome comes
@@ -1140,10 +1346,9 @@ impl<'a> Coordinator<'a> {
                 Backend::Pool(pool) => pool.send(w, WorkerCmd::RunWindow {
                     admits: std::mem::take(&mut admits),
                     // move the ranking into the command (no per-window
-                    // copy); the scratch is rebuilt from scratch next
-                    // window anyway
+                    // copy); the plan rebuilds it next window anyway
                     priority_order: if rank {
-                        std::mem::take(&mut self.victims_scratch)
+                        std::mem::take(&mut self.nodes[w].plan.victims)
                     } else {
                         Vec::new()
                     },
@@ -1153,7 +1358,7 @@ impl<'a> Coordinator<'a> {
                     // execute measurement so the timelines stitch; omitted
                     // for workers that didn't negotiate tracing
                     trace: if pool.trace_capable(w) {
-                        Some(self.iterations)
+                        Some(window)
                     } else {
                         None
                     },
@@ -1161,10 +1366,10 @@ impl<'a> Coordinator<'a> {
                 Backend::Inline(_) => unreachable!(),
             };
             if let Err(err) = sent {
-                self.spill_window(w, &batch, spill);
+                self.spill_planned(w);
                 return Err(err);
             }
-            self.requeue_rest(w, batch.len(), spill);
+            self.requeue_planned_rest(w);
             for &id in &batch {
                 self.table[id].state = JobState::Running;
             }
@@ -1178,12 +1383,12 @@ impl<'a> Coordinator<'a> {
                 Ok(o) => o,
                 Err(err) => {
                     // as above: no job may be lost on an engine error
-                    self.spill_window(w, &batch, spill);
+                    self.spill_planned(w);
                     return Err(err);
                 }
             };
 
-            self.requeue_rest(w, batch.len(), spill);
+            self.requeue_planned_rest(w);
             for &id in &batch {
                 self.table[id].state = JobState::Running;
             }
@@ -1204,34 +1409,35 @@ impl<'a> Coordinator<'a> {
         Ok(())
     }
 
-    /// Error recovery: return this window's jobs to the node's pending
-    /// list.  Rebuild mode drained the whole pool into `order_scratch`, so
-    /// everything goes back; incremental mode only popped the batch — the
-    /// remainder never left the index.
-    fn spill_window(&mut self, w: usize, batch: &[JobId], spill: SpillOnError) {
-        match spill {
-            SpillOnError::FullOrder => {
-                let order = std::mem::take(&mut self.order_scratch);
-                self.queued[w].extend(order.iter().map(|e| e.id));
-                self.order_scratch = order;
+    /// Error recovery: return this window's planned jobs to the node's
+    /// pending list.  Rebuild mode drained the whole pool into the plan
+    /// (batch + rest), so everything goes back; incremental mode only
+    /// popped the batch — the remainder never left the index.
+    fn spill_planned(&mut self, w: usize) {
+        let node = &mut self.nodes[w];
+        for e in &node.plan.batch {
+            node.pending.push(e.id);
+        }
+        node.plan.batch.clear();
+        if let SpillOnError::FullOrder = node.plan.spill {
+            for e in &node.plan.rest {
+                node.pending.push(e.id);
             }
-            SpillOnError::BatchOnly => {
-                self.queued[w].extend(batch.iter().copied());
-            }
+            node.plan.rest.clear();
         }
     }
 
     /// After a successful hand-off: in rebuild mode the sorted remainder
-    /// (everything past the batch prefix) becomes the node's new pool (the
-    /// monolith instead re-scanned the old queue with `batch_ids.contains`
-    /// per element); in incremental mode the remainder is still keyed in
-    /// the index and nothing needs re-queueing.
-    fn requeue_rest(&mut self, w: usize, batch_len: usize,
-                    spill: SpillOnError) {
-        if let SpillOnError::FullOrder = spill {
-            let order = std::mem::take(&mut self.order_scratch);
-            self.queued[w].extend(order.iter().skip(batch_len).map(|e| e.id));
-            self.order_scratch = order;
+    /// (everything past the batch prefix) becomes the node's new pool; in
+    /// incremental mode the remainder is still keyed in the index and
+    /// nothing needs re-queueing.
+    fn requeue_planned_rest(&mut self, w: usize) {
+        let node = &mut self.nodes[w];
+        if let SpillOnError::FullOrder = node.plan.spill {
+            for e in &node.plan.rest {
+                node.pending.push(e.id);
+            }
+            node.plan.rest.clear();
         }
     }
 
@@ -1338,7 +1544,7 @@ impl<'a> Coordinator<'a> {
             // into `warm` via the pending list) — pruning here keeps the
             // victim ranking proportional to the *resident* set even in
             // preemption-heavy regimes
-            self.warm[node].remove(&pid);
+            self.nodes[node].warm.remove(&pid);
             self.total_preemptions += 1;
             events.push(PendingOutcomeEvent::Preempted(pid));
         }
@@ -1373,7 +1579,7 @@ impl<'a> Coordinator<'a> {
                 self.scheduler.observe_completion(prompt_len, total_len);
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
-                self.warm[node].remove(&id);
+                self.nodes[node].warm.remove(&id);
                 self.backend.remove(node, out.id);
                 let j = &self.table[id];
                 let stats = FinishStats {
@@ -1387,7 +1593,7 @@ impl<'a> Coordinator<'a> {
                 events.push(PendingOutcomeEvent::Finished(id, stats));
             } else {
                 self.table[id].state = JobState::Queued;
-                self.queued[node].push(id);
+                self.nodes[node].pending.push(id);
             }
         }
         // batch jobs that produced no output (couldn't be staged) go back
@@ -1395,7 +1601,7 @@ impl<'a> Coordinator<'a> {
             let j = &mut self.table[id];
             if j.state == JobState::Running {
                 j.state = JobState::Queued;
-                self.queued[node].push(id);
+                self.nodes[node].pending.push(id);
             }
         }
         // deliver: resolve metas against the now-quiescent table and hand
@@ -1490,4 +1696,151 @@ impl<'a> Coordinator<'a> {
         }
         Ok(())
     }
+}
+
+/// Plan one window on a node, incremental path — the (possibly sharded)
+/// phase-2 body.  Re-keys only the pending jobs (plus the lanes of
+/// tenants whose shaping epoch moved, when a foldable shaper is set),
+/// top-k selects against the persistent index, and ranks preemption
+/// victims over the engine-relevant (warm ∪ batch) set only.
+///
+/// A free function on purpose: it takes the node's own state `&mut` and
+/// everything shared strictly `&` (job table, folded-shaper snapshot,
+/// preemption config), which is exactly the contract that lets
+/// [`DispatchShards`] run disjoint node chunks concurrently without
+/// changing any result.
+fn plan_incremental(ns: &mut NodeSched, table: &JobTable,
+                    folded: Option<&dyn FoldedShaper>,
+                    preemption: &PreemptionPolicy, rank: bool,
+                    max_batch: usize) {
+    let t = Instant::now();
+
+    // fold pending (changed) jobs into the index: their folded keys were
+    // recomputed in phase 1, the shaper offset (if any) is applied here,
+    // and everything already in the index keeps its key untouched —
+    // except lanes whose tenant epoch moved, which re-key wholesale from
+    // their stored folded bases
+    match (&mut ns.shaped, folded) {
+        (Some(tq), Some(sh)) => {
+            tq.rekey_stale(sh, table);
+            for i in 0..ns.pending.len() {
+                let id = ns.pending[i];
+                let j = &table[id];
+                let base = j.priority.unwrap_or(f64::MAX);
+                let key = sh.shape_folded(j, base);
+                let epoch = sh.tenant_epoch(j.tenant.as_deref());
+                tq.push(j.tenant.as_deref(), epoch, ShapedEntry {
+                    entry: Entry {
+                        priority: key,
+                        arrival_ms: j.arrival_ms,
+                        id,
+                    },
+                    base_folded: base,
+                });
+                if j.engine_admitted {
+                    ns.warm.insert(id, WarmEntry {
+                        key,
+                        base_folded: base,
+                        arrival_ms: j.arrival_ms,
+                        epoch,
+                    });
+                }
+            }
+        }
+        _ => {
+            for i in 0..ns.pending.len() {
+                let id = ns.pending[i];
+                let j = &table[id];
+                let key = j.priority.unwrap_or(f64::MAX);
+                ns.flat.push(Entry {
+                    priority: key,
+                    arrival_ms: j.arrival_ms,
+                    id,
+                });
+                if j.engine_admitted {
+                    ns.warm.insert(id, WarmEntry {
+                        key,
+                        base_folded: key,
+                        arrival_ms: j.arrival_ms,
+                        epoch: 0,
+                    });
+                }
+            }
+        }
+    }
+    ns.pending.clear();
+
+    // top-k partial selection: k pops, the rest never moves
+    let k = max_batch.min(ns.plan.engine_cap);
+    ns.plan.batch.clear();
+    match &mut ns.shaped {
+        Some(tq) => {
+            while ns.plan.batch.len() < k {
+                match tq.pop_best() {
+                    Some(se) => ns.plan.batch.push(se.entry),
+                    None => break,
+                }
+            }
+        }
+        None => {
+            while ns.plan.batch.len() < k {
+                match ns.flat.pop() {
+                    Some(e) => ns.plan.batch.push(e),
+                    None => break,
+                }
+            }
+        }
+    }
+    for i in 0..ns.plan.batch.len() {
+        let id = ns.plan.batch[i].id;
+        ns.warm.remove(&id);
+    }
+
+    // preemption victim ordering over the engine-relevant set only: the
+    // batch plus queued jobs that still hold engine KV state.  Jobs the
+    // engine has never admitted can't be evicted, and the engine skips
+    // unknown ids, so the filtered ranking drives the exact same eviction
+    // choices as a full-queue ranking.  Warm keys are cached; a warm
+    // job whose tenant epoch moved re-shapes from its stored folded base
+    // (same inputs as the index re-key, so ranking and index order stay
+    // in lockstep).
+    ns.plan.victims.clear();
+    if rank {
+        ns.plan.ventries.clear();
+        for i in 0..ns.plan.batch.len() {
+            let e = ns.plan.batch[i];
+            ns.plan.ventries.push(e);
+        }
+        for (&id, we) in ns.warm.iter_mut() {
+            if let Some(sh) = folded {
+                let cur = sh.tenant_epoch(table[id].tenant.as_deref());
+                if we.epoch != cur {
+                    we.key = sh.shape_folded(&table[id], we.base_folded);
+                    we.epoch = cur;
+                }
+            }
+            ns.plan.ventries.push(Entry {
+                priority: we.key,
+                arrival_ms: we.arrival_ms,
+                id,
+            });
+        }
+        // ascending (priority, arrival, id) — Entry's total order is
+        // reversed for the min-heap, so highest-priority-first is the
+        // reverse of Ord; one comparator shared with the index keeps this
+        // ranking and the pop order in lockstep (and makes the unstable
+        // sort deterministic: ids are unique, so the order is total)
+        ns.plan.ventries.sort_unstable_by(|a, b| b.cmp(a));
+        ns.plan.ranked.clear();
+        for i in 0..ns.plan.ventries.len() {
+            let e = ns.plan.ventries[i];
+            ns.plan.ranked.push((e.id, table[e.id].preemptions));
+        }
+        preemption.victim_order_into(&ns.plan.ranked, &mut ns.plan.victims);
+    }
+    ns.plan.rank = rank;
+    ns.plan.cap = ns.plan.engine_cap;
+    ns.plan.rest.clear();
+    ns.plan.spill = SpillOnError::BatchOnly;
+    ns.plan.sched_ns += t.elapsed().as_nanos();
 }

@@ -1,0 +1,182 @@
+//! DispatchShards: a small persistent thread pool the coordinator uses to
+//! plan per-node scheduling work (index maintenance, top-k pops, victim
+//! ranking) in parallel — per-node shards over `std::sync::mpsc` channels,
+//! mirroring the `WorkerPool` idiom from `cluster/pool.rs`.
+//!
+//! Determinism: the pool only ever runs *per-node* planning closures whose
+//! inputs are that node's own state plus read-only snapshots (job table,
+//! folded shaper memo), and whose outputs land in that node's own plan
+//! slot.  The coordinator then applies plans serially in ascending node
+//! order, so reports are bit-identical regardless of shard count (asserted
+//! by the `--dispatch-shards 1|2|8` sweep in the integration suites).
+//!
+//! Threads are spawned once at coordinator build time and live for the
+//! coordinator's lifetime — per-window cost is one channel send/recv pair
+//! per shard, not a thread spawn.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A unit of planning work; always consumed before [`DispatchShards::run`]
+/// returns (see the safety argument there).
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct DispatchShards {
+    /// one command channel per shard thread
+    senders: Vec<Sender<Task>>,
+    /// completion barrier: every finished task reports here, carrying its
+    /// panic payload if it unwound
+    done_rx: Receiver<std::thread::Result<()>>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl DispatchShards {
+    /// Spawn `shards` planner threads (callers pass ≥ 2; a single shard is
+    /// run inline by the coordinator without a pool).
+    pub fn new(shards: usize) -> DispatchShards {
+        assert!(shards >= 1, "a dispatch shard pool needs at least 1 shard");
+        let (done_tx, done_rx) = channel();
+        let mut senders = Vec::with_capacity(shards);
+        let mut threads = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let (tx, rx) = channel::<Task>();
+            let done = done_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("elis-dispatch-shard-{i}"))
+                .spawn(move || {
+                    for task in rx {
+                        let r = catch_unwind(AssertUnwindSafe(task));
+                        if done.send(r).is_err() {
+                            break; // coordinator gone: shut down
+                        }
+                    }
+                })
+                .expect("spawn dispatch shard thread");
+            senders.push(tx);
+            threads.push(join);
+        }
+        DispatchShards { senders, done_rx, threads }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Run one task per shard slot (task `i` on thread `i % shards`) and
+    /// block until **all** of them completed.  If any task panicked, the
+    /// first payload is re-raised here — after the barrier, so no task is
+    /// still running when this frame unwinds.
+    ///
+    /// Tasks may borrow from the caller's stack: the barrier guarantees
+    /// every borrow ends before `run` returns, which is what makes the
+    /// lifetime erasure below sound.
+    pub fn run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        let n = tasks.len();
+        for (i, task) in tasks.into_iter().enumerate() {
+            // SAFETY: `run` does not return (or unwind) until the
+            // completion barrier below has observed every submitted task,
+            // so the 'scope borrows inside `task` strictly outlive its
+            // execution.  Box<dyn FnOnce> has the same layout for both
+            // lifetimes; only the bound is erased.
+            let task: Task = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(task)
+            };
+            self.senders[i % self.senders.len()]
+                .send(task)
+                .expect("dispatch shard thread alive");
+        }
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for _ in 0..n {
+            match self.done_rx.recv().expect("dispatch shard thread alive") {
+                Ok(()) => {}
+                Err(payload) => {
+                    panic.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for DispatchShards {
+    fn drop(&mut self) {
+        // closing the command channels ends each thread's recv loop
+        self.senders.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_and_blocks_until_done() {
+        let pool = DispatchShards::new(3);
+        assert_eq!(pool.shards(), 3);
+        let mut out = vec![0usize; 8];
+        {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(3)
+                .enumerate()
+                .map(|(ci, chunk)| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                        for (j, slot) in chunk.iter_mut().enumerate() {
+                            *slot = ci * 10 + j;
+                        }
+                    });
+                    f
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(out, vec![0, 1, 2, 10, 11, 12, 20, 21]);
+    }
+
+    #[test]
+    fn reusable_across_rounds() {
+        let pool = DispatchShards::new(2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                .map(|_| {
+                    let f: Box<dyn FnOnce() + Send + '_> = Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    });
+                    f
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn task_panic_resumes_on_caller_after_barrier() {
+        let pool = DispatchShards::new(2);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| panic!("shard boom")),
+                Box::new(|| {}),
+            ];
+            pool.run(tasks);
+        }));
+        assert!(r.is_err(), "panic must surface on the caller");
+        // the pool survives a panicked task
+        let ok = AtomicUsize::new(0);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        })];
+        pool.run(tasks);
+        assert_eq!(ok.load(Ordering::SeqCst), 1);
+    }
+}

@@ -144,6 +144,10 @@ USAGE: elis <subcommand> [--flags]
                     snapshot and per-tenant deadline misses)
                     --wfq (weighted-fair tenant shaper over the live
                     per-tenant token counters; composes with --slo-ms)
+                    --dispatch-shards auto|N (serve + simulate: plan
+                    per-node scheduling on N persistent shard threads;
+                    auto sizes from the host, 1 = inline; reports are
+                    bit-identical at any shard count)
   trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
   preempt-profile   Table 6 reproduction: --model(all|abbrev)
   gen-trace         standalone request generator: --n --rps --out file
@@ -151,6 +155,17 @@ USAGE: elis <subcommand> [--flags]
                     with serve/simulate --trace file
   k8s-manifests     --workers --policy --image
 ";
+
+/// Parse `--dispatch-shards auto|N` (0 = auto-size from the host).
+fn parse_dispatch_shards(args: &Args) -> Result<usize> {
+    let v = args.str("dispatch-shards", "auto");
+    if v == "auto" {
+        return Ok(0);
+    }
+    v.parse::<usize>().map_err(|_| {
+        anyhow!("--dispatch-shards expects 'auto' or a shard count, got '{v}'")
+    })
+}
 
 /// Parse a `--tenants` spec: comma-separated `name` or `name=weight`.
 fn parse_tenant_spec(items: &[String]) -> Result<Vec<(String, u32)>> {
@@ -437,6 +452,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if listen.is_some() { 0 } else { 1_000_000 },
         ),
         idle_tick_ms: args.f64("idle-tick-ms", 10.0),
+        dispatch_shards: parse_dispatch_shards(args)?,
     };
     let mut builder = register_telemetry(CoordinatorBuilder::from_config(cfg),
                                          &telemetry, args.bool("wfq"),
@@ -792,6 +808,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             clock: ClockMode::Virtual,
             seed: seed + s as u64,
             max_iterations: 10_000_000,
+            dispatch_shards: parse_dispatch_shards(args)?,
             ..Default::default()
         };
         let report = register_telemetry(CoordinatorBuilder::from_config(cfg),

@@ -488,6 +488,7 @@ mod tests {
             batch: &batch,
             batch_cap: cap,
             victims: &[],
+            shard: 0,
             key_min: f64::NAN,
             key_max: f64::NAN,
             sched_overhead_ms: 0.0,
@@ -526,6 +527,7 @@ mod tests {
             batch: &batch,
             batch_cap: 2,
             victims: &[],
+            shard: 0,
             key_min: f64::NAN,
             key_max: f64::NAN,
             sched_overhead_ms: 0.0,

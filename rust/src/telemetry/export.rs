@@ -167,6 +167,17 @@ pub fn render(state: &mut TelemetryState) -> String {
            "counter");
     sample(&mut out, "elis_sched_overhead_ms_total", &[],
            state.sched_overhead_ms_total);
+    // the per-shard split only renders once decisions carried shard ids
+    // (labelled samples sit beside the unlabelled total, same family)
+    for (i, ms) in state.sched_overhead_ms_by_shard.iter().enumerate() {
+        sample(&mut out, "elis_sched_overhead_ms_total",
+               &[("shard", &i.to_string())], *ms);
+    }
+    header(&mut out, "elis_dispatch_shards",
+           "Dispatch shards that have planned at least one window.",
+           "gauge");
+    sample(&mut out, "elis_dispatch_shards", &[],
+           state.sched_overhead_ms_by_shard.len().max(1) as f64);
 
     // ---- per-tenant counters, gauges, and latency summaries -------------
     let tenants: Vec<(&str, &TenantStats)> =
@@ -469,6 +480,7 @@ mod tests {
             batch: &batch,
             batch_cap: 4,
             victims: &[],
+            shard: 1,
             key_min: 10.0,
             key_max: 40.0,
             sched_overhead_ms: 0.125,
@@ -479,6 +491,15 @@ mod tests {
                 "{text}");
         assert!(text.contains("elis_sched_overhead_ms_total 0.125"),
                 "{text}");
+        // the shard split renders beside the unlabelled total: shard 0
+        // never planned (0), shard 1 carries this window's cost, and the
+        // gauge counts the observed lanes
+        assert!(text.contains("elis_sched_overhead_ms_total{shard=\"0\"} 0"),
+                "{text}");
+        assert!(text.contains(
+                    "elis_sched_overhead_ms_total{shard=\"1\"} 0.125"),
+                "{text}");
+        assert!(text.contains("elis_dispatch_shards 2"), "{text}");
         // populated_sink's predictions rank exactly like its realized
         // lengths, so the windowed tau is a clean +1
         assert!(text.contains("elis_predictor_kendall_tau 1"), "{text}");

@@ -346,6 +346,7 @@ mod tests {
             batch: &batch,
             batch_cap,
             victims: &[],
+            shard: 0,
             key_min: f64::NAN,
             key_max: f64::NAN,
             sched_overhead_ms: 0.0,

@@ -219,6 +219,10 @@ pub struct TelemetryState {
     /// scheduling-decision time accrued across every window (ms) — the
     /// coordinator's own overhead, distinct from engine service time
     pub sched_overhead_ms_total: f64,
+    /// the same overhead split by the dispatch shard that planned each
+    /// window (index = shard id, grown on demand) — shows whether sharded
+    /// planning actually balances; also how many shards were ever active
+    pub sched_overhead_ms_by_shard: Vec<f64>,
     /// coordinator time of the most recent event (drives rate windows)
     pub last_event_ms: f64,
     /// HTTP front-door gauges, when serving (see [`FrontendStats`])
@@ -236,6 +240,7 @@ impl TelemetryState {
             slo,
             predictor: PredictorStats::new(),
             sched_overhead_ms_total: 0.0,
+            sched_overhead_ms_by_shard: Vec::new(),
             last_event_ms: 0.0,
             frontend: None,
             shadow: None,
@@ -449,6 +454,10 @@ impl EventSink for TelemetrySink {
         let mut st = self.state.lock().unwrap();
         st.touch(d.now_ms);
         st.sched_overhead_ms_total += d.sched_overhead_ms;
+        if st.sched_overhead_ms_by_shard.len() <= d.shard {
+            st.sched_overhead_ms_by_shard.resize(d.shard + 1, 0.0);
+        }
+        st.sched_overhead_ms_by_shard[d.shard] += d.sched_overhead_ms;
         st.node_mut(d.node).queue_depth = d.queue_depth as u64;
     }
 
@@ -652,6 +661,7 @@ mod tests {
             batch: &batch,
             batch_cap: 4,
             victims: &[],
+            shard: 0,
             key_min: 1.0,
             key_max: 2.0,
             sched_overhead_ms: 0.25,
@@ -660,9 +670,14 @@ mod tests {
         d.window = 1;
         d.now_ms = 20.0;
         d.queue_depth = 3; // gauge: later decision replaces, not adds
+        d.shard = 2; // shard lane grows on demand, accrues separately
         handle.on_window_decision(&d);
         sink.with_state(|st| {
             assert!((st.sched_overhead_ms_total - 0.5).abs() < 1e-9);
+            assert_eq!(st.sched_overhead_ms_by_shard.len(), 3);
+            assert!((st.sched_overhead_ms_by_shard[0] - 0.25).abs() < 1e-9);
+            assert!((st.sched_overhead_ms_by_shard[1]).abs() < 1e-9);
+            assert!((st.sched_overhead_ms_by_shard[2] - 0.25).abs() < 1e-9);
             assert_eq!(st.nodes[1].queue_depth, 3);
             assert_eq!(st.nodes[0].queue_depth, 0);
             assert!((st.last_event_ms - 20.0).abs() < 1e-9);

@@ -20,16 +20,20 @@
 //! Tenants whose budget is 0/∞ are exempt: their jobs keep the base
 //! scheduler priority, offset behind all deadline-carrying work.
 //!
-//! Cost note: slack drifts with `now_ms`, so registering any shaper makes
-//! the coordinator re-shape **every queued job each scheduling iteration**
-//! (the per-window rebuild path) instead of the incremental O(k log n)
-//! index it uses shaper-less.  Keep `shape` cheap — per-round state like
-//! the pressure memo below is the pattern.
+//! Cost note: with the default configuration (`shed_after = ∞`) the policy
+//! **folds** ([`FoldedShaper`]): slack EDF keys all drift with `now_ms` at
+//! the same rate within a tenant, so dispatch orders by the time-invariant
+//! key `(arrival + slo) / pressure` instead and keeps the incremental
+//! O(k log n) index — re-keying only the lanes of tenants whose live
+//! pressure actually moved (tracked by per-tenant epochs bumped in
+//! [`begin_round`](PriorityShaper::begin_round)).  Enabling `shed_after`
+//! introduces an age threshold that is not affine in `now`, which drops
+//! the policy back to the per-window rebuild path.
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::job::Job;
-use crate::coordinator::scheduler::PriorityShaper;
+use crate::coordinator::scheduler::{FoldedShaper, PriorityShaper};
 
 use super::sink::{SloSpec, TelemetrySink, DEFAULT_TENANT};
 
@@ -49,10 +53,19 @@ pub struct SloPolicy {
     pub shed_after: f64,
     /// sketch samples required before live feedback engages
     pub min_samples: u64,
-    /// per-dispatch-round memo: pressure is identical for every job of a
-    /// tenant at one `now_ms`, so compute it once per tenant per round
-    /// instead of once per queued job (dispatch is the hot loop)
+    /// legacy per-`now_ms` memo for direct `shape` calls made outside a
+    /// coordinator dispatch round (unit tests, ad-hoc use)
     pressure_memo: (f64, BTreeMap<String, f64>),
+    /// round-keyed pressure snapshot: rebuilt once per dispatch round in
+    /// `begin_round` (one telemetry lock for *all* tenants), so wall-clock
+    /// pooled runs — where `now` is shared but many nodes dispatch in one
+    /// round — read tenant pressure exactly once per round
+    round_memo: BTreeMap<String, f64>,
+    /// round the snapshot belongs to; `None` until `begin_round` first runs
+    round: Option<u64>,
+    /// per-tenant change counters: bumped when a tenant's snapshot pressure
+    /// bits moved (the folded index re-keys exactly those lanes)
+    epochs: BTreeMap<String, u64>,
 }
 
 impl SloPolicy {
@@ -66,6 +79,9 @@ impl SloPolicy {
             shed_after: f64::INFINITY,
             min_samples: 5,
             pressure_memo: (f64::NEG_INFINITY, BTreeMap::new()),
+            round_memo: BTreeMap::new(),
+            round: None,
+            epochs: BTreeMap::new(),
         }
     }
 
@@ -82,11 +98,15 @@ impl SloPolicy {
     }
 
     /// Overload ratio for a tenant: observed p99 JCT over budget, floored
-    /// at 1 (on-track tenants get no boost).  Memoised per (now_ms,
-    /// tenant) — one sketch read per tenant per dispatch round.
+    /// at 1 (on-track tenants get no boost).  Inside a dispatch round this
+    /// reads the `begin_round` snapshot; direct calls outside any round
+    /// fall back to the legacy per-`now_ms` memo.
     fn pressure(&mut self, tenant: &str, slo_ms: f64, now_ms: f64) -> f64 {
         if !self.live_boost {
             return 1.0;
+        }
+        if self.round.is_some() {
+            return self.round_memo.get(tenant).copied().unwrap_or(1.0);
         }
         if self.pressure_memo.0 != now_ms {
             self.pressure_memo.0 = now_ms;
@@ -128,6 +148,84 @@ impl PriorityShaper for SloPolicy {
         } else {
             slack * pressure
         }
+    }
+
+    fn begin_round(&mut self, round: u64, _now_ms: f64) {
+        if self.round == Some(round) {
+            return;
+        }
+        self.round = Some(round);
+        if !self.live_boost {
+            return;
+        }
+        // one lock for every tenant's sketch, then bit-compare against the
+        // previous round's snapshot to bump only the epochs that moved
+        let min = self.min_samples;
+        let snap: Vec<(String, f64)> = self.telemetry.with_state(|st| {
+            st.tenants
+                .iter()
+                .filter(|(_, t)| t.jct_ms.count() >= min)
+                .map(|(name, t)| (name.clone(), t.jct_ms.p99()))
+                .collect()
+        });
+        let mut fresh = BTreeMap::new();
+        for (name, p99) in snap {
+            let slo_ms = self.slo.slo_for(&name);
+            if !(slo_ms > 0.0) || !slo_ms.is_finite() {
+                continue; // exempt tenant: pressure is never consulted
+            }
+            fresh.insert(name, (p99 / slo_ms).max(1.0));
+        }
+        for (name, p) in &fresh {
+            let prev = self.round_memo.get(name).copied().unwrap_or(1.0);
+            if p.to_bits() != prev.to_bits() {
+                *self.epochs.entry(name.clone()).or_insert(0) += 1;
+            }
+        }
+        // a tenant dropping out of the snapshot falls back to pressure 1.0
+        for (name, prev) in &self.round_memo {
+            if !fresh.contains_key(name) && prev.to_bits() != 1.0f64.to_bits()
+            {
+                *self.epochs.entry(name.clone()).or_insert(0) += 1;
+            }
+        }
+        self.round_memo = fresh;
+    }
+
+    fn as_folded(&self) -> Option<&dyn FoldedShaper> {
+        // the shed threshold is an age cutoff — not affine in `now` — so a
+        // shedding policy keeps the rebuild path
+        if self.shed_after.is_infinite() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl FoldedShaper for SloPolicy {
+    /// Time-invariant shaped key: pressure-scaled static EDF.  Within a
+    /// round, live slack EDF subtracts the same `now` from every deadline,
+    /// so ordering by `(arrival + slo) / pressure` is the same
+    /// earliest-deadline-first policy expressed without the drift (both
+    /// dispatch paths key with this when the policy folds).
+    fn shape_folded(&self, job: &Job, base_folded: f64) -> f64 {
+        let tenant = job.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+        let slo_ms = self.slo.slo_for(tenant);
+        if !(slo_ms > 0.0) || !slo_ms.is_finite() {
+            return EXEMPT_BAND + base_folded.clamp(-1e11, 1e11);
+        }
+        let pressure = if self.live_boost {
+            self.round_memo.get(tenant).copied().unwrap_or(1.0)
+        } else {
+            1.0
+        };
+        (job.arrival_ms + slo_ms) / pressure
+    }
+
+    fn tenant_epoch(&self, tenant: Option<&str>) -> u64 {
+        let tenant = tenant.unwrap_or(DEFAULT_TENANT);
+        self.epochs.get(tenant).copied().unwrap_or(0)
     }
 }
 
@@ -241,5 +339,64 @@ mod tests {
         assert!(a < b, "base priority still orders exempt jobs");
         assert!(p.shape(&deadline, 9.0, now) < a,
                 "deadline work outranks exempt work");
+    }
+
+    #[test]
+    fn folds_only_without_shed_and_orders_like_live_edf() {
+        let spec = SloSpec::new(60_000.0).tenant("paid", 5_000.0);
+        let (_sink, mut p) = policy(spec.clone());
+        assert!(p.as_folded().is_some(), "default policy must fold");
+        let (_sink2, shed) = policy(spec);
+        let shed = shed.shed_after(3.0);
+        assert!(shed.as_folded().is_none(), "shed threshold is not affine in now");
+
+        p.begin_round(1, 0.0);
+        let paid = job(0, Some("paid"), 100.0);
+        let free = job(1, Some("free"), 0.0);
+        let folded = p.as_folded().unwrap();
+        let (fp, ff) = (folded.shape_folded(&paid, 0.0),
+                        folded.shape_folded(&free, 0.0));
+        assert!(fp < ff, "tighter deadline wins under folded keys too");
+        // same relative order as the live slack keys at any now
+        let (lp, lf) = (p.shape(&paid, 0.0, 2_000.0),
+                        p.shape(&free, 0.0, 2_000.0));
+        assert!(lp < lf);
+    }
+
+    #[test]
+    fn epochs_move_only_when_pressure_moves() {
+        let spec = SloSpec::new(10_000.0).tenant("late", 1_000.0);
+        let (sink, mut p) = policy(spec);
+        p.begin_round(1, 0.0);
+        assert_eq!(p.tenant_epoch(Some("late")), 0);
+
+        // rounds without telemetry movement keep every epoch still
+        p.begin_round(2, 10.0);
+        assert_eq!(p.tenant_epoch(Some("late")), 0);
+
+        // feed enough finishes to engage pressure for "late"
+        let mut h = sink.clone();
+        for i in 0..6 {
+            let m = JobMeta {
+                id: JobId::new(i),
+                tenant: Some("late"),
+                arrival_ms: 0.0,
+                prompt_len: 3,
+                total_len: 50,
+            };
+            h.on_job_finished(&m, 0, &FinishStats {
+                jct_ms: 4_000.0,
+                ttft_ms: Some(50.0),
+                queue_delay_ms: 10.0,
+                service_ms: 4_000.0,
+                tokens: 50,
+                predicted_total: None,
+            }, 4_000.0);
+        }
+        p.begin_round(3, 20.0);
+        assert_eq!(p.tenant_epoch(Some("late")), 1, "pressure moved");
+        assert_eq!(p.tenant_epoch(Some("other")), 0, "unrelated tenant still");
+        p.begin_round(4, 30.0);
+        assert_eq!(p.tenant_epoch(Some("late")), 1, "no further movement");
     }
 }

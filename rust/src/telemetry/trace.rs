@@ -75,6 +75,8 @@ enum Entry {
         queue_depth: usize,
         batch: Vec<u64>,
         victims: Vec<u64>,
+        /// dispatch shard that planned the window (0 = inline)
+        shard: usize,
         key_min: f64,
         key_max: f64,
         sched_overhead_ms: f64,
@@ -231,6 +233,7 @@ impl FlightRecorder {
                     queue_depth,
                     batch,
                     victims,
+                    shard,
                     key_min,
                     key_max,
                     sched_overhead_ms,
@@ -253,6 +256,7 @@ impl FlightRecorder {
                             ("queue_depth", Json::Num(*queue_depth as f64)),
                             ("batch", ids(batch)),
                             ("victims", ids(victims)),
+                            ("shard", Json::Num(*shard as f64)),
                             // NaN (unkeyed batch) serializes as null
                             ("key_min", Json::Num(*key_min)),
                             ("key_max", Json::Num(*key_max)),
@@ -322,6 +326,7 @@ impl EventSink for FlightRecorder {
             queue_depth: d.queue_depth,
             batch: d.batch.iter().map(|id| id.raw()).collect(),
             victims: d.victims.to_vec(),
+            shard: d.shard,
             key_min: d.key_min,
             key_max: d.key_max,
             sched_overhead_ms: d.sched_overhead_ms,
@@ -456,6 +461,7 @@ mod tests {
             batch: &batch,
             batch_cap: 4,
             victims: &[],
+            shard: 0,
             key_min: 10.0,
             key_max: 10.0,
             sched_overhead_ms: 0.5,
@@ -534,6 +540,7 @@ mod tests {
             batch: &batch,
             batch_cap: 1,
             victims: &[],
+            shard: 0,
             key_min: f64::NAN,
             key_max: f64::NAN,
             sched_overhead_ms: 0.1,

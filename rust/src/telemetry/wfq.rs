@@ -17,15 +17,22 @@
 //! untouched: every job of a tenant gets the same penalty at a given
 //! dispatch round.
 //!
-//! Cost note: the fairness penalty moves with live token counters, so a
-//! registered shaper puts dispatch on the per-window rebuild path (every
-//! queued job re-shaped each iteration) rather than the shaper-less
-//! incremental index — which is why the lead is memoised per round.
+//! Cost note: the policy **folds** ([`FoldedShaper`]) whenever its inner
+//! shaper does (or there is none), keeping the coordinator's incremental
+//! O(k log n) index under shaping.  The folded key adds
+//! `strength × v(tenant)` — the tenant's *absolute* virtual service time
+//! (tokens/weight) — instead of the live lead `(v − floor).max(0)`:
+//! within any round the floor is a shared constant and the clamp never
+//! binds for a backlogged (i.e. queued-job-owning) tenant, so the folded
+//! order equals the live order while staying comparable *across* rounds.
+//! Only the lanes of tenants whose `v` moved are re-keyed, tracked by
+//! per-tenant epochs bumped in
+//! [`begin_round`](PriorityShaper::begin_round).
 
 use std::collections::BTreeMap;
 
 use crate::coordinator::job::Job;
-use crate::coordinator::scheduler::PriorityShaper;
+use crate::coordinator::scheduler::{FoldedShaper, PriorityShaper};
 
 use super::sink::{TelemetrySink, DEFAULT_TENANT};
 
@@ -39,9 +46,18 @@ pub struct WfqPolicy {
     /// tenants while the base order still breaks ties within one.
     pub strength: f64,
     inner: Option<Box<dyn PriorityShaper>>,
-    /// per-dispatch-round memo: the lead is identical for every job of a
-    /// tenant at one `now_ms`, so compute it once per tenant per round
+    /// legacy per-`now_ms` lead memo for direct `shape` calls made outside
+    /// a coordinator dispatch round (unit tests, ad-hoc use)
     memo: (f64, BTreeMap<String, f64>),
+    /// round-keyed snapshots, rebuilt once per dispatch round in
+    /// `begin_round` (one telemetry lock for all tenants): the live lead
+    /// per tenant, and the absolute virtual time `v` the folded key uses
+    round_lead: BTreeMap<String, f64>,
+    round_v: BTreeMap<String, f64>,
+    /// round the snapshots belong to; `None` until `begin_round` first runs
+    round: Option<u64>,
+    /// per-tenant change counters: bumped when a tenant's `v` bits moved
+    epochs: BTreeMap<String, u64>,
 }
 
 impl WfqPolicy {
@@ -55,6 +71,10 @@ impl WfqPolicy {
             strength: 1e6,
             inner: None,
             memo: (f64::NEG_INFINITY, BTreeMap::new()),
+            round_lead: BTreeMap::new(),
+            round_v: BTreeMap::new(),
+            round: None,
+            epochs: BTreeMap::new(),
         }
     }
 
@@ -95,22 +115,30 @@ impl WfqPolicy {
 
     /// Weighted-service lead of `tenant` over the least-served tenant
     /// that still has work queued (≥ 0; 0 = at or behind the fair share).
+    /// Inside a dispatch round this reads the `begin_round` snapshot;
+    /// direct calls outside any round fall back to the per-`now_ms` memo.
     fn lead(&mut self, tenant: &str, now_ms: f64) -> f64 {
+        if self.round.is_some() {
+            return self.round_lead.get(tenant).copied().unwrap_or(0.0);
+        }
         if self.memo.0 != now_ms {
-            self.rebuild_memo(now_ms);
+            let (_, lead) = self.snapshot();
+            self.memo = (now_ms, lead);
         }
         self.memo.1.get(tenant).copied().unwrap_or(0.0)
     }
 
-    fn rebuild_memo(&mut self, now_ms: f64) {
-        // (tenant, served tokens, has backlog) — snapshot under one lock
+    /// One-lock snapshot of every tenant's virtual service time `v`
+    /// (tokens/weight) and live lead `(v − floor).max(0)` over the
+    /// least-served *backlogged* tenant — an idle tenant must not hold the
+    /// whole system back forever.
+    fn snapshot(&self) -> (BTreeMap<String, f64>, BTreeMap<String, f64>) {
         let served: Vec<(String, u64, bool)> = self.telemetry.with_state(|st| {
             st.tenants
                 .iter()
                 .map(|(name, t)| (name.clone(), t.tokens, t.active > 0))
                 .collect()
         });
-        // virtual service time per tenant: tokens / weight
         let virt: Vec<(String, f64, bool)> = served
             .into_iter()
             .map(|(name, tokens, backlog)| {
@@ -118,17 +146,19 @@ impl WfqPolicy {
                 (name, v, backlog)
             })
             .collect();
-        // reference point: the least-served tenant *with backlog* — an
-        // idle tenant must not hold the whole system back forever
         let floor = virt
             .iter()
             .filter(|(_, _, backlog)| *backlog)
             .map(|(_, v, _)| *v)
             .fold(f64::INFINITY, f64::min);
         let floor = if floor.is_finite() { floor } else { 0.0 };
-        self.memo.0 = now_ms;
-        self.memo.1 =
-            virt.into_iter().map(|(name, v, _)| (name, (v - floor).max(0.0))).collect();
+        let mut vs = BTreeMap::new();
+        let mut lead = BTreeMap::new();
+        for (name, v, _) in virt {
+            lead.insert(name.clone(), (v - floor).max(0.0));
+            vs.insert(name, v);
+        }
+        (vs, lead)
     }
 }
 
@@ -140,6 +170,70 @@ impl PriorityShaper for WfqPolicy {
         };
         let tenant = job.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
         base + self.strength * self.lead(tenant, now_ms)
+    }
+
+    fn begin_round(&mut self, round: u64, now_ms: f64) {
+        if self.round == Some(round) {
+            return;
+        }
+        self.round = Some(round);
+        if let Some(inner) = self.inner.as_mut() {
+            inner.begin_round(round, now_ms);
+        }
+        let (vs, lead) = self.snapshot();
+        // bump the epoch of every tenant whose virtual time moved; a
+        // tenant absent from the snapshot reads as v = 0 on both sides
+        for (name, v) in &vs {
+            let prev = self.round_v.get(name).copied().unwrap_or(0.0);
+            if v.to_bits() != prev.to_bits() {
+                *self.epochs.entry(name.clone()).or_insert(0) += 1;
+            }
+        }
+        for (name, prev) in &self.round_v {
+            if !vs.contains_key(name) && prev.to_bits() != 0.0f64.to_bits() {
+                *self.epochs.entry(name.clone()).or_insert(0) += 1;
+            }
+        }
+        self.round_v = vs;
+        self.round_lead = lead;
+    }
+
+    fn as_folded(&self) -> Option<&dyn FoldedShaper> {
+        // foldable iff the composed inner shaper (if any) folds too
+        match &self.inner {
+            Some(inner) if inner.as_folded().is_none() => None,
+            _ => Some(self),
+        }
+    }
+}
+
+impl FoldedShaper for WfqPolicy {
+    /// Time-invariant shaped key: inner folded key (or the folded base)
+    /// plus `strength × v(tenant)`.  See the module docs for why absolute
+    /// virtual time replaces the per-round lead without changing the
+    /// within-round order.
+    fn shape_folded(&self, job: &Job, base_folded: f64) -> f64 {
+        let base = match &self.inner {
+            Some(inner) => inner
+                .as_folded()
+                .expect("as_folded() checked the inner shaper folds")
+                .shape_folded(job, base_folded),
+            None => base_folded,
+        };
+        let tenant = job.tenant.as_deref().unwrap_or(DEFAULT_TENANT);
+        base + self.strength * self.round_v.get(tenant).copied().unwrap_or(0.0)
+    }
+
+    fn tenant_epoch(&self, tenant: Option<&str>) -> u64 {
+        let name = tenant.unwrap_or(DEFAULT_TENANT);
+        let own = self.epochs.get(name).copied().unwrap_or(0);
+        // epochs are monotone counters, so the sum moves whenever either
+        // layer's term moved
+        own + self
+            .inner
+            .as_ref()
+            .and_then(|i| i.as_folded())
+            .map_or(0, |f| f.tenant_epoch(tenant))
     }
 }
 
@@ -339,5 +433,51 @@ mod tests {
         let p_done = policy.shape(&done_job, 0.0, 1.0);
         assert_eq!(p_busy, 0.0);
         assert!((p_done - 500.0).abs() < 1e-9, "{p_done}");
+
+        // folded keys drop the floor but keep the same order, and the
+        // cross-tenant gap is identical (v differs from lead by a shared
+        // constant)
+        policy.begin_round(1, 1.0);
+        let folded = policy.as_folded().expect("bare WFQ folds");
+        let f_busy = folded.shape_folded(&busy_job, 0.0);
+        let f_done = folded.shape_folded(&done_job, 0.0);
+        assert!(f_busy < f_done);
+        assert!((f_done - f_busy - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn folds_iff_inner_folds_and_epochs_track_tokens() {
+        let sink = TelemetrySink::new(1);
+        let bare = WfqPolicy::new(&sink);
+        assert!(bare.as_folded().is_some());
+        let over_folding = WfqPolicy::new(&sink)
+            .over(Box::new(SloPolicy::new(&sink, SloSpec::new(1_000.0))));
+        assert!(over_folding.as_folded().is_some());
+        let over_shedding = WfqPolicy::new(&sink).over(Box::new(
+            SloPolicy::new(&sink, SloSpec::new(1_000.0)).shed_after(2.0),
+        ));
+        assert!(over_shedding.as_folded().is_none(),
+                "a non-folding inner shaper forces the rebuild path");
+
+        // epochs move exactly when a tenant's served tokens move
+        let mut p = WfqPolicy::new(&sink);
+        use crate::coordinator::events::{EventSink, JobMeta};
+        let mut h = sink.clone();
+        let meta = JobMeta {
+            id: JobId::new(0),
+            tenant: Some("t"),
+            arrival_ms: 0.0,
+            prompt_len: 4,
+            total_len: 100,
+        };
+        h.on_job_admitted(&meta, 0, 0.0);
+        p.begin_round(1, 0.0);
+        let e0 = p.tenant_epoch(Some("t"));
+        p.begin_round(2, 5.0);
+        assert_eq!(p.tenant_epoch(Some("t")), e0, "no tokens served");
+        h.on_job_progress(&meta, 0, 40, 10.0);
+        p.begin_round(3, 10.0);
+        assert_eq!(p.tenant_epoch(Some("t")), e0 + 1, "tokens moved");
+        assert_eq!(p.tenant_epoch(Some("other")), 0);
     }
 }

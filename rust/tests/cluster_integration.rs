@@ -260,6 +260,38 @@ fn pooled_backend_rejects_virtual_clock() {
     assert!(err.to_string().contains("Wall"), "{err:#}");
 }
 
+/// `--dispatch-shards` on a pooled wall-clock backend: per-node planning
+/// fans out to the shard pool while apply stays serial — the run completes
+/// every job and the coordinator reports the resolved shard count.
+#[test]
+fn pooled_backend_runs_with_dispatch_shards() {
+    const WINDOW_MS: u64 = 5;
+    const JOBS: u64 = 12;
+    let trace = burst_trace(JOBS);
+    let cfg = ServeConfig {
+        workers: 4,
+        max_batch: 1,
+        clock: ClockMode::Wall,
+        max_iterations: 100_000,
+        dispatch_shards: 2,
+        ..Default::default()
+    };
+    let engines: Vec<Box<dyn Engine>> = (0..4)
+        .map(|_| Box::new(SleepEngine::new(WINDOW_MS)) as Box<dyn Engine>)
+        .collect();
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let mut coord = CoordinatorBuilder::from_config(cfg)
+        .build_pooled(&trace, WorkerPool::new(engines), &mut sched)
+        .unwrap();
+    assert_eq!(coord.dispatch_shards(), 2,
+               "two planner shards must be live on this 4-worker pool");
+    let r = coord.run_to_completion().unwrap();
+    assert_eq!(r.n(), JOBS as usize);
+    for rec in &r.records {
+        assert!(rec.tokens >= 1);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // HTTP frontend end-to-end: POST work in, scrape /metrics, all jobs finish
 // ---------------------------------------------------------------------------

@@ -7,8 +7,8 @@ use std::rc::Rc;
 
 use elis::coordinator::{
     run_serving, ClockMode, CoordinatorBuilder, EventSink, JobId,
-    LbStrategy, Policy, PreemptionPolicy, Scheduler, ServeConfig,
-    SharedCounter,
+    LbStrategy, Policy, PreemptionPolicy, PriorityShaper, Scheduler,
+    ServeConfig, SharedCounter,
 };
 use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
@@ -19,7 +19,7 @@ use elis::predictor::surrogate::SurrogatePredictor;
 use elis::predictor::LengthPredictor;
 use elis::runtime::manifest::ServedModelMeta;
 use elis::telemetry::{AttributionSink, ShadowMode, ShadowScheduler,
-                      SloPolicy, SloSpec, TelemetrySink};
+                      SloPolicy, SloSpec, TelemetrySink, WfqPolicy};
 use elis::workload::{Corpus, RequestGenerator, TraceRequest};
 
 fn profile(avg_latency_ms: f64) -> ModelProfile {
@@ -810,6 +810,256 @@ fn zero_preemption_budget_skips_victim_ranking_and_matches() {
         // not perturb the schedule
         assert_reports_identical(&frozen, &uncapped);
     }
+}
+
+// ---------------------------------------------------------------------------
+// shaped incremental dispatch + dispatch shards (PR 9)
+// ---------------------------------------------------------------------------
+
+/// One of the three foldable shaper shapes under test: the SLO policy, the
+/// WFQ fairness shaper, or WFQ composed over SLO.  Each run must get its
+/// own [`TelemetrySink`] so live pressure/lead state is fed only by that
+/// run's events.
+fn shaper_for(kind: usize, telemetry: &TelemetrySink)
+              -> Box<dyn PriorityShaper> {
+    let slo = SloSpec::new(60_000.0).tenant("paid", 4_000.0);
+    match kind {
+        0 => Box::new(SloPolicy::new(telemetry, slo)),
+        1 => Box::new(WfqPolicy::new(telemetry).weight("paid", 3.0)),
+        _ => Box::new(
+            WfqPolicy::new(telemetry)
+                .weight("paid", 3.0)
+                .over(Box::new(SloPolicy::new(telemetry, slo)))),
+    }
+}
+
+#[test]
+fn shaped_incremental_matches_rebuild_for_all_shapers() {
+    // the PR 9 tentpole guard: with a foldable shaper registered, the
+    // persistent shaped index (per-tenant lanes, epoch-gated re-keys) and
+    // the classic per-window rebuild must produce bit-identical reports
+    // and batch-by-batch dispatch orders — including under preemption
+    // pressure and with aging folded into the base keys
+    let cases: [(Policy, f64, usize); 5] = [
+        (Policy::Fcfs, 0.0, 8 << 30),
+        (Policy::Isrtf, 0.0, 8 << 30),
+        (Policy::Srpt, 0.0, 8 << 30),
+        (Policy::Srpt, 10.0, 8 << 30),
+        (Policy::Srpt, 0.0, TINY_KV),
+    ];
+    for kind in 0..3usize {
+        for &(policy, aging, kv) in &cases {
+            let corpus = Corpus::synthetic(300, 91);
+            let mut gen = RequestGenerator::fabrix(4.0, 91);
+            let mut trace = gen.trace(&corpus, 50);
+            elis::workload::assign_tenants(
+                &mut trace, &[("paid".into(), 1), ("free".into(), 2)]);
+            let cfg = ServeConfig {
+                workers: 2,
+                max_iterations: 5_000_000,
+                seed: 91,
+                ..Default::default()
+            };
+            let run = |rebuild: bool| {
+                let mut sched =
+                    Scheduler::new(policy, predictor_for(policy, 91))
+                        .with_aging(aging);
+                let mut e: Vec<Box<dyn Engine>> = (0..2)
+                    .map(|_| Box::new(
+                        SimEngine::new(profile(2000.0), 50, 4, kv))
+                         as Box<dyn Engine>)
+                    .collect();
+                let telemetry = TelemetrySink::new(2);
+                let log = BatchLog::default();
+                let r = CoordinatorBuilder::from_config(cfg.clone())
+                    .full_rebuild(rebuild)
+                    .sink(Box::new(telemetry.clone()))
+                    .sink(Box::new(log.clone()))
+                    .priority_shaper(shaper_for(kind, &telemetry))
+                    .build(&trace, &mut e, &mut sched)
+                    .unwrap()
+                    .run_to_completion()
+                    .unwrap();
+                (r, log.0.borrow().clone())
+            };
+            let (inc, linc) = run(false);
+            let (reb, lreb) = run(true);
+            assert_eq!(inc.n(), 50,
+                       "kind={kind} {policy:?} aging={aging} kv={kv}");
+            assert_eq!(linc, lreb,
+                       "shaped dispatch orders must match \
+                        (kind={kind} {policy:?} aging={aging} kv={kv})");
+            assert_reports_identical(&inc, &reb);
+        }
+    }
+}
+
+#[test]
+fn prop_shaped_incremental_matches_rebuild_with_streaming() {
+    // differential property test for the shaped index: random traces with
+    // tenant tags, random shaper shape (SLO / WFQ / composed), random
+    // preemption budgets, and random mid-run streamed admissions — the
+    // incremental and rebuild paths must agree batch by batch
+    use elis::testing::prop;
+    prop::check("shaped-incremental-vs-rebuild", 8, |g| {
+        let kind = g.usize_in(0, 2);
+        let policy = *g.pick(&[Policy::Fcfs, Policy::Srpt, Policy::Isrtf]);
+        let aging = if g.bool(0.3) { g.f64_in(1.0, 15.0) } else { 0.0 };
+        let workers = g.usize_in(1, 3);
+        let seed = g.usize_in(1, 10_000) as u64;
+        let n = g.usize_in(10, 30);
+        let rps = g.f64_in(2.0, 8.0);
+        let kv = if g.bool(0.35) { TINY_KV } else { 8 << 30 };
+        let budget = *g.pick(&[2usize, 100]);
+        let corpus = Corpus::synthetic(200, seed);
+        let mut gen = RequestGenerator::fabrix(rps, seed);
+        let mut trace = gen.trace(&corpus, n);
+        elis::workload::assign_tenants(
+            &mut trace, &[("paid".into(), 1), ("free".into(), 2)]);
+        let n_push = g.usize_in(0, 4);
+        let pushes: Vec<(u64, TraceRequest)> = (0..n_push)
+            .map(|k| {
+                (g.usize_in(1, 40) as u64, TraceRequest {
+                    id: 10_000 + k as u64,
+                    arrival_ms: g.f64_in(0.0, 20_000.0),
+                    prompt: vec![5; g.usize_in(4, 24)],
+                    total_len: g.usize_in(5, 300),
+                    topic: 0,
+                    // "burst" never appears in the preload: exercises a
+                    // tenant lane born mid-run
+                    tenant: Some(
+                        (*g.pick(&["paid", "free", "burst"])).to_string()),
+                })
+            })
+            .collect();
+        let cfg = ServeConfig {
+            workers,
+            max_batch: g.usize_in(2, 4),
+            preemption: PreemptionPolicy {
+                enabled: true,
+                max_preemptions_per_job: budget,
+                max_per_iteration: usize::MAX,
+            },
+            max_iterations: 2_000_000,
+            seed,
+            ..Default::default()
+        };
+
+        let run = |rebuild: bool| {
+            let mut sched = Scheduler::new(policy,
+                                           predictor_for(policy, seed))
+                .with_aging(aging);
+            let mut e: Vec<Box<dyn Engine>> = (0..workers)
+                .map(|_| Box::new(SimEngine::new(profile(2000.0), 50, 4, kv))
+                     as Box<dyn Engine>)
+                .collect();
+            let telemetry = TelemetrySink::new(workers);
+            let log = BatchLog::default();
+            let mut coord = CoordinatorBuilder::from_config(cfg.clone())
+                .full_rebuild(rebuild)
+                .sink(Box::new(telemetry.clone()))
+                .sink(Box::new(log.clone()))
+                .priority_shaper(shaper_for(kind, &telemetry))
+                .build(&trace, &mut e, &mut sched)
+                .unwrap();
+            let mut next_push = 0usize;
+            let mut steps: u64 = 0;
+            while !coord.is_done() || next_push < pushes.len() {
+                while next_push < pushes.len()
+                    && pushes[next_push].0 <= steps
+                {
+                    coord.push_request(&pushes[next_push].1);
+                    next_push += 1;
+                }
+                coord.step().unwrap();
+                steps += 1;
+                assert!(steps < 1_000_000, "did not converge");
+            }
+            (coord.report(), log.0.borrow().clone())
+        };
+        let (ra, la) = run(false);
+        let (rb, lb) = run(true);
+        assert_eq!(ra.n(), n + n_push, "every job (incl. streamed) finishes");
+        assert_eq!(la, lb,
+                   "shaped dispatch orders must match (kind={kind} \
+                    {policy:?} aging={aging} kv={kv} workers={workers})");
+        assert_reports_identical(&ra, &rb);
+    });
+}
+
+#[test]
+fn dispatch_shards_leave_reports_identical() {
+    // sharded planning acceptance: per-node plans fan out across shard
+    // threads but apply serially in node order, so the schedule — and the
+    // whole report — must be bit-identical at any shard count, shaped or
+    // not (0 = auto-size from the machine)
+    let corpus = Corpus::synthetic(300, 93);
+    let mut gen = RequestGenerator::fabrix(6.0, 93);
+    let mut trace = gen.trace(&corpus, 60);
+    elis::workload::assign_tenants(
+        &mut trace, &[("paid".into(), 1), ("free".into(), 2)]);
+    let cfg = ServeConfig {
+        workers: 4,
+        max_iterations: 5_000_000,
+        seed: 93,
+        ..Default::default()
+    };
+    let run = |shards: usize, shaped: bool| {
+        let mut sched = Scheduler::new(Policy::Srpt, Box::new(OraclePredictor))
+            .with_aging(5.0);
+        let mut e = engines(4, 8 << 30);
+        let telemetry = TelemetrySink::new(4);
+        let log = BatchLog::default();
+        let mut b = CoordinatorBuilder::from_config(cfg.clone())
+            .dispatch_shards(shards)
+            .sink(Box::new(telemetry.clone()))
+            .sink(Box::new(log.clone()));
+        if shaped {
+            b = b.priority_shaper(Box::new(
+                WfqPolicy::new(&telemetry).weight("paid", 3.0)));
+        }
+        let r = b.build(&trace, &mut e, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        (r, log.0.borrow().clone())
+    };
+    for shaped in [false, true] {
+        let (r1, l1) = run(1, shaped);
+        assert_eq!(r1.n(), 60);
+        for shards in [2usize, 8, 0] {
+            let (rn, ln) = run(shards, shaped);
+            assert_eq!(l1, ln,
+                       "batch orders must match at {shards} shards \
+                        (shaped={shaped})");
+            assert_reports_identical(&r1, &rn);
+        }
+    }
+}
+
+#[test]
+fn shedding_slo_policy_keeps_rebuild_path_and_completes() {
+    // shed_after is an age cutoff — not affine in `now` — so a shedding
+    // SLO policy must refuse to fold (no incremental shaped index) and
+    // dispatch stays on the rebuild reference path; the run still
+    // completes every job and a shard request is silently ignored there
+    let trace = skewed_two_tenant_trace();
+    let telemetry = TelemetrySink::with_slo(1, paid_free_slo());
+    let policy = SloPolicy::new(&telemetry, paid_free_slo()).shed_after(3.0);
+    assert!(policy.as_folded().is_none(),
+            "an age-shedding policy must not claim a folded view");
+    let mut sched = Scheduler::new(Policy::Fcfs, Box::new(OraclePredictor));
+    let mut e = engines(1, 8 << 30);
+    let cfg = ServeConfig { max_iterations: 1_000_000, ..Default::default() };
+    let r = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(telemetry.clone()))
+        .priority_shaper(Box::new(policy))
+        .dispatch_shards(8)
+        .build(&trace, &mut e, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    assert_eq!(r.n(), 12, "rebuild path with shedding still finishes all");
 }
 
 #[test]

@@ -7,7 +7,14 @@ by more than --max-ratio over the committed BENCH_baseline.json (default
 1.5x).  The check targets the *incremental* variant — the one the
 ROADMAP's O(k log n) claim rests on; a silent fall-back to rebuild-like
 costs trips it immediately — and also re-asserts the recorded
-rebuild/incremental speedups still clear the bench's own >=5x floor.
+rebuild/incremental speedups still clear the bench's own floors: >=5x
+unshaped, and >=3x for the shaped (SLO/WFQ) sweep when the fresh
+artifact carries a `shaped_acceptance` block.
+
+A baseline marked `"provisional": true` (recorded outside CI, so its
+absolute timings are not comparable to the current runner) downgrades
+ratio regressions to stderr WARNINGs; the fresh artifact's own speedup
+floors still gate hard, since they compare the fresh run to itself.
 
 Serve mode guards the streaming serving path (`elis loadgen` output):
 --serve-fresh BENCH_serve.json asserts the run actually streamed tokens
@@ -53,9 +60,18 @@ def check_hotpath(args, failures):
     base = load(args.baseline)
     new = load(args.fresh)
     depth = int(new.get("accept_depth", base.get("accept_depth", 50000)))
-    if base.get("provisional"):
+    provisional = bool(base.get("provisional"))
+    if provisional:
         print("note: baseline is provisional (recorded outside CI); "
-              "refresh it from a green run's BENCH_hotpath.json")
+              "ratio regressions warn instead of failing — refresh it "
+              "from a green run's BENCH_hotpath.json")
+
+    def ratio_regression(msg):
+        if provisional:
+            print(f"WARNING (provisional baseline, not failing): {msg}",
+                  file=sys.stderr)
+        else:
+            failures.append(msg)
 
     for policy in ("FCFS", "ISRTF"):
         b = cost(base, depth, policy, "incremental")
@@ -70,11 +86,13 @@ def check_hotpath(args, failures):
               f"fresh {n:.4f} ms -> {ratio:.2f}x ({verdict}, "
               f"limit {args.max_ratio}x)")
         if ratio > args.max_ratio:
-            failures.append(
+            ratio_regression(
                 f"{policy}: dispatch_cost_at_depth {depth} regressed "
                 f"{ratio:.2f}x (> {args.max_ratio}x) — "
                 f"{b:.4f} ms -> {n:.4f} ms per window")
 
+    # the fresh artifact's own speedup floors always gate hard: they
+    # compare the fresh run against itself, so runner speed cancels out
     target = float(new.get("target_speedup", 5.0))
     for name, speedup in sorted(new.get("acceptance", {}).items()):
         verdict = "OK" if speedup >= target else "BELOW TARGET"
@@ -82,6 +100,14 @@ def check_hotpath(args, failures):
         if speedup < target:
             failures.append(f"{name}: speedup {speedup:.1f}x fell below the "
                             f"{target}x acceptance floor")
+    shaped_target = float(new.get("shaped_target_speedup", 3.0))
+    for name, speedup in sorted(new.get("shaped_acceptance", {}).items()):
+        verdict = "OK" if speedup >= shaped_target else "BELOW TARGET"
+        print(f"{name}: {speedup:.1f}x ({verdict}, "
+              f"target >={shaped_target}x)")
+        if speedup < shaped_target:
+            failures.append(f"{name}: shaped speedup {speedup:.1f}x fell "
+                            f"below the {shaped_target}x acceptance floor")
 
 
 def serve_p99(doc, key):
