@@ -10,6 +10,8 @@ use common::{env_usize, BenchCtx};
 use elis::predictor::eval::StepDataset;
 use elis::predictor::heuristic::HeuristicPredictor;
 use elis::predictor::hlo::HloPredictor;
+use elis::predictor::rank::RankPredictor;
+use elis::predictor::ObservedCompletion;
 use elis::runtime::default_artifacts_dir;
 use elis::util::bench::Table;
 use elis::util::json::Json;
@@ -59,6 +61,50 @@ fn main() {
         "—".into(),
     ]);
     t.print();
+
+    // Rank sufficiency: ISRTF consumes an *ordering*, so also score each
+    // predictor by tie-corrected Kendall-τ, pairwise accuracy, and the
+    // realized mean-JCT regret of serving in predicted order (FCFS seat
+    // replay) — this is the accuracy ISRTF actually uses.
+    let slots = env_usize("ELIS_BENCH_PRED_SLOTS", 4);
+    let r_init = ds.evaluate_rank(&mut init, limit, slots);
+    let r_trained = ds.evaluate_rank(&mut trained, limit, slots);
+    let r_heur = ds.evaluate_rank(&mut heuristic, limit, slots);
+    // the online rank predictor trains from completion feedback; replay
+    // the rows *outside* the eval window as pseudo-completions (the
+    // recorded suffix stands in for the full response stream)
+    let mut rank = RankPredictor::new(7);
+    for i in ds.len().min(limit)..ds.len() {
+        let total = ds.gen_count[i] + ds.target[i].max(1.0) as usize;
+        rank.observe_rich(&ObservedCompletion {
+            prompt: &ds.raw_prompt[i],
+            response: &ds.suffix[i],
+            total_len: total,
+        });
+    }
+    let r_rank = ds.evaluate_rank(&mut rank, limit, slots);
+
+    let mut rt = Table::new(
+        "Rank sufficiency — ordering quality on the same held-out rows",
+        &["model", "kendall_tau", "pairwise_acc", "jct_regret", "notes"],
+    );
+    let rank_note = format!("trained online on {} out-of-window rows",
+                            ds.len() - ds.len().min(limit));
+    for (name, m, note) in [
+        ("untrained encoder", &r_init, ""),
+        ("fine-tuned (trained artifact)", &r_trained, ""),
+        ("heuristic fallback", &r_heur, ""),
+        ("online rank (pairwise logistic)", &r_rank, rank_note.as_str()),
+    ] {
+        rt.row(vec![
+            name.into(),
+            format!("{:+.3}", m.tau),
+            format!("{:.3}", m.pairwise_acc),
+            format!("{:+.3}", m.jct_regret),
+            note.into(),
+        ]);
+    }
+    rt.print();
 
     // build-time (jax-side) metrics for cross-checking the PJRT path
     if let Ok(text) =

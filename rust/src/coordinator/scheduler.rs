@@ -28,7 +28,7 @@
 //!   the entries that didn't change.  This is what lets the incremental
 //!   index keep stale-but-correct keys across windows.
 
-use crate::predictor::{LengthPredictor, PredictQuery};
+use crate::predictor::{LengthPredictor, ObservedCompletion, PredictQuery};
 
 use super::job::{Job, JobId};
 
@@ -352,9 +352,12 @@ impl Scheduler {
         }
     }
 
-    /// Completion feedback for online predictors.
-    pub fn observe_completion(&mut self, prompt_len: usize, total_len: usize) {
-        self.predictor.observe(prompt_len, total_len);
+    /// Completion feedback for online predictors.  Carries the full token
+    /// streams so content-reading learners (e.g. the rank predictor) can
+    /// train; scalar learners fall through to `observe` via the trait's
+    /// default `observe_rich`.
+    pub fn observe_completion(&mut self, c: &ObservedCompletion<'_>) {
+        self.predictor.observe_rich(c);
     }
 }
 

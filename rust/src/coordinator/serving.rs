@@ -89,6 +89,7 @@ use crate::cluster::pool::{WindowDone, WorkerCmd, WorkerPool,
 use crate::cluster::remote::RemoteWorkerPool;
 use crate::engine::{Engine, SeqSpec, WindowOutcome};
 use crate::metrics::{JobRecord, ServeReport};
+use crate::predictor::ObservedCompletion;
 use crate::workload::TraceRequest;
 
 use super::batcher::Batcher;
@@ -1570,13 +1571,17 @@ impl<'a> Coordinator<'a> {
                 let j = &mut self.table[id];
                 j.state = JobState::Finished;
                 j.finish_ms = Some(t_done);
-                let (prompt_len, total_len) = (j.prompt.len(), j.total_len);
+                let total_len = j.total_len;
                 self.finished += 1;
                 self.state.on_finish(node);
                 // the accuracy signal must be read before `forget` drops
                 // the prediction-cache entry
                 let predicted_total = self.scheduler.predicted_total(id);
-                self.scheduler.observe_completion(prompt_len, total_len);
+                self.scheduler.observe_completion(&ObservedCompletion {
+                    prompt: &self.table[id].prompt,
+                    response: &self.table[id].response,
+                    total_len,
+                });
                 self.scheduler.forget(id);
                 self.batcher.forget(node, id);
                 self.nodes[node].warm.remove(&id);

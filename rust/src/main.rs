@@ -13,6 +13,7 @@
 //!                    /v1/generate connections against a live `elis serve`
 //!                    and report TTFT/TPOT/JCT percentiles
 //!   simulate         run a scheduling experiment on the calibrated sim engine
+//!   predictor-eval   rank-sufficiency smoke for the online rank predictor
 //!   trace-fit        reproduce the Fig 4 inter-arrival analysis
 //!   preempt-profile  reproduce the Table 6 preemption profiling
 //!   k8s-manifests    emit the paper's Kubernetes deployment YAML
@@ -41,12 +42,15 @@ use elis::engine::sim_engine::SimEngine;
 use elis::engine::pjrt_engine::PjrtEngine;
 use elis::engine::Engine;
 use elis::k8s;
+use elis::predictor::eval::rank_metrics;
 use elis::predictor::heuristic::HeuristicPredictor;
 use elis::predictor::hlo::HloPredictor;
 use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::rank::RankPredictor;
 use elis::predictor::surrogate::SurrogatePredictor;
-use elis::predictor::LengthPredictor;
+use elis::predictor::{LengthPredictor, ObservedCompletion, PredictQuery};
 use elis::runtime::{default_artifacts_dir, Manifest, Runtime, WeightStore};
+use elis::stats::rng::Pcg64;
 use elis::util::cli::Args;
 use elis::workload::tracefit::analyse;
 use elis::workload::{Corpus, RequestGenerator};
@@ -59,6 +63,7 @@ fn main() {
         Some("worker") => cmd_worker(&args),
         Some("loadgen") => cmd_loadgen(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("predictor-eval") => cmd_predictor_eval(&args),
         Some("trace-fit") => cmd_trace_fit(&args),
         Some("preempt-profile") => cmd_preempt_profile(&args),
         Some("gen-trace") => cmd_gen_trace(&args),
@@ -81,7 +86,8 @@ USAGE: elis <subcommand> [--flags]
 
   info              artifact + model summary
   serve             wall-clock serving: --n --rps --scheduler --workers
-                    --engine(pjrt|sim) --predictor(hlo|heuristic|oracle)
+                    --engine(pjrt|sim)
+                    --predictor(hlo|heuristic|rank|surrogate|oracle)
                     --lb(minload|rr|random) --tenants --slo-ms --wfq
                     --listen addr:port   run as a network service: engines
                     move onto worker-pool threads (windows overlap across
@@ -148,6 +154,17 @@ USAGE: elis <subcommand> [--flags]
                     per-node scheduling on N persistent shard threads;
                     auto sizes from the host, 1 = inline; reports are
                     bit-identical at any shard count)
+                    With --predictor surrogate and --shuffles > 1, the
+                    surrogate's noise profile recalibrates between
+                    shuffles from the previous shuffle's live mispredict
+                    telemetry (sigma0/decay fitted from the per-step
+                    |log error| sketches)
+  predictor-eval    rank-sufficiency smoke: train the online rank
+                    predictor on a content-coded synthetic workload and
+                    score the held-out ordering (Kendall tau, pairwise
+                    accuracy, realized-JCT regret) vs the heuristic
+                    baseline: --n --seed --slots
+                    --json-out BENCH_predictor.json
   trace-fit         Fig 4 reproduction: --n --process(gamma|poisson)
   preempt-profile   Table 6 reproduction: --model(all|abbrev)
   gen-trace         standalone request generator: --n --rps --out file
@@ -272,6 +289,7 @@ pub fn scheduler_for(policy: Policy, predictor_kind: &str,
             Box::new(HloPredictor::load(rt, m, store, None)?)
         }
         (Policy::Isrtf, "heuristic") => Box::new(HeuristicPredictor::new()),
+        (Policy::Isrtf, "rank") => Box::new(RankPredictor::new(7)),
         (Policy::Isrtf, "surrogate") => Box::new(SurrogatePredictor::calibrated(7)),
         (Policy::Isrtf, "oracle") => Box::new(OraclePredictor),
         (p, k) => bail!("unsupported predictor '{k}' for policy {:?}", p),
@@ -786,12 +804,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
     let store = WeightStore::load(&manifest)?;
     let tenant_spec = parse_tenant_spec(&args.list("tenants"))?;
+    // with --predictor surrogate and multiple shuffles, each shuffle's
+    // mispredict telemetry recalibrates the next shuffle's noise profile
+    let recalibrating =
+        policy == Policy::Isrtf && predictor_kind == "surrogate" && shuffles > 1;
+    let mut live_profile: Option<(f64, f64)> = None;
     let mut jcts = Vec::new();
     for s in 0..shuffles {
         let mut gen = RequestGenerator::fabrix(rps, seed + s as u64);
         let mut trace = gen.trace(&corpus, n);
-        let telemetry = telemetry_for(args, workers, &mut trace,
-                                      &tenant_spec)?;
+        let mut telemetry = telemetry_for(args, workers, &mut trace,
+                                          &tenant_spec)?;
+        let print_snapshot = telemetry.is_some();
+        if recalibrating && telemetry.is_none() {
+            // a bare observing sink: registering it leaves reports
+            // bit-identical, and its PredictorStats feed the refit
+            telemetry = Some((TelemetrySink::new(workers), 0.0));
+        }
         let mut engines: Vec<Box<dyn Engine>> = (0..workers)
             .map(|_| {
                 Box::new(SimEngine::with_profile_budget(
@@ -799,8 +828,17 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                     as Box<dyn Engine>
             })
             .collect();
-        let mut sched = scheduler_for(policy, &predictor_kind,
-                                      Some((&manifest, &store)))?;
+        let mut sched = match live_profile {
+            Some((sigma0, decay)) if recalibrating => {
+                println!("  surrogate recalibrated from live telemetry: \
+                          sigma0 {sigma0:.3} decay {decay:.3}");
+                let mut sp = SurrogatePredictor::calibrated(7);
+                sp.recalibrate(sigma0, decay);
+                Scheduler::new(policy, Box::new(sp))
+            }
+            _ => scheduler_for(policy, &predictor_kind,
+                               Some((&manifest, &store)))?,
+        };
         let cfg = ServeConfig {
             workers,
             max_batch: batch,
@@ -818,12 +856,98 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             .run_to_completion()?;
         report.print_summary();
         if let Some((sink, _)) = &telemetry {
-            print_telemetry(sink);
+            if print_snapshot {
+                print_telemetry(sink);
+            }
+            if recalibrating {
+                if let Some(fitted) = sink.surrogate_calibration(8) {
+                    live_profile = Some(fitted);
+                }
+            }
         }
         jcts.push(report.avg_jct_s());
     }
     let avg = jcts.iter().sum::<f64>() / jcts.len() as f64;
     println!("=> avg JCT over {shuffles} shuffles: {avg:.2}s");
+    Ok(())
+}
+
+/// Content-coded synthetic rank workload: each prompt is a single repeated
+/// token id `v` and the response length is a monotone function of `v`,
+/// while the prompt *length* is deliberately uncorrelated — learnable by a
+/// content-reading ranker, invisible to the length-only heuristic.
+fn rank_eval_example(rng: &mut Pcg64) -> (Vec<i32>, usize) {
+    let v = 16 + rng.below(1984) as i32;
+    let plen = 8 + rng.below(32) as usize;
+    (vec![v; plen], 5 + v as usize / 4)
+}
+
+fn cmd_predictor_eval(args: &Args) -> Result<()> {
+    let n = args.usize("n", 600);
+    let seed = args.u64("seed", 7);
+    let slots = args.usize("slots", 4);
+    if n < 20 {
+        bail!("--n must be at least 20 for a train/eval split");
+    }
+    let n_train = n / 2;
+    let mut rng = Pcg64::new(seed);
+    let examples: Vec<(Vec<i32>, usize)> =
+        (0..n).map(|_| rank_eval_example(&mut rng)).collect();
+
+    // online training: completions arrive one at a time, exactly like the
+    // coordinator's finish-feedback path
+    let mut rank = RankPredictor::new(seed);
+    let mut heuristic = HeuristicPredictor::new();
+    for (prompt, total) in &examples[..n_train] {
+        let response = vec![prompt[0]; *total];
+        let c = ObservedCompletion {
+            prompt,
+            response: &response,
+            total_len: *total,
+        };
+        rank.observe_rich(&c);
+        heuristic.observe_rich(&c);
+    }
+
+    let held = &examples[n_train..];
+    let truths: Vec<f64> = held.iter().map(|(_, t)| *t as f64).collect();
+    let queries: Vec<PredictQuery<'_>> = held
+        .iter()
+        .enumerate()
+        .map(|(i, (prompt, _))| PredictQuery {
+            job_id: i as u64,
+            prompt,
+            gen_suffix: &[],
+            generated: 0,
+            true_total: 0,
+        })
+        .collect();
+    let rm = rank_metrics(&rank.predict(&queries), &truths, slots);
+    let hm = rank_metrics(&heuristic.predict(&queries), &truths, slots);
+
+    println!("predictor-eval: {n_train} train completions, {} held out, \
+              {slots} replay slots", held.len());
+    for (name, m) in [("rank", &rm), ("heuristic", &hm)] {
+        println!("  {name:<10} kendall_tau {:+.3}  pairwise_acc {:.3}  \
+                  jct_regret {:+.3}", m.tau, m.pairwise_acc, m.jct_regret);
+    }
+
+    if let Some(path) = args.opt_str("json-out") {
+        let num = |x: f64| {
+            if x.is_finite() { format!("{x:.6}") } else { "null".into() }
+        };
+        let block = |m: &elis::predictor::eval::RankMetrics| {
+            format!("{{\"kendall_tau\": {}, \"pairwise_acc\": {}, \
+                     \"jct_regret\": {}}}",
+                    num(m.tau), num(m.pairwise_acc), num(m.jct_regret))
+        };
+        let json = format!(
+            "{{\n  \"n_train\": {n_train},\n  \"n_eval\": {},\n  \
+             \"slots\": {slots},\n  \"rank\": {},\n  \"heuristic\": {}\n}}\n",
+            held.len(), block(&rm), block(&hm));
+        std::fs::write(path, json)?;
+        println!("rank metrics written to {path}");
+    }
     Ok(())
 }
 

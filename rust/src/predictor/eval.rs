@@ -6,9 +6,139 @@ use std::path::Path;
 use anyhow::{anyhow, Context, Result};
 
 use crate::stats::fit::{regression_metrics, RegressionMetrics};
+use crate::telemetry::shadow::{replay_jcts, ReplayJob, ShadowMode};
 use crate::util::json::Json;
 
 use super::{LengthPredictor, PredictQuery};
+
+/// Rank-sufficiency metrics: how good is a predictor *as an ordering
+/// source* for ISRTF, independent of its absolute token error.
+#[derive(Debug, Clone, Copy)]
+pub struct RankMetrics {
+    /// tie-corrected Kendall τ-b between predictions and truth
+    pub tau: f64,
+    /// fraction of truth-ordered pairs the predictions order correctly
+    /// (prediction ties score half)
+    pub pairwise_acc: f64,
+    /// (mean JCT when scheduling by predicted order − mean JCT under the
+    /// oracle SRPT order) / oracle mean JCT, replayed through the shadow-
+    /// scheduler machinery with all jobs arriving at t=0
+    pub jct_regret: f64,
+    pub n: usize,
+}
+
+/// Tie-corrected Kendall τ-b over the paired samples.  NaN when fewer than
+/// two samples or when either side is entirely tied.
+pub fn kendall_tau(pred: &[f64], truth: &[f64]) -> f64 {
+    let n = pred.len().min(truth.len());
+    if n < 2 {
+        return f64::NAN;
+    }
+    let (mut conc, mut disc) = (0i64, 0i64);
+    let (mut tie_pred_only, mut tie_truth_only) = (0i64, 0i64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dp = pred[i] - pred[j];
+            let dt = truth[i] - truth[j];
+            if dp == 0.0 && dt == 0.0 {
+                continue; // tied in both: excluded from both denominators
+            } else if dp == 0.0 {
+                tie_pred_only += 1;
+            } else if dt == 0.0 {
+                tie_truth_only += 1;
+            } else if (dp > 0.0) == (dt > 0.0) {
+                conc += 1;
+            } else {
+                disc += 1;
+            }
+        }
+    }
+    let denom_pred = (conc + disc + tie_truth_only) as f64;
+    let denom_truth = (conc + disc + tie_pred_only) as f64;
+    let denom = (denom_pred * denom_truth).sqrt();
+    if denom <= 0.0 {
+        return f64::NAN;
+    }
+    (conc - disc) as f64 / denom
+}
+
+/// Fraction of truth-strictly-ordered pairs the predictions order the same
+/// way; a prediction tie on such a pair scores 0.5.  NaN if the truth has
+/// no strictly ordered pair.
+pub fn pairwise_accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    let n = pred.len().min(truth.len());
+    let mut pairs = 0u64;
+    let mut credit = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dt = truth[i] - truth[j];
+            if dt == 0.0 {
+                continue;
+            }
+            pairs += 1;
+            let dp = pred[i] - pred[j];
+            if dp == 0.0 {
+                credit += 0.5;
+            } else if (dp > 0.0) == (dt > 0.0) {
+                credit += 1.0;
+            }
+        }
+    }
+    if pairs == 0 {
+        f64::NAN
+    } else {
+        credit / pairs as f64
+    }
+}
+
+/// Mean JCT realized by seating jobs (all arriving at t=0, service = true
+/// remaining length) in the given index order on `slots` parallel slots.
+fn mean_jct_in_order(order: &[usize], truth: &[f64], slots: usize) -> f64 {
+    let jobs: Vec<ReplayJob> = order
+        .iter()
+        .map(|&i| ReplayJob {
+            id: i as u64,
+            arrival_ms: 0.0,
+            service_ms: truth[i].max(0.0),
+        })
+        .collect();
+    let jcts = replay_jcts(ShadowMode::Fcfs, &jobs, slots);
+    if jcts.is_empty() {
+        return f64::NAN;
+    }
+    jcts.iter().map(|(_, jct)| jct).sum::<f64>() / jcts.len() as f64
+}
+
+/// Realized-JCT regret of scheduling by `pred` instead of by `truth`
+/// (lower-first in both cases), normalized by the oracle mean JCT.  Zero
+/// for any prediction that orders like the truth; maximal for the exactly
+/// inverted ordering.
+pub fn jct_regret(pred: &[f64], truth: &[f64], slots: usize) -> f64 {
+    let n = pred.len().min(truth.len());
+    if n == 0 {
+        return f64::NAN;
+    }
+    let mut by_pred: Vec<usize> = (0..n).collect();
+    by_pred.sort_by(|&a, &b| pred[a].total_cmp(&pred[b]).then(a.cmp(&b)));
+    let mut by_truth: Vec<usize> = (0..n).collect();
+    by_truth.sort_by(|&a, &b| truth[a].total_cmp(&truth[b]).then(a.cmp(&b)));
+    let predicted = mean_jct_in_order(&by_pred, truth, slots);
+    let oracle = mean_jct_in_order(&by_truth, truth, slots);
+    if oracle <= 0.0 {
+        return 0.0;
+    }
+    (predicted - oracle) / oracle
+}
+
+/// Bundle the three rank metrics for one prediction vector.
+pub fn rank_metrics(pred: &[f64], truth: &[f64], slots: usize) -> RankMetrics {
+    RankMetrics {
+        tau: kendall_tau(pred, truth),
+        pairwise_acc: pairwise_accuracy(pred, truth),
+        jct_regret: jct_regret(pred, truth, slots),
+        n: pred.len().min(truth.len()),
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct StepDataset {
@@ -115,6 +245,17 @@ impl StepDataset {
         regression_metrics(&preds, &truth)
     }
 
+    /// Rank-sufficiency metrics (Kendall τ-b, pairwise accuracy, realized-
+    /// JCT regret on `slots` replay slots) over the first `limit` rows.
+    pub fn evaluate_rank(&self, p: &mut dyn LengthPredictor, limit: usize,
+                         slots: usize) -> RankMetrics {
+        let n = self.len().min(limit);
+        let idx: Vec<usize> = (0..n).collect();
+        let preds = p.predict(&self.queries(&idx));
+        let truth: Vec<f64> = idx.iter().map(|&i| self.target[i]).collect();
+        rank_metrics(&preds, &truth, slots)
+    }
+
     /// Per-iteration-step MAE (Fig 2b series).
     pub fn evaluate_by_step(&self, p: &mut dyn LengthPredictor, limit: usize,
                             max_step: usize) -> Vec<(usize, RegressionMetrics)> {
@@ -168,5 +309,76 @@ mod tests {
         for (_, m) in per {
             assert_eq!(m.n, 10);
         }
+    }
+
+    #[test]
+    fn oracle_rank_is_perfect() {
+        // the oracle orders exactly like the truth: τ = 1, every ordered
+        // pair correct, and zero realized-JCT regret
+        let ds = tiny();
+        let m = ds.evaluate_rank(&mut OraclePredictor, usize::MAX, 1);
+        assert!((m.tau - 1.0).abs() < 1e-12, "tau {}", m.tau);
+        assert!((m.pairwise_acc - 1.0).abs() < 1e-12);
+        assert!(m.jct_regret.abs() < 1e-12, "regret {}", m.jct_regret);
+        assert_eq!(m.n, 40);
+    }
+
+    #[test]
+    fn inverted_oracle_is_maximally_wrong() {
+        let truth: Vec<f64> = (0..12).map(|i| 10.0 + 3.0 * i as f64).collect();
+        let inverted: Vec<f64> = truth.iter().map(|t| -t).collect();
+        assert!((kendall_tau(&inverted, &truth) + 1.0).abs() < 1e-12);
+        assert!(pairwise_accuracy(&inverted, &truth).abs() < 1e-12);
+        let regret = jct_regret(&inverted, &truth, 1);
+        // the inverted ordering is longest-first — the worst possible
+        // ordering for mean JCT, so no other ordering can regret more
+        let mut worst: Vec<usize> = (0..truth.len()).collect();
+        worst.sort_by(|&a, &b| truth[b].total_cmp(&truth[a]));
+        let mut best: Vec<usize> = (0..truth.len()).collect();
+        best.sort_by(|&a, &b| truth[a].total_cmp(&truth[b]));
+        let expected = (mean_jct_in_order(&worst, &truth, 1)
+            - mean_jct_in_order(&best, &truth, 1))
+            / mean_jct_in_order(&best, &truth, 1);
+        assert!(regret > 0.5, "regret {regret}");
+        assert!((regret - expected).abs() < 1e-12,
+                "regret {regret} vs maximal {expected}");
+    }
+
+    #[test]
+    fn rank_metrics_handle_ties() {
+        // all-tied truth: τ and pairwise accuracy are undefined (NaN),
+        // regret is exactly zero (any order yields the same JCT multiset)
+        let truth = vec![50.0; 8];
+        let pred: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert!(kendall_tau(&pred, &truth).is_nan());
+        assert!(pairwise_accuracy(&pred, &truth).is_nan());
+        assert!(jct_regret(&pred, &truth, 1).abs() < 1e-12);
+
+        // partial prediction ties on strictly ordered truth: half credit
+        let truth2 = vec![1.0, 2.0];
+        let pred2 = vec![5.0, 5.0];
+        assert!((pairwise_accuracy(&pred2, &truth2) - 0.5).abs() < 1e-12);
+        // τ-b: the only pair is pred-tied, so the pred side of the
+        // denominator is empty → undefined (NaN), matching τ-b's 0/0
+        assert!(kendall_tau(&pred2, &truth2).is_nan());
+
+        // tiny fixture has heavy truth ties (10 rows per level): a
+        // predictor constant within levels but ordered across them still
+        // scores τ = 1 under tie correction
+        let ds = tiny();
+        let pred3: Vec<f64> = ds.target.iter().map(|t| t / 10.0).collect();
+        assert!((kendall_tau(&pred3, &ds.target) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_slot_replay_reduces_regret() {
+        // with as many slots as jobs there is no queueing: every ordering
+        // realizes the same JCTs, so regret collapses to zero
+        let truth: Vec<f64> = (0..6).map(|i| 10.0 + i as f64).collect();
+        let inverted: Vec<f64> = truth.iter().map(|t| -t).collect();
+        let serial = jct_regret(&inverted, &truth, 1);
+        let wide = jct_regret(&inverted, &truth, truth.len());
+        assert!(serial > 0.0);
+        assert!(wide.abs() < 1e-12, "no-queue regret {wide}");
     }
 }

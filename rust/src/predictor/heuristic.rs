@@ -66,11 +66,13 @@ impl LengthPredictor for HeuristicPredictor {
     fn observe(&mut self, prompt_len: usize, total_len: usize) {
         let p = prompt_len as f64;
         let t = total_len as f64;
+        // Deltas must be taken against the PRE-update means: updating first
+        // shrinks every delta by (1-alpha) and biases the slope low.
+        let dp = p - self.ewma_plen;
+        let dt = t - self.ewma_total;
         self.ewma_total = (1.0 - self.alpha) * self.ewma_total + self.alpha * t;
         self.ewma_plen = (1.0 - self.alpha) * self.ewma_plen + self.alpha * p;
         self.n += 1.0;
-        let dp = p - self.ewma_plen;
-        let dt = t - self.ewma_total;
         self.cov = (1.0 - self.alpha) * self.cov + self.alpha * dp * dt;
         self.var = (1.0 - self.alpha) * self.var + self.alpha * dp * dp;
     }
@@ -100,6 +102,27 @@ mod tests {
         let prompt = vec![5i32; 30];
         let pred = p.predict(&[q(1, &prompt, 0, 0)])[0];
         assert!(pred > 250.0, "pred {pred} should approach 300");
+    }
+
+    #[test]
+    fn slope_converges_to_linear_workload() {
+        // total = 40 + 3 * plen exactly; the recovered slope must converge
+        // to 3 (pre-fix, the (1-alpha) shrink on deltas biased it low).
+        let mut p = HeuristicPredictor::new();
+        let mut plen = 10usize;
+        for _ in 0..600 {
+            plen = 10 + (plen * 13 + 7) % 50; // deterministic spread 10..59
+            p.observe(plen, 40 + 3 * plen);
+        }
+        let slope = p.slope();
+        assert!(
+            (slope - 3.0).abs() < 0.15,
+            "slope {slope} must converge to the true slope 3"
+        );
+        // and the prediction itself should track the line
+        let prompt = vec![5i32; 40];
+        let pred = p.predict(&[q(1, &prompt, 0, 0)])[0];
+        assert!((pred - 160.0).abs() < 20.0, "pred {pred} for plen 40");
     }
 
     #[test]

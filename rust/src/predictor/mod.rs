@@ -14,11 +14,15 @@
 //!   the encoder per refresh would dominate the virtual-time experiment.
 //! * [`oracle::OraclePredictor`] — perfect knowledge; turns ISRTF into the
 //!   SRPT upper bound and SJF when frozen at step 0.
+//! * [`rank::RankPredictor`] — online learning-to-rank: pairwise logistic
+//!   updates from completion feedback over cheap prompt/suffix features;
+//!   optimizes the *ordering* ISRTF actually consumes.
 
 pub mod eval;
 pub mod heuristic;
 pub mod hlo;
 pub mod oracle;
+pub mod rank;
 pub mod surrogate;
 
 /// One prediction query (a job at a scheduling-iteration boundary).
@@ -55,6 +59,20 @@ pub fn build_input(prompt: &[i32], suffix: &[i32], prompt_max: usize)
     (seq, len)
 }
 
+/// A finished job, as seen by the completion-feedback path: the full prompt
+/// and response token streams plus the realized total length.  Predictors
+/// that learn from *content* (e.g. [`rank::RankPredictor`]) read the token
+/// slices; length-only learners fall back to the scalar [`LengthPredictor::
+/// observe`] via the default `observe_rich`.
+#[derive(Debug, Clone, Copy)]
+pub struct ObservedCompletion<'a> {
+    pub prompt: &'a [i32],
+    pub response: &'a [i32],
+    /// realized total response length in tokens (== response.len() on the
+    /// live path; sims may report the trace's total instead)
+    pub total_len: usize,
+}
+
 /// Predicts the number of response tokens still to come.
 pub trait LengthPredictor {
     /// Batched prediction of *remaining* tokens for each query.
@@ -66,6 +84,14 @@ pub trait LengthPredictor {
     /// lets online predictors re-calibrate, mirroring the paper's
     /// retrain-from-logs loop.
     fn observe(&mut self, _prompt_len: usize, _total_len: usize) {}
+
+    /// Rich completion feedback carrying the full token streams.  The
+    /// coordinator calls this (not `observe`) on job finish; the default
+    /// degrades to the scalar `observe` so existing predictors are
+    /// unaffected.
+    fn observe_rich(&mut self, c: &ObservedCompletion<'_>) {
+        self.observe(c.prompt.len(), c.total_len);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,301 @@
+//! Online learning-to-rank predictor (ROADMAP item 1; "Efficient LLM
+//! Scheduling by Learning to Rank", Fu et al.).
+//!
+//! ISRTF consumes an *ordering*, not absolute lengths — so instead of
+//! regressing tokens, this predictor trains a linear score over cheap
+//! prompt/suffix features with **pairwise logistic (RankNet-style) updates**
+//! from completion feedback: for two observed completions with remaining
+//! lengths `r_a`, `r_b`, the model is pushed toward
+//! `sigma(s_a - s_b) = P(r_a > r_b)`.  A small magnitude anchor additionally
+//! regresses the score toward `ln(remaining)`, so the exported value stays a
+//! token count the telemetry abs-error sketches and `generated + remaining`
+//! folding can consume.
+//!
+//! Unlike [`super::heuristic::HeuristicPredictor`] (prompt *length* only),
+//! the feature vector reads prompt/suffix *content* tails, so workloads
+//! where the prompt text encodes the response length are learnable online.
+//!
+//! Determinism: all sampling happens in `observe_rich` from a seeded
+//! [`Pcg64`]; `predict` is pure (no rng, no state mutation), so the
+//! incremental and rebuild dispatch paths — which may query the predictor a
+//! different number of times — stay bit-identical.
+
+use crate::stats::rng::Pcg64;
+
+use super::{LengthPredictor, ObservedCompletion, PredictQuery, SUFFIX_MAX};
+
+/// Number of features in the linear score.
+pub const NUM_FEATURES: usize = 8;
+
+/// Ring-buffer capacity of retained training examples.
+const BUFFER_CAP: usize = 256;
+/// Pairwise comparisons per fresh example.
+const PAIRS_PER_EXAMPLE: usize = 8;
+/// Generated-level samples drawn from each completion (0, T/4, T/2, 3T/4).
+const LEVELS: usize = 4;
+
+/// Pairwise logistic learning rate.
+const ETA_PAIR: f64 = 0.08;
+/// Magnitude-anchor (log-target regression) learning rate.
+const ETA_ANCHOR: f64 = 0.04;
+/// Token-id normalization scale (matches the TinyGPT vocab magnitude).
+const ID_SCALE: f64 = 2048.0;
+
+#[derive(Clone, Copy)]
+struct Example {
+    phi: [f64; NUM_FEATURES],
+    /// ln(remaining tokens at this generated level)
+    log_target: f64,
+}
+
+pub struct RankPredictor {
+    w: [f64; NUM_FEATURES],
+    buf: Vec<Example>,
+    /// next ring slot to overwrite once `buf` is full
+    cursor: usize,
+    rng: Pcg64,
+    observed: u64,
+}
+
+fn tail_mean(tokens: &[i32], k: usize) -> f64 {
+    let start = tokens.len().saturating_sub(k);
+    let tail = &tokens[start..];
+    if tail.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = tail.iter().map(|&t| t as f64).sum();
+    sum / tail.len() as f64 / ID_SCALE
+}
+
+/// Feature map shared by `predict` and training — MUST stay identical on
+/// both paths or the learned weights stop transferring to live queries.
+fn features(prompt: &[i32], suffix: &[i32], generated: usize)
+            -> [f64; NUM_FEATURES] {
+    let plen = prompt.len() as f64;
+    let prompt_mean = if prompt.is_empty() {
+        0.0
+    } else {
+        prompt.iter().map(|&t| t as f64).sum::<f64>() / plen / ID_SCALE
+    };
+    let last = suffix.last().map(|&t| t as f64 / ID_SCALE).unwrap_or(0.0);
+    [
+        1.0,
+        (1.0 + plen).ln() / 8.0,
+        (plen / 64.0).min(4.0),
+        (1.0 + generated as f64).ln() / 8.0,
+        prompt_mean,
+        tail_mean(prompt, SUFFIX_MAX),
+        tail_mean(suffix, SUFFIX_MAX),
+        last,
+    ]
+}
+
+fn sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl RankPredictor {
+    pub fn new(seed: u64) -> RankPredictor {
+        let mut w = [0.0; NUM_FEATURES];
+        // start at the corpus-scale prior exp(w0) ~= 120 tokens, matching
+        // HeuristicPredictor's cold-start mean
+        w[0] = 120f64.ln();
+        RankPredictor {
+            w,
+            buf: Vec::with_capacity(BUFFER_CAP),
+            cursor: 0,
+            rng: Pcg64::new(seed ^ 0x7261_6E6B_7072_6564), // "rankpred"
+            observed: 0,
+        }
+    }
+
+    fn score(&self, phi: &[f64; NUM_FEATURES]) -> f64 {
+        self.w.iter().zip(phi.iter()).map(|(w, f)| w * f).sum()
+    }
+
+    /// Completions observed so far (each yields up to [`LEVELS`] examples).
+    pub fn observations(&self) -> u64 {
+        self.observed
+    }
+
+    #[cfg(test)]
+    pub(crate) fn weights(&self) -> &[f64; NUM_FEATURES] {
+        &self.w
+    }
+
+    fn push(&mut self, ex: Example) {
+        if self.buf.len() < BUFFER_CAP {
+            self.buf.push(ex);
+        } else {
+            self.buf[self.cursor] = ex;
+            self.cursor = (self.cursor + 1) % BUFFER_CAP;
+        }
+    }
+
+    fn train_one(&mut self, ex: &Example) {
+        // magnitude anchor: pull the score toward ln(remaining) so the
+        // exported value stays a usable token estimate
+        let s = self.score(&ex.phi);
+        let g = ETA_ANCHOR * (ex.log_target - s);
+        for (w, f) in self.w.iter_mut().zip(ex.phi.iter()) {
+            *w += g * f;
+        }
+        // pairwise logistic updates vs sampled retained examples
+        if self.buf.is_empty() {
+            return;
+        }
+        for _ in 0..PAIRS_PER_EXAMPLE {
+            let pick = self.rng.below(self.buf.len() as u64) as usize;
+            let other = self.buf[pick];
+            // target P(ex longer than other); 0.5 encodes a tie
+            let target = if ex.log_target > other.log_target + 1e-12 {
+                1.0
+            } else if ex.log_target + 1e-12 < other.log_target {
+                0.0
+            } else {
+                0.5
+            };
+            let margin = self.score(&ex.phi) - self.score(&other.phi);
+            let g = ETA_PAIR * (target - sigmoid(margin));
+            for i in 0..NUM_FEATURES {
+                self.w[i] += g * (ex.phi[i] - other.phi[i]);
+            }
+        }
+    }
+}
+
+impl LengthPredictor for RankPredictor {
+    fn predict(&mut self, queries: &[PredictQuery<'_>]) -> Vec<f64> {
+        // Pure: no rng draw, no weight/buffer mutation — dispatch paths may
+        // call this a different number of times and must agree bit-exactly.
+        queries
+            .iter()
+            .map(|q| {
+                let phi = features(q.prompt, q.gen_suffix, q.generated);
+                self.score(&phi).clamp(0.0, 9.0).exp().max(1.0)
+            })
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "rank"
+    }
+
+    fn observe_rich(&mut self, c: &ObservedCompletion<'_>) {
+        let total = c.total_len.max(1);
+        self.observed += 1;
+        let gen_len = c.response.len();
+        let mut prev_g = usize::MAX;
+        for k in 0..LEVELS {
+            let g = gen_len * k / LEVELS;
+            // dedup short completions that collapse to the same level
+            if g == prev_g {
+                continue;
+            }
+            prev_g = g;
+            let frac_gen = total * k / LEVELS;
+            let remaining = (total - frac_gen).max(1);
+            let ex = Example {
+                phi: features(c.prompt, &c.response[..g], frac_gen),
+                log_target: (remaining as f64).ln(),
+            };
+            self.train_one(&ex);
+            self.push(ex);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::eval::kendall_tau;
+
+    fn completion(prompt: Vec<i32>, total: usize) -> (Vec<i32>, Vec<i32>) {
+        // response tokens loosely follow the prompt's content register
+        let fill = prompt.first().copied().unwrap_or(7);
+        (prompt, vec![fill; total])
+    }
+
+    /// prompt content (a single repeated token id) encodes the length
+    fn content_coded(v: i32) -> (Vec<i32>, usize) {
+        let plen = 8 + (v as usize % 13); // plen uncorrelated with length
+        (vec![v; plen], 5 + v as usize / 4)
+    }
+
+    #[test]
+    fn cold_start_is_prior_scale() {
+        let mut p = RankPredictor::new(1);
+        let prompt = vec![100i32; 16];
+        let out = p.predict(&[crate::predictor::q(1, &prompt, 0, 0)])[0];
+        assert!(out > 20.0 && out < 600.0, "cold-start pred {out}");
+    }
+
+    #[test]
+    fn predict_is_pure() {
+        let mut p = RankPredictor::new(2);
+        for v in (16..400).step_by(7) {
+            let (prompt, total) = content_coded(v);
+            let (prompt, response) = completion(prompt, total);
+            p.observe_rich(&ObservedCompletion {
+                prompt: &prompt,
+                response: &response,
+                total_len: total,
+            });
+        }
+        let prompt = vec![123i32; 10];
+        let q = crate::predictor::q(9, &prompt, 0, 0);
+        let a = p.predict(&[q.clone()])[0];
+        // extra predict calls in between must not perturb later answers
+        for _ in 0..17 {
+            p.predict(&[q.clone()]);
+        }
+        let b = p.predict(&[q.clone()])[0];
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn learns_content_coded_lengths() {
+        let mut p = RankPredictor::new(3);
+        let mut rng = Pcg64::new(42);
+        for _ in 0..500 {
+            let v = 16 + rng.below(1984) as i32;
+            let (prompt, total) = content_coded(v);
+            let (prompt, response) = completion(prompt, total);
+            p.observe_rich(&ObservedCompletion {
+                prompt: &prompt,
+                response: &response,
+                total_len: total,
+            });
+        }
+        let mut preds = Vec::new();
+        let mut truths = Vec::new();
+        for v in (16..2000).step_by(37) {
+            let (prompt, total) = content_coded(v);
+            preds.push(p.predict(&[crate::predictor::q(0, &prompt, 0, 0)])[0]);
+            truths.push(total as f64);
+        }
+        let tau = kendall_tau(&preds, &truths);
+        assert!(tau > 0.85, "learned ordering tau {tau}");
+    }
+
+    #[test]
+    fn observe_rich_deterministic() {
+        let run = || {
+            let mut p = RankPredictor::new(11);
+            for v in (16..600).step_by(11) {
+                let (prompt, total) = content_coded(v);
+                let (prompt, response) = completion(prompt, total);
+                p.observe_rich(&ObservedCompletion {
+                    prompt: &prompt,
+                    response: &response,
+                    total_len: total,
+                });
+            }
+            *p.weights()
+        };
+        let (a, b) = (run(), run());
+        for i in 0..NUM_FEATURES {
+            assert_eq!(a[i].to_bits(), b[i].to_bits(), "weight {i} diverged");
+        }
+    }
+}

@@ -32,6 +32,15 @@ impl SurrogatePredictor {
         SurrogatePredictor::new(0.55, 0.8, seed)
     }
 
+    /// Replace the desk profile with a noise profile fitted from live
+    /// mispredict telemetry (`PredictorStats::surrogate_calibration` —
+    /// per-step |log error| sketches → `sigma0 · decay^step`).  Clamps
+    /// keep a sparse fit from producing a growing or degenerate profile.
+    pub fn recalibrate(&mut self, sigma0: f64, decay: f64) {
+        self.sigma0 = sigma0.clamp(0.0, 5.0);
+        self.decay = decay.clamp(0.05, 1.0);
+    }
+
     fn noise(&self, job_id: u64, step: usize) -> f64 {
         // deterministic per (job, step): stable across refreshes in the
         // same iteration, fresh information each iteration
@@ -95,6 +104,33 @@ mod tests {
         }
         assert!(mae_step[3] < mae_step[0] * 0.6,
                 "MAE must fall with steps: {mae_step:?}");
+    }
+
+    #[test]
+    fn recalibrate_reshapes_error_profile() {
+        // shrink the live profile: the recalibrated surrogate's step-0
+        // error must fall accordingly, and clamps must hold
+        let prompt = vec![1i32; 8];
+        let mae0 = |s: &mut SurrogatePredictor| {
+            let mut preds = Vec::new();
+            let mut truths = Vec::new();
+            for job in 0..400u64 {
+                let total = 250 + (job % 100) as usize;
+                preds.push(s.predict(&[q(job, &prompt, 0, total)])[0]);
+                truths.push(total as f64);
+            }
+            regression_metrics(&preds, &truths).mae
+        };
+        let mut desk = SurrogatePredictor::calibrated(5);
+        let mut live = SurrogatePredictor::calibrated(5);
+        live.recalibrate(0.1, 0.9);
+        assert!((live.sigma0 - 0.1).abs() < 1e-12);
+        assert!((live.decay - 0.9).abs() < 1e-12);
+        assert!(mae0(&mut live) < mae0(&mut desk) * 0.5,
+                "a 5x tighter sigma0 must shrink step-0 MAE");
+        live.recalibrate(99.0, -3.0);
+        assert!((live.sigma0 - 5.0).abs() < 1e-12, "sigma0 clamp");
+        assert!((live.decay - 0.05).abs() < 1e-12, "decay clamp");
     }
 
     #[test]

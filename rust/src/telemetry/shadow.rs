@@ -171,6 +171,36 @@ impl ShadowScheduler {
     }
 }
 
+/// One job for a standalone counterfactual replay — the offline face of
+/// the machinery above, used by `predictor::eval`'s realized-JCT regret
+/// metric to score a predicted *ordering* by the JCT it would realize.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayJob {
+    pub id: u64,
+    pub arrival_ms: f64,
+    pub service_ms: f64,
+}
+
+/// Replay `jobs` through the same C-slot machine the live shadow
+/// scheduler uses; returns `(job id, counterfactual JCT)` per job.
+/// Under [`ShadowMode::Fcfs`] jobs seat strictly in **slice order** (so a
+/// caller can realize any ordering by pre-sorting); [`ShadowMode::Srpt`]
+/// is the oracle shortest-service baseline regardless of slice order.
+pub fn replay_jcts(mode: ShadowMode, jobs: &[ReplayJob],
+                   slots: usize) -> Vec<(u64, f64)> {
+    let shadow: Vec<ShadowJob> = jobs
+        .iter()
+        .map(|j| ShadowJob {
+            job: j.id,
+            node: 0,
+            arrival_ms: j.arrival_ms,
+            service_ms: j.service_ms,
+            real_jct_ms: 0.0,
+        })
+        .collect();
+    replay_all(mode, &shadow, slots)
+}
+
 /// Simulate the baseline over `jobs` (one node's window slice, sorted by
 /// `(arrival, id)`) with `slots` parallel batch slots; returns each job's
 /// counterfactual JCT as `(job id, shadow_jct_ms)`.

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::events::{DecisionRecord, EventSink, FinishStats,
                                  JobMeta, WindowEvents, WindowJobEvent};
 use crate::coordinator::job::JobId;
+use crate::stats::fit::linear_fit;
 
 use super::shadow::ShadowScheduler;
 use super::sketch::{Histogram, KendallWindow, QuantileSketch, WindowedRate};
@@ -55,7 +56,19 @@ pub struct PredictorStats {
     pub signed_err: QuantileSketch,
     /// windowed rank correlation between predictions and realized lengths
     pub kendall: KendallWindow,
+    /// |ln(predicted / realized)| per step bucket (realized tokens /
+    /// [`CALIBRATION_STEP_TOKENS`], capped) — the live mispredict profile
+    /// that [`PredictorStats::surrogate_calibration`] fits the surrogate's
+    /// geometric noise model against
+    pub log_ratio_by_step: Vec<QuantileSketch>,
 }
+
+/// Calibration bucket width in realized tokens — matches the surrogate's
+/// 50-token iteration step, so bucket index ≈ the final-refresh step the
+/// surrogate's noise decays by.
+pub const CALIBRATION_STEP_TOKENS: f64 = 50.0;
+/// Step buckets retained for calibration (longer jobs fold into the last).
+pub const CALIBRATION_STEPS: usize = 8;
 
 impl PredictorStats {
     fn new() -> PredictorStats {
@@ -63,6 +76,9 @@ impl PredictorStats {
             abs_err: QuantileSketch::new(),
             signed_err: QuantileSketch::new(),
             kendall: KendallWindow::new(KENDALL_WINDOW),
+            log_ratio_by_step: (0..CALIBRATION_STEPS)
+                .map(|_| QuantileSketch::new())
+                .collect(),
         }
     }
 
@@ -73,6 +89,40 @@ impl PredictorStats {
         self.abs_err.add((predicted - realized).abs());
         self.signed_err.add(predicted - realized);
         self.kendall.add(predicted, realized);
+        if predicted > 0.0 && realized > 0.0 {
+            let step = ((realized / CALIBRATION_STEP_TOKENS) as usize)
+                .min(CALIBRATION_STEPS - 1);
+            self.log_ratio_by_step[step].add((predicted / realized).ln().abs());
+        }
+    }
+
+    /// Fit the surrogate's noise profile `sigma_s = sigma0 · decay^s` from
+    /// the live per-step |log error| sketches: each bucket's half-normal
+    /// mean |ε| estimates `sigma_s = mean · sqrt(π/2)`, and a log-linear
+    /// OLS fit over the populated buckets recovers `(sigma0, decay)`.
+    /// `None` until at least two buckets hold `min_per_step` samples —
+    /// callers keep the previous (or desk) profile in that case.
+    pub fn surrogate_calibration(&self, min_per_step: u64)
+                                 -> Option<(f64, f64)> {
+        let mut steps = Vec::new();
+        let mut log_sigma = Vec::new();
+        for (s, sk) in self.log_ratio_by_step.iter().enumerate() {
+            if sk.count() >= min_per_step.max(1) && sk.mean() > 0.0 {
+                let sigma = sk.mean() * (std::f64::consts::PI / 2.0).sqrt();
+                steps.push(s as f64);
+                log_sigma.push(sigma.ln());
+            }
+        }
+        if steps.len() < 2 {
+            return None;
+        }
+        let (intercept, slope) = linear_fit(&steps, &log_sigma);
+        let sigma0 = intercept.exp();
+        let decay = slope.exp();
+        if !sigma0.is_finite() || !decay.is_finite() || sigma0 <= 0.0 {
+            return None;
+        }
+        Some((sigma0.min(5.0), decay.clamp(0.05, 1.0)))
     }
 }
 
@@ -397,6 +447,18 @@ impl TelemetrySink {
     pub fn workers_dead(&self) -> usize {
         self.state.lock().unwrap().workers_dead()
     }
+
+    /// Live surrogate-noise calibration fitted from this run's mispredict
+    /// telemetry (see [`PredictorStats::surrogate_calibration`]); `None`
+    /// until enough finishes have been folded.
+    pub fn surrogate_calibration(&self, min_per_step: u64)
+                                 -> Option<(f64, f64)> {
+        self.state
+            .lock()
+            .unwrap()
+            .predictor
+            .surrogate_calibration(min_per_step)
+    }
 }
 
 impl EventSink for TelemetrySink {
@@ -646,6 +708,34 @@ mod tests {
             // (−5) + 10 + 10 = 15
             assert!((st.predictor.signed_err.sum() - 15.0).abs() < 1e-9);
         });
+    }
+
+    #[test]
+    fn surrogate_calibration_recovers_noise_profile() {
+        let sink = TelemetrySink::new(1);
+        let mut handle = sink.clone();
+        // finishes whose |log error| is exactly the half-normal mean of
+        // sigma_s = 0.5 * 0.8^s, at step bucket s = realized tokens / 50
+        let (sigma0, decay) = (0.5f64, 0.8f64);
+        let half_normal = (2.0 / std::f64::consts::PI).sqrt();
+        let mut id = 0u32;
+        for s in 0..4usize {
+            let realized = (s * 50 + 25) as f64;
+            let m = sigma0 * decay.powi(s as i32) * half_normal;
+            for k in 0..10 {
+                let eps = if k % 2 == 0 { m } else { -m };
+                let mut st = finish(100.0, realized as usize);
+                st.predicted_total = Some(realized * eps.exp());
+                handle.on_job_admitted(&meta(id, None, 0.0), 0, 0.0);
+                handle.on_job_finished(&meta(id, None, 0.0), 0, &st, 100.0);
+                id += 1;
+            }
+        }
+        let (s0, d) = sink.surrogate_calibration(5).expect("4 buckets x 10");
+        assert!((s0 - sigma0).abs() < 1e-6, "sigma0 {s0}");
+        assert!((d - decay).abs() < 1e-6, "decay {d}");
+        // a floor above the per-bucket sample count withholds the fit
+        assert!(sink.surrogate_calibration(11).is_none());
     }
 
     #[test]

@@ -14,9 +14,13 @@ use elis::engine::profiles::ModelProfile;
 use elis::engine::sim_engine::SimEngine;
 use elis::engine::Engine;
 use elis::metrics::ServeReport;
+use elis::predictor::eval::kendall_tau;
+use elis::predictor::heuristic::HeuristicPredictor;
 use elis::predictor::oracle::{FrozenOracle, OraclePredictor};
+use elis::predictor::rank::RankPredictor;
 use elis::predictor::surrogate::SurrogatePredictor;
-use elis::predictor::LengthPredictor;
+use elis::predictor::{LengthPredictor, ObservedCompletion, PredictQuery};
+use elis::stats::rng::Pcg64;
 use elis::runtime::manifest::ServedModelMeta;
 use elis::telemetry::{AttributionSink, ShadowMode, ShadowScheduler,
                       SloPolicy, SloSpec, TelemetrySink, WfqPolicy};
@@ -1202,4 +1206,210 @@ fn shadow_replay_is_deterministic_and_fcfs_counterfactual_is_positive() {
     assert!(a.saved_ratio > 0.0,
             "ISRTF should beat its FCFS counterfactual under load: \
              real {} vs shadow {}", a.sum_real_ms, a.sum_shadow_ms);
+}
+
+// ---------------------------------------------------------------------------
+// online learning-to-rank predictor (PR 10)
+// ---------------------------------------------------------------------------
+
+/// Length-skewed trace whose prompt *content* encodes the response length
+/// (`total = 5 + v/4` for repeated token id `v`) while the prompt *length*
+/// is uncorrelated noise.  A scalar plen-based learner cannot rank it; a
+/// content-reading learner can.  The quadratic skew makes short responses
+/// common and long ones rare — the regime where SRPT-style ordering pays.
+fn content_coded_trace(n: usize, seed: u64, gap_ms: f64) -> Vec<TraceRequest> {
+    let mut rng = Pcg64::new(seed);
+    (0..n as u64)
+        .map(|i| {
+            let r = rng.below(1984) as f64 / 1984.0;
+            let v = 16 + (1900.0 * r * r) as i32;
+            let plen = 8 + rng.below(32) as usize;
+            TraceRequest {
+                id: i,
+                arrival_ms: i as f64 * gap_ms,
+                prompt: vec![v; plen],
+                total_len: 5 + v as usize / 4,
+                topic: 0,
+                tenant: None,
+            }
+        })
+        .collect()
+}
+
+fn run_rank_trace(trace: &[TraceRequest],
+                  predictor: Box<dyn LengthPredictor>)
+                  -> (ServeReport, f64) {
+    let cfg = ServeConfig {
+        workers: 1,
+        max_iterations: 5_000_000,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut sched = Scheduler::new(Policy::Isrtf, predictor);
+    let mut e = engines(1, 8 << 30);
+    let telemetry = TelemetrySink::new(1);
+    let report = CoordinatorBuilder::from_config(cfg)
+        .sink(Box::new(telemetry.clone()))
+        .build(trace, &mut e, &mut sched)
+        .unwrap()
+        .run_to_completion()
+        .unwrap();
+    let tau = telemetry.with_state(|st| st.predictor.kendall.tau());
+    (report, tau)
+}
+
+#[test]
+fn online_rank_predictor_beats_heuristic_on_content_coded_trace() {
+    // acceptance: on a skewed synthetic trace, ISRTF driven by the online
+    // RankPredictor must reach a higher live Kendall-τ than the
+    // plen-regression heuristic after warm-up AND yield a lower mean JCT.
+    // The heuristic's predicted totals collapse to ~EWMA for every job
+    // still under the running mean, so its live τ is capped well below a
+    // learner that reads the content code.
+    let trace = content_coded_trace(260, 97, 250.0);
+    let (rank_report, rank_tau) =
+        run_rank_trace(&trace, Box::new(RankPredictor::new(7)));
+    let (heur_report, heur_tau) =
+        run_rank_trace(&trace, Box::new(HeuristicPredictor::new()));
+    assert_eq!(rank_report.n(), 260);
+    assert_eq!(heur_report.n(), 260);
+    assert!(rank_tau.is_finite() && heur_tau.is_finite(),
+            "live τ must be populated: rank {rank_tau} heur {heur_tau}");
+    assert!(rank_tau > heur_tau + 0.05,
+            "rank τ {rank_tau:.3} must clear heuristic τ {heur_tau:.3}");
+    assert!(rank_tau > 0.5, "rank τ {rank_tau:.3} too low after warm-up");
+    assert!(rank_report.avg_jct_s() < heur_report.avg_jct_s(),
+            "rank JCT {} must beat heuristic JCT {}",
+            rank_report.avg_jct_s(), heur_report.avg_jct_s());
+}
+
+#[test]
+fn rank_predictor_runs_are_bit_identical_across_reruns() {
+    // determinism: fixed-seed rank runs must be bit-identical, and the
+    // incremental index must match the classic per-window rebuild even
+    // though the two paths call predict() a different number of times —
+    // predict is pure; training happens only on the completion path,
+    // whose order both paths share.
+    let trace = content_coded_trace(60, 41, 200.0);
+    let run = |rebuild: bool| {
+        let cfg = ServeConfig {
+            workers: 2,
+            max_iterations: 5_000_000,
+            seed: 41,
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(Policy::Isrtf,
+                                       Box::new(RankPredictor::new(41)));
+        let mut e = engines(2, 8 << 30);
+        CoordinatorBuilder::from_config(cfg)
+            .full_rebuild(rebuild)
+            .build(&trace, &mut e, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap()
+    };
+    let a = run(false);
+    let b = run(false);
+    assert_reports_identical(&a, &b);
+    let reb = run(true);
+    assert_eq!(a.n(), 60);
+    assert_reports_identical(&a, &reb);
+}
+
+#[test]
+fn swapping_heuristic_for_rank_preserves_completed_job_set() {
+    // safety: the predictor reorders service, it must never change *what*
+    // completes — on the plentiful-KV path and under tiny-pool preemption
+    // pressure, on both dispatch paths
+    let trace = content_coded_trace(50, 53, 150.0);
+    let completed = |kv: usize, rebuild: bool,
+                     predictor: Box<dyn LengthPredictor>| {
+        let cfg = ServeConfig {
+            workers: 2,
+            max_iterations: 5_000_000,
+            seed: 53,
+            ..Default::default()
+        };
+        let mut sched = Scheduler::new(Policy::Isrtf, predictor);
+        let mut e: Vec<Box<dyn Engine>> = (0..2)
+            .map(|_| Box::new(SimEngine::new(profile(2000.0), 50, 4, kv))
+                 as Box<dyn Engine>)
+            .collect();
+        let r = CoordinatorBuilder::from_config(cfg)
+            .full_rebuild(rebuild)
+            .build(&trace, &mut e, &mut sched)
+            .unwrap()
+            .run_to_completion()
+            .unwrap();
+        let mut ids: Vec<u64> = r.records.iter().map(|rec| rec.id).collect();
+        ids.sort_unstable();
+        ids
+    };
+    for kv in [8usize << 30, TINY_KV] {
+        for rebuild in [false, true] {
+            let heur = completed(kv, rebuild, Box::new(HeuristicPredictor::new()));
+            let rank = completed(kv, rebuild, Box::new(RankPredictor::new(53)));
+            assert_eq!(heur.len(), 50, "kv={kv} rebuild={rebuild}");
+            assert_eq!(heur, rank,
+                       "completed sets diverged (kv={kv} rebuild={rebuild})");
+        }
+    }
+}
+
+#[test]
+fn prop_rank_predictor_converges_on_monotone_workloads() {
+    // satellite property: after N random-order completions of a workload
+    // whose content id is monotone in response length, the predicted
+    // ordering reaches Kendall-τ ≥ 0.8 against ground truth — under
+    // shuffled arrival order and with tied lengths present
+    use elis::testing::prop;
+    prop::check("rank-converges", 8, |g| {
+        let seed = g.usize_in(1, 10_000) as u64;
+        let n_items = g.usize_in(12, 24);
+        let rounds = g.usize_in(25, 50);
+        // monotone catalogue: higher content id => longer response; prompt
+        // length is independent noise
+        let mut items: Vec<(Vec<i32>, usize)> = (0..n_items)
+            .map(|k| {
+                let v = 40 + 80 * k as i32;
+                let plen = 6 + g.usize_in(0, 20);
+                (vec![v; plen], 5 + v as usize / 4)
+            })
+            .collect();
+        // a duplicated item yields exactly tied lengths in the eval set
+        let dup = items[n_items / 2].clone();
+        items.push(dup);
+        let mut p = RankPredictor::new(seed);
+        let mut order = Pcg64::new(seed ^ 0x5351);
+        for _ in 0..rounds {
+            for _ in 0..items.len() {
+                let pick = order.below(items.len() as u64) as usize;
+                let (prompt, total) = &items[pick];
+                let response = vec![prompt[0]; *total];
+                p.observe_rich(&ObservedCompletion {
+                    prompt,
+                    response: &response,
+                    total_len: *total,
+                });
+            }
+        }
+        let queries: Vec<PredictQuery<'_>> = items
+            .iter()
+            .enumerate()
+            .map(|(i, (prompt, total))| PredictQuery {
+                job_id: i as u64,
+                prompt,
+                gen_suffix: &[],
+                generated: 0,
+                true_total: *total,
+            })
+            .collect();
+        let preds = p.predict(&queries);
+        let truths: Vec<f64> =
+            items.iter().map(|(_, t)| *t as f64).collect();
+        let tau = kendall_tau(&preds, &truths);
+        assert!(tau >= 0.8,
+                "τ {tau:.3} after {} completions (seed {seed})",
+                rounds * items.len());
+    });
 }

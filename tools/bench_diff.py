@@ -27,11 +27,21 @@ of what the scheduling policy saves over FCFS.  --shadow-min-saved sets
 an *advisory* floor: a ratio below it prints a WARNING but does not fail
 the check (the ratio is workload-dependent; CI smoke runs are short).
 
+Predictor mode guards the online learning-to-rank predictor
+(`elis predictor-eval` output): --predictor-fresh BENCH_predictor.json
+fails when the rank predictor's held-out Kendall-tau drops below
+--min-tau.  The eval is deterministic (fixed seed, synthetic corpus) and
+compares the fresh binary against itself, so — like the hotpath speedup
+floors — this gates hard regardless of any provisional baseline.  The
+rank-vs-heuristic margin is advisory: a rank predictor that fails to
+beat the plen regression prints a WARNING.
+
 Usage:
     tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json [--max-ratio 1.5]
     tools/bench_diff.py --serve-fresh BENCH_serve.json \
         [--serve-baseline BENCH_serve_baseline.json] [--serve-max-ratio 2.0] \
         [--metrics metrics.txt --shadow-min-saved 0.05]
+    tools/bench_diff.py --predictor-fresh BENCH_predictor.json [--min-tau 0.4]
 
 Refreshing a baseline: copy the matching artifact from a green CI run
 over the committed baseline (drop the "provisional" flag) and commit it.
@@ -196,6 +206,37 @@ def check_shadow(args):
               file=sys.stderr)
 
 
+def check_predictor(args, failures):
+    new = load(args.predictor_fresh)
+    print(f"predictor-eval: {new.get('n_train')} train completions, "
+          f"{new.get('n_eval')} held out, {new.get('slots')} replay slots")
+    taus = {}
+    for name in ("rank", "heuristic"):
+        m = new.get(name) or {}
+        taus[name] = m.get("kendall_tau")
+        row = "  ".join(
+            f"{k} {m[k]:+.3f}" if isinstance(m.get(k), (int, float))
+            else f"{k} n/a"
+            for k in ("kendall_tau", "pairwise_acc", "jct_regret"))
+        print(f"predictor {name:<10} {row}")
+    tau = taus.get("rank")
+    if tau is None:
+        failures.append("predictor: rank kendall_tau missing from "
+                        f"{args.predictor_fresh} (NaN or absent)")
+        return
+    verdict = "OK" if tau >= args.min_tau else "BELOW FLOOR"
+    print(f"predictor rank tau {tau:.3f} ({verdict}, floor {args.min_tau})")
+    if tau < args.min_tau:
+        failures.append(f"predictor: rank kendall_tau {tau:.3f} fell below "
+                        f"the {args.min_tau} floor — the online rank "
+                        f"predictor is not learning the held-out ordering")
+    heur = taus.get("heuristic")
+    if heur is not None and tau <= heur:
+        # advisory: the margin is workload-shaped, the floor above is the gate
+        print(f"WARNING: rank tau {tau:.3f} does not beat the heuristic's "
+              f"{heur:.3f} on the eval corpus", file=sys.stderr)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", nargs="?",
@@ -220,13 +261,19 @@ def main():
     ap.add_argument("--shadow-min-saved", type=float, default=None,
                     help="advisory floor for elis_shadow_jct_saved_ratio; "
                          "below it prints a WARNING (never a failure)")
+    ap.add_argument("--predictor-fresh",
+                    help="fresh BENCH_predictor.json from elis predictor-eval")
+    ap.add_argument("--min-tau", type=float, default=0.4,
+                    help="hard floor for the rank predictor's held-out "
+                         "Kendall-tau (default 0.4)")
     args = ap.parse_args()
 
     if bool(args.baseline) != bool(args.fresh):
         ap.error("hotpath mode needs both BASELINE and FRESH")
-    if not args.baseline and not args.serve_fresh and not args.metrics:
+    if (not args.baseline and not args.serve_fresh and not args.metrics
+            and not args.predictor_fresh):
         ap.error("nothing to check: pass BASELINE FRESH, --serve-fresh, "
-                 "and/or --metrics")
+                 "--predictor-fresh, and/or --metrics")
 
     failures = []
     if args.baseline:
@@ -235,6 +282,8 @@ def main():
         check_serve(args, failures)
     if args.metrics:
         check_shadow(args)
+    if args.predictor_fresh:
+        check_predictor(args, failures)
 
     if failures:
         print("\nbench trajectory check FAILED:", file=sys.stderr)
